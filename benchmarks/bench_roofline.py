@@ -1,0 +1,48 @@
+"""Roofline table from the dry-run JSON dumps (§Roofline deliverable).
+
+Reads dryrun_baseline.json / dryrun_optimized.json when present and emits
+one CSV row per (arch x shape x mesh) with the three terms + dominant +
+useful-flops ratio. Does NOT recompile (the sweeps are hour-scale; run
+``python -m repro.launch.dryrun --all`` to regenerate)."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+from benchmarks.common import csv_row
+
+CANDIDATES = ("dryrun_optimized.json", "dryrun_baseline.json")
+
+
+def run() -> List[str]:
+    rows = []
+    for fname in CANDIDATES:
+        if not os.path.exists(fname):
+            continue
+        tag = fname.replace("dryrun_", "").replace(".json", "")
+        with open(fname) as f:
+            data = json.load(f)
+        for r in data["results"]:
+            t = r["terms"]
+            rows.append(csv_row(
+                f"roofline[{tag}]/{r['arch']}/{r['shape']}/{r['mesh']}", 0.0,
+                f"compute_s={t['compute_s']:.4f};"
+                f"memory_s={t['memory_s']:.4f};"
+                f"collective_s={t['collective_s']:.4f};"
+                f"dominant={t['dominant']};"
+                f"useful={t.get('model_flops_ratio', 0):.3f}"))
+        if data.get("failures"):
+            rows.append(csv_row(f"roofline[{tag}]/FAILURES", 0.0,
+                                f"count={len(data['failures'])}"))
+        break            # prefer the optimized dump when both exist
+    if not rows:
+        rows.append(csv_row("roofline/missing", 0.0,
+                            "run repro.launch.dryrun --all first"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

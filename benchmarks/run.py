@@ -1,0 +1,56 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV:
+  * convergence (Figs. 1/2): LROA vs Uni-D/Uni-S/DivFL + % latency saved
+  * lambda sweep (Fig. 3), V sweep (Fig. 4), K sweep (Figs. 5/6)
+  * kernel microbenches + Algorithm-2 solver latency
+  * roofline terms per (arch x shape x mesh) from the dry-run dumps
+
+Default scale finishes on CPU in tens of minutes; --paper-scale switches to
+the paper's 120-device / 2000-round configuration.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--paper-scale", action="store_true")
+    ap.add_argument("--skip", default="",
+                    help="comma list: convergence,sweeps,kernels,roofline")
+    args = ap.parse_args(argv)
+    skip = set(filter(None, args.skip.split(",")))
+
+    from benchmarks.common import BenchConfig
+    cfg = BenchConfig.paper_scale() if args.paper_scale else BenchConfig()
+
+    print("name,us_per_call,derived")
+    if "kernels" not in skip:
+        from benchmarks import bench_kernels
+        for row in bench_kernels.run():
+            print(row, flush=True)
+    if "convergence" not in skip:
+        from benchmarks import bench_convergence
+        for row in bench_convergence.run(cfg):
+            print(row, flush=True)
+    if "sweeps" not in skip:
+        from benchmarks import bench_sweeps
+        for row in bench_sweeps.lambda_sweep(cfg):
+            print(row, flush=True)
+        for row in bench_sweeps.v_sweep(cfg):
+            print(row, flush=True)
+        for row in bench_sweeps.k_sweep(cfg):
+            print(row, flush=True)
+        for row in bench_sweeps.heterogeneity_sweep(cfg):
+            print(row, flush=True)
+    if "roofline" not in skip:
+        from benchmarks import bench_roofline
+        for row in bench_roofline.run():
+            print(row, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Federated training of a language model with the SPMD client-parallel
+round step (``make_fl_round_step``): K clients run local SGD **inside one
+jitted program** (clients vmapped — the axis that shards over the mesh's
+``data`` axis at scale) and the unbiased aggregation (paper eq. 4) reduces
+their deltas. LROA supplies the per-round sampling probabilities/coeffs.
+
+    PYTHONPATH=src python examples/lm_federated.py [--rounds 20]
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import (LROAController, estimate_hyperparams,
+                        paper_default_params)
+from repro.data import synthetic_lm_tokens
+from repro.fl import ChannelConfig, ChannelProcess, sample_clients
+from repro.fl.server import aggregation_weights
+from repro.launch.steps import build_model, make_fl_round_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=15)
+    ap.add_argument("--devices", type=int, default=16)
+    ap.add_argument("--arch", default="gemma-2b",
+                    help="smoke variant of this arch is trained")
+    args = ap.parse_args()
+
+    n, k = args.devices, 2
+    cfg = get_smoke_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    d = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"model: {cfg.name} ({d/1e6:.2f}M params)")
+
+    # per-client token shards (zipf-bigram synthetic corpus)
+    rng = np.random.default_rng(0)
+    shards = [synthetic_lm_tokens(8, 33, cfg.vocab_size, seed=i)
+              for i in range(n)]
+    sizes = np.asarray([s.size for s in shards], np.float32)
+
+    sys_params = paper_default_params(num_devices=n, data_sizes=sizes,
+                                      model_params=d)
+    hp = estimate_hyperparams(sys_params, 0.1, loss_scale=5.0)
+    controller = LROAController(sys_params, hp)
+    channel = ChannelProcess(n, ChannelConfig(seed=0))
+    w = np.asarray(sys_params.data_weights)
+
+    round_step = jax.jit(make_fl_round_step(cfg, k, lr=0.3, local_steps=4))
+
+    for t in range(args.rounds):
+        h = jnp.asarray(channel.sample())
+        dec = controller.decide(h)
+        selected = sample_clients(rng, np.asarray(dec.q), k)
+        coeffs = aggregation_weights(selected, np.asarray(dec.q), w, k)
+        toks = np.stack([shards[i] for i in selected])    # [K, B, S+1]
+        batch = {"tokens": jnp.asarray(toks[:, :, :-1]),
+                 "labels": jnp.asarray(toks[:, :, 1:]),
+                 "coeffs": jnp.asarray(coeffs)}
+        params, metrics = round_step(params, batch)
+        controller.step_queues(h, dec)
+        print(f"round {t:3d}  clients {selected.tolist()}  "
+              f"loss {float(metrics['loss']):.4f}")
+
+    print("\nfederated LM training ran end-to-end (client-parallel SPMD "
+          "round step + eq.-(4) aggregation).")
+
+
+if __name__ == "__main__":
+    main()

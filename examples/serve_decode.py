@@ -1,0 +1,64 @@
+"""Batched serving demo: prefill a prompt batch, then greedy-decode with the
+one-token ``serve_step`` (KV caches, ring-buffer window caches on local
+layers, flash-decode on long global caches).
+
+    PYTHONPATH=src python examples/serve_decode.py [--arch gemma2-27b]
+        (the smoke variant of the arch is served on CPU)
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.data import synthetic_lm_tokens
+from repro.launch.steps import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-27b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    total = args.prompt_len + args.new_tokens
+
+    prompts = jnp.asarray(synthetic_lm_tokens(
+        args.batch, args.prompt_len, cfg.vocab_size, seed=1))
+    print(f"serving {cfg.name}: batch={args.batch} "
+          f"prompt={args.prompt_len} +{args.new_tokens} tokens")
+
+    # prefill -> per-layer caches; pad global caches to the full horizon
+    logits, _, cache = jax.jit(
+        lambda p, t: model.apply(p, t, mode="prefill"))(params, prompts)
+    ref_cache = model.init_cache(args.batch, total)
+    cache = jax.tree_util.tree_map(
+        lambda cp, cf: jnp.pad(cp, [(0, cf.shape[i] - cp.shape[i])
+                                    for i in range(cp.ndim)]),
+        cache, ref_cache)
+
+    decode = jax.jit(model.decode_step)
+    tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
+    generated = [tok]
+    for i in range(args.new_tokens - 1):
+        idx = jnp.asarray(args.prompt_len + i, jnp.int32)
+        lg, cache = decode(params, cache, tok, idx)
+        tok = jnp.argmax(lg[:, -1, :], axis=-1)[:, None]
+        generated.append(tok)
+
+    out = jnp.concatenate(generated, axis=1)
+    for b in range(args.batch):
+        print(f"  prompt[{b}] {np.asarray(prompts[b])[:8]}... -> "
+              f"generated {np.asarray(out[b])}")
+    print("decode loop OK (ring-buffer local caches + full global caches).")
+
+
+if __name__ == "__main__":
+    main()

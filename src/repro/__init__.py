@@ -1,0 +1,3 @@
+"""repro — LROA federated edge learning framework (JAX)."""
+
+__version__ = "0.1.0"

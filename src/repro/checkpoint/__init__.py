@@ -1,0 +1,4 @@
+"""repro.checkpoint — npz pytree checkpointing."""
+
+from repro.checkpoint.checkpoint import (save_checkpoint, restore_checkpoint,
+                                         latest_step)

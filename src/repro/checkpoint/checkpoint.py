@@ -1,0 +1,107 @@
+"""Dependency-free pytree checkpointing (npz + json manifest).
+
+Flattens a pytree of arrays into key-addressed npz entries; the tree
+structure and scalar metadata (step, round, RNG seeds, queue states) go into
+a sidecar manifest. Atomic writes (tmp + rename) so an interrupted run never
+leaves a corrupt latest checkpoint.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_SEP = "/"
+
+
+def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "fiub" or arr.dtype.itemsize == 0:
+            arr = np.asarray(jax.numpy.asarray(leaf).astype("float32"))
+        elif str(arr.dtype) in ("bfloat16",):
+            # npz cannot serialise ml_dtypes; widen losslessly to f32
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out
+
+
+def save_checkpoint(directory: str, name: str, tree: PyTree,
+                    metadata: Optional[Dict] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    arrays = _flatten(tree)
+    treedef = jax.tree_util.tree_structure(tree)
+    path = os.path.join(directory, f"{name}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    manifest = {"treedef": str(treedef), "keys": sorted(arrays),
+                "metadata": metadata or {}}
+    mpath = os.path.join(directory, f"{name}.json")
+    with open(mpath + ".tmp", "w") as f:
+        json.dump(manifest, f, indent=1)
+    os.replace(mpath + ".tmp", mpath)
+    return path
+
+
+def restore_checkpoint(directory: str, name: str, like: PyTree
+                       ) -> Tuple[PyTree, Dict]:
+    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    path = os.path.join(directory, f"{name}.npz")
+    with np.load(path) as data:
+        arrays = {k: data[k] for k in data.files}
+    ref = _flatten(like)
+    if set(arrays) != set(ref):
+        missing = set(ref) - set(arrays)
+        extra = set(arrays) - set(ref)
+        raise ValueError(f"checkpoint mismatch: missing={sorted(missing)[:5]} "
+                         f"extra={sorted(extra)[:5]}")
+    leaves_ref, treedef = jax.tree_util.tree_flatten(like)
+    flat_paths = jax.tree_util.tree_flatten_with_path(like)[0]
+    new_leaves = []
+    for (pth, leaf) in flat_paths:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in pth)
+        arr = arrays[key]
+        if arr.shape != np.shape(leaf):
+            raise ValueError(f"{key}: shape {arr.shape} != {np.shape(leaf)}")
+        # cast back through jnp (handles bfloat16 and friends)
+        new_leaves.append(
+            jax.numpy.asarray(arr).astype(jax.numpy.asarray(leaf).dtype))
+    tree = jax.tree_util.tree_unflatten(treedef, new_leaves)
+    mpath = os.path.join(directory, f"{name}.json")
+    metadata = {}
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            metadata = json.load(f).get("metadata", {})
+    return tree, metadata
+
+
+def latest_step(directory: str, prefix: str = "step_") -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for fn in os.listdir(directory):
+        if fn.startswith(prefix) and fn.endswith(".npz"):
+            try:
+                steps.append(int(fn[len(prefix):-4]))
+            except ValueError:
+                pass
+    return max(steps) if steps else None

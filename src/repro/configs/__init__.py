@@ -1,0 +1,45 @@
+"""repro.configs — assigned architecture registry (``--arch <id>``).
+
+Every entry cites its source model card / paper and is exercised by
+(a) a reduced-config CPU smoke test and (b) the full-config multi-pod
+dry-run over the assigned input shapes.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ArchSpec, smoke_config
+from repro.configs.shapes import SHAPES, InputShape, covered_shapes
+
+from repro.configs import (gemma2_27b, gemma_2b, granite_20b,
+                           granite_moe_3b_a800m, grok_1_314b, mamba2_130m,
+                           qwen2_vl_7b, recurrentgemma_2b, whisper_tiny,
+                           yi_9b)
+
+ARCHS: Dict[str, ArchSpec] = {
+    "granite-moe-3b-a800m": granite_moe_3b_a800m.SPEC,
+    "whisper-tiny": whisper_tiny.SPEC,
+    "mamba2-130m": mamba2_130m.SPEC,
+    "recurrentgemma-2b": recurrentgemma_2b.SPEC,
+    "grok-1-314b": grok_1_314b.SPEC,
+    "gemma-2b": gemma_2b.SPEC,
+    "yi-9b": yi_9b.SPEC,
+    "qwen2-vl-7b": qwen2_vl_7b.SPEC,
+    "granite-20b": granite_20b.SPEC,
+    "gemma2-27b": gemma2_27b.SPEC,
+}
+
+
+def get_spec(arch: str) -> ArchSpec:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch]
+
+
+def get_config(arch: str):
+    return get_spec(arch).config
+
+
+def get_smoke_config(arch: str):
+    return smoke_config(get_config(arch))

@@ -1,0 +1,24 @@
+"""repro.core — the paper's contribution: LROA online client scheduling and
+resource allocation (Lyapunov drift-plus-penalty + Algorithm 2 solvers)."""
+
+from repro.core.system_model import (SystemParams, paper_default_params,
+                                     uplink_rate, upload_time, download_time,
+                                     compute_time, round_time, round_energy,
+                                     compute_energy, comm_energy,
+                                     expected_round_latency,
+                                     selection_probability, expected_energy)
+from repro.core.solver import (ControlDecision, SolverConfig, solve_f,
+                               solve_p, solve_q, solve_p2, p2_objective,
+                               p22_objective)
+from repro.core.queues import (init_queues, update_queues, energy_increment,
+                               lyapunov, drift, lemma1_constant)
+from repro.core.controller import (LROAController, LROAHyperParams,
+                                   estimate_hyperparams, realized_round_time,
+                                   realized_energy)
+from repro.core.baselines import (UniformDynamicController,
+                                  UniformStaticController, DivFLController,
+                                  facility_location_greedy, static_frequency)
+from repro.core.convergence import (BoundConstants, convergence_bound,
+                                    sampling_error_term, max_learning_rate)
+from repro.core.arch_bridge import (EdgeProfile, system_params_for_arch,
+                                    cycles_per_sample, update_bits)

@@ -1,0 +1,76 @@
+"""Bridge between the model zoo and the LROA system model.
+
+The paper's scheduler sees a model only through (a) the update size M in
+bits and (b) the CPU cycles per sample c_n. For each assigned architecture
+we derive both from the ``ModelConfig`` — M from the (active) parameter
+count x wire precision, c_n from the per-sample training FLOPs (6·N_active·s
+for an LM with sequence length s) scaled by a cycles-per-FLOP efficiency —
+so LROA schedules realistic per-architecture workloads (§Arch-applicability
+in DESIGN.md: the technique applies to every family through exactly this
+interface).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core import system_model as sm
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeProfile:
+    """How the edge fleet trains this model (paper Sec. VII defaults)."""
+    num_devices: int = 120
+    sample_count: int = 2
+    local_epochs: int = 2
+    seq_len: int = 512              # tokens per training sample on-device
+    wire_bits: int = 16             # bf16 updates (paper used 32)
+    cycles_per_flop: float = 0.5    # edge NPU efficiency (MACs/cycle ~ 1)
+    energy_budget_j: float = 15.0
+    upload_only_active: bool = True  # MoE: send only touched experts
+
+
+def cycles_per_sample(cfg: ModelConfig, profile: EdgeProfile) -> float:
+    """c_n = train FLOPs per sample * cycles/FLOP (6 N_active s)."""
+    flops = 6.0 * cfg.active_param_count() * profile.seq_len
+    return flops * profile.cycles_per_flop
+
+
+def update_bits(cfg: ModelConfig, profile: EdgeProfile) -> float:
+    """M — bits uploaded per round (eq. 6)."""
+    n = cfg.active_param_count() if profile.upload_only_active \
+        else cfg.param_count()
+    return float(n) * profile.wire_bits
+
+
+def system_params_for_arch(cfg: ModelConfig,
+                           profile: EdgeProfile = EdgeProfile(),
+                           data_sizes: Optional[np.ndarray] = None,
+                           seed: int = 0) -> sm.SystemParams:
+    """SystemParams whose compute/communication load matches ``cfg``."""
+    n = profile.num_devices
+    if data_sizes is None:
+        rng = np.random.default_rng(seed)
+        data_sizes = rng.integers(64, 512, n).astype(np.float32)
+    ones = np.ones((n,), np.float32)
+    return sm.SystemParams(
+        num_devices=n,
+        sample_count=profile.sample_count,
+        local_epochs=profile.local_epochs,
+        bandwidth_hz=1.0e6,
+        noise_power=0.01,
+        model_bits=update_bits(cfg, profile),
+        download_rate=1.0e7,
+        cycles_per_sample=float(cycles_per_sample(cfg, profile)) * ones,
+        data_sizes=np.asarray(data_sizes, np.float32),
+        capacitance=2.0e-28 * ones,
+        energy_budget=profile.energy_budget_j * ones,
+        f_min=1.0e9 * ones,
+        f_max=2.0e9 * ones,
+        p_min=1.0e-3 * ones,
+        p_max=0.1 * ones,
+    )

@@ -1,0 +1,120 @@
+"""LROA controller — the paper's online control policy as a reusable object.
+
+Per round:  observe channel gains ``h^t``  ->  ``decide`` (Algorithm 2 /
+``solver.solve_p2``)  ->  run the FL round  ->  ``step_queues``.
+
+Hyper-parameter initialisation follows Sec. VII-B:
+
+  lambda_0 = T_0 / F_0     with T_0 the mid-range per-round latency estimate
+                           and F_0 a loss-scale estimate (q = w),
+  V_0      = a_0^2 / (T_0 + lambda * F_0)   with a_0 the energy-residual
+                           estimate from eq. (20) at the mid-range operating
+                           point (Q_0 = a_0),
+  lambda = mu * lambda_0,  V = nu * V_0.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import queues as vq
+from repro.core import solver as slv
+from repro.core import system_model as sm
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class LROAHyperParams:
+    lam: float
+    V: float
+    lam0: float
+    V0: float
+    mu: float
+    nu: float
+
+
+def estimate_hyperparams(params: sm.SystemParams, mean_gain: float,
+                         loss_scale: float = 1.0, mu: float = 1.0,
+                         nu: float = 1e5) -> LROAHyperParams:
+    """lambda_0 = T_0/F_0 and V_0 = a_0^2/(T_0 + lambda F_0) (Sec. VII-B)."""
+    f_mid = 0.5 * (params.f_min + params.f_max)
+    p_mid = 0.5 * (params.p_min + params.p_max)
+    h = jnp.full((params.num_devices,), mean_gain, jnp.float32)
+    t0 = float(jnp.sum(params.data_weights *
+                       sm.round_time(params, h, p_mid, f_mid)))
+    f0 = float(loss_scale)
+    lam0 = t0 / max(f0, 1e-12)
+    lam = mu * lam0
+    q_w = params.data_weights
+    e0 = sm.round_energy(params, h, p_mid, f_mid)
+    a0 = float(jnp.mean(jnp.abs(
+        sm.selection_probability(q_w, params.sample_count) * e0
+        - params.energy_budget)))
+    v0 = a0 ** 2 / max(t0 + lam * f0, 1e-12)
+    return LROAHyperParams(lam=lam, V=nu * v0, lam0=lam0, V0=v0, mu=mu, nu=nu)
+
+
+class LROAController:
+    """Stateful wrapper: virtual queues + Algorithm 2 decisions."""
+
+    name = "lroa"
+
+    def __init__(self, params: sm.SystemParams, hp: LROAHyperParams,
+                 cfg: slv.SolverConfig = slv.SolverConfig()):
+        self.params = params
+        self.hp = hp
+        self.cfg = cfg
+        self.queues = vq.init_queues(params.num_devices)
+        self.history: list[dict] = []
+
+    def decide(self, h: Array) -> slv.ControlDecision:
+        return slv.solve_p2(self.params, h, self.queues,
+                            self.hp.V, self.hp.lam, self.cfg)
+
+    def step_queues(self, h: Array, decision: slv.ControlDecision) -> Array:
+        inc = vq.energy_increment(self.params, h, decision.p, decision.f,
+                                  decision.q)
+        self.queues = vq.update_queues(self.queues, inc)
+        return self.queues
+
+    def round_stats(self, h: Array, decision: slv.ControlDecision) -> dict:
+        f, p, q = decision
+        t = sm.round_time(self.params, h, p, f)
+        e = sm.expected_energy(self.params, h, p, f, q)
+        w = self.params.data_weights
+        obj = float(jnp.sum(q * t + self.hp.lam * jnp.square(w) / q))
+        stats = dict(
+            expected_latency=float(sm.expected_round_latency(q, t)),
+            objective=obj,
+            expected_energy=float(jnp.mean(e)),
+            queue_mean=float(jnp.mean(self.queues)),
+            queue_max=float(jnp.max(self.queues)),
+        )
+        self.history.append(stats)
+        return stats
+
+
+def realized_round_time(params: sm.SystemParams, h: Array,
+                        decision: slv.ControlDecision,
+                        selected: np.ndarray) -> float:
+    """Wall-clock time of a round = max over the realised selected set (10)."""
+    t = sm.round_time(params, h, decision.p, decision.f)
+    uniq = np.unique(np.asarray(selected))
+    return float(jnp.max(jnp.asarray(t)[uniq]))
+
+
+def realized_energy(params: sm.SystemParams, h: Array,
+                    decision: slv.ControlDecision,
+                    selected: np.ndarray) -> np.ndarray:
+    """Per-device energy actually drawn this round (selected devices only)."""
+    e = np.asarray(sm.round_energy(params, h, decision.p, decision.f))
+    out = np.zeros_like(e)
+    uniq = np.unique(np.asarray(selected))
+    out[uniq] = e[uniq]
+    return out

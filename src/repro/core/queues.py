@@ -1,0 +1,53 @@
+"""Virtual energy-consumption queues (paper Sec. VI-A, eqs. (19)-(21)).
+
+Queue stability <=> satisfaction of the long-term average energy constraint
+(16); the quadratic Lyapunov function and one-slot drift are provided for
+diagnostics and for the Lemma-1 constant ``C``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import system_model as sm
+
+Array = jax.Array
+
+
+def init_queues(num_devices: int) -> Array:
+    """Q^0 = 0."""
+    return jnp.zeros((num_devices,), jnp.float32)
+
+
+def energy_increment(params: sm.SystemParams, h: Array, p: Array, f: Array,
+                     q: Array) -> Array:
+    """a_n^t = (1-(1-q)^K) E_n^t - Ebar_n — eq. (20)."""
+    return (sm.expected_energy(params, h, p, f, q) - params.energy_budget)
+
+
+def update_queues(queues: Array, increment: Array) -> Array:
+    """Q^{t+1} = max(Q^t + a^t, 0) — eq. (19)."""
+    return jnp.maximum(queues + increment, 0.0)
+
+
+def lyapunov(queues: Array) -> Array:
+    """L(t) = 1/2 sum_n Q_n^2 — eq. (21)."""
+    return 0.5 * jnp.sum(jnp.square(queues))
+
+
+def drift(queues_next: Array, queues: Array) -> Array:
+    """One-slot Lyapunov drift L(t+1) - L(t) — realisation of eq. (22)."""
+    return lyapunov(queues_next) - lyapunov(queues)
+
+
+def lemma1_constant(params: sm.SystemParams, t_com_upper: Array) -> Array:
+    """The constant C of Lemma 1 (with Tbar the upload-time upper bound).
+
+    C = sum_n [ (Tbar p_max + E alpha c D f_max^2 / 2)^2 + Ebar^2 ].
+    """
+    e_cmp_max = (0.5 * params.local_epochs * params.capacitance *
+                 params.cycles_per_sample * params.data_sizes *
+                 jnp.square(params.f_max))
+    term = jnp.square(t_com_upper * params.p_max + e_cmp_max)
+    return jnp.sum(term + jnp.square(params.energy_budget))

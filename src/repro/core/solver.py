@@ -1,0 +1,252 @@
+"""Algorithm 2: efficient solution to the per-round drift-plus-penalty
+problem P2 by alternating minimisation.
+
+ * ``solve_f``  — Theorem 2 closed form (cube root, clipped).
+ * ``solve_p``  — Theorem 3: root of ``(1+x)ln(1+x) - x = A_1`` with
+   ``x = h p / N0``; the LHS is monotone increasing so a vectorised
+   bisection converges geometrically.
+ * ``solve_q``  — P2.2 via Successive Upper-bound Minimisation (SUM): the
+   concave part is linearised at the current iterate and the resulting
+   separable convex program over the probability simplex is solved EXACTLY
+   by dual water-filling (bisection on the simplex multiplier).  This
+   replaces the paper's call to CVX with a closed-form, jit-able routine.
+ * ``solve_p2`` — the outer alternating loop of Algorithm 2.
+
+All functions are pure and vectorised over the device axis ``[N]``; the whole
+solver jits (fixed-trip-count bisections + ``lax.while_loop`` outer loop).
+
+Note on P2.2's concave term: the paper prints ``- sum_n E_n (1-q_n)^K`` but
+the drift derivation (Q_n * a_n with the q-independent parts dropped) gives
+``- sum_n Q_n E_n (1-q_n)^K``; we implement the latter (the paper's line is a
+typo — with Q_n == 0 the energy term must vanish, which only the derived form
+satisfies).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import system_model as sm
+
+Array = jax.Array
+
+_EPS = 1e-12
+
+
+class ControlDecision(NamedTuple):
+    """Per-round control action (f^t, p^t, q^t), each shape [N]."""
+    f: Array
+    p: Array
+    q: Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    outer_iters: int = 24          # Algorithm 2 outer loop cap
+    outer_tol: float = 1e-6        # epsilon_0
+    sum_iters: int = 32            # SUM inner loop cap
+    sum_tol: float = 1e-7          # epsilon_1
+    bisect_iters: int = 64         # p-root + water-filling bisections
+    q_floor: float = 1e-6          # numerical floor for q in (0, 1]
+
+
+# --------------------------------------------------------------------------
+# Theorem 2 — CPU frequency
+# --------------------------------------------------------------------------
+
+def solve_f(params: sm.SystemParams, q: Array, queues: Array, V: float) -> Array:
+    """(f_n^t)* = clip(cbrt(V q_n / (Q_n (1-(1-q_n)^K) alpha_n))).
+
+    When the energy queue (or selection probability) is zero the energy
+    pressure vanishes and the latency term alone drives f to f_max, which the
+    clip reproduces (the unconstrained root diverges to +inf).
+    """
+    sel = sm.selection_probability(q, params.sample_count)
+    denom = queues * sel * params.capacitance
+    num = V * q
+    cube = num / jnp.maximum(denom, _EPS)
+    f_star = jnp.cbrt(cube)
+    f_star = jnp.where(denom <= _EPS, params.f_max, f_star)
+    return jnp.clip(f_star, params.f_min, params.f_max)
+
+
+# --------------------------------------------------------------------------
+# Theorem 3 — transmit power
+# --------------------------------------------------------------------------
+
+def _phi(x: Array) -> Array:
+    """phi(x) = (1+x) ln(1+x) - x ; monotone increasing, phi(0) = 0."""
+    return (1.0 + x) * jnp.log1p(x) - x
+
+
+def solve_p(params: sm.SystemParams, q: Array, queues: Array, h: Array,
+            V: float, num_iters: int = 64) -> Array:
+    """Solve ``phi(x) = A_1`` for x = h p / N0 by bisection, then clip p.
+
+    A_{1,n} = V q_n h_n / (Q_n (1-(1-q_n)^K) N0).  phi is strictly increasing
+    on x >= 0, so the root is unique; Q_n -> 0 sends A_1 -> inf and the clip
+    returns p_max (no energy pressure => fastest feasible upload).
+    """
+    sel = sm.selection_probability(q, params.sample_count)
+    denom = queues * sel * params.noise_power
+    a1 = V * q * h / jnp.maximum(denom, _EPS)
+    x_max = h * params.p_max / params.noise_power
+
+    # Bisect on [0, hi] with hi doubled until phi(hi) >= a1 (bounded by the
+    # feasible box anyway: the clip below dominates once x' > x_max).
+    hi0 = jnp.maximum(x_max, 1.0)
+
+    def grow(_, hi):
+        return jnp.where(_phi(hi) < a1, hi * 2.0, hi)
+
+    hi = jax.lax.fori_loop(0, 40, grow, hi0)
+    lo = jnp.zeros_like(hi)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        below = _phi(mid) < a1
+        return jnp.where(below, mid, lo), jnp.where(below, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, num_iters, body, (lo, hi))
+    x_root = 0.5 * (lo + hi)
+    p_star = x_root * params.noise_power / jnp.maximum(h, _EPS)
+    p_star = jnp.where(denom <= _EPS, params.p_max, p_star)
+    return jnp.clip(p_star, params.p_min, params.p_max)
+
+
+# --------------------------------------------------------------------------
+# P2.2 — sampling probabilities via SUM + exact water-filling
+# --------------------------------------------------------------------------
+
+def _waterfill_simplex(b: Array, a3: Array, q_floor: float,
+                       num_iters: int) -> Array:
+    """Minimise  sum_n b_n q_n + a3_n / q_n  s.t.  sum q = 1, q in (0, 1].
+
+    KKT: q_n(nu) = sqrt(a3_n / (b_n + nu)) clipped to (q_floor, 1];
+    sum_n q_n(nu) is continuous and decreasing in nu => bisection.
+    a3_n = V * lambda * w_n^2 > 0 keeps every q_n strictly positive (every
+    device retains a nonzero sampling probability — the paper's (3)).
+    """
+    a3 = jnp.maximum(a3, _EPS)
+
+    def q_of(nu):
+        denom = jnp.maximum(b + nu, _EPS)
+        return jnp.clip(jnp.sqrt(a3 / denom), q_floor, 1.0)
+
+    # nu range: at nu_lo all q saturate at 1 (sum = N >= 1); at nu_hi the sum
+    # is < 1.  sqrt(a3/(b+nu)) <= 1/N  <=  nu >= a3 N^2 - b.
+    n = b.shape[0]
+    nu_lo = -jnp.min(b) + _EPS
+    nu_hi = jnp.max(a3 * (n ** 2) - b) + 1.0
+    nu_hi = jnp.maximum(nu_hi, nu_lo + 1.0)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        too_big = jnp.sum(q_of(mid)) > 1.0  # need larger nu
+        return jnp.where(too_big, mid, lo), jnp.where(too_big, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, num_iters, body, (nu_lo, nu_hi))
+    q = q_of(0.5 * (lo + hi))
+    # Exact simplex projection of the residual bisection error.
+    return q / jnp.sum(q)
+
+
+def p22_objective(params: sm.SystemParams, q: Array, t_round: Array,
+                  energy: Array, queues: Array, V: float, lam: float) -> Array:
+    """f(q) of P2.2 (with the derived Q_n weight on the concave term)."""
+    w = params.data_weights
+    convex = V * jnp.sum(t_round * q + lam * jnp.square(w) / q)
+    concave = -jnp.sum(queues * energy *
+                       jnp.power(1.0 - q, params.sample_count))
+    return convex + concave
+
+
+def solve_q(params: sm.SystemParams, t_round: Array, energy: Array,
+            queues: Array, V: float, lam: float, q_init: Array,
+            cfg: SolverConfig = SolverConfig()) -> Array:
+    """SUM iterations for P2.2.
+
+    Each step linearises ``f_cve(q) = -sum Q_n E_n (1-q_n)^K`` at the current
+    iterate (gradient ``Q_n E_n K (1-q_n)^{K-1}``) and exactly minimises the
+    convex surrogate  sum (A2_n + c_n) q_n + A3_n / q_n  over the simplex.
+    """
+    w = params.data_weights
+    a2 = V * t_round                    # A_{2,n}
+    a3 = V * lam * jnp.square(w)        # A_{3,n}
+    K = params.sample_count
+
+    def cond(carry):
+        q, q_prev, it = carry
+        return jnp.logical_and(it < cfg.sum_iters,
+                               jnp.linalg.norm(q - q_prev) > cfg.sum_tol)
+
+    def body(carry):
+        q, _, it = carry
+        grad_cve = queues * energy * K * jnp.power(1.0 - q, K - 1)
+        b = a2 + grad_cve
+        q_new = _waterfill_simplex(b, a3, cfg.q_floor, cfg.bisect_iters)
+        return q_new, q, it + 1
+
+    q0 = q_init / jnp.sum(q_init)
+    q, _, _ = jax.lax.while_loop(cond, body, (q0, q0 + 1.0, 0))
+    return q
+
+
+# --------------------------------------------------------------------------
+# P2 — outer alternating loop (Algorithm 2)
+# --------------------------------------------------------------------------
+
+def p2_objective(params: sm.SystemParams, h: Array, decision: ControlDecision,
+                 queues: Array, V: float, lam: float) -> Array:
+    """V sum_n (q T + lam w^2/q) + sum_n Q_n a_n  — the P2 objective."""
+    f, p, q = decision
+    t = sm.round_time(params, h, p, f)
+    e = sm.round_energy(params, h, p, f)
+    w = params.data_weights
+    penalty = V * jnp.sum(q * t + lam * jnp.square(w) / q)
+    a = sm.selection_probability(q, params.sample_count) * e - params.energy_budget
+    return penalty + jnp.sum(queues * a)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def solve_p2(params: sm.SystemParams, h: Array, queues: Array,
+             V: float, lam: float,
+             cfg: SolverConfig = SolverConfig()) -> ControlDecision:
+    """Algorithm 2: alternate (f, p) closed forms with SUM on q.
+
+    Initial guesses follow the paper: mid-range f and p, uniform q.
+    """
+    n = params.num_devices
+    f0 = 0.5 * (params.f_min + params.f_max)
+    p0 = 0.5 * (params.p_min + params.p_max)
+    q0 = jnp.full((n,), 1.0 / n, jnp.float32)
+
+    def pack(d: ControlDecision) -> Array:
+        return jnp.concatenate([d.f / params.f_max, d.p / params.p_max, d.q])
+
+    def cond(carry):
+        dec, dec_prev, it = carry
+        return jnp.logical_and(
+            it < cfg.outer_iters,
+            jnp.linalg.norm(pack(dec) - pack(dec_prev)) > cfg.outer_tol)
+
+    def body(carry):
+        dec, _, it = carry
+        f_new = solve_f(params, dec.q, queues, V)
+        p_new = solve_p(params, dec.q, queues, h, V, cfg.bisect_iters)
+        t = sm.round_time(params, h, p_new, f_new)
+        e = sm.round_energy(params, h, p_new, f_new)
+        q_new = solve_q(params, t, e, queues, V, lam, dec.q, cfg)
+        return ControlDecision(f_new, p_new, q_new), dec, it + 1
+
+    init = ControlDecision(f0, p0, q0)
+    far = ControlDecision(f0 + params.f_max, p0, q0)
+    dec, _, _ = jax.lax.while_loop(cond, body, (init, far, 0))
+    return dec

@@ -1,0 +1,202 @@
+"""Edge-device system model for FL over mobile edge networks.
+
+Implements the communication/computation time and energy model of the paper
+(Sections III-C .. III-F, eqs. (5)-(17)) as vectorised, jit-able JAX
+functions over the device dimension ``[N]``.
+
+Conventions
+-----------
+* All per-device quantities are 1-D arrays of shape ``[N]`` (float32).
+* ``M`` is the model-update size in **bits** (the paper uses M = 32 d bits).
+* Rates are bits/second; times are seconds; energies are Joules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("cycles_per_sample", "data_sizes", "capacitance",
+                      "energy_budget", "f_min", "f_max", "p_min", "p_max"),
+         meta_fields=("num_devices", "sample_count", "local_epochs",
+                      "bandwidth_hz", "noise_power", "model_bits",
+                      "download_rate"))
+@dataclasses.dataclass(frozen=True)
+class SystemParams:
+    """Static parameters of the FL edge system (paper Table I).
+
+    Per-device arrays are pytree leaves of shape ``[N]``; scalars are
+    static metadata, so a ``SystemParams`` passes directly through ``jit``.
+    """
+
+    num_devices: int                 # N
+    sample_count: int                # K — sampling frequency (draws/round)
+    local_epochs: int                # E
+    bandwidth_hz: float              # B — total uplink bandwidth (Hz)
+    noise_power: float               # N0 — background noise power (W)
+    model_bits: float                # M — model update size in bits
+    download_rate: float             # r_{n,d} — downlink rate (bits/s)
+    # Heterogeneous per-device arrays (shape [N]):
+    cycles_per_sample: Array         # c_n
+    data_sizes: Array                # D_n (samples)
+    capacitance: Array               # alpha_n
+    energy_budget: Array             # \bar{E}_n (J / round, time-averaged)
+    f_min: Array
+    f_max: Array
+    p_min: Array
+    p_max: Array
+
+    def __post_init__(self):
+        for name in ("cycles_per_sample", "data_sizes", "capacitance",
+                     "energy_budget", "f_min", "f_max", "p_min", "p_max"):
+            arr = getattr(self, name)
+            shape = getattr(arr, "shape", None)
+            if shape is not None and tuple(shape) != (self.num_devices,):
+                raise ValueError(
+                    f"SystemParams.{name} must have shape ({self.num_devices},),"
+                    f" got {shape}")
+
+    @property
+    def data_weights(self) -> Array:
+        """w_n = D_n / D (paper Sec. III-A)."""
+        d = jnp.asarray(self.data_sizes, jnp.float32)
+        return d / jnp.sum(d)
+
+    @property
+    def per_device_bandwidth(self) -> float:
+        """B_n = B / K under FDMA with even allocation (Sec. III-C)."""
+        return self.bandwidth_hz / float(self.sample_count)
+
+    def tree_arrays(self):
+        return dict(
+            cycles_per_sample=self.cycles_per_sample,
+            data_sizes=self.data_sizes,
+            capacitance=self.capacitance,
+            energy_budget=self.energy_budget,
+            f_min=self.f_min, f_max=self.f_max,
+            p_min=self.p_min, p_max=self.p_max,
+        )
+
+
+def paper_default_params(num_devices: int = 120,
+                         sample_count: int = 2,
+                         local_epochs: int = 2,
+                         model_params: int = 11_172_342,
+                         dataset: str = "cifar10",
+                         data_sizes: Optional[np.ndarray] = None,
+                         param_bits: int = 32) -> SystemParams:
+    """The paper's default experiment configuration (Sec. VII-A).
+
+    p in [1e-3, 0.1] W, N0 = 0.01 W, f in [1.0, 2.0] GHz,
+    alpha = 2e-28, B = 1 MHz, M = 32 * d bits,
+    c = 3e9 (CIFAR-10) / 2e9 (FEMNIST) cycles/sample,
+    E_bar = 15 J (CIFAR-10) / 5 J (FEMNIST).
+    """
+    n = num_devices
+    if dataset == "cifar10":
+        cycles, budget = 3.0e9, 15.0
+    elif dataset == "femnist":
+        cycles, budget = 2.0e9, 5.0
+    else:
+        raise ValueError(f"unknown dataset {dataset!r}")
+    if data_sizes is None:
+        data_sizes = np.full((n,), 50_000 // n, np.float32)
+    ones = np.ones((n,), np.float32)
+    return SystemParams(
+        num_devices=n,
+        sample_count=sample_count,
+        local_epochs=local_epochs,
+        bandwidth_hz=1.0e6,
+        noise_power=0.01,
+        model_bits=float(param_bits) * float(model_params),
+        download_rate=1.0e7,  # downloads ignored in paper experiments; kept finite
+        cycles_per_sample=cycles * ones,
+        data_sizes=np.asarray(data_sizes, np.float32),
+        capacitance=2.0e-28 * ones,
+        energy_budget=budget * ones,
+        f_min=1.0e9 * ones,
+        f_max=2.0e9 * ones,
+        p_min=1.0e-3 * ones,
+        p_max=0.1 * ones,
+    )
+
+
+# --------------------------------------------------------------------------
+# Time model (eqs. (5)-(11))
+# --------------------------------------------------------------------------
+
+def uplink_rate(params: SystemParams, h: Array, p: Array) -> Array:
+    """r_{n,u}^t = B_n log2(1 + h p / N0) — eq. (5)."""
+    bn = params.per_device_bandwidth
+    return bn * jnp.log2(1.0 + h * p / params.noise_power)
+
+
+def upload_time(params: SystemParams, h: Array, p: Array) -> Array:
+    """T_{n,u}^{t,com} = M / r_{n,u}^t — eq. (6)."""
+    return params.model_bits / uplink_rate(params, h, p)
+
+
+def download_time(params: SystemParams) -> Array:
+    """T_{n,d}^{t,com} = M / r_{n,d} — eq. (7)."""
+    return jnp.full((params.num_devices,),
+                    params.model_bits / params.download_rate, jnp.float32)
+
+
+def compute_time(params: SystemParams, f: Array) -> Array:
+    """T_n^{t,cmp} = E c_n D_n / f — eq. (8)."""
+    cycles = params.local_epochs * params.cycles_per_sample * params.data_sizes
+    return cycles / f
+
+
+def round_time(params: SystemParams, h: Array, p: Array, f: Array,
+               include_download: bool = False) -> Array:
+    """T_n^t — eq. (9). The paper's experiments ignore the download term."""
+    t = compute_time(params, f) + upload_time(params, h, p)
+    if include_download:
+        t = t + download_time(params)
+    return t
+
+
+def expected_round_latency(q: Array, t_round: Array) -> Array:
+    """max_n T_n ~= sum_n q_n T_n — the paper's surrogate, eq. (11)."""
+    return jnp.sum(q * t_round)
+
+
+# --------------------------------------------------------------------------
+# Energy model (eqs. (12)-(17))
+# --------------------------------------------------------------------------
+
+def compute_energy(params: SystemParams, f: Array) -> Array:
+    """E_n^{t,cmp} = E alpha_n c_n D_n f^2 / 2 — eq. (12)."""
+    cycles = params.local_epochs * params.cycles_per_sample * params.data_sizes
+    return 0.5 * params.capacitance * cycles * jnp.square(f)
+
+
+def comm_energy(params: SystemParams, h: Array, p: Array) -> Array:
+    """E_n^{t,com} = p * T_{n,u}^{t,com} — eq. (14)."""
+    return p * upload_time(params, h, p)
+
+
+def round_energy(params: SystemParams, h: Array, p: Array, f: Array) -> Array:
+    """E_n^t — eq. (15)."""
+    return compute_energy(params, f) + comm_energy(params, h, p)
+
+
+def selection_probability(q: Array, sample_count: int) -> Array:
+    """1 - (1 - q)^K — probability device selected at least once (Sec. III-F)."""
+    return 1.0 - jnp.power(1.0 - q, sample_count)
+
+
+def expected_energy(params: SystemParams, h: Array, p: Array, f: Array,
+                    q: Array) -> Array:
+    """Per-round expected energy draw entering constraint (16)."""
+    return selection_probability(q, params.sample_count) * round_energy(params, h, p, f)

@@ -1,0 +1,8 @@
+"""repro.data — non-IID partitioning + synthetic datasets + pipelines."""
+
+from repro.data.partition import (dirichlet_partition, writer_partition,
+                                  partition_stats)
+from repro.data.synthetic import (synthetic_image_classification,
+                                  synthetic_lm_tokens)
+from repro.data.pipeline import (batch_iterator, make_client_datasets,
+                                 train_test_split, lm_batches)

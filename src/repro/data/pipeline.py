@@ -1,0 +1,59 @@
+"""Data pipeline: deterministic shuffled batch iterators + per-client views.
+
+Kept dependency-free (numpy only) and deliberately simple: FL experiments
+iterate small per-client shards; the large-model training path consumes
+``synthetic_lm_tokens`` through ``batch_iterator`` with drop-remainder
+semantics matching the global batch of the assigned input shapes.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterator, List, Sequence, Tuple
+
+import numpy as np
+
+
+def batch_iterator(x: np.ndarray, y: np.ndarray, batch_size: int,
+                   seed: int = 0, drop_remainder: bool = True
+                   ) -> Iterator[Dict[str, np.ndarray]]:
+    """Infinite shuffled epochs of {x, y} batches."""
+    rng = np.random.default_rng(seed)
+    n = x.shape[0]
+    while True:
+        perm = rng.permutation(n)
+        end = (n // batch_size) * batch_size if drop_remainder else n
+        for s in range(0, max(end, batch_size), batch_size):
+            idx = perm[s:s + batch_size]
+            if drop_remainder and len(idx) < batch_size:
+                break
+            yield {"x": x[idx], "y": y[idx]}
+
+
+def make_client_datasets(x: np.ndarray, y: np.ndarray,
+                         partitions: Sequence[np.ndarray]
+                         ) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """Materialise per-client (x, y) shards from partition index lists."""
+    return [(x[idx], y[idx]) for idx in partitions]
+
+
+def train_test_split(x: np.ndarray, y: np.ndarray, test_fraction: float = 0.1,
+                     seed: int = 0):
+    rng = np.random.default_rng(seed)
+    n = x.shape[0]
+    perm = rng.permutation(n)
+    cut = int(n * (1.0 - test_fraction))
+    tr, te = perm[:cut], perm[cut:]
+    return (x[tr], y[tr]), (x[te], y[te])
+
+
+def lm_batches(tokens: np.ndarray, batch_size: int, seed: int = 0
+               ) -> Iterator[Dict[str, np.ndarray]]:
+    """Next-token-prediction batches: inputs = toks[:-1], labels = toks[1:]."""
+    rng = np.random.default_rng(seed)
+    n = tokens.shape[0]
+    while True:
+        perm = rng.permutation(n)
+        for s in range(0, (n // batch_size) * batch_size, batch_size):
+            idx = perm[s:s + batch_size]
+            seq = tokens[idx]
+            yield {"tokens": seq[:, :-1], "labels": seq[:, 1:]}

@@ -1,0 +1,9 @@
+"""repro.fl — federated learning substrate: Algorithm 1 loop, clients,
+server aggregation (eq. 4), channel environment."""
+
+from repro.fl.client import (Task, ClientConfig, local_update, flatten_update)
+from repro.fl.server import (sample_clients, aggregation_weights, aggregate,
+                             aggregate_stacked, fedavg_reference)
+from repro.fl.environment import (ChannelConfig, ChannelProcess,
+                                  HeterogeneityConfig, heterogeneous_params)
+from repro.fl.trainer import FederatedTrainer, FLRunResult, RoundRecord

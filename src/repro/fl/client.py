@@ -1,0 +1,115 @@
+"""Client-side local training: E epochs of mini-batch SGD (Algorithm 1, l.9).
+
+Model-agnostic: a ``Task`` supplies ``init``/``loss_fn``/``metrics`` over
+pytree parameters; the client returns the *update* ``theta^{t,E} - theta^t``
+(Algorithm 1, l.10) so the server can apply the unbiased aggregation (4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Protocol, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import SGD, apply_updates
+
+PyTree = Any
+
+
+class Task(Protocol):
+    """Minimal model interface the FL substrate trains against."""
+
+    def init(self, rng: jax.Array) -> PyTree: ...
+
+    def loss_fn(self, params: PyTree, batch: Dict[str, jax.Array]
+                ) -> jax.Array: ...
+
+    def metrics(self, params: PyTree, batch: Dict[str, jax.Array]
+                ) -> Dict[str, jax.Array]: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientConfig:
+    local_epochs: int = 2
+    batch_size: int = 32
+    momentum: float = 0.9
+    max_grad_norm: float = 0.0     # 0 => no clipping
+
+
+def _num_batches(num_examples: int, batch_size: int) -> int:
+    return max(num_examples // batch_size, 1)
+
+
+@partial(jax.jit, static_argnames=("loss_fn", "cfg", "steps_per_epoch"))
+def _local_sgd(loss_fn, params: PyTree, x: jax.Array, y: jax.Array,
+               lr: jax.Array, rng: jax.Array, cfg: ClientConfig,
+               steps_per_epoch: int) -> Tuple[PyTree, jax.Array]:
+    """E epochs of shuffled mini-batch SGD, fully inside one jit."""
+    opt = SGD(momentum=cfg.momentum)
+    opt_state = opt.init(params)
+    bs = cfg.batch_size
+    n = x.shape[0]
+
+    def epoch(carry, erng):
+        params, opt_state = carry
+        perm = jax.random.permutation(erng, n)
+        xs = jnp.take(x, perm[:steps_per_epoch * bs], axis=0)
+        ys = jnp.take(y, perm[:steps_per_epoch * bs], axis=0)
+        xs = xs.reshape((steps_per_epoch, bs) + x.shape[1:])
+        ys = ys.reshape((steps_per_epoch, bs) + y.shape[1:])
+
+        def step(carry, batch):
+            params, opt_state = carry
+            bx, by = batch
+            loss, grads = jax.value_and_grad(loss_fn)(
+                params, {"x": bx, "y": by})
+            if cfg.max_grad_norm > 0:
+                from repro.optim import clip_by_global_norm
+                grads = clip_by_global_norm(grads, cfg.max_grad_norm)
+            updates, opt_state = opt.update(grads, opt_state, params, lr)
+            return (apply_updates(params, updates), opt_state), loss
+
+        (params, opt_state), losses = jax.lax.scan(
+            step, (params, opt_state), (xs, ys))
+        return (params, opt_state), jnp.mean(losses)
+
+    rngs = jax.random.split(rng, cfg.local_epochs)
+    (params, _), losses = jax.lax.scan(epoch, (params, opt_state), rngs)
+    return params, jnp.mean(losses)
+
+
+def local_update(task: Task, global_params: PyTree, data_x: np.ndarray,
+                 data_y: np.ndarray, lr: float, rng: jax.Array,
+                 cfg: ClientConfig) -> Tuple[PyTree, float]:
+    """Run E local epochs; return (theta^{t,E} - theta^t, mean loss)."""
+    steps = _num_batches(data_x.shape[0], cfg.batch_size)
+    new_params, loss = _local_sgd(task.loss_fn, global_params,
+                                  jnp.asarray(data_x), jnp.asarray(data_y),
+                                  jnp.asarray(lr, jnp.float32), rng, cfg,
+                                  steps)
+    delta = jax.tree_util.tree_map(lambda a, b: a - b, new_params,
+                                   global_params)
+    return delta, float(loss)
+
+
+def flatten_update(delta: PyTree, proj_dim: int = 256,
+                   seed: int = 0) -> np.ndarray:
+    """Random-project an update pytree to a small vector (DivFL similarity).
+
+    Uses a count-sketch style signed bucket projection — O(d) time,
+    deterministic in ``seed`` — so similarity costs O(N^2 proj_dim)
+    instead of O(N^2 d).
+    """
+    leaves = [np.asarray(x, np.float32).ravel()
+              for x in jax.tree_util.tree_leaves(delta)]
+    flat = np.concatenate(leaves) if leaves else np.zeros((1,), np.float32)
+    rng = np.random.default_rng(seed)
+    buckets = rng.integers(0, proj_dim, flat.shape[0])
+    signs = rng.choice(np.asarray([-1.0, 1.0], np.float32), flat.shape[0])
+    out = np.zeros((proj_dim,), np.float32)
+    np.add.at(out, buckets, flat * signs)
+    return out

@@ -1,0 +1,87 @@
+"""FL edge environment: stochastic channel process + device heterogeneity.
+
+The paper (Sec. VII-A) draws channel gains i.i.d. from an exponential
+distribution with mean 0.1, clipped to [0.01, 0.5], with a fixed seed across
+runs. Device heterogeneity (CPU speed, data sizes, budgets) is configured
+here so every experiment is reproducible from a seed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.core import system_model as sm
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelConfig:
+    mean_gain: float = 0.1
+    min_gain: float = 0.01
+    max_gain: float = 0.5
+    seed: int = 0
+
+
+class ChannelProcess:
+    """IID exponential channel gains, clipped to a reasonable range.
+
+    The paper filters outliers outside [0.01, 0.5]; we redraw instead of
+    clipping so the stationary distribution is a *truncated* exponential
+    (clipping would put atoms at the boundaries and bias the mean).
+    """
+
+    def __init__(self, num_devices: int, cfg: ChannelConfig = ChannelConfig()):
+        self.num_devices = num_devices
+        self.cfg = cfg
+        self._rng = np.random.default_rng(cfg.seed)
+
+    def sample(self) -> np.ndarray:
+        cfg = self.cfg
+        h = self._rng.exponential(cfg.mean_gain, self.num_devices)
+        bad = (h < cfg.min_gain) | (h > cfg.max_gain)
+        for _ in range(64):
+            if not bad.any():
+                break
+            h[bad] = self._rng.exponential(cfg.mean_gain, int(bad.sum()))
+            bad = (h < cfg.min_gain) | (h > cfg.max_gain)
+        return np.clip(h, cfg.min_gain, cfg.max_gain).astype(np.float32)
+
+    def stream(self) -> Iterator[np.ndarray]:
+        while True:
+            yield self.sample()
+
+
+@dataclasses.dataclass(frozen=True)
+class HeterogeneityConfig:
+    """System heterogeneity: per-device multipliers, log-uniform spread."""
+    cpu_speed_spread: float = 1.0    # f_max multiplier range [1/s, s]
+    cycles_spread: float = 1.0       # c_n multiplier range
+    budget_spread: float = 1.0       # Ebar multiplier range
+    seed: int = 0
+
+
+def heterogeneous_params(base: sm.SystemParams,
+                         het: HeterogeneityConfig) -> sm.SystemParams:
+    """Apply log-uniform heterogeneity multipliers to a parameter set."""
+    rng = np.random.default_rng(het.seed)
+    n = base.num_devices
+
+    def mult(spread: float) -> np.ndarray:
+        if spread <= 1.0:
+            return np.ones((n,), np.float32)
+        lo, hi = -np.log(spread), np.log(spread)
+        return np.exp(rng.uniform(lo, hi, n)).astype(np.float32)
+
+    f_mult = mult(het.cpu_speed_spread)
+    return dataclasses.replace(
+        base,
+        f_max=np.asarray(base.f_max * f_mult, np.float32),
+        f_min=np.asarray(np.minimum(base.f_min * f_mult, base.f_max * f_mult),
+                         np.float32),
+        cycles_per_sample=np.asarray(
+            base.cycles_per_sample * mult(het.cycles_spread), np.float32),
+        energy_budget=np.asarray(
+            base.energy_budget * mult(het.budget_spread), np.float32),
+    )

@@ -1,0 +1,72 @@
+"""Server-side FL logic: sampling K-with-replacement and the unbiased
+aggregation rule (paper eq. (4), unbiasedness proof in Appendix A).
+
+    theta^{t+1} = theta^t + sum_{n in K^t} w_n / (K q_n^t) (theta_n^{t,E} - theta^t)
+
+The aggregation is also exposed as a stacked-update form used by the
+client-parallel `shard_map` path and by the Pallas `fl_aggregate` kernel.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def sample_clients(rng: np.random.Generator, q: np.ndarray,
+                   sample_count: int) -> np.ndarray:
+    """Draw K client indices with replacement according to q (Alg. 1, l.5)."""
+    q = np.asarray(q, np.float64)
+    q = q / q.sum()
+    return rng.choice(q.shape[0], size=sample_count, replace=True, p=q)
+
+
+def aggregation_weights(selected: np.ndarray, q: np.ndarray, w: np.ndarray,
+                        sample_count: int) -> np.ndarray:
+    """Per-draw coefficients w_n / (K q_n) for the selected multiset."""
+    sel = np.asarray(selected)
+    return (np.asarray(w)[sel] /
+            (float(sample_count) * np.asarray(q)[sel])).astype(np.float32)
+
+
+def aggregate(global_params: PyTree, deltas: Sequence[PyTree],
+              coeffs: np.ndarray) -> PyTree:
+    """theta + sum_i coeff_i * delta_i  — eq. (4)."""
+    coeffs = jnp.asarray(coeffs, jnp.float32)
+
+    def combine(p, *ds):
+        acc = p.astype(jnp.float32)
+        for c, d in zip(coeffs, ds):
+            acc = acc + c * d.astype(jnp.float32)
+        return acc.astype(p.dtype)
+
+    return jax.tree_util.tree_map(combine, global_params, *deltas)
+
+
+def aggregate_stacked(global_params: PyTree, stacked_deltas: PyTree,
+                      coeffs: jax.Array) -> PyTree:
+    """Same as :func:`aggregate` for deltas stacked on a leading K axis.
+
+    This is the form the distributed runtime uses: ``stacked_deltas`` leaves
+    have shape ``[K, ...]`` (client axis shardable over the mesh ``data``
+    axis) and the weighted reduction lowers to a single reduce per leaf.
+    """
+    def combine(p, d):
+        upd = jnp.tensordot(coeffs.astype(jnp.float32),
+                            d.astype(jnp.float32), axes=1)
+        return (p.astype(jnp.float32) + upd).astype(p.dtype)
+
+    return jax.tree_util.tree_map(combine, global_params, stacked_deltas)
+
+
+def fedavg_reference(global_params: PyTree, deltas: Sequence[PyTree],
+                     w_sel: np.ndarray) -> PyTree:
+    """Plain FedAvg (weights proportional to data sizes) for comparison."""
+    coeffs = np.asarray(w_sel, np.float32)
+    coeffs = coeffs / coeffs.sum()
+    return aggregate(global_params, deltas, coeffs)

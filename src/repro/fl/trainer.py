@@ -1,0 +1,170 @@
+"""The full FL loop (Algorithm 1) with LROA (or baseline) control, wall-clock
+latency and energy accounting, and periodic evaluation.
+
+Per round t:
+  1. observe channel gains h^t (ChannelProcess);
+  2. controller decides (f^t, p^t, q^t) — Algorithm 2 for LROA;
+  3. sample K^t (K draws with replacement by q^t; DivFL selects
+     deterministically);
+  4. selected clients run E local epochs (client.local_update);
+  5. server aggregates with the unbiased rule (4);
+  6. queues update; latency += max_{n in K^t} T_n^t (eq. 10), energy accrues.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import system_model as sm
+from repro.core.baselines import DivFLController
+from repro.core.controller import realized_round_time
+from repro.fl import client as fl_client
+from repro.fl import server as fl_server
+from repro.fl.environment import ChannelProcess
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    round: int
+    wall_time: float          # realised latency of this round (eq. 10)
+    cum_time: float
+    mean_loss: float
+    selected: List[int]
+    q_min: float
+    q_max: float
+    queue_mean: float
+    energy_mean: float        # realised mean energy this round
+    test_accuracy: Optional[float] = None
+
+
+@dataclasses.dataclass
+class FLRunResult:
+    records: List[RoundRecord]
+    params: PyTree
+    controller_name: str
+
+    @property
+    def total_time(self) -> float:
+        return self.records[-1].cum_time if self.records else 0.0
+
+    def accuracy_curve(self) -> List[tuple]:
+        return [(r.round, r.cum_time, r.test_accuracy)
+                for r in self.records if r.test_accuracy is not None]
+
+
+class FederatedTrainer:
+    """Controller-agnostic synchronous FL driver."""
+
+    def __init__(self, task: fl_client.Task, params: sm.SystemParams,
+                 controller, channel: ChannelProcess,
+                 client_data: Sequence[tuple],
+                 client_cfg: fl_client.ClientConfig,
+                 lr_schedule: Callable[[jnp.ndarray], jnp.ndarray],
+                 test_data: Optional[tuple] = None,
+                 eval_every: int = 10, seed: int = 0):
+        assert len(client_data) == params.num_devices
+        self.task = task
+        self.params = params
+        self.controller = controller
+        self.channel = channel
+        self.client_data = client_data
+        self.client_cfg = client_cfg
+        self.lr_schedule = lr_schedule
+        self.test_data = test_data
+        self.eval_every = eval_every
+        self._np_rng = np.random.default_rng(seed)
+        self._jax_rng = jax.random.PRNGKey(seed)
+        self.global_params = task.init(jax.random.PRNGKey(seed + 1))
+        self.w = np.asarray(params.data_weights)
+
+    # -- evaluation -------------------------------------------------------
+
+    def evaluate(self) -> float:
+        if self.test_data is None:
+            return float("nan")
+        x, y = self.test_data
+        m = self.task.metrics(self.global_params,
+                              {"x": jnp.asarray(x), "y": jnp.asarray(y)})
+        return float(m["accuracy"])
+
+    # -- one round --------------------------------------------------------
+
+    def run_round(self, t: int) -> RoundRecord:
+        h = jnp.asarray(self.channel.sample())
+        decision = self.controller.decide(h)
+        q = np.asarray(decision.q)
+
+        if isinstance(self.controller, DivFLController):
+            selected = self.controller.select()
+        else:
+            selected = fl_server.sample_clients(self._np_rng, q,
+                                                self.params.sample_count)
+
+        lr = float(self.lr_schedule(jnp.asarray(t)))
+        deltas, losses = [], []
+        for idx in selected:
+            x, y = self.client_data[int(idx)]
+            self._jax_rng, sub = jax.random.split(self._jax_rng)
+            delta, loss = fl_client.local_update(
+                self.task, self.global_params, x, y, lr, sub, self.client_cfg)
+            deltas.append(delta)
+            losses.append(loss)
+            if isinstance(self.controller, DivFLController):
+                self.controller.observe_updates(
+                    np.asarray([idx]),
+                    fl_client.flatten_update(delta)[None, :])
+
+        coeffs = fl_server.aggregation_weights(
+            selected, q, self.w, self.params.sample_count)
+        if isinstance(self.controller, DivFLController):
+            # DivFL approximates the full update from the diverse subset:
+            # plain data-weighted averaging over the chosen clients.
+            self.global_params = fl_server.fedavg_reference(
+                self.global_params, deltas, self.w[np.asarray(selected)])
+        else:
+            self.global_params = fl_server.aggregate(
+                self.global_params, deltas, coeffs)
+
+        wall = realized_round_time(self.params, h, decision,
+                                   np.asarray(selected))
+        e_round = np.asarray(sm.round_energy(self.params, h, decision.p,
+                                             decision.f))
+        self.controller.step_queues(h, decision)
+
+        cum = (self._records[-1].cum_time if self._records else 0.0) + wall
+        rec = RoundRecord(
+            round=t, wall_time=wall, cum_time=cum,
+            mean_loss=float(np.mean(losses)) if losses else float("nan"),
+            selected=[int(i) for i in selected],
+            q_min=float(q.min()), q_max=float(q.max()),
+            queue_mean=float(np.asarray(self.controller.queues).mean()),
+            energy_mean=float(e_round[np.unique(selected)].mean()),
+        )
+        if self.test_data is not None and (t % self.eval_every == 0):
+            rec.test_accuracy = self.evaluate()
+        self._records.append(rec)
+        return rec
+
+    # -- full run ---------------------------------------------------------
+
+    def run(self, num_rounds: int, verbose: bool = False) -> FLRunResult:
+        self._records: List[RoundRecord] = []
+        for t in range(num_rounds):
+            rec = self.run_round(t)
+            if verbose and (t % max(num_rounds // 10, 1) == 0):
+                print(f"[{getattr(self.controller, 'name', '?')}] round {t} "
+                      f"loss {rec.mean_loss:.4f} wall {rec.wall_time:.1f}s "
+                      f"cum {rec.cum_time:.0f}s acc {rec.test_accuracy}")
+        if self.test_data is not None and self._records:
+            self._records[-1].test_accuracy = self.evaluate()
+        return FLRunResult(records=self._records, params=self.global_params,
+                           controller_name=getattr(self.controller, "name",
+                                                   "unknown"))

@@ -1,0 +1,12 @@
+"""repro.kernels — Pallas TPU kernels for the perf-critical layers.
+
+* flash_attention — FlashAttention-2 forward (GQA/window/softcap)
+* ssd_chunk       — Mamba-2 SSD intra-chunk fused matmuls
+* fl_aggregate    — LROA unbiased aggregation, eq. (4)
+
+Each kernel ships with a jit'd wrapper (ops.py) and a pure-jnp oracle
+(ref.py); tests sweep shapes/dtypes in interpret mode.
+"""
+
+from repro.kernels.ops import (flash_attention, ssd_chunk, fl_aggregate,
+                               fl_aggregate_pytree)

@@ -1,0 +1,159 @@
+"""Pallas TPU flash-attention kernel (forward).
+
+TPU-native adaptation of the FlashAttention-2 inner loop:
+  * grid = (batch, q_heads, num_q_blocks, num_kv_blocks) — the kv dimension
+    is innermost ("arbitrary" semantics) so the VMEM accumulator carries
+    across kv steps; q/kv blocks are MXU-aligned (multiples of 128 on the
+    sequence dims, head_dim lives in lanes).
+  * BlockSpec index maps pull one [block_q, D] query tile and one
+    [block_kv, D] key/value tile into VMEM per step; GQA is handled in the
+    index map (kv head = q head // group) — no materialised head repeat.
+  * online softmax state (m, l, acc) lives in VMEM scratch; logits soft-cap
+    and causal/sliding-window masks are applied in-register.
+
+VMEM working set per step: bq*D + 2*bk*D + bq*bk (f32) — e.g. 512x128
+blocks => ~1.2 MB, comfortably under the ~16 MB/core budget, leaving room
+for double buffering of the k/v streams.
+
+Validated against ``repro.kernels.ref.mha_reference`` in interpret mode
+(CPU). The pure-jnp scan implementation (`repro.models.flash`) is the XLA
+fallback used by the mesh dry-run.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+NEG_INF = -2.0e38
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                      scale: float, causal: bool, window: int,
+                      softcap: float, block_q: int, block_kv: int,
+                      seq_q: int, seq_kv: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # [bq, D]
+    k = k_ref[0, 0].astype(jnp.float32)                  # [bk, D]
+    v = v_ref[0, 0].astype(jnp.float32)                  # [bk, D]
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale      # [bq, bk]
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+
+    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_kv), 0)
+    kpos = ik * block_kv + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_kv), 1)
+    mask = kpos < seq_kv
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_scr[...]                                  # [bq, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new)                          # [bq, bk]
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_new = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l_safe = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l_safe).astype(o_ref.dtype)
+
+
+def flash_attention_tpu(q: Array, k: Array, v: Array, *,
+                        causal: bool = True, window: int = 0,
+                        softcap: float = 0.0,
+                        scale: Optional[float] = None,
+                        block_q: int = 128, block_kv: int = 128,
+                        interpret: bool = False) -> Array:
+    """q: [B, H, Sq, D]; k, v: [B, Hkv, Sk, D]. Returns [B, H, Sq, D].
+
+    GQA resolved in the k/v BlockSpec index maps (h -> h // group).
+    Sequence lengths are padded to block multiples; padded kv positions are
+    masked by the in-kernel ``kpos < seq_kv`` predicate.
+    """
+    b, h, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    group = h // hkv
+    scale = scale if scale is not None else d ** -0.5
+    block_q = min(block_q, max(_round_up(sq, 16), 16))
+    block_kv = min(block_kv, max(_round_up(sk, 16), 16))
+
+    q_pad = _pad_seq(q, block_q)
+    k_pad = _pad_seq(k, block_kv)
+    v_pad = _pad_seq(v, block_kv)
+    nq_blocks = q_pad.shape[2] // block_q
+    nk_blocks = k_pad.shape[2] // block_kv
+
+    kernel = functools.partial(
+        _flash_fwd_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_kv=block_kv, seq_q=sq,
+        seq_kv=sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nq_blocks, nk_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda bb, hh, iq, ik: (bb, hh, iq, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda bb, hh, iq, ik, g=group: (bb, hh // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda bb, hh, iq, ik, g=group: (bb, hh // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bb, hh, iq, ik: (bb, hh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q_pad.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q_pad, k_pad, v_pad)
+    return out[:, :, :sq, :]
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def _pad_seq(x: Array, block: int) -> Array:
+    s = x.shape[2]
+    pad = (-s) % block
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    return x

@@ -1,0 +1,89 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Dispatch policy: the Pallas TPU kernels run natively on TPU backends and in
+interpret mode elsewhere when forced; the default on non-TPU platforms is
+the pure-jnp reference (XLA), keeping CPU tests fast while exercising the
+identical call signatures.  `force_interpret=True` runs the real kernel body
+in Python (used by the per-kernel allclose test sweeps).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_tpu
+from repro.kernels.fl_aggregate import fl_aggregate_tpu
+from repro.kernels.ssd_scan import ssd_chunk_tpu
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "scale", "impl"))
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: int = 0, softcap: float = 0.0,
+                    scale: Optional[float] = None,
+                    impl: str = "auto") -> Array:
+    """q: [B, H, Sq, D]; k, v: [B, Hkv, Sk, D] -> [B, H, Sq, D]."""
+    use_kernel = impl == "pallas" or (impl == "auto" and _on_tpu())
+    interpret = impl == "pallas" and not _on_tpu()
+    if use_kernel:
+        return flash_attention_tpu(q, k, v, causal=causal, window=window,
+                                   softcap=softcap, scale=scale,
+                                   interpret=interpret)
+    return ref.mha_reference(q, k, v, causal=causal, window=window,
+                             softcap=softcap, scale=scale)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
+def ssd_chunk(x: Array, dt: Array, a_log: Array, b_in: Array, c_in: Array,
+              *, chunk: int, impl: str = "auto") -> Tuple[Array, Array]:
+    use_kernel = impl == "pallas" or (impl == "auto" and _on_tpu())
+    interpret = impl == "pallas" and not _on_tpu()
+    if use_kernel:
+        return ssd_chunk_tpu(x, dt, a_log, b_in, c_in, chunk=chunk,
+                             interpret=interpret)
+    # jnp fallback: vmap the per-chunk oracle
+    bsz, s, nh, hd = x.shape
+    nc = s // chunk
+
+    def per_chunk(xc, dtc, bc, cc):
+        return ref.ssd_chunk_reference(xc, dtc, a_log, bc, cc)
+
+    xc = x.reshape(bsz, nc, chunk, nh, hd)
+    dtc = dt.reshape(bsz, nc, chunk, nh)
+    bc = b_in.reshape(bsz, nc, chunk, -1)
+    cc = c_in.reshape(bsz, nc, chunk, -1)
+    y, states = jax.vmap(jax.vmap(per_chunk))(xc, dtc, bc, cc)
+    return y.reshape(bsz, s, nh, hd), states
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def fl_aggregate(theta: Array, deltas: Array, coeffs: Array,
+                 impl: str = "auto") -> Array:
+    """Fused eq.-(4) aggregation over flattened parameters."""
+    use_kernel = impl == "pallas" or (impl == "auto" and _on_tpu())
+    interpret = impl == "pallas" and not _on_tpu()
+    if use_kernel:
+        return fl_aggregate_tpu(theta, deltas, coeffs, interpret=interpret)
+    return ref.aggregate_reference(theta, deltas, coeffs)
+
+
+def fl_aggregate_pytree(global_params, stacked_deltas, coeffs,
+                        impl: str = "auto"):
+    """eq. (4) over a full parameter pytree (stacked client axis K)."""
+    def one(p, d):
+        flat_p = p.reshape(-1)
+        flat_d = d.reshape(d.shape[0], -1)
+        return fl_aggregate(flat_p, flat_d, coeffs, impl=impl).reshape(p.shape)
+
+    return jax.tree_util.tree_map(one, global_params, stacked_deltas)

@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function is the mathematical specification the kernels are tested
+against (`tests/test_kernels.py` sweeps shapes/dtypes and asserts allclose).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+NEG_INF = -2.0e38
+
+
+def mha_reference(q: Array, k: Array, v: Array, *, causal: bool = True,
+                  window: int = 0, softcap: float = 0.0,
+                  scale: Optional[float] = None) -> Array:
+    """q: [B, H, Sq, D]; k, v: [B, Hkv, Sk, D] (GQA when Hkv < H)."""
+    b, h, sq, d = q.shape
+    hkv = k.shape[1]
+    group = h // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, hkv, group, sq, d).astype(jnp.float32)
+    logits = jnp.einsum("bngsd,bntd->bngst", qg,
+                        k.astype(jnp.float32)) * scale
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(sq)
+    kpos = jnp.arange(k.shape[2])
+    mask = jnp.ones((sq, k.shape[2]), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bngst,bntd->bngsd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, sq, d).astype(q.dtype)
+
+
+def ssd_chunk_reference(x: Array, dt: Array, a_log: Array, b_in: Array,
+                        c_in: Array) -> Tuple[Array, Array]:
+    """Intra-chunk SSD oracle (one chunk, zero initial state).
+
+    x: [L, nh, hd]; dt: [L, nh]; a_log: [nh]; b_in/c_in: [L, N].
+    Returns (y_diag [L, nh, hd], state [nh, hd, N]) where state is the
+    end-of-chunk summary sum_j exp(cum_L - cum_j) dt_j (x_j ⊗ B_j).
+    """
+    l, nh, hd = x.shape
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    da = dt.astype(jnp.float32) * a                         # [L, nh]
+    cum = jnp.cumsum(da, axis=0)                            # [L, nh]
+    seg = cum[:, None, :] - cum[None, :, :]                 # [i, j, nh]
+    tri = jnp.tril(jnp.ones((l, l), bool))
+    decay = jnp.where(tri[:, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("in,jn->ij", c_in.astype(jnp.float32),
+                        b_in.astype(jnp.float32))
+    w = scores[:, :, None] * decay * dt[None].astype(jnp.float32)
+    y = jnp.einsum("ijh,jhd->ihd", w, x.astype(jnp.float32))
+    decay_to_end = jnp.exp(cum[-1:, :] - cum)               # [L, nh]
+    wx = x.astype(jnp.float32) * (dt.astype(jnp.float32) *
+                                  decay_to_end)[..., None]
+    state = jnp.einsum("lhd,ln->hdn", wx, b_in.astype(jnp.float32))
+    return y.astype(x.dtype), state
+
+
+def aggregate_reference(theta: Array, deltas: Array, coeffs: Array) -> Array:
+    """theta: [N]; deltas: [K, N]; coeffs: [K] — eq. (4) fused update."""
+    upd = jnp.tensordot(coeffs.astype(jnp.float32),
+                        deltas.astype(jnp.float32), axes=1)
+    return (theta.astype(jnp.float32) + upd).astype(theta.dtype)

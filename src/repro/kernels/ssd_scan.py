@@ -1,0 +1,104 @@
+"""Pallas TPU kernel for the Mamba-2 SSD intra-chunk computation.
+
+The SSD algorithm (arXiv:2405.21060) splits the sequence into chunks; within
+a chunk the state-space recurrence collapses into a decay-masked attention-
+like matmul (MXU-friendly), and only a small [nh, hd, N] state crosses chunk
+boundaries. This kernel fuses the intra-chunk part:
+
+    scores  = C B^T                      (MXU, [L, L])
+    w       = scores * exp(cum_i-cum_j) * dt_j * tril
+    y_diag  = w X                        (MXU, [L, hd])
+    state_c = (X * dt * exp(cum_L-cum))^T B   (MXU, [hd, N])
+
+grid = (batch, heads, chunks); one chunk per step. B/C are shared across
+heads (single-group Mamba-2), pulled per (batch, chunk). VMEM per step:
+L*N * 2 + L*hd + L*L + hd*N floats — 256x128 chunks ≈ 0.6 MB.
+
+The cross-chunk recurrence (tiny, sequential) stays in jnp —
+``repro.models.ssm.ssd_chunked`` is the full reference implementation.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref,
+                      y_ref, state_ref, *, chunk: int):
+    x = x_ref[0, :, 0, :].astype(jnp.float32)          # [L, hd]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)           # [L]
+    a_log = alog_ref[0].astype(jnp.float32)            # scalar
+    b_in = b_ref[0].astype(jnp.float32)                # [L, N]
+    c_in = c_ref[0].astype(jnp.float32)                # [L, N]
+
+    a = -jnp.exp(a_log)
+    da = dt * a                                        # [L]
+    cum = jnp.cumsum(da)                               # [L]
+    seg = cum[:, None] - cum[None, :]                  # [i, j]
+    row = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    tri = col <= row
+    decay = jnp.where(tri, jnp.exp(seg), 0.0)
+
+    scores = jax.lax.dot_general(c_in, b_in, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    w = scores * decay * dt[None, :]
+    y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    decay_to_end = jnp.exp(cum[-1] - cum)              # [L]
+    wx = x * (dt * decay_to_end)[:, None]              # [L, hd]
+    state = jax.lax.dot_general(wx, b_in, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    state_ref[0, 0, 0] = state.astype(state_ref.dtype)  # [hd, N]
+
+
+def ssd_chunk_tpu(x: Array, dt: Array, a_log: Array, b_in: Array,
+                  c_in: Array, *, chunk: int,
+                  interpret: bool = False) -> Tuple[Array, Array]:
+    """Intra-chunk SSD over a full sequence.
+
+    x: [B, S, nh, hd]; dt: [B, S, nh]; a_log: [nh]; b_in/c_in: [B, S, N].
+    S must be a chunk multiple (the model layer pads).
+    Returns (y_diag [B, S, nh, hd], states [B, nc, nh, hd, N]).
+    """
+    bsz, s, nh, hd = x.shape
+    n = b_in.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    kernel = functools.partial(_ssd_chunk_kernel, chunk=chunk)
+    y, states = pl.pallas_call(
+        kernel,
+        grid=(bsz, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, hd),
+                         lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1),
+                         lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, chunk, n), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, hd), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, 1, hd, n), lambda b, h, c: (b, c, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, nh, hd), x.dtype),
+            jax.ShapeDtypeStruct((bsz, nc, nh, hd, n), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(x, dt, a_log, b_in, c_in)
+    return y, states

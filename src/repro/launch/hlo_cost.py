@@ -1,0 +1,383 @@
+"""Loop-aware cost analysis over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE,
+regardless of trip count — so a model that scans over 64 layers reports
+~1/64 of its real FLOPs. This module re-derives FLOPs, bytes-accessed and
+collective traffic from the post-partitioning HLO text, multiplying loop
+bodies by their ``known_trip_count`` backend-config annotation (emitted by
+XLA for counted loops, i.e. every lax.scan / fori_loop).
+
+Method: parse the module into computations; build a name->shape table from
+instruction definitions (result shapes are inline in optimized HLO); cost
+each instruction:
+
+  * dot            — 2 * prod(result_dims) * prod(contracting_dims)
+  * convolution    — 2 * prod(result_dims) * prod(kernel_spatial) * C_in
+  * elementwise / reduce / select ... — 1 flop per result element
+    (transcendentals: weighted a bit higher, matching XLA's convention)
+  * every op       — bytes = operand bytes + result bytes
+  * fusion         — cost of its fused computation, result bytes of the root
+  * while          — (body + condition) * trip_count
+  * call / custom-call / collectives — recorded; collective operand bytes
+    tallied per kind (loop multipliers applied)
+
+This is an estimate (fusion double-counts some intermediate bytes that never
+hit HBM), so EXPERIMENTS.md reports both this and XLA's raw numbers; FLOPs
+from this analyzer are exact for matmul-dominated graphs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "s4": 1, "u4": 1, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"([a-zA-Z][\w\-]*)\(")   # first ident directly before (
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_TRIP_RE = re.compile(r'known_trip_count[\\"]*:?[=\s]*\{?[\\"]*n[\\"]*:?[\\"]*(\d+)')
+_CALLEE_RE = re.compile(r"(?:body|to_apply|calls|condition|fused_computation)="
+                        r"%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "select", "compare", "and", "or", "xor", "not", "sign",
+    "floor", "ceil", "round-nearest-afz", "clamp", "remainder",
+}
+_TRANSCENDENTAL = {"exponential", "log", "log-plus-one", "tanh", "rsqrt",
+                   "sqrt", "power", "expm1", "logistic", "sine", "cosine",
+                   "cbrt", "atan2", "erf"}
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-reduce-start", "all-gather-start",
+                "collective-permute-start", "reduce-scatter-start",
+                "all-to-all-start"}
+_NO_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "after-all", "partition-id", "replica-id"}
+
+
+def _shape_elems_bytes(blob: str) -> Tuple[int, int]:
+    """Total (elements, bytes) over all shapes found in a type blob."""
+    elems = 0
+    byts = 0
+    for dt, dims in _SHAPE_RE.findall(blob):
+        n = 1
+        if dims.strip():
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES.get(dt, 4)
+    return elems, byts
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    opcode: str
+    result_elems: int
+    result_bytes: int
+    operands: List[str]
+    callees: List[str]
+    trip_count: int
+    line: str
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collective_operand_bytes: float = 0.0
+    collective_traffic_bytes: float = 0.0
+    collective_counts: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    collective_bytes_by_kind: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.transcendentals += o.transcendentals
+        self.collective_operand_bytes += o.collective_operand_bytes
+        self.collective_traffic_bytes += o.collective_traffic_bytes
+        for k, v in o.collective_counts.items():
+            self.collective_counts[k] = self.collective_counts.get(k, 0) + v
+        for k, v in o.collective_bytes_by_kind.items():
+            self.collective_bytes_by_kind[k] = \
+                self.collective_bytes_by_kind.get(k, 0) + v
+        return self
+
+    def scaled(self, m: float) -> "Cost":
+        return Cost(self.flops * m, self.bytes * m, self.transcendentals * m,
+                    self.collective_operand_bytes * m,
+                    self.collective_traffic_bytes * m,
+                    {k: v * m for k, v in self.collective_counts.items()},
+                    {k: v * m for k, v in
+                     self.collective_bytes_by_kind.items()})
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: Dict[str, List[Instruction]] = {}
+        self.shape_table: Dict[str, Tuple[int, int]] = {}
+        self.dims_table: Dict[str, List[int]] = {}
+        self._parse(hlo_text)
+        self._memo: Dict[str, Cost] = {}
+        self.entry = self._find_entry(hlo_text)
+
+    # -- parsing ----------------------------------------------------------
+
+    def _parse(self, text: str):
+        current: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            stripped = line.strip()
+            if not stripped:
+                continue
+            if not line.startswith((" ", "\t")) and stripped.endswith("{"):
+                hdr = _COMP_HDR_RE.match(stripped)
+                if hdr:
+                    current = hdr.group(1)
+                    self.computations[current] = []
+                    continue
+            if stripped == "}":
+                current = None
+                continue
+            if current is None:
+                continue
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            name, rhs = m.group(1), m.group(2)
+            om = _OP_RE.search(rhs)
+            if not om:
+                continue
+            type_blob, opcode = rhs[:om.start()], om.group(1)
+            elems, byts = _shape_elems_bytes(type_blob)
+            self.shape_table[name] = (elems, byts)
+            first = _SHAPE_RE.search(type_blob)
+            if first:
+                self.dims_table[name] = [int(x) for x in
+                                         first.group(2).split(",") if x]
+            # operands: %refs inside the call parens (before attributes)
+            paren = rhs[om.end():]
+            depth = 1
+            end = 0
+            for i, ch in enumerate(paren):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            operand_blob = paren[:end]
+            attrs = paren[end:]
+            operands = _OPERAND_RE.findall(operand_blob)
+            callees = _CALLEE_RE.findall(attrs)
+            trip = 1
+            tm = _TRIP_RE.search(attrs)
+            if tm:
+                trip = int(tm.group(1))
+            self.computations[current].append(Instruction(
+                name=name, opcode=opcode, result_elems=elems,
+                result_bytes=byts, operands=operands, callees=callees,
+                trip_count=trip, line=stripped))
+
+    def _find_entry(self, text: str) -> str:
+        m = re.search(r"ENTRY\s+%?([\w.\-]+)", text)
+        if m:
+            return m.group(1)
+        # fall back: the largest computation
+        return max(self.computations, key=lambda k: len(self.computations[k]))
+
+    # -- costing ----------------------------------------------------------
+
+    def _operand_bytes(self, inst: Instruction) -> int:
+        total = 0
+        for op in inst.operands:
+            if op in self.shape_table:
+                total += self.shape_table[op][1]
+        return total
+
+    def _dot_flops(self, inst: Instruction) -> float:
+        # 2 * result_elems * prod(contracting dims of lhs)
+        cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", inst.line)
+        lhs = inst.operands[0] if inst.operands else None
+        if cm and lhs in self.dims_table:
+            lhs_dims = self.dims_table[lhs]
+            cdims = [int(x) for x in cm.group(1).split(",") if x != ""]
+            k = 1
+            for c in cdims:
+                if c < len(lhs_dims):
+                    k *= lhs_dims[c]
+            return 2.0 * inst.result_elems * k
+        if lhs in self.shape_table:
+            lhs_elems = self.shape_table[lhs][0]
+            rhs = inst.operands[1] if len(inst.operands) > 1 else None
+            rhs_elems = self.shape_table.get(rhs, (1, 0))[0]
+            re_ = max(inst.result_elems, 1)
+            # lhs*rhs/result = (M*K)*(K*N)/(M*N) = K^2 (batch dims cancel)
+            k2 = (lhs_elems * rhs_elems) / re_
+            return 2.0 * re_ * max(k2, 1.0) ** 0.5
+        return 2.0 * inst.result_elems
+
+    def _collective(self, inst: Instruction, cost: Cost):
+        kind = inst.opcode.replace("-start", "")
+        g = 1
+        gm = re.search(r"replica_groups=\{\{([0-9,]+)\}", inst.line)
+        if gm:
+            g = len(gm.group(1).split(","))
+        else:
+            gi = re.search(r"replica_groups=\[(\d+),(\d+)\]", inst.line)
+            if gi:
+                g = int(gi.group(2))
+        rb = inst.result_bytes
+        if kind == "all-gather":
+            operand = rb // max(g, 1)
+            traffic = rb * (g - 1) // max(g, 1)
+        elif kind == "reduce-scatter":
+            operand = rb * g
+            traffic = rb * (g - 1)
+        elif kind == "all-reduce":
+            operand = rb
+            traffic = 2 * rb * (g - 1) // max(g, 1)
+        elif kind == "all-to-all":
+            operand = rb
+            traffic = rb * (g - 1) // max(g, 1)
+        else:
+            operand = rb
+            traffic = rb
+        cost.collective_operand_bytes += operand
+        cost.collective_traffic_bytes += traffic
+        cost.collective_counts[kind] = cost.collective_counts.get(kind, 0) + 1
+        cost.collective_bytes_by_kind[kind] = \
+            cost.collective_bytes_by_kind.get(kind, 0) + operand
+
+    def computation_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = Cost()          # break cycles defensively
+        total = Cost()
+        for inst in self.computations.get(name, []):
+            c = Cost()
+            op = inst.opcode
+            if op == "dot":
+                c.flops = self._dot_flops(inst)
+                c.bytes = self._operand_bytes(inst) + inst.result_bytes
+            elif op == "convolution":
+                c.flops = self._conv_flops(inst)
+                c.bytes = self._operand_bytes(inst) + inst.result_bytes
+            elif op == "while":
+                body = Cost()
+                for callee in inst.callees:
+                    body += self.computation_cost(callee)
+                c = body.scaled(inst.trip_count)
+            elif op in ("fusion", "call", "conditional", "map", "async-start"):
+                for callee in inst.callees:
+                    c += self.computation_cost(callee)
+                c.bytes += self._operand_bytes(inst) + inst.result_bytes
+            elif op in _COLLECTIVES:
+                self._collective(inst, c)
+                c.bytes = self._operand_bytes(inst) + inst.result_bytes
+            elif op in _TRANSCENDENTAL:
+                c.flops = float(inst.result_elems)
+                c.transcendentals = float(inst.result_elems)
+                c.bytes = self._operand_bytes(inst) + inst.result_bytes
+            elif op in _ELEMENTWISE or op in (
+                    "reduce", "reduce-window", "broadcast", "iota",
+                    "exponential-minus-one"):
+                c.flops = float(inst.result_elems)
+                c.bytes = self._operand_bytes(inst) + inst.result_bytes
+            elif op in _NO_BYTES:
+                pass
+            elif op in ("dynamic-slice", "slice", "gather"):
+                # reads only the sliced/gathered elements, not the operand
+                c.bytes = 2.0 * inst.result_bytes
+            elif op in ("dynamic-update-slice", "scatter", "scatter-add"):
+                # in-place when aliased: read+write of the update window
+                upd = inst.operands[1] if len(inst.operands) > 1 else None
+                upd_bytes = self.shape_table.get(upd, (0, inst.result_bytes))[1]
+                c.bytes = 2.0 * upd_bytes
+            else:
+                # data movement (reshape/transpose/copy/convert/...)
+                c.bytes = self._operand_bytes(inst) + inst.result_bytes
+            total += c
+        self._memo[name] = total
+        return total
+
+    def _conv_flops(self, inst: Instruction) -> float:
+        wm = re.search(r"window=\{size=([0-9x]+)", inst.line)
+        k = 1
+        if wm:
+            for s in wm.group(1).split("x"):
+                k *= int(s)
+        # approximate C_in from operand/result ratio
+        cin = 1
+        shapes = _SHAPE_RE.findall(inst.line)
+        if len(shapes) >= 3:
+            kern_dims = [int(x) for x in shapes[2][1].split(",") if x]
+            if len(kern_dims) >= 2:
+                cin = kern_dims[-2]
+        return 2.0 * inst.result_elems * k * cin
+
+    def entry_cost(self) -> Cost:
+        # fusions/whiles referenced from entry pull in their computations;
+        # computations reached only via entry are not double counted because
+        # we never sum computations standalone.
+        return self.computation_cost(self.entry)
+
+
+def analyze_by_opcode(hlo_text: str, top: int = 15) -> List[Tuple[str, float, float]]:
+    """(opcode, flops, bytes) totals with loop multipliers — debugging aid."""
+    model = HloCostModel(hlo_text)
+    totals: Dict[str, List[float]] = defaultdict(lambda: [0.0, 0.0])
+
+    def walk(name: str, mult: float, seen):
+        for inst in model.computations.get(name, []):
+            if inst.opcode == "while":
+                for callee in inst.callees:
+                    walk(callee, mult * inst.trip_count, seen)
+            elif inst.opcode in ("fusion", "call", "conditional"):
+                for callee in inst.callees:
+                    walk(callee, mult, seen)
+                totals[inst.opcode][1] += mult * (
+                    model._operand_bytes(inst) + inst.result_bytes)
+            else:
+                c_flops = 0.0
+                if inst.opcode == "dot":
+                    c_flops = model._dot_flops(inst)
+                elif inst.opcode in _ELEMENTWISE | _TRANSCENDENTAL or \
+                        inst.opcode in ("reduce", "broadcast", "iota"):
+                    c_flops = float(inst.result_elems)
+                totals[inst.opcode][0] += mult * c_flops
+                if inst.opcode not in _NO_BYTES:
+                    totals[inst.opcode][1] += mult * (
+                        model._operand_bytes(inst) + inst.result_bytes)
+
+    walk(model.entry, 1.0, set())
+    rows = sorted(((k, v[0], v[1]) for k, v in totals.items()),
+                  key=lambda r: -max(r[1] / 1e12, r[2] / 1e9))
+    return rows[:top]
+
+
+def analyze(hlo_text: str) -> Dict:
+    model = HloCostModel(hlo_text)
+    c = model.entry_cost()
+    return {
+        "flops": c.flops,
+        "bytes": c.bytes,
+        "transcendentals": c.transcendentals,
+        "collective_operand_bytes": c.collective_operand_bytes,
+        "collective_traffic_bytes": c.collective_traffic_bytes,
+        "collective_counts": dict(c.collective_counts),
+        "collective_bytes_by_kind": dict(c.collective_bytes_by_kind),
+    }

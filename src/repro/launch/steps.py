@@ -1,0 +1,249 @@
+"""Step functions (train / prefill / decode) + input_specs for every
+assigned architecture x input shape, ready for jit lowering on a mesh.
+
+``input_specs`` returns ShapeDtypeStructs (weak-type-correct, shardable, no
+allocation) for every model input; the audio/VLM modality frontends are
+stubs per the assignment — frame/patch embeddings arrive as inputs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ArchSpec, get_spec
+from repro.configs.shapes import InputShape
+from repro.models.config import ModelConfig
+from repro.models.encdec import EncoderDecoderLM
+from repro.models.transformer import TransformerLM
+from repro.models.layers import token_nll
+from repro.models.vlm import mrope_positions, mrope_decode_positions
+from repro.optim import SGD, apply_updates
+
+PyTree = Any
+
+
+def build_model(cfg: ModelConfig, remat: bool = False):
+    if cfg.is_encoder_decoder:
+        return EncoderDecoderLM(cfg)
+    return TransformerLM(cfg, remat=remat)
+
+
+def dryrun_config(cfg: ModelConfig, multi_pod: bool = False) -> ModelConfig:
+    """TPU-realistic dtypes for lowering: bf16 params + activations, flash
+    attention, activation sharding constraints bound to the mesh axes."""
+    data_shards = 32 if multi_pod else 16
+    return dataclasses.replace(
+        cfg, param_dtype="bfloat16", dtype="bfloat16", attn_impl="flash",
+        batch_axes=("pod", "data") if multi_pod else ("data",),
+        moe_groups=data_shards if cfg.family == "moe" else cfg.moe_groups,
+        # vocabs not divisible by the model axis would replicate the
+        # embedding/logits; pad to the next multiple (masked -inf slots)
+        vocab_pad_multiple=16 if cfg.vocab_size % 16 else 0)
+
+
+# --------------------------------------------------------------------------
+# input specs
+# --------------------------------------------------------------------------
+
+def input_specs(arch: str, shape: InputShape,
+                cfg: Optional[ModelConfig] = None) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for the data inputs of one step."""
+    spec = get_spec(arch)
+    cfg = cfg or spec.config
+    b, s = shape.global_batch, shape.seq_len
+    f32 = jnp.dtype(cfg.dtype)
+    i32 = jnp.int32
+
+    if shape.kind in ("train", "prefill"):
+        out: Dict[str, jax.ShapeDtypeStruct] = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+        }
+        if shape.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        if cfg.family == "audio":
+            out["frame_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq_len, cfg.d_model), f32)
+        if cfg.family == "vlm":
+            out["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.vision_patches, cfg.d_model), f32)
+        return out
+
+    # decode: one token against a seq_len cache
+    out = {"tokens": jax.ShapeDtypeStruct((b, 1), i32),
+           "cache_index": jax.ShapeDtypeStruct((), i32)}
+    if cfg.family == "audio":
+        out["enc_states"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq_len, cfg.d_model), f32)
+    return out
+
+
+def cache_specs(arch: str, shape: InputShape,
+                cfg: Optional[ModelConfig] = None) -> PyTree:
+    spec = get_spec(arch)
+    cfg = cfg or spec.config
+    model = build_model(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len, dtype))
+
+
+def param_specs(cfg: ModelConfig) -> PyTree:
+    model = build_model(cfg)
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+# --------------------------------------------------------------------------
+# step builders
+# --------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, *, lr: float = 1e-3,
+                    remat: bool = True,
+                    microbatch: int = 1) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``microbatch`` > 1 splits the global batch into sequential accumulation
+    chunks (scan) — the memory-roofline lever for the big train shapes.
+    """
+    model = build_model(cfg, remat=remat)
+    opt = SGD(momentum=0.9)
+
+    def loss_fn(params, batch):
+        if cfg.is_encoder_decoder:
+            logits, aux, _ = model.apply(params, batch["tokens"],
+                                         frame_embeds=batch["frame_embeds"])
+        elif cfg.family == "vlm":
+            b, s = batch["tokens"].shape
+            pthw = mrope_positions(b, s, cfg.vision_patches)
+            logits, aux, _ = model.apply(params, batch["tokens"],
+                                         positions_thw=pthw,
+                                         vision_embeds=batch["vision_embeds"])
+        else:
+            logits, aux, _ = model.apply(params, batch["tokens"])
+        labels = batch["labels"]
+        nll = token_nll(logits, labels)
+        return jnp.mean(nll) + cfg.router_aux_loss_coef * aux
+
+    def train_step(params, opt_state, batch):
+        if microbatch <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split(x):
+                return x.reshape((microbatch, x.shape[0] // microbatch)
+                                 + x.shape[1:])
+
+            micro = jax.tree_util.tree_map(split, batch)
+
+            def acc_step(carry, mb):
+                loss_acc, grad_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                return (loss_acc + loss,
+                        jax.tree_util.tree_map(jnp.add, grad_acc, grads)), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_step, (jnp.zeros((), jnp.float32), zeros), micro)
+            loss = loss / microbatch
+            grads = jax.tree_util.tree_map(lambda g: g / microbatch, grads)
+        updates, new_opt = opt.update(grads, opt_state, params,
+                                      jnp.asarray(lr, jnp.float32))
+        new_params = apply_updates(params, updates)
+        return new_params, new_opt, {"loss": loss}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    model = build_model(cfg)
+
+    def prefill_step(params, batch):
+        if cfg.is_encoder_decoder:
+            logits, _, cache = model.apply(params, batch["tokens"],
+                                           frame_embeds=batch["frame_embeds"],
+                                           mode="prefill")
+        elif cfg.family == "vlm":
+            b, s = batch["tokens"].shape
+            pthw = mrope_positions(b, s, cfg.vision_patches)
+            logits, _, cache = model.apply(params, batch["tokens"],
+                                           positions_thw=pthw,
+                                           vision_embeds=batch["vision_embeds"],
+                                           mode="prefill")
+        else:
+            logits, _, cache = model.apply(params, batch["tokens"],
+                                           mode="prefill")
+        # return only the last-position logits (serving) + the cache
+        return logits[:, -1, :], cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    """One-token decode against a pre-filled KV/state cache."""
+    model = build_model(cfg)
+
+    def serve_step(params, cache, batch):
+        tokens = batch["tokens"]
+        idx = batch["cache_index"]
+        if cfg.is_encoder_decoder:
+            logits, new_cache = model.decode_step(
+                params, cache, tokens, idx, batch["enc_states"])
+        elif cfg.family == "vlm":
+            b = tokens.shape[0]
+            pthw = mrope_decode_positions(b, idx, cfg.vision_patches)
+            logits, new_cache = model.decode_step(params, cache, tokens, idx,
+                                                  positions_thw=pthw)
+        else:
+            logits, new_cache = model.decode_step(params, cache, tokens, idx)
+        return logits[:, -1, :], new_cache
+
+    return serve_step
+
+
+def make_fl_round_step(cfg: ModelConfig, num_clients_per_round: int,
+                       *, lr: float = 1e-2, local_steps: int = 4) -> Callable:
+    """Client-parallel FL round (the paper's Algorithm 1 inner loop) as one
+    SPMD program: K clients run local SGD in parallel (client axis sharded
+    over the mesh's data axis via batch sharding), then the unbiased
+    aggregation (eq. 4) reduces their deltas into the global model.
+
+    batch leaves: tokens/labels [K, local_batch, S]; coeffs [K] = w/(K q).
+    """
+    model = build_model(cfg)
+    opt = SGD(momentum=0.9)
+
+    def local_loss(params, tokens, labels):
+        logits, aux, _ = model.apply(params, tokens)
+        return jnp.mean(token_nll(logits, labels)) + \
+            cfg.router_aux_loss_coef * aux
+
+    def one_client(params, tokens, labels):
+        state = opt.init(params)
+
+        def step(carry, _):
+            p, s = carry
+            loss, g = jax.value_and_grad(local_loss)(p, tokens, labels)
+            upd, s = opt.update(g, s, p, jnp.asarray(lr, jnp.float32))
+            return (apply_updates(p, upd), s), loss
+
+        (p_new, _), losses = jax.lax.scan(step, (params, state), None,
+                                          length=local_steps)
+        delta = jax.tree_util.tree_map(lambda a, b: a - b, p_new, params)
+        return delta, jnp.mean(losses)
+
+    def fl_round_step(params, batch):
+        deltas, losses = jax.vmap(one_client, in_axes=(None, 0, 0))(
+            params, batch["tokens"], batch["labels"])
+        coeffs = batch["coeffs"]                      # [K] = w_n / (K q_n)
+        new_params = jax.tree_util.tree_map(
+            lambda p, d: (p.astype(jnp.float32) +
+                          jnp.tensordot(coeffs, d.astype(jnp.float32),
+                                        axes=1)).astype(p.dtype),
+            params, deltas)
+        return new_params, {"loss": jnp.mean(losses)}
+
+    return fl_round_step

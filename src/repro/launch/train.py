@@ -1,0 +1,98 @@
+"""Runnable LM training driver with checkpointing and resume.
+
+On CPU this trains the smoke variant of any ``--arch`` for a few hundred
+steps (the end-to-end driver deliverable); on real hardware the same driver
+takes the full config and the production mesh (``--mesh prod``).
+
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m \
+        --steps 200 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.data import lm_batches, synthetic_lm_tokens
+from repro.launch.steps import build_model, make_train_step
+from repro.optim import SGD
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=sorted(ARCHS), default="mamba2-130m")
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full (non-smoke) architecture")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=0.3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=20)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch) if args.full_config \
+        else get_smoke_config(args.arch)
+    if cfg.is_encoder_decoder or cfg.family == "vlm":
+        print(f"note: {args.arch} takes stub modality inputs; training the "
+              "decoder on text-only batches here")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"training {cfg.name}: {n_params/1e6:.2f}M params, "
+          f"batch {args.batch} x seq {args.seq}, {args.steps} steps")
+
+    opt_state = SGD(momentum=0.9).init(params)
+    start = 0
+    if args.ckpt_dir:
+        last = latest_step(args.ckpt_dir)
+        if last is not None:
+            params, meta = restore_checkpoint(args.ckpt_dir,
+                                              f"step_{last}", params)
+            start = int(meta.get("step", last))
+            print(f"resumed from step {start}")
+
+    toks = synthetic_lm_tokens(max(args.batch * 16, 64), args.seq + 1,
+                               cfg.vocab_size, seed=0)
+    batches = lm_batches(toks, args.batch, seed=1)
+
+    step_fn = make_train_step(cfg, lr=args.lr, remat=False)
+    if cfg.is_encoder_decoder:
+        frame = jnp.zeros((args.batch, cfg.encoder_seq_len, cfg.d_model),
+                          jnp.float32)
+    if cfg.family == "vlm":
+        vis = jnp.zeros((args.batch, cfg.vision_patches, cfg.d_model),
+                        jnp.float32)
+    step_fn = jax.jit(step_fn)
+
+    t0 = time.time()
+    loss0 = None
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
+        if cfg.is_encoder_decoder:
+            batch["frame_embeds"] = frame
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = vis
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        if loss0 is None:
+            loss0 = loss
+        if step % args.log_every == 0 or step == args.steps - 1:
+            rate = (step - start + 1) / (time.time() - t0)
+            print(f"step {step:5d}  loss {loss:8.4f}  {rate:5.2f} it/s")
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, f"step_{step + 1}", params,
+                            {"step": step + 1, "loss": loss})
+    print(f"done: loss {loss0:.4f} -> {loss:.4f} "
+          f"({(1 - loss / max(loss0, 1e-9)) * 100:.1f}% reduction)")
+
+
+if __name__ == "__main__":
+    main()

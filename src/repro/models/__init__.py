@@ -1,0 +1,9 @@
+"""repro.models — architecture zoo: dense/MoE/SSM/hybrid decoders,
+whisper enc-dec, Qwen2-VL backbone, CNN/ResNet FL tasks."""
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import TransformerLM
+from repro.models.encdec import EncoderDecoderLM
+from repro.models.cnn import CNNTask, ResNetTask, MLPTask
+from repro.models.flash import flash_attention, flash_decode, FlashConfig
+from repro.models.vlm import mrope_positions, mrope_decode_positions

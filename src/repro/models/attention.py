@@ -1,0 +1,290 @@
+"""Grouped-query attention with causal / sliding-window masking, logit
+soft-capping (gemma2), KV caches for decode, and cross-attention (whisper).
+
+The default math path is pure jnp (lowered by XLA — used for CPU tests and
+the mesh dry-run); the Pallas flash kernel in ``repro.kernels`` is selected
+via ``use_flash=True`` on TPU runs and validated against this path in tests.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.flash import (FlashConfig, flash_attention, flash_decode)
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+NEG_INF = -2.0e38
+
+
+def init_attention(rng: Array, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    k = jax.random.split(rng, 4)
+    return {
+        "wq": L.dense_init(k[0], d, nq * hd, dtype),
+        "wk": L.dense_init(k[1], d, nkv * hd, dtype),
+        "wv": L.dense_init(k[2], d, nkv * hd, dtype),
+        "wo": L.dense_init(k[3], nq * hd, d, dtype),
+    }
+
+
+def init_kv_cache(batch: int, seq_len: int, cfg: ModelConfig,
+                  dtype=jnp.float32, quantized: bool = False
+                  ) -> Dict[str, Array]:
+    hd = cfg.resolved_head_dim
+    shape = (batch, seq_len, cfg.num_kv_heads, hd)
+    if quantized:
+        # int8 symmetric per-(token, head) quantisation — halves cache
+        # bytes vs bf16 (the long-context decode memory-term lever)
+        sshape = (batch, seq_len, cfg.num_kv_heads)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(sshape, jnp.float32),
+                "v_scale": jnp.zeros(sshape, jnp.float32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def quantize_kv(x: Array) -> Tuple[Array, Array]:
+    """x: [B, S, H, D] -> (int8 values, f32 scales [B, S, H])."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: Array, scale: Array) -> Array:
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+def _split_heads(x: Array, num_heads: int) -> Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, num_heads, -1)
+
+
+def gqa_scores(q: Array, k: Array, scale: float) -> Array:
+    """q: [B,Sq,nq,D], k: [B,Sk,nkv,D] -> logits [B,nq,Sq,Sk] (f32)."""
+    b, sq, nq, d = q.shape
+    nkv = k.shape[2]
+    group = nq // nkv
+    qg = q.reshape(b, sq, nkv, group, d)
+    logits = jnp.einsum("bsngd,btnd->bngst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    return logits.reshape(b, nq, sq, k.shape[1])
+
+
+def gqa_combine(probs: Array, v: Array) -> Array:
+    """probs: [B,nq,Sq,Sk], v: [B,Sk,nkv,D] -> [B,Sq,nq,D]."""
+    b, nq, sq, sk = probs.shape
+    nkv = v.shape[2]
+    group = nq // nkv
+    pg = probs.reshape(b, nkv, group, sq, sk)
+    out = jnp.einsum("bngst,btnd->bsngd", pg, v.astype(jnp.float32))
+    return out.reshape(b, sq, nq, v.shape[3])
+
+
+def make_mask(sq: int, sk: int, *, causal: bool, window: int,
+              q_offset: Array | int = 0,
+              kv_valid_len: Optional[Array] = None) -> Array:
+    """Boolean [Sq, Sk] (or batched) mask; True = attendable.
+
+    ``q_offset`` shifts query positions (decode: q_offset = cache position).
+    ``window`` <= 0 disables sliding-window masking.
+    """
+    qpos = jnp.arange(sq) + q_offset            # [Sq]
+    kpos = jnp.arange(sk)                       # [Sk]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    if kv_valid_len is not None:
+        mask &= kpos[None, :] < kv_valid_len
+    return mask
+
+
+def make_rope_tables(cfg: ModelConfig, positions: Optional[Array],
+                     positions_thw: Optional[Array]):
+    """(cos, sin) [B, S, D/2] for this step — layer-invariant."""
+    hd = cfg.resolved_head_dim
+    if cfg.rope_type == "mrope":
+        assert positions_thw is not None
+        return L.mrope_tables(positions_thw, hd, cfg.rope_theta,
+                              cfg.mrope_sections)
+    if cfg.rope_type == "rope":
+        assert positions is not None
+        return L.rope_tables(positions, hd, cfg.rope_theta)
+    return None
+
+
+_FLASH_THRESHOLD = 1 << 21     # Sq*Sk above which "auto" picks the flash path
+
+
+def _use_flash(cfg: ModelConfig, sq: int, sk: int) -> bool:
+    if cfg.attn_impl == "flash":
+        return True
+    if cfg.attn_impl == "naive":
+        return False
+    return sq * sk > _FLASH_THRESHOLD
+
+
+def attend(q: Array, k: Array, v: Array, mask: Optional[Array],
+           scale: float, softcap: float = 0.0) -> Array:
+    logits = gqa_scores(q, k, scale)
+    if softcap > 0.0:
+        logits = L.softcap(logits, softcap)
+    if mask is not None:
+        while mask.ndim < logits.ndim:
+            mask = mask[None]
+        logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = gqa_combine(probs, v)
+    return out.astype(q.dtype)
+
+
+def attention(params: Params, x: Array, cfg: ModelConfig, *,
+              kind: str = "global",
+              rope: Optional[Tuple[Array, Array]] = None,
+              positions: Optional[Array] = None,
+              positions_thw: Optional[Array] = None,
+              kv_cache: Optional[Dict[str, Array]] = None,
+              cache_index: Optional[Array] = None,
+              kv_source: Optional[Array] = None,
+              causal: bool = True) -> Tuple[Array, Optional[Dict[str, Array]]]:
+    """Full attention block body (projections + rope + SDPA + out-proj).
+
+    Modes:
+      * train/prefill: ``kv_cache is None`` — self-attention over x.
+      * decode: ``kv_cache`` given, x has Sq==1; keys/values written at
+        ``cache_index`` then attended over the full cache (flash-decode
+        pattern). "local" blocks use a RING-BUFFER cache of ``window``
+        slots (written at cache_index % ring_len) — O(window) memory
+        regardless of context length.
+      * cross: ``kv_source`` given (encoder states; no rope, not causal).
+
+    ``rope``: precomputed (cos, sin) tables (layer-invariant — compute once
+    per step and pass through the layer scan); falls back to computing from
+    ``positions`` / ``positions_thw`` when absent.
+    """
+    hd = cfg.resolved_head_dim
+    scale = cfg.query_scale if cfg.query_scale else hd ** -0.5
+    window = cfg.window_size if kind == "local" else 0
+
+    ba, ma = cfg.batch_axes, cfg.model_axis
+    q = _split_heads(L.constrain(x @ params["wq"], ba, (None, ma)),
+                     cfg.num_heads)
+    src = kv_source if kv_source is not None else x
+    k = _split_heads(L.constrain(src @ params["wk"], ba, (None, ma)),
+                     cfg.num_kv_heads)
+    v = _split_heads(L.constrain(src @ params["wv"], ba, (None, ma)),
+                     cfg.num_kv_heads)
+
+    if kv_source is None and cfg.rope_type != "none":
+        if rope is None:
+            rope = make_rope_tables(cfg, positions, positions_thw)
+        q = L.apply_rotary(q, *rope)
+        k = L.apply_rotary(k, *rope)
+
+    new_cache = None
+    if kv_cache is not None and kv_source is None:
+        # decode: write this step's k/v, attend over the cache.
+        assert cache_index is not None
+        ring_len = kv_cache["k"].shape[1]
+        if kind == "local" and ring_len <= cfg.window_size:
+            # ring buffer: the cache holds exactly the last `ring_len`
+            # positions; keys carry their rope so order is irrelevant.
+            write_pos = jax.lax.rem(cache_index, ring_len)
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                kv_cache["k"], k.astype(kv_cache["k"].dtype), write_pos,
+                axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                kv_cache["v"], v.astype(kv_cache["v"].dtype), write_pos,
+                axis=1)
+            new_cache = {"k": ck, "v": cv}
+            valid = jnp.arange(ring_len)[None, :] < jnp.minimum(
+                cache_index + 1, ring_len)
+            out = attend(q, ck, cv, valid[None], scale,
+                         cfg.attn_logit_softcap)
+            b, s = out.shape[:2]
+            return out.reshape(b, s, -1) @ params["wo"], new_cache
+        if "k_scale" in kv_cache:                    # int8 quantised cache
+            kq, ks = quantize_kv(k)
+            vq, vs = quantize_kv(v)
+            dus = jax.lax.dynamic_update_slice_in_dim
+            new_cache = {
+                "k": dus(kv_cache["k"], kq, cache_index, axis=1),
+                "v": dus(kv_cache["v"], vq, cache_index, axis=1),
+                "k_scale": dus(kv_cache["k_scale"], ks, cache_index, axis=1),
+                "v_scale": dus(kv_cache["v_scale"], vs, cache_index, axis=1),
+            }
+            if _use_flash(cfg, q.shape[1],
+                          new_cache["k"].shape[1]) and q.shape[1] == 1:
+                out = flash_decode(
+                    q, new_cache["k"], new_cache["v"], scale=scale,
+                    cache_index=cache_index, window=window,
+                    softcap=cfg.attn_logit_softcap,
+                    block_kv=cfg.flash_block_kv,
+                    k_scale=new_cache["k_scale"],
+                    v_scale=new_cache["v_scale"])
+                b, s = out.shape[:2]
+                return out.reshape(b, s, -1) @ params["wo"], new_cache
+            k = dequantize_kv(new_cache["k"], new_cache["k_scale"])
+            v = dequantize_kv(new_cache["v"], new_cache["v_scale"])
+            mask = make_mask(q.shape[1], k.shape[1], causal=causal,
+                             window=window, q_offset=cache_index,
+                             kv_valid_len=cache_index + q.shape[1])
+            out = attend(q, k, v, mask, scale, cfg.attn_logit_softcap)
+            b, s = out.shape[:2]
+            return out.reshape(b, s, -1) @ params["wo"], new_cache
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache["k"], k.astype(kv_cache["k"].dtype), cache_index, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache["v"], v.astype(kv_cache["v"].dtype), cache_index, axis=1)
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck, cv
+        if _use_flash(cfg, q.shape[1], k.shape[1]) and q.shape[1] == 1:
+            out = flash_decode(q, k, v, scale=scale, cache_index=cache_index,
+                               window=window, softcap=cfg.attn_logit_softcap,
+                               block_kv=cfg.flash_block_kv)
+            b, s = out.shape[:2]
+            return out.reshape(b, s, -1) @ params["wo"], new_cache
+        mask = make_mask(q.shape[1], k.shape[1], causal=causal, window=window,
+                         q_offset=cache_index,
+                         kv_valid_len=cache_index + q.shape[1])
+    elif kv_source is not None:
+        mask = None                              # cross-attention: full access
+        if kv_cache is not None:                 # pre-computed cross cache
+            k, v = kv_cache["k"], kv_cache["v"]
+            new_cache = kv_cache
+        if _use_flash(cfg, q.shape[1], k.shape[1]):
+            fcfg = FlashConfig(
+                block_q=min(cfg.flash_block_q, max(q.shape[1], 16)),
+                block_kv=min(cfg.flash_block_kv, max(k.shape[1], 16)),
+                causal=False, window=0, softcap=cfg.attn_logit_softcap,
+                scale=scale)
+            out = flash_attention(q, k, v, fcfg)
+            b, s = out.shape[:2]
+            return out.reshape(b, s, -1) @ params["wo"], new_cache
+    else:
+        if _use_flash(cfg, q.shape[1], k.shape[1]):
+            fcfg = FlashConfig(
+                block_q=min(cfg.flash_block_q, max(q.shape[1], 16)),
+                block_kv=min(cfg.flash_block_kv, max(k.shape[1], 16)),
+                causal=causal, window=window, softcap=cfg.attn_logit_softcap,
+                scale=scale)
+            out = flash_attention(q, k, v, fcfg)
+            b, s = out.shape[:2]
+            return out.reshape(b, s, -1) @ params["wo"], new_cache
+        mask = make_mask(q.shape[1], k.shape[1], causal=causal, window=window)
+
+    out = attend(q, k, v, mask, scale, cfg.attn_logit_softcap)
+    b, s = out.shape[:2]
+    out = out.reshape(b, s, -1) @ params["wo"]
+    return out, new_cache

@@ -1,0 +1,175 @@
+"""Image-classification tasks for the FL experiments (paper Sec. VII-A).
+
+* ``CNNTask`` — a small conv net in the spirit of the paper's FEMNIST CNN
+  (two conv blocks + two dense layers).
+* ``ResNetTask`` — a compact pre-activation residual network standing in for
+  ResNet-18 on CIFAR-sized inputs (the paper's CIFAR-10 model), implemented
+  without batch-norm (group-norm-free RMS scaling) so client updates are
+  aggregation-safe (no running statistics to merge — a known FL pitfall).
+* ``MLPTask`` — cheapest smoke-test task.
+
+All implement the ``repro.fl.client.Task`` protocol: init / loss_fn /
+metrics over {"x": images NHWC, "y": int labels}.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+Array = jax.Array
+PyTree = Any
+
+
+def _conv_init(rng: Array, kh: int, kw: int, cin: int, cout: int) -> Array:
+    fan_in = kh * kw * cin
+    return (jax.random.truncated_normal(rng, -2, 2, (kh, kw, cin, cout),
+                                        jnp.float32) / jnp.sqrt(fan_in))
+
+
+def _conv(x: Array, w: Array, stride: int = 1) -> Array:
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _xent(logits: Array, labels: Array) -> Array:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(
+        logp, labels[:, None].astype(jnp.int32), axis=-1))
+
+
+def _accuracy(logits: Array, labels: Array) -> Array:
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNTask:
+    """conv(32) -> conv(64) -> dense(128) -> dense(classes), silu + pooling."""
+    image_shape: Tuple[int, int, int] = (28, 28, 1)
+    num_classes: int = 62
+    width: int = 32
+
+    def init(self, rng: Array) -> PyTree:
+        h, w, c = self.image_shape
+        k = jax.random.split(rng, 4)
+        wd = self.width
+        flat = (h // 4) * (w // 4) * 2 * wd
+        return {
+            "c1": _conv_init(k[0], 3, 3, c, wd),
+            "c2": _conv_init(k[1], 3, 3, wd, 2 * wd),
+            "d1": L.dense_init(k[2], flat, 128),
+            "b1": jnp.zeros((128,), jnp.float32),
+            "d2": L.dense_init(k[3], 128, self.num_classes),
+            "b2": jnp.zeros((self.num_classes,), jnp.float32),
+        }
+
+    def logits(self, params: PyTree, x: Array) -> Array:
+        x = jax.nn.silu(_conv(x, params["c1"]))
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                  (1, 2, 2, 1), "VALID")
+        x = jax.nn.silu(_conv(x, params["c2"]))
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                  (1, 2, 2, 1), "VALID")
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.silu(x @ params["d1"] + params["b1"])
+        return x @ params["d2"] + params["b2"]
+
+    def loss_fn(self, params: PyTree, batch: Dict[str, Array]) -> Array:
+        return _xent(self.logits(params, batch["x"]), batch["y"])
+
+    def metrics(self, params: PyTree, batch: Dict[str, Array]) -> Dict:
+        lg = self.logits(params, batch["x"])
+        return {"accuracy": _accuracy(lg, batch["y"]),
+                "loss": _xent(lg, batch["y"])}
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetTask:
+    """Pre-activation residual CNN (norm-free, FL-aggregation-safe)."""
+    image_shape: Tuple[int, int, int] = (32, 32, 3)
+    num_classes: int = 10
+    width: int = 32
+    blocks_per_stage: int = 2
+
+    def init(self, rng: Array) -> PyTree:
+        h, w, c = self.image_shape
+        keys = iter(jax.random.split(rng, 64))
+        p: Dict[str, Array] = {"stem": _conv_init(next(keys), 3, 3, c,
+                                                  self.width)}
+        cin = self.width
+        for stage in range(3):
+            cout = self.width * (2 ** stage)
+            for b in range(self.blocks_per_stage):
+                pre = f"s{stage}b{b}"
+                p[f"{pre}_c1"] = _conv_init(next(keys), 3, 3, cin, cout)
+                p[f"{pre}_c2"] = _conv_init(next(keys), 3, 3, cout, cout)
+                if cin != cout:
+                    p[f"{pre}_proj"] = _conv_init(next(keys), 1, 1, cin, cout)
+                cin = cout
+        p["head"] = L.dense_init(next(keys), cin, self.num_classes)
+        p["head_b"] = jnp.zeros((self.num_classes,), jnp.float32)
+        return p
+
+    def logits(self, params: PyTree, x: Array) -> Array:
+        x = _conv(x, params["stem"])
+        cin = self.width
+        for stage in range(3):
+            cout = self.width * (2 ** stage)
+            stride = 2 if stage > 0 else 1
+            for b in range(self.blocks_per_stage):
+                pre = f"s{stage}b{b}"
+                st = stride if b == 0 else 1
+                h = jax.nn.silu(x)
+                h = _conv(h, params[f"{pre}_c1"], st)
+                h = jax.nn.silu(h)
+                h = _conv(h, params[f"{pre}_c2"])
+                short = x
+                if f"{pre}_proj" in params:
+                    short = _conv(x, params[f"{pre}_proj"], st)
+                elif st > 1:
+                    short = x[:, ::st, ::st, :]
+                x = short + 0.5 * h
+                cin = cout
+        x = jnp.mean(jax.nn.silu(x), axis=(1, 2))
+        return x @ params["head"] + params["head_b"]
+
+    def loss_fn(self, params: PyTree, batch: Dict[str, Array]) -> Array:
+        return _xent(self.logits(params, batch["x"]), batch["y"])
+
+    def metrics(self, params: PyTree, batch: Dict[str, Array]) -> Dict:
+        lg = self.logits(params, batch["x"])
+        return {"accuracy": _accuracy(lg, batch["y"]),
+                "loss": _xent(lg, batch["y"])}
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPTask:
+    input_dim: int = 3072
+    num_classes: int = 10
+    hidden: int = 128
+
+    def init(self, rng: Array) -> PyTree:
+        k = jax.random.split(rng, 2)
+        return {"w1": L.dense_init(k[0], self.input_dim, self.hidden),
+                "b1": jnp.zeros((self.hidden,), jnp.float32),
+                "w2": L.dense_init(k[1], self.hidden, self.num_classes),
+                "b2": jnp.zeros((self.num_classes,), jnp.float32)}
+
+    def logits(self, params: PyTree, x: Array) -> Array:
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.silu(x @ params["w1"] + params["b1"])
+        return x @ params["w2"] + params["b2"]
+
+    def loss_fn(self, params: PyTree, batch: Dict[str, Array]) -> Array:
+        return _xent(self.logits(params, batch["x"]), batch["y"])
+
+    def metrics(self, params: PyTree, batch: Dict[str, Array]) -> Dict:
+        lg = self.logits(params, batch["x"])
+        return {"accuracy": _accuracy(lg, batch["y"]),
+                "loss": _xent(lg, batch["y"])}

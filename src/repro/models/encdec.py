@@ -1,0 +1,185 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+Per the assignment, the mel-spectrogram + conv feature extractor is a STUB:
+the model consumes precomputed frame embeddings ``[B, T_enc, d]`` from
+``input_specs()``. Everything downstream is real: a bidirectional encoder
+with fixed sinusoidal positions, and a causal decoder with learned positions,
+self-attention KV caches and per-layer cross-attention over encoder states.
+
+Whisper uses plain MHA + LayerNorm + non-gated GELU MLPs; we honour that via
+the config (norm="layernorm", gated_mlp=False, rope_type="none").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+PyTree = Any
+
+
+def _init_enc_layer(rng: Array, cfg: ModelConfig, dtype) -> PyTree:
+    k = jax.random.split(rng, 4)
+    return {
+        "attn_norm": L.init_norm(k[0], cfg.d_model, cfg.norm, dtype),
+        "attn": attn.init_attention(k[1], cfg, dtype),
+        "mlp_norm": L.init_norm(k[2], cfg.d_model, cfg.norm, dtype),
+        "mlp": L.init_mlp(k[3], cfg.d_model, cfg.d_ff, cfg.gated_mlp, dtype),
+    }
+
+
+def _init_dec_layer(rng: Array, cfg: ModelConfig, dtype) -> PyTree:
+    k = jax.random.split(rng, 6)
+    return {
+        "self_norm": L.init_norm(k[0], cfg.d_model, cfg.norm, dtype),
+        "self_attn": attn.init_attention(k[1], cfg, dtype),
+        "cross_norm": L.init_norm(k[2], cfg.d_model, cfg.norm, dtype),
+        "cross_attn": attn.init_attention(k[3], cfg, dtype),
+        "mlp_norm": L.init_norm(k[4], cfg.d_model, cfg.norm, dtype),
+        "mlp": L.init_mlp(k[5], cfg.d_model, cfg.d_ff, cfg.gated_mlp, dtype),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderDecoderLM:
+    cfg: ModelConfig
+
+    def init(self, rng: Array) -> PyTree:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype)
+        keys = jax.random.split(rng, 6)
+        enc_rngs = jax.random.split(keys[0], cfg.encoder_layers)
+        dec_rngs = jax.random.split(keys[1], cfg.num_layers)
+        return {
+            "embed": L.embed_init(keys[2], cfg.padded_vocab, cfg.d_model,
+                                  dtype),
+            "dec_pos": (0.01 * jax.random.normal(
+                keys[3], (cfg.max_position if cfg.max_position < 1 << 16
+                          else 1 << 16, cfg.d_model),
+                jnp.float32)).astype(dtype),
+            "enc_layers": jax.vmap(
+                lambda r: _init_enc_layer(r, cfg, dtype))(enc_rngs),
+            "dec_layers": jax.vmap(
+                lambda r: _init_dec_layer(r, cfg, dtype))(dec_rngs),
+            "enc_final_norm": L.init_norm(keys[4], cfg.d_model, cfg.norm,
+                                          dtype),
+            "final_norm": L.init_norm(keys[5], cfg.d_model, cfg.norm, dtype),
+        }
+
+    # -- encoder -----------------------------------------------------------
+
+    def encode(self, params: PyTree, frame_embeds: Array) -> Array:
+        """frame_embeds: [B, T_enc, d] (stubbed conv frontend output)."""
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        b, t, d = frame_embeds.shape
+        x = frame_embeds.astype(dtype) + \
+            L.sinusoidal_positions(t, d).astype(dtype)[None]
+
+        def body(x, p):
+            h = L.apply_norm(x, p["attn_norm"], cfg.norm, cfg.norm_eps)
+            out, _ = attn.attention(p["attn"], h, cfg, causal=False,
+                                    positions=None)
+            x = x + out
+            h = L.apply_norm(x, p["mlp_norm"], cfg.norm, cfg.norm_eps)
+            x = x + L.apply_mlp(p["mlp"], h, cfg.activation, cfg.gated_mlp,
+                               cfg.batch_axes, cfg.model_axis)
+            return x, None
+
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+        return L.apply_norm(x, params["enc_final_norm"], cfg.norm,
+                            cfg.norm_eps)
+
+    # -- decoder -----------------------------------------------------------
+
+    def _dec_embed(self, params, tokens, position_offset=0):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+        s = tokens.shape[1]
+        pos = jax.lax.dynamic_slice_in_dim(
+            params["dec_pos"], position_offset, s, axis=0)
+        return x + pos.astype(dtype)[None]
+
+    def decode(self, params: PyTree, tokens: Array, enc_states: Array, *,
+               mode: str = "train",
+               self_cache: Optional[PyTree] = None,
+               cache_index: Optional[Array] = None
+               ) -> Tuple[Array, Optional[PyTree]]:
+        cfg = self.cfg
+        b, s = tokens.shape
+        offset = cache_index if mode == "decode" else 0
+        x = self._dec_embed(params, tokens,
+                            offset if mode == "decode" else 0)
+
+        def body(carry, slices):
+            x = carry
+            p, cache = slices
+            h = L.apply_norm(x, p["self_norm"], cfg.norm, cfg.norm_eps)
+            kv_cache = cache if mode == "decode" else None
+            out, new_cache = attn.attention(
+                p["self_attn"], h, cfg, kv_cache=kv_cache,
+                cache_index=cache_index, positions=None)
+            if mode == "prefill":
+                k = attn._split_heads(h @ p["self_attn"]["wk"],
+                                      cfg.num_kv_heads)
+                v = attn._split_heads(h @ p["self_attn"]["wv"],
+                                      cfg.num_kv_heads)
+                new_cache = {"k": k, "v": v}
+            x = x + out
+            h = L.apply_norm(x, p["cross_norm"], cfg.norm, cfg.norm_eps)
+            out, _ = attn.attention(p["cross_attn"], h, cfg,
+                                    kv_source=enc_states, causal=False)
+            x = x + out
+            h = L.apply_norm(x, p["mlp_norm"], cfg.norm, cfg.norm_eps)
+            x = x + L.apply_mlp(p["mlp"], h, cfg.activation, cfg.gated_mlp,
+                               cfg.batch_axes, cfg.model_axis)
+            return x, (new_cache if new_cache is not None
+                       else jnp.zeros((), jnp.float32))
+
+        n_dec = cfg.num_layers
+        dummy = jnp.zeros((n_dec,), jnp.float32)
+        xs = (params["dec_layers"],
+              self_cache if mode == "decode" else dummy)
+        x, caches = jax.lax.scan(body, x, xs)
+        x = L.apply_norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+        logits = jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32),
+                            params["embed"].astype(jnp.float32))
+        if cfg.padded_vocab != cfg.vocab_size:
+            iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+            logits = jnp.where(iota < cfg.vocab_size, logits, -1e30)
+        return logits, (caches if mode in ("prefill", "decode") else None)
+
+    # -- task API ------------------------------------------------------------
+
+    def apply(self, params: PyTree, tokens: Array, *,
+              frame_embeds: Array, mode: str = "train"):
+        enc = self.encode(params, frame_embeds)
+        logits, cache = self.decode(params, tokens, enc, mode=mode)
+        return logits, jnp.zeros((), jnp.float32), cache
+
+    def init_cache(self, batch: int, seq_len: int, dtype=jnp.float32):
+        cfg = self.cfg
+        one = attn.init_kv_cache(batch, seq_len, cfg, dtype)
+        return jax.tree_util.tree_map(
+            lambda x: jnp.zeros((cfg.num_layers,) + x.shape, x.dtype), one)
+
+    def decode_step(self, params: PyTree, cache: PyTree, tokens: Array,
+                    cache_index: Array, enc_states: Array):
+        logits, new_cache = self.decode(
+            params, tokens, enc_states, mode="decode", self_cache=cache,
+            cache_index=cache_index)
+        return logits, new_cache
+
+    def loss(self, params: PyTree, batch: Dict[str, Array]) -> Array:
+        logits, _, _ = self.apply(params, batch["tokens"],
+                                  frame_embeds=batch["frame_embeds"])
+        return jnp.mean(L.token_nll(logits, batch["labels"]))

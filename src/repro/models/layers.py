@@ -1,0 +1,234 @@
+"""Shared neural-net layers: norms, initialisers, embeddings, RoPE / M-RoPE,
+gated MLPs. Pure functions over explicit parameter dicts (no framework)."""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+
+# --------------------------------------------------------------------------
+# Initialisers
+# --------------------------------------------------------------------------
+
+def dense_init(rng: Array, in_dim: int, out_dim: int,
+               dtype=jnp.float32, scale: Optional[float] = None) -> Array:
+    """Truncated-normal fan-in init (matches common LM practice)."""
+    std = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return (std * jax.random.truncated_normal(
+        rng, -2.0, 2.0, (in_dim, out_dim), jnp.float32)).astype(dtype)
+
+
+def embed_init(rng: Array, vocab: int, dim: int, dtype=jnp.float32) -> Array:
+    return (jax.random.normal(rng, (vocab, dim), jnp.float32)
+            / math.sqrt(dim)).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def rms_norm(x: Array, weight: Array, eps: float = 1e-6,
+             plus_one: bool = True) -> Array:
+    """RMSNorm with (1 + w) parameterisation (gemma convention)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    w = (1.0 + weight) if plus_one else weight
+    return (x * w.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x: Array, weight: Array, bias: Array,
+               eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mean) * jax.lax.rsqrt(var + eps)
+    return (x * weight + bias).astype(dtype)
+
+
+def apply_norm(x: Array, params: Params, kind: str, eps: float) -> Array:
+    if kind == "rmsnorm":
+        return rms_norm(x, params["scale"], eps)
+    return layer_norm(x, params["scale"], params["bias"], eps)
+
+
+def init_norm(rng: Array, dim: int, kind: str, dtype=jnp.float32) -> Params:
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((dim,), dtype)}
+    return {"scale": jnp.ones((dim,), dtype),
+            "bias": jnp.zeros((dim,), dtype)}
+
+
+# --------------------------------------------------------------------------
+# Rotary embeddings (RoPE and Qwen2-VL's multimodal M-RoPE)
+# --------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)                      # [head_dim/2]
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: [B, S, H, D]; positions: [B, S] (int)."""
+    freqs = rope_frequencies(x.shape[-1], theta)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [B,S,D/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: Array, positions_thw: Array, theta: float,
+                sections: Tuple[int, int, int]) -> Array:
+    """Qwen2-VL multimodal RoPE.
+
+    x: [B, S, H, D]; positions_thw: [3, B, S] — temporal/height/width position
+    ids. The D/2 frequency slots are split into ``sections`` (t, h, w); each
+    section rotates by its own positional stream. Text tokens carry identical
+    t=h=w ids, recovering vanilla RoPE exactly.
+    """
+    d_half = x.shape[-1] // 2
+    assert sum(sections) == d_half, (sections, d_half)
+    freqs = rope_frequencies(x.shape[-1], theta)          # [D/2]
+    # Build per-slot angles by selecting the positional stream per section.
+    split_points = []
+    acc = 0
+    for s in sections[:-1]:
+        acc += s
+        split_points.append(acc)
+    section_id = jnp.zeros((d_half,), jnp.int32)
+    for i, sp in enumerate(split_points):
+        section_id = section_id + (jnp.arange(d_half) >= sp).astype(jnp.int32)
+    # positions_thw: [3, B, S] -> gather per slot -> [B, S, D/2]
+    pos = jnp.take(positions_thw, section_id, axis=0)      # [D/2 -> selects]
+    pos = jnp.moveaxis(pos, 0, -1).astype(jnp.float32)     # [B, S, D/2]
+    angles = pos * freqs
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def rope_tables(positions: Array, head_dim: int,
+                theta: float) -> Tuple[Array, Array]:
+    """Precompute (cos, sin) [B, S, D/2] once per step — layer-invariant, so
+    hoisting this out of the layer scan removes per-layer trig + gathers
+    (a measured collective/memory win, EXPERIMENTS.md §Perf)."""
+    freqs = rope_frequencies(head_dim, theta)
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def mrope_tables(positions_thw: Array, head_dim: int, theta: float,
+                 sections: Tuple[int, int, int]) -> Tuple[Array, Array]:
+    """M-RoPE (cos, sin) tables [B, S, D/2] from [3, B, S] position ids."""
+    d_half = head_dim // 2
+    assert sum(sections) == d_half, (sections, d_half)
+    freqs = rope_frequencies(head_dim, theta)
+    section_id = jnp.zeros((d_half,), jnp.int32)
+    acc = 0
+    for s in sections[:-1]:
+        acc += s
+        section_id = section_id + (jnp.arange(d_half) >= acc).astype(jnp.int32)
+    pos = jnp.take(positions_thw, section_id, axis=0)      # [D/2, B, S]
+    pos = jnp.moveaxis(pos, 0, -1).astype(jnp.float32)     # [B, S, D/2]
+    angles = pos * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rotary(x: Array, cos: Array, sin: Array) -> Array:
+    """x: [B, S, H, D]; cos/sin: [B, S, D/2]."""
+    c = cos[:, :, None, :]
+    s = sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, dim: int) -> Array:
+    """Whisper-style fixed sinusoidal positional embeddings [S, D]."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    idx = jnp.arange(dim // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-math.log(10_000.0) * idx / max(dim // 2 - 1, 1))
+    angles = pos * inv
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+def constrain(x: Array, batch_axes, tail) -> Array:
+    """with_sharding_constraint(P(batch_axes, *tail)) when axes are set.
+
+    MaxText-style activation annotations: without them GSPMD sometimes keeps
+    FSDP-sharded weights sharded on the contracting dim and all-reduces
+    activation-sized partial sums over the data axis (measured: 300 s of
+    collectives per step on qwen2-vl train_4k — EXPERIMENTS.md §Perf)."""
+    if not batch_axes:
+        return x
+    import jax as _jax
+    from jax.sharding import PartitionSpec as P
+    return _jax.lax.with_sharding_constraint(x, P(tuple(batch_axes), *tail))
+
+
+def _act(x: Array, kind: str) -> Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(kind)
+
+
+def init_mlp(rng: Array, d_model: int, d_ff: int, gated: bool,
+             dtype=jnp.float32) -> Params:
+    k = jax.random.split(rng, 3)
+    p = {"w_up": dense_init(k[0], d_model, d_ff, dtype),
+         "w_down": dense_init(k[1], d_ff, d_model, dtype)}
+    if gated:
+        p["w_gate"] = dense_init(k[2], d_model, d_ff, dtype)
+    return p
+
+
+def apply_mlp(params: Params, x: Array, activation: str, gated: bool,
+              batch_axes=(), model_axis: str = "model") -> Array:
+    up = constrain(x @ params["w_up"], batch_axes, (None, model_axis))
+    if gated:
+        gate = constrain(x @ params["w_gate"], batch_axes,
+                         (None, model_axis))
+        up = _act(gate, activation) * up
+    else:
+        up = _act(up, activation)
+    return constrain(up @ params["w_down"], batch_axes, (None, None))
+
+
+def softcap(x: Array, cap: float) -> Array:
+    """gemma2 logit soft-capping: cap * tanh(x / cap)."""
+    return cap * jnp.tanh(x / cap)
+
+
+def token_nll(logits: Array, labels: Array) -> Array:
+    """Per-token cross-entropy that stays vocab-parallel.
+
+    Uses logsumexp + masked-reduce instead of ``take_along_axis``: a gather
+    along a sharded vocab axis forces GSPMD to all-gather the full logits
+    (e.g. 67 GB/device at [16, 4096, 256000] f32), whereas select+reduce
+    partial-sums locally and all-reduces only [B, S] scalars.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    gold = jnp.sum(jnp.where(iota == labels[..., None].astype(jnp.int32),
+                             logits, 0.0), axis=-1)
+    return lse - gold

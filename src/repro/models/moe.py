@@ -1,0 +1,183 @@
+"""Mixture-of-Experts layer: top-k router + capacity-based one-hot dispatch
+(GShard/Switch style) with an auxiliary load-balance loss.
+
+The one-hot einsum dispatch is deliberately chosen over gather/sort because
+it partitions cleanly under GSPMD: expert weights ``[E, d, ff]`` shard over
+the ``model`` ("expert") axis and the dispatch einsums lower to all-to-all
+style collectives on the token axis. A dense no-capacity path
+(``dispatch="dense"``) is kept as the correctness oracle; EXPERIMENTS.md
+§Perf studies the capacity factor as a compute-roofline lever.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+
+def init_moe(rng: Array, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    k = jax.random.split(rng, 4)
+    p = {
+        "router": L.dense_init(k[0], d, e, dtype),
+        "w_up": (L.dense_init(k[1], d, e * ff, dtype)
+                 .reshape(d, e, ff).transpose(1, 0, 2)),    # [E, d, ff]
+        "w_down": (L.dense_init(k[2], ff, e * d, dtype)
+                   .reshape(ff, e, d).transpose(1, 0, 2)),  # [E, ff, d]
+    }
+    if cfg.gated_mlp:
+        p["w_gate"] = (L.dense_init(k[3], d, e * ff, dtype)
+                       .reshape(d, e, ff).transpose(1, 0, 2))
+    return p
+
+
+def router_probs(params: Params, x: Array) -> Array:
+    """Softmax router logits over experts. x: [..., d] -> [..., E] (f32)."""
+    logits = (x.astype(jnp.float32) @ params["router"].astype(jnp.float32))
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def load_balance_loss(probs: Array, expert_mask: Array) -> Array:
+    """Switch-style aux loss: E * sum_e (fraction routed) * (mean prob)."""
+    e = probs.shape[-1]
+    density = jnp.mean(expert_mask.astype(jnp.float32), axis=tuple(
+        range(expert_mask.ndim - 1)))          # [E] fraction of slots
+    mean_prob = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    return e * jnp.sum(density * mean_prob)
+
+
+def _expert_ffn(params: Params, xe: Array, cfg: ModelConfig) -> Array:
+    """Batched per-expert FFN. xe: [E, C, d] -> [E, C, d]."""
+    up = jnp.einsum("ecd,edf->ecf", xe, params["w_up"])
+    if cfg.gated_mlp:
+        gate = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"])
+        up = jax.nn.silu(gate) * up
+    else:
+        up = jax.nn.silu(up)
+    return jnp.einsum("ecf,efd->ecd", up, params["w_down"])
+
+
+def apply_moe(params: Params, x: Array, cfg: ModelConfig,
+              dispatch: str = "sort") -> Tuple[Array, Array]:
+    """Returns (output [B,S,d], aux_loss scalar).
+
+    dispatch modes:
+      * "sort"     — production path: stable-sort token slots by expert,
+        scatter into per-expert capacity buffers, batched expert matmuls,
+        gather back. O(T·d) memory; identical keep-set to "capacity".
+      * "capacity" — GShard one-hot einsum dispatch; O(T·k·E·C) dispatch
+        tensor. Exact same semantics; used as the small-shape oracle.
+      * "dense"    — every expert computes every token (drop-free oracle;
+        also the decode path where dropping is unacceptable).
+    """
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    e, topk = cfg.num_experts, cfg.experts_per_token
+
+    probs = router_probs(params, xt)                       # [T, E]
+    top_p, top_idx = jax.lax.top_k(probs, topk)            # [T, k]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)  # renormalise
+
+    onehot = jax.nn.one_hot(top_idx, e, dtype=jnp.float32)  # [T, k, E]
+    aux = load_balance_loss(probs, jnp.max(onehot, axis=1))
+
+    if dispatch == "sort":
+        g = max(1, min(cfg.moe_groups, t))
+        while t % g:                                        # g must divide T
+            g -= 1
+        tg = t // g
+        capacity = int(max(1, round(cfg.moe_capacity_factor * tg * topk / e)))
+        xg = xt.reshape(g, tg, d)
+        idx_g = top_idx.reshape(g, tg * topk)               # slot -> expert
+        gate_g = top_p.reshape(g, tg * topk)
+
+        def group_dispatch(xt_g, flat_expert, gate):
+            """All ops are local to one token group (one data shard)."""
+            order = jnp.argsort(flat_expert, stable=True)
+            sorted_expert = jnp.take(flat_expert, order)
+            sorted_token = order // topk
+            onehot_e = jax.nn.one_hot(flat_expert, e, dtype=jnp.float32)
+            counts = jnp.sum(onehot_e, axis=0).astype(jnp.int32)   # [E]
+            starts = jnp.cumsum(counts) - counts
+            pos_in_expert = jnp.arange(tg * topk) - jnp.take(starts,
+                                                             sorted_expert)
+            keep = pos_in_expert < capacity
+            buf_idx = jnp.where(
+                keep, sorted_expert * capacity + pos_in_expert, e * capacity)
+            gathered = jnp.take(xt_g, sorted_token, axis=0)
+            buf = jnp.zeros((e * capacity + 1, d), xt_g.dtype)
+            buf = buf.at[buf_idx].set(
+                jnp.where(keep[:, None], gathered, 0.0))
+            return (buf[:-1].reshape(e, capacity, d), buf_idx, keep,
+                    jnp.take(gate, order), sorted_token)
+
+        xe, buf_idx, keep, gate_s, sorted_token = jax.vmap(group_dispatch)(
+            xg, idx_g, gate_g)                              # xe [G,E,C,d]
+        # keep expert buffers group-sharded (data) and ff tensor-sharded
+        # (model) — without the constraints GSPMD has been observed to
+        # replicate the [G,E,C,ff] intermediates (EXPERIMENTS.md §Perf).
+        ba, ma = cfg.batch_axes, cfg.model_axis
+        xe = L.constrain(xe, ba, (None, None, None))
+        ye = L.constrain(jnp.einsum("gecd,edf->gecf", xe, params["w_up"]),
+                         ba, (None, None, ma))
+        if cfg.gated_mlp:
+            yg = L.constrain(
+                jnp.einsum("gecd,edf->gecf", xe, params["w_gate"]),
+                ba, (None, None, ma))
+            ye = jax.nn.silu(yg) * ye
+        else:
+            ye = jax.nn.silu(ye)
+        ye = L.constrain(jnp.einsum("gecf,efd->gecd", ye, params["w_down"]),
+                         ba, (None, None, None))
+
+        def group_combine(ye_g, buf_idx, keep, gate, sorted_token):
+            out_slots = jnp.take(ye_g.reshape(e * capacity, d),
+                                 jnp.minimum(buf_idx, e * capacity - 1),
+                                 axis=0)
+            out_slots = out_slots * (gate * keep)[:, None]
+            return jnp.zeros((tg, d), out_slots.dtype).at[sorted_token].add(
+                out_slots)
+
+        y = jax.vmap(group_combine)(ye, buf_idx, keep, gate_s, sorted_token)
+        return y.reshape(b, s, d).astype(x.dtype), aux
+
+    if dispatch == "dense":
+        # Oracle: every expert computes every token, combine by router mass.
+        weights = jnp.einsum("tke,tk->te", onehot, top_p)   # [T, E]
+        up = jnp.einsum("td,edf->tef", xt, params["w_up"])
+        if cfg.gated_mlp:
+            gate = jnp.einsum("td,edf->tef", xt, params["w_gate"])
+            up = jax.nn.silu(gate) * up
+        else:
+            up = jax.nn.silu(up)
+        out = jnp.einsum("tef,efd->ted", up, params["w_down"])
+        y = jnp.einsum("ted,te->td", out, weights)
+        return y.reshape(b, s, d).astype(x.dtype), aux
+
+    # --- capacity dispatch (GShard): each expert processes <= C tokens -----
+    capacity = int(max(1, round(cfg.moe_capacity_factor * t * topk / e)))
+    # position of each (token, slot) within its expert's buffer
+    flat_onehot = onehot.reshape(t * topk, e)
+    pos_in_expert = (jnp.cumsum(flat_onehot, axis=0) - 1.0)  # [T*k, E]
+    pos = jnp.sum(pos_in_expert * flat_onehot, axis=-1)      # [T*k]
+    keep = pos < capacity
+    cap_onehot = jax.nn.one_hot(pos.astype(jnp.int32), capacity,
+                                dtype=jnp.float32) * keep[:, None]
+    # dispatch tensor [T, k, E, C]
+    disp = (flat_onehot[:, :, None] * cap_onehot[:, None, :]
+            ).reshape(t, topk, e, capacity)
+    combine = disp * top_p[:, :, None, None]                 # router-weighted
+
+    xe = jnp.einsum("tkec,td->ecd", disp, xt)                # [E, C, d]
+    ye = _expert_ffn(params, xe, cfg)                        # [E, C, d]
+    y = jnp.einsum("tkec,ecd->td", combine, ye)              # [T, d]
+    return y.reshape(b, s, d).astype(x.dtype), aux

@@ -1,0 +1,133 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)          # recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)          # input gate
+    a_t = a^(c * r_t),  a = sigmoid(lambda_param),  c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The linear recurrence is evaluated with ``jax.lax.associative_scan`` (log-
+depth on TPU) for train/prefill and as a single fused step for decode —
+constant-size state makes ``long_500k`` feasible for this family.
+
+Block structure (Griffin recurrent block):
+    in: x -> [branch y: linear -> gelu] ; [branch u: linear -> causal conv ->
+    RG-LRU] ; out = W_out (y * u)
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+_C = 8.0
+
+
+class RGLRUCache(NamedTuple):
+    h: Array          # [B, width]
+    conv: Array       # [B, conv_width - 1, width]
+
+
+def init_rglru(rng: Array, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    width = cfg.rglru_width or d
+    k = jax.random.split(rng, 6)
+    # init lambda so a in ~(0.9, 0.999): sigmoid(lam)^c in that band
+    u = jax.random.uniform(k[0], (width,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log((u ** (1.0 / _C)) / (1.0 - u ** (1.0 / _C)))
+    return {
+        "w_y": L.dense_init(k[1], d, width, dtype),          # gelu branch
+        "w_u": L.dense_init(k[2], d, width, dtype),          # recurrent branch
+        "conv_w": (0.1 * jax.random.normal(
+            k[3], (cfg.rglru_conv_width, width), jnp.float32)).astype(dtype),
+        "conv_b": jnp.zeros((width,), dtype),
+        "w_a": L.dense_init(k[4], width, width, dtype),
+        "b_a": jnp.zeros((width,), dtype),
+        "w_x": L.dense_init(k[5], width, width, dtype),
+        "b_x": jnp.zeros((width,), dtype),
+        "lam": lam.astype(dtype),
+        "w_out": L.dense_init(jax.random.fold_in(rng, 7), width, d, dtype),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array,
+                 tail: Optional[Array]) -> Tuple[Array, Array]:
+    width = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(width))
+    new_tail = xp[:, -(width - 1):, :] if width > 1 else tail
+    return y + b, new_tail
+
+
+def rglru_scan(u: Array, params: Params, h0: Optional[Array] = None
+               ) -> Tuple[Array, Array]:
+    """Linear recurrence via associative scan. u: [B,S,W] -> (y, h_last)."""
+    r = jax.nn.sigmoid(u @ params["w_a"] + params["b_a"])
+    i = jax.nn.sigmoid(u @ params["w_x"] + params["b_x"])
+    log_a0 = jax.nn.log_sigmoid(params["lam"].astype(jnp.float32))
+    log_a = _C * r.astype(jnp.float32) * log_a0               # [B,S,W]
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * \
+        (i.astype(jnp.float32) * u.astype(jnp.float32))
+
+    if h0 is not None:
+        # fold the initial state into the first step's additive term
+        gated = gated.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, b_l * a_r + b_r
+
+    a_s, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h.astype(u.dtype), h[:, -1, :]
+
+
+def rglru_step(u: Array, params: Params, h: Array) -> Tuple[Array, Array]:
+    """Single decode step. u: [B,W], h: [B,W]."""
+    r = jax.nn.sigmoid(u @ params["w_a"] + params["b_a"])
+    i = jax.nn.sigmoid(u @ params["w_x"] + params["b_x"])
+    log_a0 = jax.nn.log_sigmoid(params["lam"].astype(jnp.float32))
+    a = jnp.exp(_C * r.astype(jnp.float32) * log_a0)
+    h_new = a * h.astype(jnp.float32) + \
+        jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * \
+        (i.astype(jnp.float32) * u.astype(jnp.float32))
+    return h_new.astype(u.dtype), h_new
+
+
+def apply_rglru(params: Params, x: Array, cfg: ModelConfig,
+                cache: Optional[RGLRUCache] = None
+                ) -> Tuple[Array, Optional[RGLRUCache]]:
+    """Griffin recurrent block; decode when cache is not None (S == 1)."""
+    y = jax.nn.gelu(x @ params["w_y"], approximate=True)
+    u = x @ params["w_u"]
+    tail = cache.conv if cache is not None else None
+    u, new_tail = _causal_conv(u, params["conv_w"], params["conv_b"], tail)
+
+    if cache is None:
+        hseq, _ = rglru_scan(u, params)
+        out = (y * hseq) @ params["w_out"]
+        return out, None
+
+    h_new, _ = rglru_step(u[:, 0, :], params, cache.h)
+    out = (y[:, 0, :] * h_new)[:, None, :] @ params["w_out"]
+    return out, RGLRUCache(h=h_new, conv=new_tail)
+
+
+def init_rglru_cache(batch: int, cfg: ModelConfig,
+                     dtype=jnp.float32) -> RGLRUCache:
+    width = cfg.rglru_width or cfg.d_model
+    return RGLRUCache(
+        h=jnp.zeros((batch, width), jnp.float32),
+        conv=jnp.zeros((batch, cfg.rglru_conv_width - 1, width), dtype))

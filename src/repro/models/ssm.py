@@ -1,0 +1,203 @@
+"""Mamba-2 (SSD — state-space duality) block, arXiv:2405.21060.
+
+Implements the chunked SSD algorithm: within a chunk the recurrence is
+evaluated as a masked (decay-weighted) attention-like matmul that maps onto
+the MXU; across chunks a small state recurrence [nh, hd, state] is scanned.
+Single-step decode updates the state in O(d * state) — this is what makes
+``long_500k`` trivially feasible for this family.
+
+Structure per block (simplified single-group Mamba-2):
+  in_proj -> (z, x, B, C, dt) ; causal depthwise conv on (x|B|C) ;
+  SSD(x, dt, A, B, C) ; gated RMSNorm with silu(z) ; out_proj.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+
+class SSMCache(NamedTuple):
+    """Decode-time cache: recurrent state + conv tail."""
+    state: Array       # [B, nh, hd, N]
+    conv: Array        # [B, conv_width - 1, conv_channels]
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int, int]:
+    inner = cfg.ssm_expand * cfg.d_model
+    nh, hd, st = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state_dim
+    assert nh * hd == inner, (nh, hd, inner)
+    conv_ch = inner + 2 * st
+    return inner, nh, hd, st, conv_ch
+
+
+def init_ssd(rng: Array, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    inner, nh, hd, st, conv_ch = _dims(cfg)
+    k = jax.random.split(rng, 5)
+    return {
+        # order: z | x | B | C | dt
+        "in_proj": L.dense_init(k[0], d, 2 * inner + 2 * st + nh, dtype),
+        "conv_w": (0.1 * jax.random.normal(
+            k[1], (cfg.ssm_conv_width, conv_ch), jnp.float32)).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(dtype),
+        "d_skip": jnp.ones((nh,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.linspace(1e-3, 1e-1, nh))).astype(dtype),
+        "norm": jnp.zeros((inner,), dtype),
+        "out_proj": L.dense_init(k[2], inner, d, dtype),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array,
+                 tail: Optional[Array] = None) -> Tuple[Array, Array]:
+    """Depthwise causal conv along time. x: [B,S,C]; w: [W,C].
+
+    Returns (y, new_tail) where tail carries the last W-1 inputs for decode.
+    """
+    width = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(width))
+    new_tail = xp[:, -(width - 1):, :] if width > 1 else tail
+    return jax.nn.silu(y + b), new_tail
+
+
+def ssd_chunked(x: Array, dt: Array, a_log: Array, b_in: Array, c_in: Array,
+                chunk: int, initial_state: Optional[Array] = None
+                ) -> Tuple[Array, Array]:
+    """Chunked SSD scan.
+
+    x: [B,S,nh,hd], dt: [B,S,nh] (post-softplus), b_in/c_in: [B,S,N].
+    Returns (y [B,S,nh,hd], final_state [B,nh,hd,N]).
+    """
+    bsz, s_orig, nh, hd = x.shape
+    n = b_in.shape[-1]
+    # pad the tail to a chunk multiple: dt == 0 on padding makes the padded
+    # steps exact no-ops (decay 1, zero input), so y[:s] and the final state
+    # are unaffected.
+    pad = (-s_orig) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+    s = s_orig + pad
+    nc = s // chunk
+    a = -jnp.exp(a_log.astype(jnp.float32))                  # [nh], negative
+    da = dt.astype(jnp.float32) * a                          # [B,S,nh]
+
+    xc = x.reshape(bsz, nc, chunk, nh, hd).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, chunk, nh).astype(jnp.float32)
+    dac = da.reshape(bsz, nc, chunk, nh)
+    bc = b_in.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+    cc = c_in.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+
+    cum = jnp.cumsum(dac, axis=2)                            # [B,Nc,Lc,nh]
+    # intra-chunk ("diagonal") term: decay-masked attention
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # [B,Nc,i,j,nh]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)           # [B,Nc,i,j]
+    w = scores[..., None] * decay * dtc[:, :, None, :, :]    # [B,Nc,i,j,nh]
+    y_diag = jnp.einsum("bcijh,bcjhd->bcihd", w, xc)
+
+    # chunk summary states: S_c = sum_j exp(cum_end - cum_j) dt_j (x_j ⊗ B_j)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)          # [B,Nc,Lc,nh]
+    weighted_x = xc * (dtc * decay_to_end)[..., None]        # [B,Nc,Lc,nh,hd]
+    s_chunk = jnp.einsum("bclhd,bcln->bchdn", weighted_x, bc)
+
+    # inter-chunk recurrence over Nc
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # [B,Nc,nh]
+    if initial_state is None:
+        initial_state = jnp.zeros((bsz, nh, hd, n), jnp.float32)
+
+    def step(h, inputs):
+        dec, s_c = inputs                                    # [B,nh], [B,nh,hd,N]
+        h_out = h                                            # state BEFORE chunk
+        h_new = dec[:, :, None, None] * h + s_c
+        return h_new, h_out
+
+    final, h_before = jax.lax.scan(
+        step, initial_state.astype(jnp.float32),
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(s_chunk, 1, 0)))
+    h_before = jnp.moveaxis(h_before, 0, 1)                  # [B,Nc,nh,hd,N]
+
+    # off-diagonal contribution: y_off[i] = C_i · (exp(cum_i) * H_prev)
+    in_decay = jnp.exp(cum)                                  # [B,Nc,Lc,nh]
+    y_off = jnp.einsum("bcln,bchdn->bclhd", cc, h_before) * in_decay[..., None]
+
+    y = (y_diag + y_off).reshape(bsz, s, nh, hd)[:, :s_orig]
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(x: Array, dt: Array, a_log: Array, b_in: Array,
+                    c_in: Array, state: Array) -> Tuple[Array, Array]:
+    """One-token SSD update. x: [B,nh,hd], dt: [B,nh], b/c: [B,N]."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    decay = jnp.exp(dt.astype(jnp.float32) * a)              # [B,nh]
+    add = (dt[..., None].astype(jnp.float32) * x.astype(jnp.float32)
+           )[..., None] * b_in[:, None, None, :].astype(jnp.float32)
+    new_state = decay[:, :, None, None] * state + add        # [B,nh,hd,N]
+    y = jnp.einsum("bhdn,bn->bhd", new_state,
+                   c_in.astype(jnp.float32))
+    return y.astype(x.dtype), new_state
+
+
+def apply_ssd(params: Params, x: Array, cfg: ModelConfig,
+              cache: Optional[SSMCache] = None
+              ) -> Tuple[Array, Optional[SSMCache]]:
+    """Full Mamba-2 block. Train/prefill when cache is None; decode (S==1)
+    otherwise."""
+    bsz, s, d = x.shape
+    inner, nh, hd, st, conv_ch = _dims(cfg)
+    proj = x @ params["in_proj"]
+    z, xin, b_in, c_in, dt = jnp.split(
+        proj, [inner, 2 * inner, 2 * inner + st, 2 * inner + 2 * st], axis=-1)
+    dt = jax.nn.softplus(dt + params["dt_bias"])             # [B,S,nh]
+
+    conv_in = jnp.concatenate([xin, b_in, c_in], axis=-1)
+    tail = cache.conv if cache is not None else None
+    conv_out, new_tail = _causal_conv(conv_in, params["conv_w"],
+                                      params["conv_b"], tail)
+    xin, b_in, c_in = jnp.split(conv_out, [inner, inner + st], axis=-1)
+
+    if cache is None:
+        xh = xin.reshape(bsz, s, nh, hd)
+        y, final_state = ssd_chunked(xh, dt, params["a_log"], b_in, c_in,
+                                     min(cfg.ssm_chunk, s))
+        new_cache = None
+    else:
+        xh = xin.reshape(bsz, nh, hd)
+        y, new_state = ssd_decode_step(xh, dt[:, 0], params["a_log"],
+                                       b_in[:, 0], c_in[:, 0], cache.state)
+        y = y[:, None]                                       # [B,1,nh,hd]
+        new_cache = SSMCache(state=new_state, conv=new_tail)
+
+    y = y + params["d_skip"][None, None, :, None] * (
+        xin.reshape(bsz, s, nh, hd) if cache is None
+        else xh[:, None])
+    y = y.reshape(bsz, s, inner)
+    y = L.rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    if cache is not None:
+        return out, new_cache
+    return out, None
+
+
+def init_ssm_cache(batch: int, cfg: ModelConfig, dtype=jnp.float32) -> SSMCache:
+    inner, nh, hd, st, conv_ch = _dims(cfg)
+    return SSMCache(
+        state=jnp.zeros((batch, nh, hd, st), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype))

@@ -1,0 +1,393 @@
+"""Decoder-only LM assembly for all families.
+
+Key idioms (MaxText-style):
+  * **Stacked layer parameters + lax.scan over groups** — parameters for each
+    position of the repeating ``block_pattern`` are stacked on a leading
+    ``num_groups`` axis, and the forward pass scans over groups. The HLO is
+    O(1) in depth: essential for compiling 64-layer 314B-param graphs in the
+    multi-pod dry-run and for clean roofline accounting.
+  * Heterogeneous patterns (gemma2 local/global, recurrentgemma rec/rec/local)
+    unroll the (short) pattern inside the scanned group body.
+  * One code path serves train, prefill (returns filled caches), and decode
+    (single token, in-place cache update).
+
+Params layout:
+  {"embed": [V, d], "blocks": {"b0": stacked-tree, "b1": ...},
+   "final_norm": {...}, optional "lm_head": [d, V], optional enc-dec extras}
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssm as ssm_lib
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+PyTree = Any
+
+
+# --------------------------------------------------------------------------
+# Per-kind block: init
+# --------------------------------------------------------------------------
+
+def _init_block(rng: Array, cfg: ModelConfig, kind: str,
+                dtype) -> Dict[str, PyTree]:
+    k = jax.random.split(rng, 4)
+    p: Dict[str, PyTree] = {"pre_norm": L.init_norm(k[0], cfg.d_model,
+                                                    cfg.norm, dtype)}
+    if kind in ("global", "local"):
+        p["attn"] = attn.init_attention(k[1], cfg, dtype)
+        p["mlp_norm"] = L.init_norm(k[2], cfg.d_model, cfg.norm, dtype)
+        if cfg.family == "moe":
+            p["moe"] = moe_lib.init_moe(k[3], cfg, dtype)
+        else:
+            p["mlp"] = L.init_mlp(k[3], cfg.d_model, cfg.d_ff,
+                                  cfg.gated_mlp, dtype)
+        if cfg.post_attn_norm:
+            p["post_attn_norm"] = L.init_norm(
+                jax.random.fold_in(rng, 11), cfg.d_model, cfg.norm, dtype)
+        if cfg.post_ffn_norm:
+            p["post_ffn_norm"] = L.init_norm(
+                jax.random.fold_in(rng, 12), cfg.d_model, cfg.norm, dtype)
+    elif kind == "recurrent":
+        p["rglru"] = rglru_lib.init_rglru(k[1], cfg, dtype)
+        p["mlp_norm"] = L.init_norm(k[2], cfg.d_model, cfg.norm, dtype)
+        p["mlp"] = L.init_mlp(k[3], cfg.d_model, cfg.d_ff, cfg.gated_mlp,
+                              dtype)
+    elif kind == "ssd":
+        p["ssd"] = ssm_lib.init_ssd(k[1], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+# --------------------------------------------------------------------------
+# Per-kind block: apply (one group slice)
+# --------------------------------------------------------------------------
+
+def _apply_block(p: Dict[str, PyTree], x: Array, cfg: ModelConfig, kind: str,
+                 *, rope, cache, cache_index,
+                 mode: str) -> Tuple[Array, Optional[PyTree], Array]:
+    """Returns (x, new_cache, aux_loss). ``rope``: precomputed (cos, sin)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.apply_norm(x, p["pre_norm"], cfg.norm, cfg.norm_eps)
+
+    if kind in ("global", "local"):
+        kv_cache = cache if mode == "decode" else None
+        out, new_cache = attn.attention(
+            p["attn"], h, cfg, kind=kind, rope=rope, kv_cache=kv_cache,
+            cache_index=cache_index)
+        if mode == "prefill":
+            # materialise this layer's K/V for the serving cache
+            src = h
+            k = attn._split_heads(src @ p["attn"]["wk"], cfg.num_kv_heads)
+            v = attn._split_heads(src @ p["attn"]["wv"], cfg.num_kv_heads)
+            if rope is not None:
+                k = L.apply_rotary(k, *rope)
+            if kind == "local" and cfg.local_ring_cache:
+                # place the last `window` positions into the ring buffer
+                s = k.shape[1]
+                ring = min(s, cfg.window_size)
+                tail = slice(s - ring, s)
+                ring_pos = (jnp.arange(s - ring, s)) % ring
+                k_ring = jnp.zeros((k.shape[0], ring) + k.shape[2:],
+                                   k.dtype).at[:, ring_pos].set(k[:, tail])
+                v_ring = jnp.zeros((v.shape[0], ring) + v.shape[2:],
+                                   v.dtype).at[:, ring_pos].set(v[:, tail])
+                new_cache = {"k": k_ring, "v": v_ring}
+            elif kind == "global" and cfg.quantized_kv:
+                kq, ks = attn.quantize_kv(k)
+                vq, vs = attn.quantize_kv(v)
+                new_cache = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+            else:
+                new_cache = {"k": k, "v": v}
+        if cfg.post_attn_norm:
+            out = L.apply_norm(out, p["post_attn_norm"], cfg.norm,
+                               cfg.norm_eps)
+        x = x + out
+        h2 = L.apply_norm(x, p["mlp_norm"], cfg.norm, cfg.norm_eps)
+        if cfg.family == "moe":
+            # decode uses the exact dense-dispatch path: at single-token batch
+            # sizes the capacity buckets would drop tokens, and serving must
+            # be drop-free; train/prefill use the grouped sort dispatch
+            # (GShard capacity semantics, O(T d) memory — see moe.apply_moe).
+            dispatch = "dense" if mode == "decode" else cfg.moe_dispatch
+            out2, aux = moe_lib.apply_moe(p["moe"], h2, cfg, dispatch)
+        else:
+            out2 = L.apply_mlp(p["mlp"], h2, cfg.activation, cfg.gated_mlp,
+                               cfg.batch_axes, cfg.model_axis)
+        if cfg.post_ffn_norm:
+            out2 = L.apply_norm(out2, p["post_ffn_norm"], cfg.norm,
+                                cfg.norm_eps)
+        x = x + out2
+        return x, new_cache, aux
+
+    if kind == "recurrent":
+        rcache = cache if mode == "decode" else None
+        out, new_cache = rglru_lib.apply_rglru(p["rglru"], h, cfg, rcache)
+        if mode == "prefill":
+            # run the scan but also keep the final state for decode
+            y = jax.nn.gelu(h @ p["rglru"]["w_y"], approximate=True)
+            u0 = h @ p["rglru"]["w_u"]
+            u, tail = rglru_lib._causal_conv(
+                u0, p["rglru"]["conv_w"], p["rglru"]["conv_b"], None)
+            hseq, h_last = rglru_lib.rglru_scan(u, p["rglru"])
+            out = (y * hseq) @ p["rglru"]["w_out"]
+            new_cache = rglru_lib.RGLRUCache(h=h_last, conv=tail)
+        x = x + out
+        h2 = L.apply_norm(x, p["mlp_norm"], cfg.norm, cfg.norm_eps)
+        x = x + L.apply_mlp(p["mlp"], h2, cfg.activation, cfg.gated_mlp,
+                               cfg.batch_axes, cfg.model_axis)
+        return x, new_cache, aux
+
+    if kind == "ssd":
+        scache = cache if mode == "decode" else None
+        out, new_cache = ssm_lib.apply_ssd(p["ssd"], h, cfg, scache)
+        if mode == "prefill":
+            bsz, s, _ = h.shape
+            inner, nh, hd, st, _ = ssm_lib._dims(cfg)
+            proj = h @ p["ssd"]["in_proj"]
+            z, xin, b_in, c_in, dt = jnp.split(
+                proj, [inner, 2 * inner, 2 * inner + st,
+                       2 * inner + 2 * st], axis=-1)
+            dt = jax.nn.softplus(dt + p["ssd"]["dt_bias"])
+            conv_in = jnp.concatenate([xin, b_in, c_in], axis=-1)
+            conv_out, tail = ssm_lib._causal_conv(
+                conv_in, p["ssd"]["conv_w"], p["ssd"]["conv_b"], None)
+            xin2, b2, c2 = jnp.split(conv_out, [inner, inner + st], axis=-1)
+            _, final = ssm_lib.ssd_chunked(
+                xin2.reshape(bsz, s, nh, hd), dt, p["ssd"]["a_log"], b2, c2,
+                min(cfg.ssm_chunk, s))
+            new_cache = ssm_lib.SSMCache(state=final, conv=tail)
+        x = x + out
+        return x, new_cache, aux
+
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# Cache containers
+# --------------------------------------------------------------------------
+
+def init_block_cache(batch: int, seq_len: int, cfg: ModelConfig, kind: str,
+                     dtype) -> PyTree:
+    if kind == "local":
+        # ring buffer: window-sized cache regardless of context length
+        # (the §Perf memory-term lever — EXPERIMENTS.md)
+        ring = min(seq_len, cfg.window_size) if cfg.local_ring_cache \
+            else seq_len
+        return attn.init_kv_cache(batch, ring, cfg, dtype)
+    if kind == "global":
+        return attn.init_kv_cache(batch, seq_len, cfg, dtype,
+                                  quantized=cfg.quantized_kv)
+    if kind == "recurrent":
+        return rglru_lib.init_rglru_cache(batch, cfg, dtype)
+    if kind == "ssd":
+        return ssm_lib.init_ssm_cache(batch, cfg, dtype)
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# The model
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TransformerLM:
+    cfg: ModelConfig
+    remat: bool = False
+
+    # -- params ------------------------------------------------------------
+
+    def init(self, rng: Array) -> PyTree:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype)
+        keys = jax.random.split(rng, 4)
+        params: Dict[str, PyTree] = {
+            "embed": L.embed_init(keys[0], cfg.padded_vocab, cfg.d_model,
+                                  dtype),
+            "final_norm": L.init_norm(keys[1], cfg.d_model, cfg.norm, dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L.dense_init(keys[2], cfg.d_model,
+                                             cfg.padded_vocab, dtype)
+        blocks: Dict[str, PyTree] = {}
+        for j, kind in enumerate(cfg.block_pattern):
+            grp_rngs = jax.random.split(
+                jax.random.fold_in(keys[3], j), cfg.num_groups)
+            blocks[f"b{j}"] = jax.vmap(
+                lambda r: _init_block(r, cfg, kind, dtype))(grp_rngs)
+        params["blocks"] = blocks
+        if cfg.block_pattern_suffix:
+            params["suffix_blocks"] = {
+                f"s{j}": _init_block(
+                    jax.random.fold_in(keys[3], 1000 + j), cfg, kind, dtype)
+                for j, kind in enumerate(cfg.block_pattern_suffix)}
+        return params
+
+    # -- caches --------------------------------------------------------------
+
+    def init_cache(self, batch: int, seq_len: int,
+                   dtype=jnp.float32) -> PyTree:
+        cfg = self.cfg
+
+        def stacked(kind):
+            one = init_block_cache(batch, seq_len, cfg, kind, dtype)
+            return jax.tree_util.tree_map(
+                lambda x: jnp.zeros((cfg.num_groups,) + x.shape, x.dtype), one)
+
+        cache = {f"b{j}": stacked(kind)
+                 for j, kind in enumerate(cfg.block_pattern)}
+        for j, kind in enumerate(cfg.block_pattern_suffix):
+            cache[f"s{j}"] = init_block_cache(batch, seq_len, cfg, kind,
+                                              dtype)
+        return cache
+
+    # -- forward ---------------------------------------------------------------
+
+    def _scan_blocks(self, params, x, *, rope, cache, cache_index,
+                     mode: str):
+        cfg = self.cfg
+        pattern = cfg.block_pattern
+
+        def group_body(carry, slices):
+            x, aux = carry
+            block_params, block_cache = slices
+            new_caches = {}
+            for j, kind in enumerate(pattern):
+                c_j = block_cache[f"b{j}"] if mode == "decode" else None
+                fn = partial(_apply_block, cfg=cfg, kind=kind, rope=rope,
+                             cache_index=cache_index, mode=mode)
+                if self.remat and mode == "train":
+                    wrapped = jax.checkpoint(
+                        lambda p_, x_, fn=fn: fn(p_, x_, cache=None),
+                        prevent_cse=False)
+                    x, nc, a = wrapped(block_params[f"b{j}"], x)
+                else:
+                    x, nc, a = fn(block_params[f"b{j}"], x, cache=c_j)
+                aux = aux + a
+                new_caches[f"b{j}"] = nc if nc is not None else \
+                    jnp.zeros((), jnp.float32)
+            return (x, aux), new_caches
+
+        aux0 = jnp.zeros((), jnp.float32)
+        scan_cache = None
+        if cache is not None:
+            scan_cache = {k: v for k, v in cache.items()
+                          if k.startswith("b")}
+        xs = (params["blocks"], scan_cache if scan_cache is not None
+              else {f"b{j}": jnp.zeros((cfg.num_groups,), jnp.float32)
+                    for j in range(len(pattern))})
+        (x, aux), caches_out = jax.lax.scan(group_body, (x, aux0), xs)
+
+        # trailing suffix blocks (unrolled; num_layers not divisible by the
+        # pattern, e.g. recurrentgemma's final two recurrent layers)
+        for j, kind in enumerate(cfg.block_pattern_suffix):
+            key = f"s{j}"
+            c_j = cache[key] if mode == "decode" else None
+            x, nc, a = _apply_block(
+                params["suffix_blocks"][key], x, cfg=cfg, kind=kind,
+                rope=rope, cache=c_j, cache_index=cache_index, mode=mode)
+            aux = aux + a
+            if mode in ("prefill", "decode"):
+                caches_out[key] = nc if nc is not None else \
+                    jnp.zeros((), jnp.float32)
+        return x, aux, caches_out
+
+    def _embed(self, params, tokens, vision_embeds=None):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+        x = self._constrain(x, (None, None))
+        if cfg.embedding_scale:
+            x = x * jnp.sqrt(jnp.asarray(cfg.d_model, dtype))
+        if vision_embeds is not None:
+            ve = vision_embeds.astype(dtype)
+            if cfg.embedding_scale:
+                ve = ve * jnp.sqrt(jnp.asarray(cfg.d_model, dtype))
+            x = jax.lax.dynamic_update_slice(x, ve, (0, 0, 0))
+        return x
+
+    def _constrain(self, x, spec_tail):
+        """with_sharding_constraint when the launcher set batch_axes."""
+        cfg = self.cfg
+        if not cfg.batch_axes:
+            return x
+        from jax.sharding import PartitionSpec as P
+        spec = P(tuple(cfg.batch_axes), *spec_tail)
+        return jax.lax.with_sharding_constraint(x, spec)
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = L.apply_norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32),
+                                params["embed"].astype(jnp.float32))
+        else:
+            logits = x.astype(jnp.float32) @ params["lm_head"].astype(
+                jnp.float32)
+        # keep the [B, S, V] tensor vocab-parallel: replicated it is tens of
+        # GB per device at 256k vocab (see EXPERIMENTS.md §Perf)
+        logits = self._constrain(logits, (None, cfg.model_axis))
+        if cfg.final_logit_softcap > 0:
+            logits = L.softcap(logits, cfg.final_logit_softcap)
+        if cfg.padded_vocab != cfg.vocab_size:
+            iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+            logits = jnp.where(iota < cfg.vocab_size, logits, -1e30)
+        return logits
+
+    def apply(self, params: PyTree, tokens: Array, *,
+              positions: Optional[Array] = None,
+              positions_thw: Optional[Array] = None,
+              vision_embeds: Optional[Array] = None,
+              mode: str = "train") -> Tuple[Array, Array, Optional[PyTree]]:
+        """Full-sequence forward. Returns (logits, aux_loss, cache|None)."""
+        b, s = tokens.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        rope = attn.make_rope_tables(self.cfg, positions, positions_thw)
+        x = self._embed(params, tokens, vision_embeds)
+        x, aux, caches = self._scan_blocks(
+            params, x, rope=rope, cache=None, cache_index=None, mode=mode)
+        logits = self._logits(params, x)
+        return logits, aux, (caches if mode == "prefill" else None)
+
+    def decode_step(self, params: PyTree, cache: PyTree, tokens: Array,
+                    cache_index: Array, *,
+                    positions_thw: Optional[Array] = None
+                    ) -> Tuple[Array, PyTree]:
+        """One-token decode. tokens: [B, 1]; cache_index: scalar int32."""
+        b, s = tokens.shape
+        assert s == 1
+        positions = jnp.full((b, 1), cache_index, jnp.int32)
+        rope = attn.make_rope_tables(self.cfg, positions, positions_thw)
+        x = self._embed(params, tokens)
+        x, _, new_cache = self._scan_blocks(
+            params, x, rope=rope, cache=cache, cache_index=cache_index,
+            mode="decode")
+        logits = self._logits(params, x)
+        return logits, new_cache
+
+    # -- losses -------------------------------------------------------------
+
+    def loss(self, params: PyTree, batch: Dict[str, Array]) -> Array:
+        logits, aux, _ = self.apply(params, batch["tokens"])
+        labels = batch["labels"]
+        nll = L.token_nll(logits, labels)
+        mask = batch.get("mask")
+        if mask is not None:
+            nll = nll * mask
+            denom = jnp.maximum(jnp.sum(mask), 1.0)
+        else:
+            denom = nll.size
+        ce = jnp.sum(nll) / denom
+        return ce + self.cfg.router_aux_loss_coef * aux

@@ -1,0 +1,66 @@
+"""Qwen2-VL backbone helpers (arXiv:2409.12191).
+
+The vision encoder (ViT + merger) is STUBBED per the assignment: callers
+supply patch embeddings ``[B, P, d_model]`` which overwrite the first P token
+slots (see ``TransformerLM._embed``). What we implement faithfully is the
+language decoder with **M-RoPE**: 3-D (temporal, height, width) position ids,
+where vision patches advance (h, w) over the dynamic-resolution grid at a
+fixed temporal position, and text tokens resume ordinary sequential positions
+after the vision span.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def mrope_positions(batch: int, seq_len: int, num_patches: int,
+                    grid_hw: Tuple[int, int] | None = None) -> Array:
+    """Build [3, B, S] (t, h, w) position ids, vision-prefix layout.
+
+    Vision patches occupy positions [0, P): t = 0, (h, w) walk the patch
+    grid. Text tokens occupy [P, S): t = h = w = t0 + i (vanilla RoPE
+    behaviour), with t0 = max(grid) + 1 as in the Qwen2-VL reference.
+    """
+    if num_patches == 0:
+        pos = jnp.arange(seq_len, dtype=jnp.int32)
+        pos = jnp.broadcast_to(pos[None], (batch, seq_len))
+        return jnp.stack([pos, pos, pos], axis=0)
+
+    if grid_hw is None:
+        side = int(math.ceil(math.sqrt(num_patches)))
+        grid_hw = (side, side)
+    gh, gw = grid_hw
+
+    idx = jnp.arange(seq_len, dtype=jnp.int32)
+    is_vision = idx < num_patches
+    vh = jnp.minimum(idx // gw, gh - 1)
+    vw = idx % gw
+    t0 = max(gh, gw)                     # text positions start past the grid
+    text_pos = t0 + (idx - num_patches)
+
+    t = jnp.where(is_vision, 0, text_pos)
+    h = jnp.where(is_vision, vh, text_pos)
+    w = jnp.where(is_vision, vw, text_pos)
+    pos = jnp.stack([t, h, w], axis=0)                     # [3, S]
+    return jnp.broadcast_to(pos[:, None, :], (3, batch, seq_len))
+
+
+def mrope_decode_positions(batch: int, cache_index: Array,
+                           num_patches: int,
+                           grid_hw: Tuple[int, int] | None = None) -> Array:
+    """[3, B, 1] positions for a single decode step at ``cache_index``."""
+    if grid_hw is None:
+        side = int(math.ceil(math.sqrt(max(num_patches, 1))))
+        grid_hw = (side, side)
+    t0 = max(grid_hw)
+    pos = t0 + (cache_index - num_patches)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32)[None, None],
+                           (batch, 1))
+    return jnp.stack([pos, pos, pos], axis=0)

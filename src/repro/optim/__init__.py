@@ -1,0 +1,6 @@
+"""repro.optim — optimizer + schedule substrate (SGD-momentum, AdamW)."""
+
+from repro.optim.sgd import (SGD, AdamW, SGDState, AdamWState, apply_updates,
+                             global_norm, clip_by_global_norm)
+from repro.optim.schedule import (constant, step_decay, paper_step_decay,
+                                  cosine)

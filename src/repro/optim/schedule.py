@@ -1,0 +1,43 @@
+"""Learning-rate schedules (pure functions of the step/round index)."""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def constant(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def paper_step_decay(lr: float, total_rounds: int) -> Schedule:
+    """The paper's schedule: halve at 50% and 75% of total rounds."""
+    return step_decay(lr, [int(0.5 * total_rounds), int(0.75 * total_rounds)],
+                      0.5)
+
+
+def step_decay(lr: float, boundaries: Sequence[int], factor: float) -> Schedule:
+    bounds = jnp.asarray(list(boundaries), jnp.int32)
+
+    def fn(step):
+        n = jnp.sum(step >= bounds)
+        return lr * factor ** n.astype(jnp.float32)
+
+    return fn
+
+
+def cosine(lr: float, total_steps: int, warmup_steps: int = 0,
+           final_fraction: float = 0.0) -> Schedule:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = lr * step / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps) /
+                        jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_fraction * lr + (1 - final_fraction) * lr * 0.5 * (
+            1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return fn

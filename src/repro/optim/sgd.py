@@ -1,0 +1,117 @@
+"""Minimal optimizer substrate (no external deps): SGD-momentum and AdamW.
+
+API mirrors the (init, update) gradient-transformation style:
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, lr)
+    params = apply_updates(params, updates)
+All functions are pure pytree maps and jit-compatible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype),
+                                  params, updates)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+
+class SGDState(NamedTuple):
+    momentum: PyTree
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    """SGD with (heavy-ball) momentum and optional weight decay.
+
+    The paper's local optimizer: momentum 0.9, lr 0.05 (CIFAR-10) /
+    0.1 (FEMNIST), halved at 50% and 75% of training.
+    """
+    momentum: float = 0.9
+    weight_decay: float = 0.0
+    nesterov: bool = False
+
+    def init(self, params: PyTree) -> SGDState:
+        return SGDState(jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params))
+
+    def update(self, grads: PyTree, state: SGDState, params: PyTree,
+               lr: jax.Array) -> Tuple[PyTree, SGDState]:
+        if self.weight_decay:
+            grads = jax.tree_util.tree_map(
+                lambda g, p: g + self.weight_decay * p.astype(g.dtype),
+                grads, params)
+        new_m = jax.tree_util.tree_map(
+            lambda m, g: self.momentum * m + g.astype(jnp.float32),
+            state.momentum, grads)
+        if self.nesterov:
+            eff = jax.tree_util.tree_map(
+                lambda m, g: self.momentum * m + g.astype(jnp.float32),
+                new_m, grads)
+        else:
+            eff = new_m
+        updates = jax.tree_util.tree_map(lambda m: -lr * m, eff)
+        return updates, SGDState(new_m)
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+    def init(self, params: PyTree) -> AdamWState:
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return AdamWState(jnp.zeros((), jnp.int32),
+                          jax.tree_util.tree_map(z, params),
+                          jax.tree_util.tree_map(z, params))
+
+    def update(self, grads: PyTree, state: AdamWState, params: PyTree,
+               lr: jax.Array) -> Tuple[PyTree, AdamWState]:
+        step = state.step + 1
+        mu = jax.tree_util.tree_map(
+            lambda m, g: self.b1 * m + (1 - self.b1) * g.astype(jnp.float32),
+            state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: self.b2 * v +
+            (1 - self.b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        bc1 = 1 - self.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(m, v, p):
+            mhat = m / bc1
+            vhat = v / bc2
+            u = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return -lr * u
+
+        updates = jax.tree_util.tree_map(upd, mu, nu, params)
+        return updates, AdamWState(step, mu, nu)

@@ -1,0 +1,34 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device-count override here — smoke
+tests and benches must see the single real CPU device (the 512-device
+placeholder mesh belongs exclusively to repro.launch.dryrun)."""
+
+import numpy as np
+import pytest
+
+import jax
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def make_params(n=16, dataset="cifar10", seed=0):
+    from repro.core import paper_default_params
+    rng = np.random.default_rng(seed)
+    return paper_default_params(
+        num_devices=n,
+        data_sizes=rng.integers(200, 600, n).astype(np.float32),
+        dataset=dataset)
+
+
+def make_channel(n=16, seed=0):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(np.clip(rng.exponential(0.1, n), 0.01, 0.5)
+                       .astype(np.float32))

@@ -1,0 +1,129 @@
+"""Decode-path correctness: ring-buffer window caches (across wraps and
+prefill handoff), grouped MoE dispatch, M-RoPE position streams, and the
+client-parallel FL round step."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import moe as moe_lib
+from repro.models.config import ModelConfig
+from repro.models.transformer import TransformerLM
+from repro.models.vlm import mrope_decode_positions, mrope_positions
+
+
+def _ring_cfg():
+    return ModelConfig(name="ring", family="dense", num_layers=2, d_model=64,
+                       num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=61,
+                       block_pattern=("local", "global"), window_size=8)
+
+
+def test_ring_buffer_decode_matches_full_forward():
+    cfg = _ring_cfg()
+    m = TransformerLM(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    s = 24                                      # wraps the 8-slot ring 3x
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, s), 0, 61)
+    full, _, _ = m.apply(params, toks)
+    cache = m.init_cache(2, s)
+    assert cache["b0"]["k"].shape[2] == 8       # ring-sized local cache
+    assert cache["b1"]["k"].shape[2] == s       # full global cache
+    step = jax.jit(m.decode_step)
+    worst = 0.0
+    for t in range(s):
+        lg, cache = step(params, cache, toks[:, t:t + 1],
+                         jnp.asarray(t, jnp.int32))
+        worst = max(worst, float(jnp.abs(lg[:, 0] - full[:, t]).max()))
+    assert worst < 5e-5, worst
+
+
+def test_ring_buffer_prefill_handoff_past_wrap():
+    cfg = _ring_cfg()
+    m = TransformerLM(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 21), 0, 61)
+    full, _, _ = m.apply(params, toks)
+    _, _, cache = m.apply(params, toks[:, :20], mode="prefill")
+    ref = m.init_cache(2, 21)
+    cache = jax.tree_util.tree_map(
+        lambda cp, cf: jnp.pad(cp, [(0, cf.shape[i] - cp.shape[i])
+                                    for i in range(cp.ndim)]), cache, ref)
+    lg, _ = m.decode_step(params, cache, toks[:, 20:21],
+                          jnp.asarray(20, jnp.int32))
+    np.testing.assert_allclose(np.asarray(lg[:, 0]), np.asarray(full[:, 20]),
+                               atol=5e-5)
+
+
+def test_ring_cache_ablation_restores_full_cache():
+    cfg = dataclasses.replace(_ring_cfg(), local_ring_cache=False)
+    m = TransformerLM(cfg)
+    cache = m.init_cache(2, 24)
+    assert cache["b0"]["k"].shape[2] == 24
+
+
+def test_grouped_moe_matches_dense_with_ample_capacity():
+    cfg = ModelConfig(name="m", family="moe", num_layers=2, d_model=32,
+                      num_heads=4, num_kv_heads=2, d_ff=48, vocab_size=97,
+                      num_experts=4, experts_per_token=2,
+                      moe_capacity_factor=8.0, moe_groups=4)
+    params = moe_lib.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 32))
+    y_sort, _ = moe_lib.apply_moe(params, x, cfg, "sort")
+    y_dense, _ = moe_lib.apply_moe(params, x, cfg, "dense")
+    np.testing.assert_allclose(np.asarray(y_sort), np.asarray(y_dense),
+                               atol=2e-5)
+
+
+def test_grouped_moe_group1_matches_capacity():
+    cfg = ModelConfig(name="m", family="moe", num_layers=2, d_model=32,
+                      num_heads=4, num_kv_heads=2, d_ff=48, vocab_size=97,
+                      num_experts=4, experts_per_token=2,
+                      moe_capacity_factor=1.0, moe_groups=1)
+    params = moe_lib.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (3, 16, 32))
+    y_sort, _ = moe_lib.apply_moe(params, x, cfg, "sort")
+    y_cap, _ = moe_lib.apply_moe(params, x, cfg, "capacity")
+    np.testing.assert_allclose(np.asarray(y_sort), np.asarray(y_cap),
+                               atol=2e-5)
+
+
+def test_mrope_text_only_equals_vanilla_positions():
+    pos = mrope_positions(2, 10, num_patches=0)
+    assert pos.shape == (3, 2, 10)
+    expected = np.broadcast_to(np.arange(10), (2, 10))
+    for i in range(3):
+        np.testing.assert_array_equal(np.asarray(pos[i]), expected)
+
+
+def test_mrope_vision_prefix_layout():
+    pos = np.asarray(mrope_positions(1, 8, num_patches=4))  # 2x2 grid
+    t, h, w = pos[:, 0, :]
+    assert (t[:4] == 0).all()
+    np.testing.assert_array_equal(h[:4], [0, 0, 1, 1])
+    np.testing.assert_array_equal(w[:4], [0, 1, 0, 1])
+    # text resumes with equal t == h == w
+    assert (t[4:] == h[4:]).all() and (h[4:] == w[4:]).all()
+    assert (np.diff(t[4:]) == 1).all()
+    dec = np.asarray(mrope_decode_positions(1, jnp.asarray(9), 4))
+    assert dec.shape == (3, 1, 1)
+    assert (dec == dec[0]).all()
+
+
+def test_fl_round_step_improves_loss():
+    from repro.configs import get_smoke_config
+    from repro.launch.steps import build_model, make_fl_round_step
+    cfg = get_smoke_config("yi-9b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    step = jax.jit(make_fl_round_step(cfg, 2, lr=0.3, local_steps=3))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 4, 17), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks[:, :, :-1], "labels": toks[:, :, 1:],
+             "coeffs": jnp.asarray([0.5, 0.5])}
+    losses = []
+    for _ in range(4):
+        params, metrics = step(params, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0], losses

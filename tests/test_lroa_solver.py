@@ -1,0 +1,125 @@
+"""Unit tests for Algorithm 2: Theorems 2/3 closed forms, the SUM
+water-filling q-solver, and the alternating P2 loop."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_channel, make_params
+from repro.core import (ControlDecision, SolverConfig, p22_objective,
+                        p2_objective, solve_f, solve_p, solve_p2, solve_q)
+from repro.core import system_model as sm
+from repro.core.solver import _phi, _waterfill_simplex
+
+N = 12
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = make_params(N)
+    h = make_channel(N)
+    q = jnp.full((N,), 1.0 / N)
+    queues = jnp.abs(make_channel(N, seed=3)) * 1e4
+    return params, h, q, queues
+
+
+def _f_objective(params, q, queues, V, f):
+    """The P2.1.1 objective as a function of f (for perturbation tests)."""
+    sel = sm.selection_probability(q, params.sample_count)
+    e_cmp = sm.compute_energy(params, f)
+    t_cmp = sm.compute_time(params, f)
+    return jnp.sum(queues * sel * e_cmp + V * q * t_cmp)
+
+
+def test_theorem2_is_local_min(setup):
+    params, h, q, queues = setup
+    V = 1e5
+    f_star = solve_f(params, q, queues, V)
+    base = _f_objective(params, q, queues, V, f_star)
+    for eps in (0.99, 1.01):
+        f_pert = jnp.clip(f_star * eps, params.f_min, params.f_max)
+        assert _f_objective(params, q, queues, V, f_pert) >= base - 1e-3
+
+
+def test_theorem2_zero_queue_gives_fmax(setup):
+    params, h, q, _ = setup
+    f_star = solve_f(params, q, jnp.zeros((N,)), 1e5)
+    np.testing.assert_allclose(np.asarray(f_star), np.asarray(params.f_max))
+
+
+def test_phi_monotone():
+    x = jnp.linspace(0.0, 50.0, 300)
+    phi = _phi(x)
+    assert bool(jnp.all(jnp.diff(phi) > 0))
+    assert float(phi[0]) == 0.0
+
+
+def _p_objective(params, q, queues, h, V, p):
+    sel = sm.selection_probability(q, params.sample_count)
+    t_up = sm.upload_time(params, h, p)
+    return jnp.sum((queues * sel * p + V * q) * t_up)
+
+
+def test_theorem3_is_local_min(setup):
+    params, h, q, queues = setup
+    V = 1e2
+    p_star = solve_p(params, q, queues, h, V)
+    base = _p_objective(params, q, queues, h, V, p_star)
+    for eps in (0.98, 1.02):
+        p_pert = jnp.clip(p_star * eps, params.p_min, params.p_max)
+        assert _p_objective(params, q, queues, h, V, p_pert) >= base - 1e-4
+
+
+def test_waterfill_matches_grid_search():
+    rng = np.random.default_rng(0)
+    n = 5
+    b = jnp.asarray(rng.uniform(0.5, 3.0, n).astype(np.float32))
+    a3 = jnp.asarray(rng.uniform(0.01, 0.3, n).astype(np.float32))
+    q = _waterfill_simplex(b, a3, 1e-6, 64)
+    assert abs(float(q.sum()) - 1.0) < 1e-5
+    obj = float(jnp.sum(b * q + a3 / q))
+    # random feasible candidates must not beat the waterfilling solution
+    for _ in range(300):
+        cand = rng.dirichlet(np.ones(n)).astype(np.float32)
+        cand = np.clip(cand, 1e-6, 1.0)
+        cand /= cand.sum()
+        cand_obj = float(np.sum(np.asarray(b) * cand + np.asarray(a3) / cand))
+        assert cand_obj >= obj - 1e-3
+
+
+def test_solve_q_improves_p22(setup):
+    params, h, q0, queues = setup
+    V, lam = 1e4, 10.0
+    f = 0.5 * (params.f_min + params.f_max)
+    p = 0.5 * (params.p_min + params.p_max)
+    t = sm.round_time(params, h, p, f)
+    e = sm.round_energy(params, h, p, f)
+    q_star = solve_q(params, t, e, queues, V, lam, q0)
+    assert abs(float(q_star.sum()) - 1.0) < 1e-4
+    assert bool(jnp.all(q_star > 0))
+    obj0 = float(p22_objective(params, q0, t, e, queues, V, lam))
+    obj1 = float(p22_objective(params, q_star, t, e, queues, V, lam))
+    assert obj1 <= obj0 + 1e-3
+
+
+def test_solve_p2_beats_naive_decisions(setup):
+    params, h, _, queues = setup
+    V, lam = 1e4, 10.0
+    dec = solve_p2(params, h, queues, V, lam)
+    assert abs(float(dec.q.sum()) - 1.0) < 1e-4
+    obj_star = float(p2_objective(params, h, dec, queues, V, lam))
+    naive = ControlDecision(
+        f=params.f_max, p=params.p_max,
+        q=jnp.full((N,), 1.0 / N, jnp.float32))
+    obj_naive = float(p2_objective(params, h, naive, queues, V, lam))
+    assert obj_star <= obj_naive + 1e-3
+
+
+def test_decisions_respect_boxes(setup):
+    params, h, _, queues = setup
+    dec = solve_p2(params, h, queues, 1e4, 10.0)
+    assert bool(jnp.all(dec.f >= params.f_min - 1e-3))
+    assert bool(jnp.all(dec.f <= params.f_max + 1e-3))
+    assert bool(jnp.all(dec.p >= params.p_min - 1e-9))
+    assert bool(jnp.all(dec.p <= params.p_max + 1e-9))

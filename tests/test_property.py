@@ -1,0 +1,103 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import selection_probability, update_queues
+from repro.core.solver import _phi, _waterfill_simplex
+from repro.models.layers import token_nll
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=40,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+finite_f32 = st.floats(min_value=-1e3, max_value=1e3, width=32,
+                       allow_nan=False)
+
+
+@hypothesis.given(
+    b=hnp.arrays(np.float32, st.integers(2, 16),
+                 elements=st.floats(0.0, 100.0, width=32)),
+    a3_scale=st.floats(1e-4, 10.0),
+)
+def test_waterfill_always_on_simplex(b, a3_scale):
+    rng = np.random.default_rng(0)
+    a3 = (a3_scale * rng.uniform(0.1, 1.0, b.shape[0])).astype(np.float32)
+    q = _waterfill_simplex(jnp.asarray(b), jnp.asarray(a3), 1e-6, 64)
+    q = np.asarray(q)
+    assert abs(q.sum() - 1.0) < 1e-4
+    assert (q > 0).all()
+    assert (q <= 1.0 + 1e-6).all()
+
+
+@hypothesis.given(x=st.floats(0.0, 1e6))
+def test_phi_nonnegative_increasing(x):
+    val = float(_phi(jnp.asarray(x)))
+    assert val >= -1e-6
+    assert float(_phi(jnp.asarray(x + 1.0))) >= val
+
+
+@hypothesis.given(
+    q=hnp.arrays(np.float32, st.integers(1, 12),
+                 elements=st.floats(0.0, 1.0, width=32)),
+    k=st.integers(1, 8),
+)
+def test_selection_probability_bounds(q, k):
+    sel = np.asarray(selection_probability(jnp.asarray(q), k))
+    assert (sel >= -1e-6).all() and (sel <= 1.0 + 1e-6).all()
+    # monotone in q
+    order = np.argsort(q)
+    assert (np.diff(sel[order]) >= -1e-6).all()
+
+
+@hypothesis.given(
+    queues=hnp.arrays(np.float32, st.integers(1, 10),
+                      elements=st.floats(0.0, 1e6, width=32)),
+    inc=hnp.arrays(np.float32, st.integers(1, 10),
+                   elements=finite_f32),
+)
+def test_queue_update_nonnegative(queues, inc):
+    n = min(len(queues), len(inc))
+    out = np.asarray(update_queues(jnp.asarray(queues[:n]),
+                                   jnp.asarray(inc[:n])))
+    assert (out >= 0).all()
+
+
+@hypothesis.given(
+    logits=hnp.arrays(np.float32, st.tuples(st.integers(1, 3),
+                                            st.integers(1, 4),
+                                            st.integers(2, 9)),
+                      elements=st.floats(-20, 20, width=32)),
+)
+def test_token_nll_matches_gather(logits):
+    b, s, v = logits.shape
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, v, (b, s))
+    nll = np.asarray(token_nll(jnp.asarray(logits), jnp.asarray(labels)))
+    logp = jax.nn.log_softmax(jnp.asarray(logits), axis=-1)
+    expected = -np.take_along_axis(np.asarray(logp), labels[..., None],
+                                   axis=-1)[..., 0]
+    np.testing.assert_allclose(nll, expected, atol=1e-4, rtol=1e-4)
+
+
+@hypothesis.given(
+    w=hnp.arrays(np.float32, st.integers(2, 10),
+                 elements=st.floats(0.015625, 1.0, width=32)),
+)
+def test_sampling_error_minimised_at_q_eq_w(w):
+    """Theorem 1's sampling term sum w^2/q is minimised by q = w."""
+    from repro.core import sampling_error_term
+    w = w / w.sum()
+    base = float(sampling_error_term(jnp.asarray(w), jnp.asarray(w)))
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        q = rng.dirichlet(np.ones(len(w))).astype(np.float32)
+        q = np.clip(q, 1e-4, 1.0)
+        q /= q.sum()
+        assert float(sampling_error_term(jnp.asarray(w),
+                                         jnp.asarray(q))) >= base - 1e-5

@@ -1,0 +1,96 @@
+"""Virtual-queue dynamics (eqs. 19-21) + client sampling / unbiased
+aggregation (eq. 4, Appendix A)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from conftest import make_channel, make_params
+from repro.core import (energy_increment, init_queues, lyapunov,
+                        update_queues)
+from repro.fl import server as fl_server
+
+
+def test_queue_never_negative():
+    q = init_queues(4)
+    q = update_queues(q, jnp.asarray([-5.0, 3.0, -0.1, 0.0]))
+    assert bool(jnp.all(q >= 0))
+    np.testing.assert_allclose(np.asarray(q), [0.0, 3.0, 0.0, 0.0])
+
+
+def test_queue_accumulates_violation():
+    params = make_params(4)
+    h = make_channel(4)
+    q = jnp.full((4,), 0.25)
+    inc = energy_increment(params, h, params.p_max, params.f_max, q)
+    queues = update_queues(init_queues(4), inc)
+    queues2 = update_queues(queues, inc)
+    # p_max/f_max at 25% selection on this config violates the budget
+    assert bool(jnp.all(queues2 >= queues))
+
+
+def test_lyapunov():
+    assert float(lyapunov(jnp.asarray([3.0, 4.0]))) == 12.5
+
+
+def test_sampling_with_replacement_distribution():
+    rng = np.random.default_rng(0)
+    q = np.asarray([0.5, 0.25, 0.125, 0.125])
+    counts = np.zeros(4)
+    trials = 4000
+    for _ in range(trials):
+        sel = fl_server.sample_clients(rng, q, 2)
+        assert sel.shape == (2,)
+        for s in sel:
+            counts[s] += 1
+    freq = counts / (2 * trials)
+    np.testing.assert_allclose(freq, q, atol=0.03)
+
+
+def test_aggregation_unbiased():
+    """E[theta_agg] == full-participation weighted aggregate (Appendix A)."""
+    rng = np.random.default_rng(1)
+    n, k, d = 6, 2, 5
+    w = rng.dirichlet(np.ones(n))
+    q = rng.dirichlet(np.ones(n) * 2)
+    deltas = rng.normal(0, 1, (n, d)).astype(np.float32)
+    theta = np.zeros(d, np.float32)
+
+    acc = np.zeros(d)
+    trials = 20000
+    for _ in range(trials):
+        sel = fl_server.sample_clients(rng, q, k)
+        coeffs = fl_server.aggregation_weights(sel, q, w, k)
+        out = theta + (coeffs[:, None] * deltas[sel]).sum(0)
+        acc += out
+    expected = (w[:, None] * deltas).sum(0)
+    np.testing.assert_allclose(acc / trials, expected, atol=0.05)
+
+
+def test_aggregate_matches_stacked():
+    rng = np.random.default_rng(2)
+    tree = {"a": jnp.asarray(rng.normal(size=(4, 3)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(7,)), jnp.float32)}
+    deltas = [
+        {"a": jnp.asarray(rng.normal(size=(4, 3)), jnp.float32),
+         "b": jnp.asarray(rng.normal(size=(7,)), jnp.float32)}
+        for _ in range(3)]
+    coeffs = np.asarray([0.5, 0.25, 0.75], np.float32)
+    out1 = fl_server.aggregate(tree, deltas, coeffs)
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *deltas)
+    out2 = fl_server.aggregate_stacked(tree, stacked, jnp.asarray(coeffs))
+    for k in tree:
+        np.testing.assert_allclose(np.asarray(out1[k]), np.asarray(out2[k]),
+                                   rtol=1e-5)
+
+
+def test_aggregate_kernel_path_matches():
+    from repro.kernels import fl_aggregate_pytree
+    rng = np.random.default_rng(3)
+    tree = {"w": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32)}
+    stacked = {"w": jnp.asarray(rng.normal(size=(3, 8, 4)), jnp.float32)}
+    coeffs = jnp.asarray([0.2, 0.3, 0.5], jnp.float32)
+    out_k = fl_aggregate_pytree(tree, stacked, coeffs, impl="pallas")
+    out_r = fl_server.aggregate_stacked(tree, stacked, coeffs)
+    np.testing.assert_allclose(np.asarray(out_k["w"]),
+                               np.asarray(out_r["w"]), rtol=1e-4, atol=1e-6)

@@ -1,0 +1,136 @@
+"""Serving-path features added in §Perf: int8 quantised KV caches and the
+scanned block-pattern suffix (recurrentgemma layout)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.attention import dequantize_kv, quantize_kv
+from repro.models.config import ModelConfig
+from repro.models.transformer import TransformerLM
+
+
+def test_quantize_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 5, 3, 32)) * 3.0
+    q, s = quantize_kv(x)
+    assert q.dtype == jnp.int8 and s.shape == (2, 5, 3)
+    err = jnp.abs(dequantize_kv(q, s) - x)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    assert float(jnp.max(err / jnp.maximum(amax, 1e-8))) <= 1.0 / 127 + 1e-6
+
+
+def test_int8_kv_decode_matches_full_forward():
+    cfg = ModelConfig(name="q8", family="dense", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=61,
+                      block_pattern=("local", "global"), window_size=8,
+                      quantized_kv=True)
+    m = TransformerLM(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    s = 20
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, s), 0, 61)
+    full, _, _ = m.apply(params, toks)
+    cache = m.init_cache(2, s)
+    assert cache["b1"]["k"].dtype == jnp.int8
+    assert cache["b0"]["k"].dtype != jnp.int8        # local ring stays bf16/f32
+    step = jax.jit(m.decode_step)
+    worst = 0.0
+    for t in range(s):
+        lg, cache = step(params, cache, toks[:, t:t + 1],
+                         jnp.asarray(t, jnp.int32))
+        worst = max(worst, float(jnp.abs(lg[:, 0] - full[:, t]).max()))
+    assert worst < 0.05, worst                        # int8 serving tolerance
+
+
+def test_int8_prefill_handoff():
+    cfg = ModelConfig(name="q8b", family="dense", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=61,
+                      quantized_kv=True)
+    m = TransformerLM(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 13), 0, 61)
+    full, _, _ = m.apply(params, toks)
+    _, _, pc = m.apply(params, toks[:, :12], mode="prefill")
+    ref = m.init_cache(1, 13)
+    pc = jax.tree_util.tree_map(
+        lambda cp, cf: jnp.pad(cp, [(0, cf.shape[i] - cp.shape[i])
+                                    for i in range(cp.ndim)]), pc, ref)
+    lg, _ = m.decode_step(params, pc, toks[:, 12:13],
+                          jnp.asarray(12, jnp.int32))
+    assert float(jnp.abs(lg[:, 0] - full[:, 12]).max()) < 0.05
+
+
+def test_block_pattern_suffix_consistency():
+    cfg = ModelConfig(name="sfx", family="hybrid", num_layers=5, d_model=64,
+                      num_heads=4, num_kv_heads=1, d_ff=96, vocab_size=61,
+                      block_pattern=("recurrent", "local"), window_size=8,
+                      block_pattern_suffix=("recurrent",))
+    assert cfg.num_groups == 2
+    assert len(cfg.all_blocks) == 5
+    m = TransformerLM(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    assert "suffix_blocks" in params
+    s = 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, s + 1), 0, 61)
+    full, _, _ = m.apply(params, toks)
+    assert not bool(jnp.isnan(full).any())
+    _, _, pc = m.apply(params, toks[:, :s], mode="prefill")
+    ref = m.init_cache(2, s + 1)
+    pc = jax.tree_util.tree_map(
+        lambda cp, cf: jnp.pad(cp, [(0, cf.shape[i] - cp.shape[i])
+                                    for i in range(cp.ndim)]), pc, ref)
+    lg, _ = m.decode_step(params, pc, toks[:, s:s + 1],
+                          jnp.asarray(s, jnp.int32))
+    np.testing.assert_allclose(np.asarray(lg[:, 0]), np.asarray(full[:, s]),
+                               atol=5e-5)
+
+
+def test_recurrentgemma_config_uses_suffix():
+    from repro.configs import get_config
+    cfg = get_config("recurrentgemma-2b")
+    assert cfg.block_pattern == ("recurrent", "recurrent", "local")
+    assert cfg.block_pattern_suffix == ("recurrent", "recurrent")
+    assert cfg.num_groups == 8
+    assert len(cfg.all_blocks) == 26
+
+
+def test_flash_decode_quantized_matches_unquantized():
+    from repro.models.flash import flash_decode
+    rng = jax.random.PRNGKey(0)
+    b, s, nq, nkv, d = 2, 64, 4, 2, 16
+    q = jax.random.normal(jax.random.fold_in(rng, 1), (b, 1, nq, d))
+    k = jax.random.normal(jax.random.fold_in(rng, 2), (b, s, nkv, d))
+    v = jax.random.normal(jax.random.fold_in(rng, 3), (b, s, nkv, d))
+    kq, ks = quantize_kv(k)
+    vq, vs = quantize_kv(v)
+    out_f = flash_decode(q, k, v, scale=d ** -0.5,
+                         cache_index=jnp.asarray(40), block_kv=16)
+    out_q = flash_decode(q, kq, vq, scale=d ** -0.5,
+                         cache_index=jnp.asarray(40), block_kv=16,
+                         k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(np.asarray(out_q), np.asarray(out_f),
+                               atol=0.05)
+
+
+def test_vocab_padding_exact_loss():
+    """Padded vocab (shardability) leaves logits on real slots and the
+    training loss bit-identical; pad slots are masked to -inf."""
+    import dataclasses
+    cfg = ModelConfig(name="v", family="dense", num_layers=2, d_model=32,
+                      num_heads=2, num_kv_heads=1, d_ff=64, vocab_size=53)
+    cfgp = dataclasses.replace(cfg, vocab_pad_multiple=16)     # 53 -> 64
+    assert cfgp.padded_vocab == 64
+    m, mp = TransformerLM(cfg), TransformerLM(cfgp)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 53)
+    params = m.init(jax.random.PRNGKey(0))
+    pp = dict(mp.init(jax.random.PRNGKey(0)))
+    pp["embed"] = pp["embed"].at[:53].set(params["embed"]).at[53:].set(0.0)
+    pp["blocks"] = params["blocks"]
+    pp["final_norm"] = params["final_norm"]
+    l1, _, _ = m.apply(params, toks)
+    l2, _, _ = mp.apply(pp, toks)
+    np.testing.assert_allclose(np.asarray(l2[..., :53]), np.asarray(l1),
+                               atol=1e-5)
+    assert float(l2[..., 53:].max()) < -1e29
+    loss1 = float(m.loss(params, {"tokens": toks, "labels": toks}))
+    loss2 = float(mp.loss(pp, {"tokens": toks, "labels": toks}))
+    assert abs(loss1 - loss2) < 1e-6

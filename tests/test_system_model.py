@@ -1,0 +1,66 @@
+"""System-model equation tests (eqs. 5-17) against hand-computed values."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from conftest import make_channel, make_params
+from repro.core import system_model as sm
+
+
+def test_uplink_rate_shannon():
+    params = make_params(4)
+    h = jnp.asarray([0.1, 0.1, 0.2, 0.05])
+    p = jnp.asarray([0.1, 0.05, 0.1, 0.1])
+    # B_n = 1 MHz / K=2 = 500 kHz
+    expected = 5e5 * np.log2(1 + np.asarray(h) * np.asarray(p) / 0.01)
+    np.testing.assert_allclose(np.asarray(sm.uplink_rate(params, h, p)),
+                               expected, rtol=1e-6)
+
+
+def test_upload_time_and_energy_consistent():
+    params = make_params(4)
+    h = make_channel(4)
+    p = jnp.full((4,), 0.05)
+    t_up = sm.upload_time(params, h, p)
+    e_com = sm.comm_energy(params, h, p)
+    np.testing.assert_allclose(np.asarray(e_com),
+                               np.asarray(p * t_up), rtol=1e-6)
+
+
+def test_compute_time_and_energy():
+    params = make_params(3)
+    f = jnp.asarray([1e9, 1.5e9, 2e9])
+    cycles = (params.local_epochs * np.asarray(params.cycles_per_sample)
+              * np.asarray(params.data_sizes))
+    np.testing.assert_allclose(np.asarray(sm.compute_time(params, f)),
+                               cycles / np.asarray(f), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(sm.compute_energy(params, f)),
+        0.5 * np.asarray(params.capacitance) * cycles * np.asarray(f) ** 2,
+        rtol=1e-6)
+
+
+def test_selection_probability():
+    q = jnp.asarray([0.0, 0.5, 1.0])
+    sel = sm.selection_probability(q, 2)
+    np.testing.assert_allclose(np.asarray(sel), [0.0, 0.75, 1.0], atol=1e-7)
+
+
+def test_latency_surrogate_bounds_expectation():
+    """E[max] >= surrogate-under-q for uniform q equals mean; basic sanity."""
+    params = make_params(8)
+    h = make_channel(8)
+    f = 0.5 * (params.f_min + params.f_max)
+    p = 0.5 * (params.p_min + params.p_max)
+    t = sm.round_time(params, h, p, f)
+    q = jnp.full((8,), 1 / 8)
+    surrogate = float(sm.expected_round_latency(q, t))
+    assert surrogate <= float(jnp.max(t)) + 1e-6
+    assert surrogate >= float(jnp.min(t)) - 1e-6
+
+
+def test_weights_sum_to_one():
+    params = make_params(9)
+    w = np.asarray(params.data_weights)
+    assert abs(w.sum() - 1.0) < 1e-6
+    assert (w > 0).all()

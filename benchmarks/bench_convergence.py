@@ -4,6 +4,7 @@ reach the accuracy target (paper: up to 50.1%)."""
 
 from __future__ import annotations
 
+import time
 from typing import Dict, List
 
 import numpy as np
@@ -23,7 +24,11 @@ def run(cfg: BenchConfig, controllers=("lroa", "uni_d", "uni_s", "divfl")
     rows = []
     results: Dict[str, object] = {}
     for name in controllers:
+        t0 = time.perf_counter()
         results[name] = run_controller(name, cfg)
+        sim_rps = cfg.rounds / (time.perf_counter() - t0)
+        rows.append(csv_row(f"convergence/{name}/sim_throughput", 0.0,
+                            f"sim_rounds_per_sec={sim_rps:.2f}"))
     accs = {n: (r.accuracy_curve()[-1][2] or 0.0)
             for n, r in results.items()}
     # accuracy target: 95% of the worst controller's final accuracy —

@@ -59,6 +59,26 @@ def bench_aggregate(n=4_000_000, k=4) -> str:
                    f"bytes={bytes_moved:.2e};tpu_roofline_us={tpu_us:.1f}")
 
 
+def bench_aggregate_pytree(hidden=256, k=8) -> str:
+    """eq.-(4) on a real model pytree: per-leaf reduce vs ravelled fused."""
+    from repro.fl import aggregate_fused, aggregate_stacked
+    from repro.models import MLPTask
+    task = MLPTask(input_dim=3072, num_classes=10, hidden=hidden)
+    params = task.init(jax.random.PRNGKey(0))
+    deltas = jax.tree_util.tree_map(
+        lambda p: jax.random.normal(jax.random.PRNGKey(1),
+                                    (k,) + p.shape, p.dtype), params)
+    coeffs = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(2), (k,)))
+    stacked = jax.jit(aggregate_stacked)
+    fused = jax.jit(aggregate_fused, static_argnames=("impl",))
+    us_s = time_us(lambda: jax.block_until_ready(
+        stacked(params, deltas, coeffs)), iters=10)
+    us_f = time_us(lambda: jax.block_until_ready(
+        fused(params, deltas, coeffs)), iters=10)
+    return csv_row(f"kernels/fl_aggregate_pytree/h{hidden}k{k}", us_f,
+                   f"per_leaf_us={us_s:.1f};fused_us={us_f:.1f}")
+
+
 def bench_solver(n=120) -> str:
     import numpy as np
     from repro.core import estimate_hyperparams, paper_default_params, solve_p2
@@ -76,8 +96,15 @@ def bench_solver(n=120) -> str:
                    "per_round_decision_latency")
 
 
-def run() -> List[str]:
-    return [bench_flash(), bench_ssd(), bench_aggregate(), bench_solver()]
+def run(smoke: bool = False) -> List[str]:
+    if smoke:
+        return [bench_flash(b=1, h=2, hkv=2, s=64, d=16),
+                bench_ssd(b=1, s=64, nh=2, hd=16, n=8, chunk=16),
+                bench_aggregate(n=10_000, k=2),
+                bench_aggregate_pytree(hidden=16, k=2),
+                bench_solver(n=8)]
+    return [bench_flash(), bench_ssd(), bench_aggregate(),
+            bench_aggregate_pytree(), bench_solver()]
 
 
 if __name__ == "__main__":

@@ -1,0 +1,149 @@
+"""Round-engine benchmark: simulated FL rounds/sec, seed sequential path vs
+the fused round engine vs the multi-round ``lax.scan`` fast path.
+
+The comparison holds everything fixed (task, controller, channel, client
+data, K) and only swaps the execution strategy:
+
+* ``sequential`` — the seed semantics: one jitted ``local_update`` dispatch
+  per sampled client + list-of-pytrees aggregation (``use_engine=False``);
+* ``engine``     — one fused jit per round (vmapped K-client training +
+  ravelled eq.-(4) reduction);
+* ``scan``       — whole rollout in one jit (decide/sample/train/aggregate/
+  queue-update inside ``lax.scan``), no host round-trips between rounds.
+
+Emits ``BENCH_round_engine.json`` with rounds/sec for the trajectory so the
+perf numbers are tracked across PRs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import List, Optional
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core import LROAController, estimate_hyperparams, paper_default_params
+from repro.data import synthetic_image_classification
+from repro.fl import ChannelConfig, ChannelProcess, ClientConfig, FederatedTrainer
+from repro.models import MLPTask
+from repro.optim import constant
+
+
+@dataclasses.dataclass
+class EngineBenchConfig:
+    num_devices: int = 20
+    sample_count: int = 8          # K=8: the acceptance-criteria operating point
+    examples_per_client: int = 64  # equal sizes => one compiled shape per path
+    image_shape: tuple = (8, 8, 1)
+    num_classes: int = 4
+    local_epochs: int = 2
+    batch_size: int = 16
+    rounds: int = 30               # timed rounds (after warmup)
+    warmup_rounds: int = 3
+    lr: float = 0.1
+    seed: int = 0
+
+    @classmethod
+    def smoke(cls) -> "EngineBenchConfig":
+        return cls(num_devices=6, sample_count=2, examples_per_client=32,
+                   image_shape=(4, 4, 1), num_classes=2, batch_size=8,
+                   rounds=3, warmup_rounds=1)
+
+
+def _build_trainer(cfg: EngineBenchConfig, use_engine: bool
+                   ) -> FederatedTrainer:
+    n, m = cfg.num_devices, cfg.examples_per_client
+    x, y = synthetic_image_classification(n * m, cfg.image_shape,
+                                          cfg.num_classes, noise=0.3,
+                                          seed=cfg.seed)
+    client_data = [(x[i * m:(i + 1) * m], y[i * m:(i + 1) * m])
+                   for i in range(n)]
+    params = paper_default_params(
+        num_devices=n, sample_count=cfg.sample_count,
+        local_epochs=cfg.local_epochs,
+        data_sizes=np.full(n, m, np.float32))
+    task = MLPTask(input_dim=int(np.prod(cfg.image_shape)),
+                   num_classes=cfg.num_classes, hidden=32)
+    hp = estimate_hyperparams(params, 0.1, loss_scale=1.5, mu=1.0, nu=1e5)
+    return FederatedTrainer(
+        task, params, LROAController(params, hp),
+        ChannelProcess(n, ChannelConfig(seed=cfg.seed)), client_data,
+        ClientConfig(local_epochs=cfg.local_epochs,
+                     batch_size=cfg.batch_size),
+        constant(cfg.lr), test_data=None, seed=cfg.seed,
+        use_engine=use_engine)
+
+
+def _rounds_per_sec(trainer: FederatedTrainer, cfg: EngineBenchConfig
+                    ) -> float:
+    for t in range(cfg.warmup_rounds):
+        trainer.run_round(t)
+    t0 = time.perf_counter()
+    for t in range(cfg.rounds):
+        trainer.run_round(cfg.warmup_rounds + t)
+    return cfg.rounds / (time.perf_counter() - t0)
+
+
+def _scan_rounds_per_sec(cfg: EngineBenchConfig) -> float:
+    trainer = _build_trainer(cfg, use_engine=True)
+    eng = trainer.engine
+    all_x, all_y, all_steps = eng.stack_all_clients(trainer.client_data)
+    chan = ChannelProcess(cfg.num_devices, ChannelConfig(seed=cfg.seed))
+    h_seq = np.stack([chan.sample() for _ in range(cfg.rounds)])
+    lr_seq = np.full(cfg.rounds, cfg.lr, np.float32)
+    hp = trainer.controller.hp
+
+    def once(seed):
+        p, q, m = eng.run_scan(
+            trainer.task.init(jax.random.PRNGKey(seed)), trainer.params,
+            all_x, all_y, h_seq, lr_seq, jax.random.PRNGKey(seed),
+            num_steps=all_steps, policy="lroa", V=hp.V, lam=hp.lam)
+        jax.block_until_ready(jax.tree_util.tree_leaves(p))
+        return m
+
+    once(0)                                    # compile
+    t0 = time.perf_counter()
+    once(1)
+    return cfg.rounds / (time.perf_counter() - t0)
+
+
+def run(cfg: Optional[EngineBenchConfig] = None, smoke: bool = False,
+        json_path: Optional[str] = None) -> List[str]:
+    if cfg is None:
+        cfg = EngineBenchConfig.smoke() if smoke else EngineBenchConfig()
+    if json_path is None:
+        # smoke numbers must not clobber the tracked full-scale record
+        json_path = ("BENCH_round_engine.smoke.json" if smoke
+                     else "BENCH_round_engine.json")
+    seq = _rounds_per_sec(_build_trainer(cfg, use_engine=False), cfg)
+    eng = _rounds_per_sec(_build_trainer(cfg, use_engine=True), cfg)
+    scan = _scan_rounds_per_sec(cfg)
+    result = {
+        "config": dataclasses.asdict(cfg),
+        "backend": jax.default_backend(),
+        "seq_rounds_per_sec": seq,
+        "engine_rounds_per_sec": eng,
+        "scan_rounds_per_sec": scan,
+        "speedup_engine_vs_seq": eng / seq,
+        "speedup_scan_vs_seq": scan / seq,
+    }
+    with open(json_path, "w") as f:
+        json.dump(result, f, indent=2)
+    tag = f"K{cfg.sample_count}N{cfg.num_devices}"
+    return [
+        csv_row(f"round_engine/sequential/{tag}", 1e6 / seq,
+                f"rounds_per_sec={seq:.2f}"),
+        csv_row(f"round_engine/fused/{tag}", 1e6 / eng,
+                f"rounds_per_sec={eng:.2f};speedup_vs_seq={eng / seq:.2f}"),
+        csv_row(f"round_engine/scan/{tag}", 1e6 / scan,
+                f"rounds_per_sec={scan:.2f};speedup_vs_seq={scan / seq:.2f}"),
+    ]
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -4,10 +4,13 @@ Prints ``name,us_per_call,derived`` CSV:
   * convergence (Figs. 1/2): LROA vs Uni-D/Uni-S/DivFL + % latency saved
   * lambda sweep (Fig. 3), V sweep (Fig. 4), K sweep (Figs. 5/6)
   * kernel microbenches + Algorithm-2 solver latency
+  * round-engine throughput (sequential vs fused vs scan rounds/sec,
+    written to BENCH_round_engine.json)
   * roofline terms per (arch x shape x mesh) from the dry-run dumps
 
 Default scale finishes on CPU in tens of minutes; --paper-scale switches to
-the paper's 120-device / 2000-round configuration.
+the paper's 120-device / 2000-round configuration; --smoke runs every
+section at tiny shapes in well under a minute (CI guard for the perf paths).
 """
 
 from __future__ import annotations
@@ -16,21 +19,40 @@ import argparse
 import sys
 
 
+def smoke_config():
+    from benchmarks.common import BenchConfig
+    return BenchConfig(num_devices=6, rounds=3, sample_count=2,
+                       local_epochs=1, batch_size=8, num_classes=2,
+                       image_shape=(4, 4, 1), examples=240)
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--paper-scale", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes everywhere; exercises every bench path")
     ap.add_argument("--skip", default="",
-                    help="comma list: convergence,sweeps,kernels,roofline")
+                    help="comma list: convergence,sweeps,kernels,"
+                         "round_engine,roofline")
     args = ap.parse_args(argv)
     skip = set(filter(None, args.skip.split(",")))
 
     from benchmarks.common import BenchConfig
-    cfg = BenchConfig.paper_scale() if args.paper_scale else BenchConfig()
+    if args.smoke:
+        cfg = smoke_config()
+    elif args.paper_scale:
+        cfg = BenchConfig.paper_scale()
+    else:
+        cfg = BenchConfig()
 
     print("name,us_per_call,derived")
     if "kernels" not in skip:
         from benchmarks import bench_kernels
-        for row in bench_kernels.run():
+        for row in bench_kernels.run(smoke=args.smoke):
+            print(row, flush=True)
+    if "round_engine" not in skip:
+        from benchmarks import bench_round_engine
+        for row in bench_round_engine.run(smoke=args.smoke):
             print(row, flush=True)
     if "convergence" not in skip:
         from benchmarks import bench_convergence
@@ -38,14 +60,25 @@ def main(argv=None) -> None:
             print(row, flush=True)
     if "sweeps" not in skip:
         from benchmarks import bench_sweeps
-        for row in bench_sweeps.lambda_sweep(cfg):
-            print(row, flush=True)
-        for row in bench_sweeps.v_sweep(cfg):
-            print(row, flush=True)
-        for row in bench_sweeps.k_sweep(cfg):
-            print(row, flush=True)
-        for row in bench_sweeps.heterogeneity_sweep(cfg):
-            print(row, flush=True)
+        if args.smoke:
+            for row in bench_sweeps.lambda_sweep(cfg, mus=(1.0,)):
+                print(row, flush=True)
+            for row in bench_sweeps.v_sweep(cfg, nus=(1e5,), rounds=10):
+                print(row, flush=True)
+            for row in bench_sweeps.k_sweep(cfg, ks=(2,)):
+                print(row, flush=True)
+            for row in bench_sweeps.heterogeneity_sweep(cfg, spreads=(2.0,),
+                                                        rounds=10):
+                print(row, flush=True)
+        else:
+            for row in bench_sweeps.lambda_sweep(cfg):
+                print(row, flush=True)
+            for row in bench_sweeps.v_sweep(cfg):
+                print(row, flush=True)
+            for row in bench_sweeps.k_sweep(cfg):
+                print(row, flush=True)
+            for row in bench_sweeps.heterogeneity_sweep(cfg):
+                print(row, flush=True)
     if "roofline" not in skip:
         from benchmarks import bench_roofline
         for row in bench_roofline.run():

@@ -1,9 +1,16 @@
 """repro.fl — federated learning substrate: Algorithm 1 loop, clients,
-server aggregation (eq. 4), channel environment."""
+server aggregation (eq. 4), channel environment, and the fused
+device-resident round engine (vmapped K-client training + stacked
+aggregation in one jit)."""
 
-from repro.fl.client import (Task, ClientConfig, local_update, flatten_update)
+from repro.fl.client import (Task, ClientConfig, local_update,
+                             batched_local_update, batched_local_sgd,
+                             bucket_num_batches, pad_client_data,
+                             flatten_update)
 from repro.fl.server import (sample_clients, aggregation_weights, aggregate,
-                             aggregate_stacked, fedavg_reference)
+                             aggregate_stacked, aggregate_fused, stack_deltas,
+                             ParamRavel, fedavg_reference)
 from repro.fl.environment import (ChannelConfig, ChannelProcess,
                                   HeterogeneityConfig, heterogeneous_params)
+from repro.fl.round_engine import RoundEngine
 from repro.fl.trainer import FederatedTrainer, FLRunResult, RoundRecord

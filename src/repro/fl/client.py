@@ -3,6 +3,35 @@
 Model-agnostic: a ``Task`` supplies ``init``/``loss_fn``/``metrics`` over
 pytree parameters; the client returns the *update* ``theta^{t,E} - theta^t``
 (Algorithm 1, l.10) so the server can apply the unbiased aggregation (4).
+
+Two execution modes share the same SGD body (``_local_sgd_body``):
+
+* ``local_update``          — one client per call (the legacy / DivFL path);
+* ``batched_local_update``  — the round engine's hot path: all K sampled
+  clients train in ONE jitted computation via ``jax.vmap`` over a stacked
+  ``[K, B, ...]`` client batch, returning stacked deltas ``[K, ...]`` and
+  per-client losses ``[K]``.
+
+Padding / bucketing contract (round engine)
+-------------------------------------------
+``vmap`` requires every client in the batch to share a static data shape, so
+client datasets are padded to a common per-round bucket of ``B`` examples:
+
+* ``B = bucket_num_batches(max_i steps_i) * batch_size`` where
+  ``steps_i = max(n_i // batch_size, 1)`` and the bucket rounds the step
+  count up to the next power of two — the set of compiled shapes per task is
+  O(log(max_n / batch_size)), so recompilation is bounded;
+* each client's data is padded by **cyclic tiling** (example ``j`` of the
+  padded stream is example ``j mod n_i``), so every padded batch contains
+  only real examples and gradients are never polluted by zero rows;
+* each local epoch draws a fresh permutation of the B padded examples, but
+  every client only *applies* its own true ``steps_i = max(n_i // bs, 1)``
+  optimizer steps per epoch: the scan still runs ``B // batch_size``
+  iterations (static shape), and steps beyond ``steps_i`` are masked out of
+  the params/momentum/loss (``num_steps`` argument).  Padding therefore
+  changes only which examples land in a batch, never how many SGD steps a
+  client takes.  When ``n_i == B`` (no padding) the mask is inert and this
+  is *exactly* the sequential semantics of :func:`local_update`.
 """
 
 from __future__ import annotations
@@ -44,11 +73,32 @@ def _num_batches(num_examples: int, batch_size: int) -> int:
     return max(num_examples // batch_size, 1)
 
 
-@partial(jax.jit, static_argnames=("loss_fn", "cfg", "steps_per_epoch"))
-def _local_sgd(loss_fn, params: PyTree, x: jax.Array, y: jax.Array,
-               lr: jax.Array, rng: jax.Array, cfg: ClientConfig,
-               steps_per_epoch: int) -> Tuple[PyTree, jax.Array]:
-    """E epochs of shuffled mini-batch SGD, fully inside one jit."""
+def bucket_num_batches(steps: int) -> int:
+    """Round a per-epoch step count up to the next power of two."""
+    return 1 << max(steps - 1, 0).bit_length()
+
+
+def pad_client_data(x: np.ndarray, y: np.ndarray,
+                    num_examples: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Cyclically tile a client's (x, y) to exactly ``num_examples`` rows."""
+    n = x.shape[0]
+    if n == num_examples:
+        return x, y
+    idx = np.arange(num_examples) % n
+    return x[idx], y[idx]
+
+
+def _local_sgd_body(loss_fn, params: PyTree, x: jax.Array, y: jax.Array,
+                    lr: jax.Array, rng: jax.Array, cfg: ClientConfig,
+                    steps_per_epoch: int,
+                    num_steps: Optional[jax.Array] = None
+                    ) -> Tuple[PyTree, jax.Array]:
+    """E epochs of shuffled mini-batch SGD; pure trace (vmap/jit composable).
+
+    ``num_steps`` (traced scalar, defaults to all ``steps_per_epoch`` steps)
+    masks out optimizer steps beyond a client's true per-epoch step count —
+    the bucketing contract for batched execution over padded data.
+    """
     opt = SGD(momentum=cfg.momentum)
     opt_state = opt.init(params)
     bs = cfg.batch_size
@@ -64,22 +114,40 @@ def _local_sgd(loss_fn, params: PyTree, x: jax.Array, y: jax.Array,
 
         def step(carry, batch):
             params, opt_state = carry
-            bx, by = batch
+            si, bx, by = batch
             loss, grads = jax.value_and_grad(loss_fn)(
                 params, {"x": bx, "y": by})
             if cfg.max_grad_norm > 0:
                 from repro.optim import clip_by_global_norm
                 grads = clip_by_global_norm(grads, cfg.max_grad_norm)
-            updates, opt_state = opt.update(grads, opt_state, params, lr)
-            return (apply_updates(params, updates), opt_state), loss
+            updates, new_opt = opt.update(grads, opt_state, params, lr)
+            new_params = apply_updates(params, updates)
+            if num_steps is not None:
+                keep = si < num_steps
+                new_params = jax.tree_util.tree_map(
+                    lambda a, b: jnp.where(keep, a, b), new_params, params)
+                new_opt = jax.tree_util.tree_map(
+                    lambda a, b: jnp.where(keep, a, b), new_opt, opt_state)
+                loss = jnp.where(keep, loss, 0.0)
+            return (new_params, new_opt), loss
 
         (params, opt_state), losses = jax.lax.scan(
-            step, (params, opt_state), (xs, ys))
-        return (params, opt_state), jnp.mean(losses)
+            step, (params, opt_state),
+            (jnp.arange(steps_per_epoch), xs, ys))
+        if num_steps is None:
+            epoch_loss = jnp.mean(losses)
+        else:
+            epoch_loss = jnp.sum(losses) / num_steps.astype(jnp.float32)
+        return (params, opt_state), epoch_loss
 
     rngs = jax.random.split(rng, cfg.local_epochs)
     (params, _), losses = jax.lax.scan(epoch, (params, opt_state), rngs)
     return params, jnp.mean(losses)
+
+
+_local_sgd = partial(jax.jit, static_argnames=("loss_fn", "cfg",
+                                               "steps_per_epoch"))(
+    _local_sgd_body)
 
 
 def local_update(task: Task, global_params: PyTree, data_x: np.ndarray,
@@ -87,6 +155,11 @@ def local_update(task: Task, global_params: PyTree, data_x: np.ndarray,
                  cfg: ClientConfig) -> Tuple[PyTree, float]:
     """Run E local epochs; return (theta^{t,E} - theta^t, mean loss)."""
     steps = _num_batches(data_x.shape[0], cfg.batch_size)
+    if data_x.shape[0] < steps * cfg.batch_size:
+        # fewer examples than one batch: tile up to a single full batch
+        data_x, data_y = pad_client_data(np.asarray(data_x),
+                                         np.asarray(data_y),
+                                         steps * cfg.batch_size)
     new_params, loss = _local_sgd(task.loss_fn, global_params,
                                   jnp.asarray(data_x), jnp.asarray(data_y),
                                   jnp.asarray(lr, jnp.float32), rng, cfg,
@@ -94,6 +167,61 @@ def local_update(task: Task, global_params: PyTree, data_x: np.ndarray,
     delta = jax.tree_util.tree_map(lambda a, b: a - b, new_params,
                                    global_params)
     return delta, float(loss)
+
+
+def batched_local_sgd(loss_fn, params: PyTree, xs: jax.Array, ys: jax.Array,
+                      lr: jax.Array, rngs: jax.Array, cfg: ClientConfig,
+                      steps_per_epoch: int,
+                      num_steps: Optional[jax.Array] = None
+                      ) -> Tuple[PyTree, jax.Array]:
+    """vmap of the SGD body over a stacked ``[K, B, ...]`` client batch.
+
+    ``num_steps`` (``[K]`` int array or None) carries each client's true
+    per-epoch step count so padded clients don't over-train (see module
+    docstring).  Returns stacked deltas (leaves ``[K, ...]``) and
+    per-client losses ``[K]``.  Pure trace: callers embed it in their own
+    jit (the round engine fuses it with aggregation + queue update).
+    """
+    if num_steps is None:
+        def one(x, y, r):
+            return _local_sgd_body(loss_fn, params, x, y, lr, r, cfg,
+                                   steps_per_epoch)
+        new_params, losses = jax.vmap(one)(xs, ys, rngs)
+    else:
+        def one(x, y, r, s):
+            return _local_sgd_body(loss_fn, params, x, y, lr, r, cfg,
+                                   steps_per_epoch, num_steps=s)
+        new_params, losses = jax.vmap(one)(xs, ys, rngs, num_steps)
+    deltas = jax.tree_util.tree_map(lambda a, p: a - p, new_params, params)
+    return deltas, losses
+
+
+@partial(jax.jit, static_argnames=("loss_fn", "cfg", "steps_per_epoch"))
+def _batched_local_sgd_jit(loss_fn, params, xs, ys, lr, rngs, cfg,
+                           steps_per_epoch, num_steps=None):
+    return batched_local_sgd(loss_fn, params, xs, ys, lr, rngs, cfg,
+                             steps_per_epoch, num_steps)
+
+
+def batched_local_update(task: Task, global_params: PyTree, xs: np.ndarray,
+                         ys: np.ndarray, lr: float, rngs: jax.Array,
+                         cfg: ClientConfig,
+                         num_steps: Optional[np.ndarray] = None
+                         ) -> Tuple[PyTree, jax.Array]:
+    """K clients' local training in one jit over pre-stacked [K, B, ...] data.
+
+    ``xs``/``ys`` must already be bucketed (see module docstring); ``rngs``
+    is a ``[K, 2]`` stack of per-client PRNG keys; ``num_steps`` the
+    clients' true per-epoch step counts (None => every client runs the full
+    bucket).
+    """
+    steps = _num_batches(xs.shape[1], cfg.batch_size)
+    if num_steps is not None:
+        num_steps = jnp.asarray(num_steps, jnp.int32)
+    return _batched_local_sgd_jit(task.loss_fn, global_params,
+                                  jnp.asarray(xs), jnp.asarray(ys),
+                                  jnp.asarray(lr, jnp.float32), rngs, cfg,
+                                  steps, num_steps)
 
 
 def flatten_update(delta: PyTree, proj_dim: int = 256,

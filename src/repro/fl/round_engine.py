@@ -1,0 +1,252 @@
+"""Fused device-resident FL round engine.
+
+The seed trainer dispatched one jitted ``local_update`` per sampled client
+(K jit entries + K host<->device syncs per round) and aggregated with a
+Python loop over coefficients.  The engine collapses a round to
+(approximately) ONE jitted computation:
+
+    stack K clients' bucketed data [K, B, ...]      (host, cached per bucket)
+      -> vmapped E-epoch local SGD                  (client.batched_local_sgd)
+      -> fused eq.-(4) aggregation over the ravelled
+         model vector                               (server.aggregate_fused,
+                                                     Pallas fl_aggregate on TPU)
+    all inside one jit with the params buffer donated off-CPU, so the
+    global model is updated in place instead of copied every round.
+
+Two entry points:
+
+* :meth:`RoundEngine.round_step` — one fused round given pre-stacked client
+  data; the trainer's hot path (controller decisions + sampling stay on the
+  host so stateful controllers and per-round callbacks keep working).
+* :meth:`RoundEngine.run_scan` — benchmark/sweep fast path: an entire
+  multi-round Algorithm-1 rollout (decide -> sample -> train -> aggregate ->
+  queue update) inside a single ``lax.scan``, with channel gains and the lr
+  schedule precomputed as ``[T, ...]`` arrays.  Zero host round-trips
+  between rounds; params and queues are donated through the scan.
+
+Bucketing contract: see ``repro.fl.client`` — client datasets are cyclically
+tiled to a power-of-two number of mini-batches so compiled shapes are
+O(log(max_n / batch_size)) per task.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import queues as vq
+from repro.core import solver as slv
+from repro.core import system_model as sm
+from repro.fl import client as fl_client
+from repro.fl import server as fl_server
+
+PyTree = Any
+
+
+def _default_donate() -> bool:
+    # Buffer donation is a no-op (warning) on CPU; enable it only where the
+    # runtime honours it.
+    return jax.default_backend() != "cpu"
+
+
+class RoundEngine:
+    """Executes FL rounds as fused, device-resident computations.
+
+    Jitted executables are cached per (steps_per_epoch, K, policy) — the
+    bucketing contract keeps that cache small.  The host-side pad cache
+    assumes ``client_data`` is stable across calls (true for the trainer).
+    """
+
+    def __init__(self, task: fl_client.Task, client_cfg: fl_client.ClientConfig,
+                 impl: str = "auto", donate: Optional[bool] = None):
+        self.task = task
+        self.cfg = client_cfg
+        self.impl = impl
+        self.donate = _default_donate() if donate is None else donate
+        self._step_fns: Dict[int, Any] = {}
+        self._scan_fns: Dict[tuple, Any] = {}
+        self._pad_cache: Dict[tuple, tuple] = {}
+
+    # -- host-side data prep ---------------------------------------------
+
+    def bucket_examples(self, sizes: Sequence[int]) -> int:
+        """Bucketed example count B for a set of client dataset sizes."""
+        bs = self.cfg.batch_size
+        steps = max(max(int(s) // bs, 1) for s in sizes)
+        return fl_client.bucket_num_batches(steps) * bs
+
+    def stack_clients(self, client_data: Sequence[tuple],
+                      selected: np.ndarray
+                      ) -> Tuple[np.ndarray, np.ndarray, Optional[np.ndarray]]:
+        """Gather + tile the selected clients' data to [K, B, ...].
+
+        Returns (xs, ys, num_steps) where ``num_steps`` carries each
+        client's true per-epoch step count (None when every client fills
+        the bucket exactly, so the masked path is skipped).
+        """
+        bs = self.cfg.batch_size
+        idxs = [int(i) for i in np.asarray(selected)]
+        sizes = [client_data[i][0].shape[0] for i in idxs]
+        b = self.bucket_examples(sizes)
+        xs, ys = [], []
+        for i in idxs:
+            key = (i, b)
+            if key not in self._pad_cache:
+                x, y = client_data[i]
+                self._pad_cache[key] = fl_client.pad_client_data(
+                    np.asarray(x), np.asarray(y), b)
+            px, py = self._pad_cache[key]
+            xs.append(px)
+            ys.append(py)
+        steps = np.asarray([max(s // bs, 1) for s in sizes], np.int32)
+        num_steps = None if np.all(steps == b // bs) else steps
+        return np.stack(xs), np.stack(ys), num_steps
+
+    def stack_all_clients(self, client_data: Sequence[tuple]
+                          ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Tile every client to one common bucket -> [N, B, ...] (scan path).
+
+        Always returns a concrete ``num_steps`` [N] array (the scan body
+        gathers per-selection step counts from it)."""
+        xs, ys, num_steps = self.stack_clients(
+            client_data, np.arange(len(client_data)))
+        if num_steps is None:
+            bs = self.cfg.batch_size
+            num_steps = np.full(len(client_data), xs.shape[1] // bs,
+                                np.int32)
+        return xs, ys, num_steps
+
+    # -- single fused round ----------------------------------------------
+
+    def _build_step(self, steps: int):
+        loss_fn, cfg, impl = self.task.loss_fn, self.cfg, self.impl
+
+        def step(params, xs, ys, coeffs, lr, rngs, num_steps):
+            deltas, losses = fl_client.batched_local_sgd(
+                loss_fn, params, xs, ys, lr, rngs, cfg, steps,
+                num_steps=num_steps)
+            new_params = fl_server.aggregate_fused(params, deltas, coeffs,
+                                                   impl=impl)
+            return new_params, losses
+
+        donate = (0,) if self.donate else ()
+        return jax.jit(step, donate_argnums=donate)
+
+    def round_step(self, global_params: PyTree, xs: np.ndarray,
+                   ys: np.ndarray, coeffs: np.ndarray, lr: float,
+                   rngs: jax.Array, num_steps: Optional[np.ndarray] = None
+                   ) -> Tuple[PyTree, jax.Array]:
+        """One fused round: K local trainings + eq.-(4) aggregation, one jit.
+
+        ``xs``/``ys``: bucketed [K, B, ...] stacks; ``coeffs``: [K] per-draw
+        aggregation weights; ``rngs``: [K, 2] per-client PRNG keys;
+        ``num_steps``: [K] true per-epoch step counts (None => full bucket).
+        Returns (new global params, per-client losses [K]).  The params
+        argument is donated off-CPU — callers must use the returned pytree.
+        """
+        steps = xs.shape[1] // self.cfg.batch_size
+        fn = self._step_fns.get(steps)
+        if fn is None:
+            fn = self._step_fns[steps] = self._build_step(steps)
+        if num_steps is not None:
+            num_steps = jnp.asarray(num_steps, jnp.int32)
+        return fn(global_params, jnp.asarray(xs), jnp.asarray(ys),
+                  jnp.asarray(coeffs, jnp.float32),
+                  jnp.asarray(lr, jnp.float32), rngs, num_steps)
+
+    # -- multi-round scan fast path --------------------------------------
+
+    def _build_scan(self, steps: int, k: int, policy: str):
+        loss_fn, cfg, impl = self.task.loss_fn, self.cfg, self.impl
+
+        def scan_fn(params, queues, sp, all_x, all_y, all_steps, h_seq,
+                    lr_seq, rng, V, lam):
+            n = sp.num_devices
+            w = sp.data_weights
+
+            def body(carry, inp):
+                params, queues, rng = carry
+                h, lr = inp
+                if policy == "lroa":
+                    dec = slv.solve_p2(sp, h, queues, V, lam)
+                elif policy == "uni_d":
+                    q = jnp.full((n,), 1.0 / n, jnp.float32)
+                    f = slv.solve_f(sp, q, queues, V)
+                    p = slv.solve_p(sp, q, queues, h, V)
+                    dec = slv.ControlDecision(f=f, p=p, q=q)
+                else:
+                    raise ValueError(f"unknown policy {policy!r}")
+                rng, k_sel, k_cli = jax.random.split(rng, 3)
+                selected = jax.random.choice(k_sel, n, (k,), replace=True,
+                                             p=dec.q)
+                xs = jnp.take(all_x, selected, axis=0)
+                ys = jnp.take(all_y, selected, axis=0)
+                rngs = jax.random.split(k_cli, k)
+                deltas, losses = fl_client.batched_local_sgd(
+                    loss_fn, params, xs, ys, lr, rngs, cfg, steps,
+                    num_steps=jnp.take(all_steps, selected))
+                coeffs = w[selected] / (float(k) * dec.q[selected])
+                params = fl_server.aggregate_fused(params, deltas, coeffs,
+                                                   impl=impl)
+                queues = vq.update_queues(
+                    queues, vq.energy_increment(sp, h, dec.p, dec.f, dec.q))
+                t = sm.round_time(sp, h, dec.p, dec.f)
+                e = sm.round_energy(sp, h, dec.p, dec.f)
+                mask = jnp.zeros((n,), jnp.float32).at[selected].set(1.0)
+                out = dict(
+                    loss=jnp.mean(losses),
+                    wall_time=jnp.max(jnp.take(t, selected)),
+                    energy_mean=(jnp.sum(e * mask) /
+                                 jnp.maximum(jnp.sum(mask), 1.0)),
+                    queue_mean=jnp.mean(queues),
+                    q_min=jnp.min(dec.q), q_max=jnp.max(dec.q),
+                    selected=selected,
+                )
+                return (params, queues, rng), out
+
+            (params, queues, _), outs = jax.lax.scan(
+                body, (params, queues, rng), (h_seq, lr_seq))
+            return params, queues, outs
+
+        donate = (0, 1) if self.donate else ()
+        return jax.jit(scan_fn, donate_argnums=donate)
+
+    def run_scan(self, global_params: PyTree, sp: sm.SystemParams,
+                 all_x: np.ndarray, all_y: np.ndarray, h_seq: np.ndarray,
+                 lr_seq: np.ndarray, rng: jax.Array, *,
+                 num_steps: Optional[np.ndarray] = None,
+                 queues: Optional[jax.Array] = None, policy: str = "lroa",
+                 V: float = 0.0, lam: float = 0.0
+                 ) -> Tuple[PyTree, jax.Array, Dict[str, np.ndarray]]:
+        """Run ``h_seq.shape[0]`` full Algorithm-1 rounds in one jitted scan.
+
+        ``all_x``/``all_y``: [N, B, ...] bucketed data for every client
+        (see :meth:`stack_all_clients`, which also yields the per-client
+        ``num_steps`` — None means every client fills its bucket);
+        ``h_seq``: [T, N] channel gains; ``lr_seq``: [T] learning rates.
+        ``policy`` is 'lroa' (Algorithm 2 decisions from V/lam) or 'uni_d'
+        (uniform q, dynamic f/p).  Returns (final params, final queues,
+        per-round metric arrays).
+        """
+        if policy not in ("lroa", "uni_d"):
+            raise ValueError(f"unknown policy {policy!r}")
+        steps = all_x.shape[1] // self.cfg.batch_size
+        key = (steps, sp.sample_count, policy)
+        fn = self._scan_fns.get(key)
+        if fn is None:
+            fn = self._scan_fns[key] = self._build_scan(*key)
+        if queues is None:
+            queues = vq.init_queues(sp.num_devices)
+        if num_steps is None:
+            num_steps = np.full(sp.num_devices, steps, np.int32)
+        params, queues, outs = fn(
+            global_params, queues, sp, jnp.asarray(all_x),
+            jnp.asarray(all_y), jnp.asarray(num_steps, jnp.int32),
+            jnp.asarray(h_seq, jnp.float32),
+            jnp.asarray(lr_seq, jnp.float32), rng,
+            jnp.asarray(V, jnp.float32), jnp.asarray(lam, jnp.float32))
+        metrics = {name: np.asarray(v) for name, v in outs.items()}
+        return params, queues, metrics

@@ -3,8 +3,15 @@ aggregation rule (paper eq. (4), unbiasedness proof in Appendix A).
 
     theta^{t+1} = theta^t + sum_{n in K^t} w_n / (K q_n^t) (theta_n^{t,E} - theta^t)
 
-The aggregation is also exposed as a stacked-update form used by the
-client-parallel `shard_map` path and by the Pallas `fl_aggregate` kernel.
+``aggregate_stacked`` is the canonical form: deltas carry a leading client
+axis ``[K, ...]`` and the weighted reduction lowers to one reduce per leaf.
+The legacy list-of-pytrees :func:`aggregate` stacks and delegates to it.
+
+``aggregate_fused`` is the round engine's device-resident path: the whole
+parameter pytree is ravelled to one flat ``[N]`` vector (``ParamRavel``),
+reduced by the Pallas ``fl_aggregate`` kernel (TPU; pure-jnp XLA reference
+elsewhere), and unravelled back — one fused streaming pass over the model
+instead of a reduce per leaf.
 """
 
 from __future__ import annotations
@@ -34,27 +41,29 @@ def aggregation_weights(selected: np.ndarray, q: np.ndarray, w: np.ndarray,
             (float(sample_count) * np.asarray(q)[sel])).astype(np.float32)
 
 
+def stack_deltas(deltas: Sequence[PyTree]) -> PyTree:
+    """List of K update pytrees -> one pytree with leading [K, ...] leaves."""
+    return jax.tree_util.tree_map(lambda *ds: jnp.stack(ds), *deltas)
+
+
 def aggregate(global_params: PyTree, deltas: Sequence[PyTree],
               coeffs: np.ndarray) -> PyTree:
-    """theta + sum_i coeff_i * delta_i  — eq. (4)."""
-    coeffs = jnp.asarray(coeffs, jnp.float32)
+    """theta + sum_i coeff_i * delta_i  — eq. (4), legacy list API.
 
-    def combine(p, *ds):
-        acc = p.astype(jnp.float32)
-        for c, d in zip(coeffs, ds):
-            acc = acc + c * d.astype(jnp.float32)
-        return acc.astype(p.dtype)
-
-    return jax.tree_util.tree_map(combine, global_params, *deltas)
+    Stacks onto a client axis and shares :func:`aggregate_stacked`'s single
+    reduce per leaf (the unrolled per-coefficient loop is gone).
+    """
+    return aggregate_stacked(global_params, stack_deltas(deltas),
+                             jnp.asarray(coeffs, jnp.float32))
 
 
 def aggregate_stacked(global_params: PyTree, stacked_deltas: PyTree,
                       coeffs: jax.Array) -> PyTree:
-    """Same as :func:`aggregate` for deltas stacked on a leading K axis.
+    """Canonical eq.-(4) reduction over deltas stacked on a leading K axis.
 
-    This is the form the distributed runtime uses: ``stacked_deltas`` leaves
-    have shape ``[K, ...]`` (client axis shardable over the mesh ``data``
-    axis) and the weighted reduction lowers to a single reduce per leaf.
+    ``stacked_deltas`` leaves have shape ``[K, ...]`` (client axis shardable
+    over the mesh ``data`` axis); the weighted reduction lowers to a single
+    reduce per leaf.
     """
     def combine(p, d):
         upd = jnp.tensordot(coeffs.astype(jnp.float32),
@@ -62,6 +71,65 @@ def aggregate_stacked(global_params: PyTree, stacked_deltas: PyTree,
         return (p.astype(jnp.float32) + upd).astype(p.dtype)
 
     return jax.tree_util.tree_map(combine, global_params, stacked_deltas)
+
+
+class ParamRavel:
+    """Ravel/unravel adapter between a params pytree and one flat vector.
+
+    Built once from a template pytree (shapes + dtypes + treedef); ``ravel``
+    concatenates every leaf (cast to f32) into a single ``[N]`` vector so the
+    fused aggregation kernel can stream the whole model in one pass, and
+    ``unravel`` splits/reshapes/casts back.  All methods are pure jnp and
+    trace under jit/vmap; ``ravel_stacked`` maps leaves ``[K, ...]`` to
+    ``[K, N]``.
+    """
+
+    def __init__(self, template: PyTree):
+        leaves, treedef = jax.tree_util.tree_flatten(template)
+        self.treedef = treedef
+        self.shapes = [tuple(l.shape) for l in leaves]
+        self.dtypes = [l.dtype for l in leaves]
+        self.sizes = [int(np.prod(s)) if s else 1 for s in self.shapes]
+        self.offsets = np.cumsum([0] + self.sizes).tolist()
+        self.total = self.offsets[-1]
+
+    def ravel(self, tree: PyTree) -> jax.Array:
+        leaves = jax.tree_util.tree_leaves(tree)
+        return jnp.concatenate(
+            [l.astype(jnp.float32).reshape(-1) for l in leaves])
+
+    def ravel_stacked(self, tree: PyTree) -> jax.Array:
+        leaves = jax.tree_util.tree_leaves(tree)
+        k = leaves[0].shape[0]
+        return jnp.concatenate(
+            [l.astype(jnp.float32).reshape(k, -1) for l in leaves], axis=1)
+
+    def unravel(self, vec: jax.Array) -> PyTree:
+        parts = [vec[self.offsets[i]:self.offsets[i + 1]]
+                 .reshape(self.shapes[i]).astype(self.dtypes[i])
+                 for i in range(len(self.shapes))]
+        return jax.tree_util.tree_unflatten(self.treedef, parts)
+
+
+def aggregate_fused(global_params: PyTree, stacked_deltas: PyTree,
+                    coeffs: jax.Array, impl: str = "auto",
+                    adapter: ParamRavel | None = None) -> PyTree:
+    """eq. (4) through the fused flat-vector kernel (Pallas on TPU).
+
+    Ravels the model to one ``[N]`` vector, applies ``fl_aggregate``
+    (``impl='auto'``: Pallas kernel on TPU, jnp reference on CPU — identical
+    math, XLA-fused), and unravels.  Pure trace: embed in the caller's jit
+    and donate the params buffer there to avoid a full-model copy.
+    """
+    from repro.kernels import fl_aggregate   # late import: avoid cycle
+
+    if adapter is None:
+        adapter = ParamRavel(global_params)
+    theta = adapter.ravel(global_params)
+    deltas = adapter.ravel_stacked(stacked_deltas)
+    new_theta = fl_aggregate(theta, deltas, coeffs.astype(jnp.float32),
+                             impl=impl)
+    return adapter.unravel(new_theta)
 
 
 def fedavg_reference(global_params: PyTree, deltas: Sequence[PyTree],

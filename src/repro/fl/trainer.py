@@ -1,14 +1,26 @@
 """The full FL loop (Algorithm 1) with LROA (or baseline) control, wall-clock
 latency and energy accounting, and periodic evaluation.
 
+How a round executes (dataflow)
+-------------------------------
 Per round t:
-  1. observe channel gains h^t (ChannelProcess);
-  2. controller decides (f^t, p^t, q^t) — Algorithm 2 for LROA;
-  3. sample K^t (K draws with replacement by q^t; DivFL selects
-     deterministically);
-  4. selected clients run E local epochs (client.local_update);
-  5. server aggregates with the unbiased rule (4);
-  6. queues update; latency += max_{n in K^t} T_n^t (eq. 10), energy accrues.
+  1. observe channel gains h^t (ChannelProcess)                      [host]
+  2. controller decides (f^t, p^t, q^t) — Algorithm 2 for LROA       [jit]
+  3. sample K^t draws with replacement by q^t (DivFL selects
+     deterministically)                                              [host]
+  4. + 5. the fused fast path (``RoundEngine.round_step``): the K
+     selected clients' bucketed data is stacked to [K, B, ...] and a
+     SINGLE jitted computation runs all K local trainings (vmapped
+     E-epoch SGD) and the unbiased aggregation (4) over the ravelled
+     model vector (Pallas ``fl_aggregate`` on TPU).  One dispatch +
+     one loss sync per round instead of ~K jit entries + K syncs.
+  6. queues update; latency += max_{n in K^t} T_n^t (eq. 10), energy
+     accrues                                                         [host]
+
+DivFL keeps the sequential slow path (one ``local_update`` per client):
+its controller must observe each client's update vector between
+trainings.  ``use_engine=False`` forces the slow path everywhere — the
+equivalence tests pin the two paths against each other.
 """
 
 from __future__ import annotations
@@ -27,6 +39,7 @@ from repro.core.controller import realized_round_time
 from repro.fl import client as fl_client
 from repro.fl import server as fl_server
 from repro.fl.environment import ChannelProcess
+from repro.fl.round_engine import RoundEngine
 
 PyTree = Any
 
@@ -69,7 +82,8 @@ class FederatedTrainer:
                  client_cfg: fl_client.ClientConfig,
                  lr_schedule: Callable[[jnp.ndarray], jnp.ndarray],
                  test_data: Optional[tuple] = None,
-                 eval_every: int = 10, seed: int = 0):
+                 eval_every: int = 10, seed: int = 0,
+                 use_engine: bool = True):
         assert len(client_data) == params.num_devices
         self.task = task
         self.params = params
@@ -78,12 +92,20 @@ class FederatedTrainer:
         self.client_data = client_data
         self.client_cfg = client_cfg
         self.lr_schedule = lr_schedule
-        self.test_data = test_data
+        # Pre-convert the test set to device arrays once — evaluate() used to
+        # re-upload the full test set on every call.
+        self.test_data = (None if test_data is None else
+                          (jnp.asarray(test_data[0]),
+                           jnp.asarray(test_data[1])))
         self.eval_every = eval_every
+        self.use_engine = use_engine
+        self.engine = RoundEngine(task, client_cfg)
         self._np_rng = np.random.default_rng(seed)
         self._jax_rng = jax.random.PRNGKey(seed)
         self.global_params = task.init(jax.random.PRNGKey(seed + 1))
         self.w = np.asarray(params.data_weights)
+        # run_round must work standalone (not only via run()).
+        self._records: List[RoundRecord] = []
 
     # -- evaluation -------------------------------------------------------
 
@@ -91,11 +113,56 @@ class FederatedTrainer:
         if self.test_data is None:
             return float("nan")
         x, y = self.test_data
-        m = self.task.metrics(self.global_params,
-                              {"x": jnp.asarray(x), "y": jnp.asarray(y)})
+        m = self.task.metrics(self.global_params, {"x": x, "y": y})
         return float(m["accuracy"])
 
     # -- one round --------------------------------------------------------
+
+    def _client_rngs(self, count: int) -> jax.Array:
+        """Split the trainer key ``count`` times (same draws as the
+        sequential per-client loop, so both paths see identical client
+        randomness)."""
+        subs = []
+        for _ in range(count):
+            self._jax_rng, sub = jax.random.split(self._jax_rng)
+            subs.append(sub)
+        return jnp.stack(subs)
+
+    def _train_fused(self, selected: np.ndarray, coeffs: np.ndarray,
+                     lr: float) -> List[float]:
+        """Fast path: one fused jit for all K local trainings + eq. (4)."""
+        xs, ys, num_steps = self.engine.stack_clients(self.client_data,
+                                                      selected)
+        rngs = self._client_rngs(len(selected))
+        self.global_params, losses = self.engine.round_step(
+            self.global_params, xs, ys, coeffs, lr, rngs,
+            num_steps=num_steps)
+        return [float(l) for l in np.asarray(losses)]
+
+    def _train_sequential(self, selected: np.ndarray, coeffs: np.ndarray,
+                          lr: float) -> List[float]:
+        """Slow path: per-client dispatch (DivFL / reference semantics)."""
+        deltas, losses = [], []
+        for idx in selected:
+            x, y = self.client_data[int(idx)]
+            self._jax_rng, sub = jax.random.split(self._jax_rng)
+            delta, loss = fl_client.local_update(
+                self.task, self.global_params, x, y, lr, sub, self.client_cfg)
+            deltas.append(delta)
+            losses.append(loss)
+            if isinstance(self.controller, DivFLController):
+                self.controller.observe_updates(
+                    np.asarray([idx]),
+                    fl_client.flatten_update(delta)[None, :])
+        if isinstance(self.controller, DivFLController):
+            # DivFL approximates the full update from the diverse subset:
+            # plain data-weighted averaging over the chosen clients.
+            self.global_params = fl_server.fedavg_reference(
+                self.global_params, deltas, self.w[np.asarray(selected)])
+        else:
+            self.global_params = fl_server.aggregate(
+                self.global_params, deltas, coeffs)
+        return losses
 
     def run_round(self, t: int) -> RoundRecord:
         h = jnp.asarray(self.channel.sample())
@@ -109,29 +176,14 @@ class FederatedTrainer:
                                                 self.params.sample_count)
 
         lr = float(self.lr_schedule(jnp.asarray(t)))
-        deltas, losses = [], []
-        for idx in selected:
-            x, y = self.client_data[int(idx)]
-            self._jax_rng, sub = jax.random.split(self._jax_rng)
-            delta, loss = fl_client.local_update(
-                self.task, self.global_params, x, y, lr, sub, self.client_cfg)
-            deltas.append(delta)
-            losses.append(loss)
-            if isinstance(self.controller, DivFLController):
-                self.controller.observe_updates(
-                    np.asarray([idx]),
-                    fl_client.flatten_update(delta)[None, :])
-
         coeffs = fl_server.aggregation_weights(
             selected, q, self.w, self.params.sample_count)
-        if isinstance(self.controller, DivFLController):
-            # DivFL approximates the full update from the diverse subset:
-            # plain data-weighted averaging over the chosen clients.
-            self.global_params = fl_server.fedavg_reference(
-                self.global_params, deltas, self.w[np.asarray(selected)])
+        fast = self.use_engine and not isinstance(self.controller,
+                                                  DivFLController)
+        if fast:
+            losses = self._train_fused(selected, coeffs, lr)
         else:
-            self.global_params = fl_server.aggregate(
-                self.global_params, deltas, coeffs)
+            losses = self._train_sequential(selected, coeffs, lr)
 
         wall = realized_round_time(self.params, h, decision,
                                    np.asarray(selected))
@@ -156,7 +208,7 @@ class FederatedTrainer:
     # -- full run ---------------------------------------------------------
 
     def run(self, num_rounds: int, verbose: bool = False) -> FLRunResult:
-        self._records: List[RoundRecord] = []
+        self._records = []
         for t in range(num_rounds):
             rec = self.run_round(t)
             if verbose and (t % max(num_rounds // 10, 1) == 0):

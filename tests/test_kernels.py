@@ -79,7 +79,10 @@ def test_ssd_chunk_sweep(dims, dtype):
 
 
 @pytest.mark.parametrize("n,k,block", [(1000, 2, 256), (4096, 6, 512),
-                                       (333, 1, 128)])
+                                       (333, 1, 128),
+                                       (65_537, 3, 65_536),  # default block,
+                                                             # non-aligned N
+                                       (129, 1, 256)])       # K=1, N < block
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_fl_aggregate_sweep(n, k, block, dtype):
     rng = jax.random.PRNGKey(n * 7 + k)
@@ -93,6 +96,32 @@ def test_fl_aggregate_sweep(n, k, block, dtype):
     np.testing.assert_allclose(
         np.asarray(out, np.float32), np.asarray(expected, np.float32),
         atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_fl_aggregate_pytree_adapter_interpret():
+    """The ravel adapter + Pallas kernel body (interpret mode) serve a real
+    nested params pytree and agree with the per-leaf stacked reduction."""
+    from repro.fl import ParamRavel, aggregate_stacked
+    from repro.kernels.fl_aggregate import fl_aggregate_tpu
+    key = jax.random.PRNGKey(5)
+    params = {"layer": {"w": jax.random.normal(key, (13, 7)),
+                        "b": jnp.zeros((7,))},
+              "head": jax.random.normal(jax.random.fold_in(key, 1), (7, 3))}
+    k = 3
+    deltas = jax.tree_util.tree_map(
+        lambda p: jax.random.normal(jax.random.fold_in(key, 2),
+                                    (k,) + p.shape), params)
+    coeffs = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 3),
+                                              (k,)))
+    adapter = ParamRavel(params)
+    out_vec = fl_aggregate_tpu(adapter.ravel(params),
+                               adapter.ravel_stacked(deltas), coeffs,
+                               block=64, interpret=True)
+    out = adapter.unravel(out_vec)
+    expected = aggregate_stacked(params, deltas, coeffs)
+    for a, b in zip(jax.tree_util.tree_leaves(out),
+                    jax.tree_util.tree_leaves(expected)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
 
 
 def test_flash_jnp_scan_matches_kernel():

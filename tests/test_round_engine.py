@@ -1,0 +1,274 @@
+"""Round-engine behaviour: the fused vmapped-K path reproduces the seed
+sequential path, the ravel adapter round-trips real pytrees, run_round works
+standalone (the ``_records`` regression), and the --smoke bench mode stays
+green so the perf paths can't silently rot."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (LROAController, UniformDynamicController,
+                        estimate_hyperparams, paper_default_params)
+from repro.data import synthetic_image_classification
+from repro.fl import (ChannelConfig, ChannelProcess, ClientConfig,
+                      FederatedTrainer, ParamRavel, RoundEngine, aggregate,
+                      aggregate_fused, aggregate_stacked, bucket_num_batches,
+                      pad_client_data)
+from repro.models import MLPTask
+from repro.optim import constant
+
+N_DEVICES = 8
+PER_CLIENT = 64          # 64 = 4 batches of 16 -> power-of-two bucket, no pad
+
+
+def _make_trainer(use_engine, controller_cls=LROAController, seed=0,
+                  client_sizes=None, batch_size=16, with_test=False):
+    sizes = (np.full(N_DEVICES, PER_CLIENT, np.int64)
+             if client_sizes is None else np.asarray(client_sizes))
+    total = int(sizes.sum())
+    x, y = synthetic_image_classification(total + 100, (8, 8, 1),
+                                          num_classes=4, noise=0.3, seed=3)
+    offs = np.cumsum(np.concatenate([[0], sizes]))
+    client_data = [(x[offs[i]:offs[i + 1]], y[offs[i]:offs[i + 1]])
+                   for i in range(len(sizes))]
+    params = paper_default_params(num_devices=len(sizes),
+                                  data_sizes=sizes.astype(np.float32))
+    task = MLPTask(input_dim=64, num_classes=4, hidden=32)
+    hp = estimate_hyperparams(params, 0.1, loss_scale=1.5, mu=1.0, nu=1e5)
+    test = (x[total:], y[total:]) if with_test else None
+    return FederatedTrainer(
+        task, params, controller_cls(params, hp),
+        ChannelProcess(len(sizes), ChannelConfig(seed=seed)), client_data,
+        ClientConfig(local_epochs=2, batch_size=batch_size), constant(0.1),
+        test_data=test, eval_every=100, seed=seed, use_engine=use_engine)
+
+
+# -- tentpole: fused path == sequential seed path -------------------------
+
+def test_engine_matches_sequential_e2e():
+    """Same seed, equal-size clients (zero padding): the fused vmapped round
+    must reproduce the sequential per-client path up to f32 reduction
+    order."""
+    t_fast = _make_trainer(use_engine=True)
+    t_slow = _make_trainer(use_engine=False)
+    r_fast = t_fast.run(4)
+    r_slow = t_slow.run(4)
+    for a, b in zip(r_fast.records, r_slow.records):
+        assert a.selected == b.selected
+        assert a.mean_loss == pytest.approx(b.mean_loss, abs=1e-5)
+    for p, q in zip(jax.tree_util.tree_leaves(r_fast.params),
+                    jax.tree_util.tree_leaves(r_slow.params)):
+        np.testing.assert_allclose(np.asarray(p), np.asarray(q), atol=2e-5)
+
+
+def test_engine_handles_ragged_and_tiny_clients():
+    """Unequal sizes (incl. n < batch_size) go through the tiling/bucketing
+    contract; the fused path must train without recompiling per client."""
+    sizes = [10, 33, 64, 100, 17, 48, 80, 12]
+    trainer = _make_trainer(use_engine=True, client_sizes=sizes)
+    recs = [trainer.run_round(t) for t in range(3)]
+    assert all(np.isfinite(r.mean_loss) for r in recs)
+    # power-of-two bucketing: at most one compiled step per round, and every
+    # cached entry is keyed by a power-of-two steps_per_epoch
+    assert len(trainer.engine._step_fns) <= 3
+    assert all(s & (s - 1) == 0 for s in trainer.engine._step_fns)
+
+
+def test_run_scan_full_rollout():
+    trainer = _make_trainer(use_engine=True)
+    eng = trainer.engine
+    all_x, all_y, all_steps = eng.stack_all_clients(trainer.client_data)
+    assert all_x.shape[0] == N_DEVICES
+    assert all_steps.shape == (N_DEVICES,)
+    rounds = 5
+    chan = ChannelProcess(N_DEVICES, ChannelConfig(seed=1))
+    h_seq = np.stack([chan.sample() for _ in range(rounds)])
+    hp = trainer.controller.hp
+    params0 = trainer.task.init(jax.random.PRNGKey(7))
+    params, queues, m = eng.run_scan(
+        params0, trainer.params, all_x, all_y, h_seq,
+        np.full(rounds, 0.1, np.float32), jax.random.PRNGKey(8),
+        num_steps=all_steps, policy="lroa", V=hp.V, lam=hp.lam)
+    assert m["loss"].shape == (rounds,)
+    assert m["selected"].shape == (rounds, trainer.params.sample_count)
+    assert np.all(np.isfinite(m["loss"]))
+    assert np.all(m["wall_time"] > 0)
+    # training happened: params moved and loss trended down
+    moved = max(float(jnp.max(jnp.abs(a - b))) for a, b in
+                zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(params0)))
+    assert moved > 0
+    assert m["loss"][-1] < m["loss"][0]
+
+
+# -- satellite: _records regression ---------------------------------------
+
+def test_run_round_standalone():
+    """run_round must work without run() (seed bug: _records only existed
+    after run())."""
+    trainer = _make_trainer(use_engine=True,
+                            controller_cls=UniformDynamicController)
+    rec = trainer.run_round(0)
+    assert rec.round == 0 and rec.wall_time > 0
+    assert trainer._records == [rec]
+
+
+def test_evaluate_uses_device_cached_test_set():
+    trainer = _make_trainer(use_engine=True, with_test=True)
+    assert isinstance(trainer.test_data[0], jax.Array)
+    acc = trainer.evaluate()
+    assert 0.0 <= acc <= 1.0
+
+
+# -- satellite: legacy aggregate shares the stacked fast path -------------
+
+def _random_tree(key):
+    def leaf(i, shape):
+        return jax.random.normal(jax.random.fold_in(key, i), shape)
+    return {"w1": leaf(0, (9, 5)), "b1": leaf(1, (5,)),
+            "nested": {"w2": leaf(2, (5, 3)), "b2": leaf(3, (3,))}}
+
+
+def test_aggregate_legacy_matches_stacked_and_fused():
+    key = jax.random.PRNGKey(0)
+    k = 5
+    params = _random_tree(key)
+    deltas = [_random_tree(jax.random.fold_in(key, 10 + i)) for i in range(k)]
+    coeffs = np.asarray([0.3, 0.1, 0.25, 0.2, 0.15], np.float32)
+    out_legacy = aggregate(params, deltas, coeffs)
+    stacked = jax.tree_util.tree_map(lambda *ds: jnp.stack(ds), *deltas)
+    out_stacked = aggregate_stacked(params, stacked, jnp.asarray(coeffs))
+    out_fused = aggregate_fused(params, stacked, jnp.asarray(coeffs))
+    for a, b, c in zip(jax.tree_util.tree_leaves(out_legacy),
+                       jax.tree_util.tree_leaves(out_stacked),
+                       jax.tree_util.tree_leaves(out_fused)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=1e-6)
+
+
+# -- satellite: ravel adapter ---------------------------------------------
+
+def test_param_ravel_roundtrip_nested_mixed_dtypes():
+    template = {
+        "emb": jnp.arange(12, dtype=jnp.bfloat16).reshape(3, 4),
+        "blocks": [
+            {"w": jnp.ones((2, 3, 2), jnp.float32),
+             "b": jnp.zeros((2,), jnp.float32)},
+            {"w": jnp.full((5,), 2.0, jnp.bfloat16),
+             "b": jnp.asarray(7.0, jnp.float32)},   # 0-d leaf
+        ],
+    }
+    adapter = ParamRavel(template)
+    vec = adapter.ravel(template)
+    assert vec.shape == (adapter.total,) == (12 + 12 + 2 + 5 + 1,)
+    back = adapter.unravel(vec)
+    assert (jax.tree_util.tree_structure(back) ==
+            jax.tree_util.tree_structure(template))
+    for a, b in zip(jax.tree_util.tree_leaves(back),
+                    jax.tree_util.tree_leaves(template)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+
+
+def test_param_ravel_stacked():
+    template = {"w": jnp.zeros((3, 2)), "b": jnp.zeros((4,))}
+    adapter = ParamRavel(template)
+    stacked = {"w": jnp.arange(12, dtype=jnp.float32).reshape(2, 3, 2),
+               "b": jnp.arange(8, dtype=jnp.float32).reshape(2, 4)}
+    flat = adapter.ravel_stacked(stacked)
+    assert flat.shape == (2, 10)
+    # leaf order follows tree_flatten (dict keys sorted: "b" before "w")
+    np.testing.assert_allclose(np.asarray(flat[0]),
+                               [0, 1, 2, 3, 0, 1, 2, 3, 4, 5])
+    np.testing.assert_allclose(np.asarray(flat[1]),
+                               [4, 5, 6, 7, 6, 7, 8, 9, 10, 11])
+
+
+# -- bucketing contract ----------------------------------------------------
+
+def _sgd_setup(n_examples):
+    task = MLPTask(input_dim=16, num_classes=3, hidden=8)
+    params = task.init(jax.random.PRNGKey(0))
+    x = np.random.default_rng(0).normal(
+        size=(n_examples, 4, 4, 1)).astype(np.float32)
+    y = np.random.default_rng(1).integers(0, 3, n_examples)
+    return task, params, x, y
+
+
+def test_num_steps_full_bucket_is_inert():
+    """num_steps == steps_per_epoch must reproduce the unmasked path
+    bitwise."""
+    from repro.fl.client import batched_local_sgd
+    task, params, x, y = _sgd_setup(32)
+    cfg = ClientConfig(local_epochs=2, batch_size=8)
+    xs, ys = x[None], y[None]
+    rngs = jax.random.PRNGKey(3)[None]
+    d_plain, l_plain = batched_local_sgd(task.loss_fn, params, xs, ys,
+                                         jnp.float32(0.1), rngs, cfg, 4)
+    d_mask, l_mask = batched_local_sgd(task.loss_fn, params, xs, ys,
+                                       jnp.float32(0.1), rngs, cfg, 4,
+                                       num_steps=jnp.asarray([4]))
+    for a, b in zip(jax.tree_util.tree_leaves(d_plain),
+                    jax.tree_util.tree_leaves(d_mask)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(l_plain), np.asarray(l_mask))
+
+
+def test_num_steps_masks_to_true_step_count():
+    """A padded client in a large bucket takes exactly its own number of
+    SGD steps: masking steps 2..4 of a 4-step bucket equals running a
+    1-step epoch on the same permuted stream."""
+    from repro.fl.client import _local_sgd_body, batched_local_sgd
+    task, params, x, y = _sgd_setup(32)
+    cfg = ClientConfig(local_epochs=2, batch_size=8)
+    rng = jax.random.PRNGKey(9)
+    d_mask, l_mask = batched_local_sgd(task.loss_fn, params, x[None],
+                                       y[None], jnp.float32(0.1),
+                                       rng[None], cfg, 4,
+                                       num_steps=jnp.asarray([1]))
+    # reference: same data/rng, epochs truncated to 1 step (the first
+    # batch of each epoch's permutation is identical by construction)
+    p_ref, l_ref = _local_sgd_body(task.loss_fn, params, jnp.asarray(x),
+                                   jnp.asarray(y), jnp.float32(0.1), rng,
+                                   cfg, 1)
+    d_ref = jax.tree_util.tree_map(lambda a, b: a - b, p_ref, params)
+    for a, b in zip(jax.tree_util.tree_leaves(d_mask),
+                    jax.tree_util.tree_leaves(d_ref)):
+        np.testing.assert_allclose(np.asarray(a)[0], np.asarray(b),
+                                   atol=1e-6)
+    assert float(l_mask[0]) == pytest.approx(float(l_ref), abs=1e-6)
+
+def test_bucket_num_batches_power_of_two():
+    assert [bucket_num_batches(s) for s in (1, 2, 3, 4, 5, 9)] == \
+        [1, 2, 4, 4, 8, 16]
+
+
+def test_pad_client_data_tiles_cyclically():
+    x = np.arange(6).reshape(3, 2)
+    y = np.asarray([0, 1, 2])
+    px, py = pad_client_data(x, y, 8)
+    assert px.shape == (8, 2) and py.shape == (8,)
+    np.testing.assert_array_equal(py, [0, 1, 2, 0, 1, 2, 0, 1])
+    same_x, same_y = pad_client_data(x, y, 3)
+    assert same_x is x and same_y is y
+
+
+# -- CI guard: --smoke bench ----------------------------------------------
+
+def test_bench_smoke(tmp_path, monkeypatch, capsys):
+    monkeypatch.chdir(tmp_path)
+    from benchmarks.run import main
+    main(["--smoke", "--skip", "convergence,sweeps,roofline"])
+    out = capsys.readouterr().out
+    assert "kernels/fl_aggregate" in out
+    assert "round_engine/fused" in out
+    # smoke mode writes its own artifact so the tracked full-scale
+    # BENCH_round_engine.json is never clobbered by tiny-shape numbers
+    bench = json.loads(
+        (tmp_path / "BENCH_round_engine.smoke.json").read_text())
+    assert bench["engine_rounds_per_sec"] > 0
+    assert bench["speedup_scan_vs_seq"] > 0

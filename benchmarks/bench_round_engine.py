@@ -91,7 +91,8 @@ def _rounds_per_sec(trainer: FederatedTrainer, cfg: EngineBenchConfig
 def _scan_rounds_per_sec(cfg: EngineBenchConfig) -> float:
     trainer = _build_trainer(cfg, use_engine=True)
     eng = trainer.engine
-    all_x, all_y, all_steps = eng.stack_all_clients(trainer.client_data)
+    all_x, all_y, all_steps, all_sizes = eng.stack_all_clients(
+        trainer.client_data)
     chan = ChannelProcess(cfg.num_devices, ChannelConfig(seed=cfg.seed))
     h_seq = np.stack([chan.sample() for _ in range(cfg.rounds)])
     lr_seq = np.full(cfg.rounds, cfg.lr, np.float32)
@@ -101,7 +102,8 @@ def _scan_rounds_per_sec(cfg: EngineBenchConfig) -> float:
         p, q, m = eng.run_scan(
             trainer.task.init(jax.random.PRNGKey(seed)), trainer.params,
             all_x, all_y, h_seq, lr_seq, jax.random.PRNGKey(seed),
-            num_steps=all_steps, policy="lroa", V=hp.V, lam=hp.lam)
+            num_steps=all_steps, num_examples=all_sizes, policy="lroa",
+            V=hp.V, lam=hp.lam)
         jax.block_until_ready(jax.tree_util.tree_leaves(p))
         return m
 

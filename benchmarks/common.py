@@ -70,8 +70,10 @@ def build_testbed(cfg: BenchConfig):
     return params, task, client_data, (xte, yte)
 
 
-def run_controller(name: str, cfg: BenchConfig, *, mu=None, nu=None,
-                   sample_count=None, verbose=False):
+def make_trainer(name: str, cfg: BenchConfig, *, mu=None, nu=None,
+                 sample_count=None) -> FederatedTrainer:
+    """Build the testbed + trainer without running it (lets benchmarks
+    separate setup/compile cost from steady-state round throughput)."""
     if sample_count is not None:
         cfg = dataclasses.replace(cfg, sample_count=sample_count)
     params, task, client_data, test = build_testbed(cfg)
@@ -79,7 +81,7 @@ def run_controller(name: str, cfg: BenchConfig, *, mu=None, nu=None,
                               mu=mu if mu is not None else cfg.mu,
                               nu=nu if nu is not None else cfg.nu)
     controller = CONTROLLERS[name](params, hp)
-    trainer = FederatedTrainer(
+    return FederatedTrainer(
         task, params, controller,
         ChannelProcess(cfg.num_devices, ChannelConfig(seed=cfg.seed)),
         client_data,
@@ -87,6 +89,12 @@ def run_controller(name: str, cfg: BenchConfig, *, mu=None, nu=None,
                      batch_size=cfg.batch_size),
         paper_step_decay(cfg.lr, cfg.rounds),
         test_data=test, eval_every=max(cfg.rounds // 6, 1), seed=cfg.seed)
+
+
+def run_controller(name: str, cfg: BenchConfig, *, mu=None, nu=None,
+                   sample_count=None, verbose=False):
+    trainer = make_trainer(name, cfg, mu=mu, nu=nu,
+                           sample_count=sample_count)
     return trainer.run(cfg.rounds, verbose=verbose)
 
 

@@ -60,24 +60,15 @@ def main(argv=None) -> None:
             print(row, flush=True)
     if "sweeps" not in skip:
         from benchmarks import bench_sweeps
-        if args.smoke:
-            for row in bench_sweeps.lambda_sweep(cfg, mus=(1.0,)):
-                print(row, flush=True)
-            for row in bench_sweeps.v_sweep(cfg, nus=(1e5,), rounds=10):
-                print(row, flush=True)
-            for row in bench_sweeps.k_sweep(cfg, ks=(2,)):
-                print(row, flush=True)
-            for row in bench_sweeps.heterogeneity_sweep(cfg, spreads=(2.0,),
-                                                        rounds=10):
-                print(row, flush=True)
-        else:
-            for row in bench_sweeps.lambda_sweep(cfg):
-                print(row, flush=True)
-            for row in bench_sweeps.v_sweep(cfg):
-                print(row, flush=True)
-            for row in bench_sweeps.k_sweep(cfg):
-                print(row, flush=True)
-            for row in bench_sweeps.heterogeneity_sweep(cfg):
+        sweeps = [
+            (bench_sweeps.lambda_sweep, dict(mus=(1.0,))),
+            (bench_sweeps.v_sweep, dict(nus=(1e5,), rounds=10)),
+            (bench_sweeps.k_sweep, dict(ks=(2,))),
+            (bench_sweeps.heterogeneity_sweep,
+             dict(spreads=(2.0,), rounds=10)),
+        ]
+        for fn, smoke_kwargs in sweeps:
+            for row in fn(cfg, **(smoke_kwargs if args.smoke else {})):
                 print(row, flush=True)
     if "roofline" not in skip:
         from benchmarks import bench_roofline

@@ -4,9 +4,8 @@ device-resident round engine (vmapped K-client training + stacked
 aggregation in one jit)."""
 
 from repro.fl.client import (Task, ClientConfig, local_update,
-                             batched_local_update, batched_local_sgd,
-                             bucket_num_batches, pad_client_data,
-                             flatten_update)
+                             batched_local_sgd, bucket_num_batches,
+                             pad_client_data, flatten_update)
 from repro.fl.server import (sample_clients, aggregation_weights, aggregate,
                              aggregate_stacked, aggregate_fused, stack_deltas,
                              ParamRavel, fedavg_reference)

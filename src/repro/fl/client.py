@@ -6,32 +6,45 @@ pytree parameters; the client returns the *update* ``theta^{t,E} - theta^t``
 
 Two execution modes share the same SGD body (``_local_sgd_body``):
 
-* ``local_update``          — one client per call (the legacy / DivFL path);
-* ``batched_local_update``  — the round engine's hot path: all K sampled
-  clients train in ONE jitted computation via ``jax.vmap`` over a stacked
+* ``local_update``       — one client per call (the legacy / DivFL path);
+* ``batched_local_sgd``  — the round engine's hot path: all K sampled
+  clients train in ONE computation via ``jax.vmap`` over a stacked
   ``[K, B, ...]`` client batch, returning stacked deltas ``[K, ...]`` and
-  per-client losses ``[K]``.
+  per-client losses ``[K]``; a pure trace the engine fuses into its own
+  jit alongside aggregation and the queue update.
 
 Padding / bucketing contract (round engine)
 -------------------------------------------
 ``vmap`` requires every client in the batch to share a static data shape, so
 client datasets are padded to a common per-round bucket of ``B`` examples:
 
-* ``B = bucket_num_batches(max_i steps_i) * batch_size`` where
-  ``steps_i = max(n_i // batch_size, 1)`` and the bucket rounds the step
-  count up to the next power of two — the set of compiled shapes per task is
+* ``B = bucket_num_batches(max_i ceil(n_i / batch_size)) * batch_size`` —
+  the bucket is sized from the *ceil* step count rounded up to the next
+  power of two, so ``B >= n_i`` always holds (the tiled stream contains
+  every example) and the set of compiled shapes per task is
   O(log(max_n / batch_size)), so recompilation is bounded;
 * each client's data is padded by **cyclic tiling** (example ``j`` of the
   padded stream is example ``j mod n_i``), so every padded batch contains
   only real examples and gradients are never polluted by zero rows;
-* each local epoch draws a fresh permutation of the B padded examples, but
-  every client only *applies* its own true ``steps_i = max(n_i // bs, 1)``
+* each local epoch samples **without replacement from the client's true
+  ``n_i`` examples only**: when ``num_examples`` is given, padded rows
+  (``j >= n_i``) receive a sentinel sort key and land at the end of the
+  epoch's ordering, and for ``n_i >= bs`` the applied step count satisfies
+  ``steps_i * bs <= n_i`` so they are never consumed — every example has
+  equal inclusion probability, exactly the sequential path's statistics
+  (cyclic duplicates are never over-weighted).  When ``n_i < bs`` the one
+  applied batch must hold ``bs`` rows, so it consumes padded rows
+  ``n_i .. bs-1`` (in index order — the tiled duplicates of examples
+  ``0 .. bs-n_i-1``): the *same* deterministic duplicate multiset the
+  sequential path produces when :func:`local_update` tiles ``n_i`` up to
+  one full batch, so the two paths still agree;
+* every client only *applies* its own true ``steps_i = max(n_i // bs, 1)``
   optimizer steps per epoch: the scan still runs ``B // batch_size``
   iterations (static shape), and steps beyond ``steps_i`` are masked out of
   the params/momentum/loss (``num_steps`` argument).  Padding therefore
-  changes only which examples land in a batch, never how many SGD steps a
-  client takes.  When ``n_i == B`` (no padding) the mask is inert and this
-  is *exactly* the sequential semantics of :func:`local_update`.
+  changes neither which examples a client trains on nor how many SGD steps
+  it takes.  When ``n_i == B`` (no padding; ``num_steps``/``num_examples``
+  None) this is *exactly* the sequential semantics of :func:`local_update`.
 """
 
 from __future__ import annotations
@@ -91,13 +104,17 @@ def pad_client_data(x: np.ndarray, y: np.ndarray,
 def _local_sgd_body(loss_fn, params: PyTree, x: jax.Array, y: jax.Array,
                     lr: jax.Array, rng: jax.Array, cfg: ClientConfig,
                     steps_per_epoch: int,
-                    num_steps: Optional[jax.Array] = None
+                    num_steps: Optional[jax.Array] = None,
+                    num_examples: Optional[jax.Array] = None
                     ) -> Tuple[PyTree, jax.Array]:
     """E epochs of shuffled mini-batch SGD; pure trace (vmap/jit composable).
 
     ``num_steps`` (traced scalar, defaults to all ``steps_per_epoch`` steps)
-    masks out optimizer steps beyond a client's true per-epoch step count —
-    the bucketing contract for batched execution over padded data.
+    masks out optimizer steps beyond a client's true per-epoch step count;
+    ``num_examples`` (traced scalar) restricts each epoch's sampling to the
+    first ``num_examples`` rows — the client's true dataset inside a padded
+    bucket — so cyclic-tiling duplicates never skew inclusion probability.
+    Both are the bucketing contract for batched execution over padded data.
     """
     opt = SGD(momentum=cfg.momentum)
     opt_state = opt.init(params)
@@ -106,7 +123,19 @@ def _local_sgd_body(loss_fn, params: PyTree, x: jax.Array, y: jax.Array,
 
     def epoch(carry, erng):
         params, opt_state = carry
-        perm = jax.random.permutation(erng, n)
+        if num_examples is None:
+            perm = jax.random.permutation(erng, n)
+        else:
+            # without-replacement sample of the true examples: padded rows
+            # get a sentinel key and sort last (stable, so in index
+            # order), out of reach of the num_steps applied batches when
+            # num_examples >= bs; a tiny client (num_examples < bs) fills
+            # its single batch with the first padded rows — the same
+            # duplicate multiset the sequential tile-to-one-batch path
+            # uses (see module docstring)
+            scores = jnp.where(jnp.arange(n) < num_examples,
+                               jax.random.uniform(erng, (n,)), 2.0)
+            perm = jnp.argsort(scores)
         xs = jnp.take(x, perm[:steps_per_epoch * bs], axis=0)
         ys = jnp.take(y, perm[:steps_per_epoch * bs], axis=0)
         xs = xs.reshape((steps_per_epoch, bs) + x.shape[1:])
@@ -172,12 +201,15 @@ def local_update(task: Task, global_params: PyTree, data_x: np.ndarray,
 def batched_local_sgd(loss_fn, params: PyTree, xs: jax.Array, ys: jax.Array,
                       lr: jax.Array, rngs: jax.Array, cfg: ClientConfig,
                       steps_per_epoch: int,
-                      num_steps: Optional[jax.Array] = None
+                      num_steps: Optional[jax.Array] = None,
+                      num_examples: Optional[jax.Array] = None
                       ) -> Tuple[PyTree, jax.Array]:
     """vmap of the SGD body over a stacked ``[K, B, ...]`` client batch.
 
     ``num_steps`` (``[K]`` int array or None) carries each client's true
-    per-epoch step count so padded clients don't over-train (see module
+    per-epoch step count so padded clients don't over-train;
+    ``num_examples`` (``[K]`` int array or None) their true dataset sizes
+    so epoch sampling never draws a padded duplicate row (see module
     docstring).  Returns stacked deltas (leaves ``[K, ...]``) and
     per-client losses ``[K]``.  Pure trace: callers embed it in their own
     jit (the round engine fuses it with aggregation + queue update).
@@ -187,41 +219,20 @@ def batched_local_sgd(loss_fn, params: PyTree, xs: jax.Array, ys: jax.Array,
             return _local_sgd_body(loss_fn, params, x, y, lr, r, cfg,
                                    steps_per_epoch)
         new_params, losses = jax.vmap(one)(xs, ys, rngs)
-    else:
+    elif num_examples is None:
         def one(x, y, r, s):
             return _local_sgd_body(loss_fn, params, x, y, lr, r, cfg,
                                    steps_per_epoch, num_steps=s)
         new_params, losses = jax.vmap(one)(xs, ys, rngs, num_steps)
+    else:
+        def one(x, y, r, s, m):
+            return _local_sgd_body(loss_fn, params, x, y, lr, r, cfg,
+                                   steps_per_epoch, num_steps=s,
+                                   num_examples=m)
+        new_params, losses = jax.vmap(one)(xs, ys, rngs, num_steps,
+                                           num_examples)
     deltas = jax.tree_util.tree_map(lambda a, p: a - p, new_params, params)
     return deltas, losses
-
-
-@partial(jax.jit, static_argnames=("loss_fn", "cfg", "steps_per_epoch"))
-def _batched_local_sgd_jit(loss_fn, params, xs, ys, lr, rngs, cfg,
-                           steps_per_epoch, num_steps=None):
-    return batched_local_sgd(loss_fn, params, xs, ys, lr, rngs, cfg,
-                             steps_per_epoch, num_steps)
-
-
-def batched_local_update(task: Task, global_params: PyTree, xs: np.ndarray,
-                         ys: np.ndarray, lr: float, rngs: jax.Array,
-                         cfg: ClientConfig,
-                         num_steps: Optional[np.ndarray] = None
-                         ) -> Tuple[PyTree, jax.Array]:
-    """K clients' local training in one jit over pre-stacked [K, B, ...] data.
-
-    ``xs``/``ys`` must already be bucketed (see module docstring); ``rngs``
-    is a ``[K, 2]`` stack of per-client PRNG keys; ``num_steps`` the
-    clients' true per-epoch step counts (None => every client runs the full
-    bucket).
-    """
-    steps = _num_batches(xs.shape[1], cfg.batch_size)
-    if num_steps is not None:
-        num_steps = jnp.asarray(num_steps, jnp.int32)
-    return _batched_local_sgd_jit(task.loss_fn, global_params,
-                                  jnp.asarray(xs), jnp.asarray(ys),
-                                  jnp.asarray(lr, jnp.float32), rngs, cfg,
-                                  steps, num_steps)
 
 
 def flatten_update(delta: PyTree, proj_dim: int = 256,

@@ -25,8 +25,9 @@ Two entry points:
   between rounds; params and queues are donated through the scan.
 
 Bucketing contract: see ``repro.fl.client`` — client datasets are cyclically
-tiled to a power-of-two number of mini-batches so compiled shapes are
-O(log(max_n / batch_size)) per task.
+tiled to a power-of-two number of mini-batches, sized from ``ceil(n / bs)``
+so the bucket always holds at least ``n`` rows (every example appears in the
+tiled stream) while compiled shapes stay O(log(max_n / batch_size)) per task.
 """
 
 from __future__ import annotations
@@ -57,7 +58,9 @@ class RoundEngine:
 
     Jitted executables are cached per (steps_per_epoch, K, policy) — the
     bucketing contract keeps that cache small.  The host-side pad cache
-    assumes ``client_data`` is stable across calls (true for the trainer).
+    assumes ``client_data`` is stable across calls (true for the trainer)
+    and is bounded at one tiled copy per client (the largest bucket seen;
+    smaller buckets are prefix slices of it).
     """
 
     def __init__(self, task: fl_client.Task, client_cfg: fl_client.ClientConfig,
@@ -68,24 +71,36 @@ class RoundEngine:
         self.donate = _default_donate() if donate is None else donate
         self._step_fns: Dict[int, Any] = {}
         self._scan_fns: Dict[tuple, Any] = {}
-        self._pad_cache: Dict[tuple, tuple] = {}
+        self._pad_cache: Dict[int, tuple] = {}
 
     # -- host-side data prep ---------------------------------------------
 
     def bucket_examples(self, sizes: Sequence[int]) -> int:
-        """Bucketed example count B for a set of client dataset sizes."""
+        """Bucketed example count B for a set of client dataset sizes.
+
+        Sized from ``ceil(n_i / bs)`` so ``B >= max_i n_i`` — the cyclic
+        tiling then contains every client's every example.  The *applied*
+        per-epoch step count stays the floor-based ``max(n_i // bs, 1)``
+        (see :meth:`stack_clients`), so step semantics are unchanged.
+        """
         bs = self.cfg.batch_size
-        steps = max(max(int(s) // bs, 1) for s in sizes)
+        steps = max(max(-(-int(s) // bs), 1) for s in sizes)
         return fl_client.bucket_num_batches(steps) * bs
 
     def stack_clients(self, client_data: Sequence[tuple],
                       selected: np.ndarray
-                      ) -> Tuple[np.ndarray, np.ndarray, Optional[np.ndarray]]:
+                      ) -> Tuple[np.ndarray, np.ndarray,
+                                 Optional[np.ndarray], Optional[np.ndarray]]:
         """Gather + tile the selected clients' data to [K, B, ...].
 
-        Returns (xs, ys, num_steps) where ``num_steps`` carries each
-        client's true per-epoch step count (None when every client fills
-        the bucket exactly, so the masked path is skipped).
+        Returns (xs, ys, num_steps, num_examples).  ``num_steps`` and
+        ``num_examples`` are both None when every selected client exactly
+        fills the bucket (selects the cheaper unmasked SGD trace — no
+        per-step ``where`` over the pytree); otherwise [K] true per-epoch
+        step counts and true dataset sizes (the latter keeps epoch
+        sampling off the padded duplicate rows).  Both traces live under
+        the same per-bucket jit executable;
+        :meth:`FederatedTrainer.warmup` pre-compiles the reachable ones.
         """
         bs = self.cfg.batch_size
         idxs = [int(i) for i in np.asarray(selected)]
@@ -93,41 +108,50 @@ class RoundEngine:
         b = self.bucket_examples(sizes)
         xs, ys = [], []
         for i in idxs:
-            key = (i, b)
-            if key not in self._pad_cache:
+            # Bounded cache: one entry per client, holding the largest
+            # bucket seen.  Cyclic tiling to a smaller bucket is a prefix
+            # of tiling to a larger one (row j is example j mod n), so
+            # smaller buckets are served by slicing.
+            cached = self._pad_cache.get(i)
+            if cached is None or cached[0].shape[0] < b:
                 x, y = client_data[i]
-                self._pad_cache[key] = fl_client.pad_client_data(
-                    np.asarray(x), np.asarray(y), b)
-            px, py = self._pad_cache[key]
-            xs.append(px)
-            ys.append(py)
+                cached = fl_client.pad_client_data(np.asarray(x),
+                                                   np.asarray(y), b)
+                self._pad_cache[i] = cached
+            px, py = cached
+            xs.append(px[:b])
+            ys.append(py[:b])
         steps = np.asarray([max(s // bs, 1) for s in sizes], np.int32)
-        num_steps = None if np.all(steps == b // bs) else steps
-        return np.stack(xs), np.stack(ys), num_steps
+        if np.all(steps == b // bs):
+            return np.stack(xs), np.stack(ys), None, None
+        return (np.stack(xs), np.stack(ys), steps,
+                np.asarray(sizes, np.int32))
 
     def stack_all_clients(self, client_data: Sequence[tuple]
-                          ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+                          ) -> Tuple[np.ndarray, np.ndarray,
+                                     np.ndarray, np.ndarray]:
         """Tile every client to one common bucket -> [N, B, ...] (scan path).
 
-        Always returns a concrete ``num_steps`` [N] array (the scan body
-        gathers per-selection step counts from it)."""
-        xs, ys, num_steps = self.stack_clients(
-            client_data, np.arange(len(client_data)))
+        Always returns concrete ``num_steps`` / ``num_examples`` [N]
+        arrays (the scan body gathers per-selection values from them)."""
+        n = len(client_data)
+        xs, ys, num_steps, num_examples = self.stack_clients(
+            client_data, np.arange(n))
         if num_steps is None:
-            bs = self.cfg.batch_size
-            num_steps = np.full(len(client_data), xs.shape[1] // bs,
+            num_steps = np.full(n, xs.shape[1] // self.cfg.batch_size,
                                 np.int32)
-        return xs, ys, num_steps
+            num_examples = np.full(n, xs.shape[1], np.int32)
+        return xs, ys, num_steps, num_examples
 
     # -- single fused round ----------------------------------------------
 
     def _build_step(self, steps: int):
         loss_fn, cfg, impl = self.task.loss_fn, self.cfg, self.impl
 
-        def step(params, xs, ys, coeffs, lr, rngs, num_steps):
+        def step(params, xs, ys, coeffs, lr, rngs, num_steps, num_examples):
             deltas, losses = fl_client.batched_local_sgd(
                 loss_fn, params, xs, ys, lr, rngs, cfg, steps,
-                num_steps=num_steps)
+                num_steps=num_steps, num_examples=num_examples)
             new_params = fl_server.aggregate_fused(params, deltas, coeffs,
                                                    impl=impl)
             return new_params, losses
@@ -137,15 +161,18 @@ class RoundEngine:
 
     def round_step(self, global_params: PyTree, xs: np.ndarray,
                    ys: np.ndarray, coeffs: np.ndarray, lr: float,
-                   rngs: jax.Array, num_steps: Optional[np.ndarray] = None
+                   rngs: jax.Array, num_steps: Optional[np.ndarray] = None,
+                   num_examples: Optional[np.ndarray] = None
                    ) -> Tuple[PyTree, jax.Array]:
         """One fused round: K local trainings + eq.-(4) aggregation, one jit.
 
         ``xs``/``ys``: bucketed [K, B, ...] stacks; ``coeffs``: [K] per-draw
         aggregation weights; ``rngs``: [K, 2] per-client PRNG keys;
-        ``num_steps``: [K] true per-epoch step counts (None => full bucket).
-        Returns (new global params, per-client losses [K]).  The params
-        argument is donated off-CPU — callers must use the returned pytree.
+        ``num_steps``: [K] true per-epoch step counts and ``num_examples``:
+        [K] true dataset sizes (both None => every client fills the
+        bucket).  Returns (new global params, per-client losses [K]).  The
+        params argument is donated off-CPU — callers must use the returned
+        pytree.
         """
         steps = xs.shape[1] // self.cfg.batch_size
         fn = self._step_fns.get(steps)
@@ -153,17 +180,20 @@ class RoundEngine:
             fn = self._step_fns[steps] = self._build_step(steps)
         if num_steps is not None:
             num_steps = jnp.asarray(num_steps, jnp.int32)
+        if num_examples is not None:
+            num_examples = jnp.asarray(num_examples, jnp.int32)
         return fn(global_params, jnp.asarray(xs), jnp.asarray(ys),
                   jnp.asarray(coeffs, jnp.float32),
-                  jnp.asarray(lr, jnp.float32), rngs, num_steps)
+                  jnp.asarray(lr, jnp.float32), rngs, num_steps,
+                  num_examples)
 
     # -- multi-round scan fast path --------------------------------------
 
     def _build_scan(self, steps: int, k: int, policy: str):
         loss_fn, cfg, impl = self.task.loss_fn, self.cfg, self.impl
 
-        def scan_fn(params, queues, sp, all_x, all_y, all_steps, h_seq,
-                    lr_seq, rng, V, lam):
+        def scan_fn(params, queues, sp, all_x, all_y, all_steps, all_sizes,
+                    h_seq, lr_seq, rng, V, lam):
             n = sp.num_devices
             w = sp.data_weights
 
@@ -187,7 +217,8 @@ class RoundEngine:
                 rngs = jax.random.split(k_cli, k)
                 deltas, losses = fl_client.batched_local_sgd(
                     loss_fn, params, xs, ys, lr, rngs, cfg, steps,
-                    num_steps=jnp.take(all_steps, selected))
+                    num_steps=jnp.take(all_steps, selected),
+                    num_examples=jnp.take(all_sizes, selected))
                 coeffs = w[selected] / (float(k) * dec.q[selected])
                 params = fl_server.aggregate_fused(params, deltas, coeffs,
                                                    impl=impl)
@@ -217,19 +248,23 @@ class RoundEngine:
     def run_scan(self, global_params: PyTree, sp: sm.SystemParams,
                  all_x: np.ndarray, all_y: np.ndarray, h_seq: np.ndarray,
                  lr_seq: np.ndarray, rng: jax.Array, *,
-                 num_steps: Optional[np.ndarray] = None,
+                 num_steps: np.ndarray, num_examples: np.ndarray,
                  queues: Optional[jax.Array] = None, policy: str = "lroa",
                  V: float = 0.0, lam: float = 0.0
                  ) -> Tuple[PyTree, jax.Array, Dict[str, np.ndarray]]:
         """Run ``h_seq.shape[0]`` full Algorithm-1 rounds in one jitted scan.
 
-        ``all_x``/``all_y``: [N, B, ...] bucketed data for every client
-        (see :meth:`stack_all_clients`, which also yields the per-client
-        ``num_steps`` — None means every client fills its bucket);
-        ``h_seq``: [T, N] channel gains; ``lr_seq``: [T] learning rates.
-        ``policy`` is 'lroa' (Algorithm 2 decisions from V/lam) or 'uni_d'
-        (uniform q, dynamic f/p).  Returns (final params, final queues,
-        per-round metric arrays).
+        ``all_x``/``all_y``: [N, B, ...] bucketed data for every client,
+        ``num_steps``: [N] true per-epoch step counts, ``num_examples``:
+        [N] true dataset sizes — pass all four exactly as
+        :meth:`stack_all_clients` returned them (required so padded
+        clients can't silently over-train or over-sample their duplicated
+        rows relative to Algorithm 1); ``h_seq``: [T, N] channel gains;
+        ``lr_seq``: [T] learning rates.  ``policy`` is 'lroa' (Algorithm 2
+        decisions from V/lam) or 'uni_d' (uniform q, dynamic f/p).
+        Returns (final params, final queues, per-round metric arrays).
+        Both the params pytree and the ``queues`` array are donated
+        off-CPU — callers must use the returned values, not the arguments.
         """
         if policy not in ("lroa", "uni_d"):
             raise ValueError(f"unknown policy {policy!r}")
@@ -240,11 +275,10 @@ class RoundEngine:
             fn = self._scan_fns[key] = self._build_scan(*key)
         if queues is None:
             queues = vq.init_queues(sp.num_devices)
-        if num_steps is None:
-            num_steps = np.full(sp.num_devices, steps, np.int32)
         params, queues, outs = fn(
             global_params, queues, sp, jnp.asarray(all_x),
             jnp.asarray(all_y), jnp.asarray(num_steps, jnp.int32),
+            jnp.asarray(num_examples, jnp.int32),
             jnp.asarray(h_seq, jnp.float32),
             jnp.asarray(lr_seq, jnp.float32), rng,
             jnp.asarray(V, jnp.float32), jnp.asarray(lam, jnp.float32))

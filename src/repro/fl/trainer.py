@@ -107,6 +107,85 @@ class FederatedTrainer:
         # run_round must work standalone (not only via run()).
         self._records: List[RoundRecord] = []
 
+    @property
+    def _fused(self) -> bool:
+        """True when rounds run on the fused engine fast path (the single
+        eligibility rule shared by run_round, warmup, and run)."""
+        return self.use_engine and not isinstance(self.controller,
+                                                  DivFLController)
+
+    # -- warmup -----------------------------------------------------------
+
+    def warmup(self) -> None:
+        """Compile every local-training executable a full run can hit,
+        without mutating any trainer state — benchmarks call this so
+        steady-state timings exclude jit compilation.
+
+        Fused path: for each distinct power-of-two bucket over the client
+        sizes, ``round_step`` runs once per *reachable* trace — unmasked
+        (a selection of exactly-filling clients) and/or masked (any
+        selection containing a padded client) — on a *copy* of the params
+        so donation never touches the live model.  Sequential path: one
+        ``local_update`` per distinct post-padding data shape
+        (``local_update``'s jit specializes on the array shape, not just
+        the step count).  All outputs are discarded.  Warmup *executes*
+        real calls rather than AOT ``lower().compile()`` because the AOT
+        path does not populate the jit call cache — a subsequent real
+        call would trace and compile again.
+        """
+        rng = jax.random.PRNGKey(0)
+        sizes = [d[0].shape[0] for d in self.client_data]
+        bs = self.client_cfg.batch_size
+        if self._fused:
+            k = self.params.sample_count
+            # per bucket: a client that fills it exactly (unmasked trace)
+            # and one that doesn't (masked trace), when either exists
+            exact: Dict[int, int] = {}
+            partial: Dict[int, int] = {}
+            for i, n in enumerate(sizes):
+                b = self.engine.bucket_examples([n])
+                (exact if n == b else partial).setdefault(b, i)
+            smallest = int(np.argmin(sizes))
+            selections = []
+            for b in sorted(set(exact) | set(partial)):
+                if b in exact:
+                    selections.append(np.full(k, exact[b], np.int64))
+                if b in partial:
+                    selections.append(np.full(k, partial[b], np.int64))
+                elif k > 1 and sizes[smallest] < b:
+                    # all bucket-b clients fill exactly, but mixing in a
+                    # smaller client still reaches the masked trace
+                    s = np.full(k, exact[b], np.int64)
+                    s[1:] = smallest
+                    selections.append(s)
+            for selected in selections:
+                xs, ys, num_steps, num_examples = self.engine.stack_clients(
+                    self.client_data, selected)
+                p = jax.tree_util.tree_map(jnp.copy, self.global_params)
+                new_p, _ = self.engine.round_step(
+                    p, xs, ys, np.zeros(k, np.float32), 0.0,
+                    jax.random.split(rng, k), num_steps=num_steps,
+                    num_examples=num_examples)
+                jax.block_until_ready(jax.tree_util.tree_leaves(new_p))
+        else:
+            seen = set()
+            for i, n in enumerate(sizes):
+                eff = max(n, bs)   # local_update tiles n < bs up to bs
+                if eff in seen:
+                    continue
+                seen.add(eff)
+                x, y = self.client_data[i]
+                delta, _ = fl_client.local_update(
+                    self.task, self.global_params, x, y, 0.0, rng,
+                    self.client_cfg)
+                jax.block_until_ready(jax.tree_util.tree_leaves(delta))
+        # decide() is pure for every controller and evaluate() only reads
+        # state, so warming their executables mutates nothing either
+        self.controller.decide(jnp.ones((self.params.num_devices,),
+                                        jnp.float32))
+        if self.test_data is not None:
+            self.evaluate()
+
     # -- evaluation -------------------------------------------------------
 
     def evaluate(self) -> float:
@@ -131,12 +210,12 @@ class FederatedTrainer:
     def _train_fused(self, selected: np.ndarray, coeffs: np.ndarray,
                      lr: float) -> List[float]:
         """Fast path: one fused jit for all K local trainings + eq. (4)."""
-        xs, ys, num_steps = self.engine.stack_clients(self.client_data,
-                                                      selected)
+        xs, ys, num_steps, num_examples = self.engine.stack_clients(
+            self.client_data, selected)
         rngs = self._client_rngs(len(selected))
         self.global_params, losses = self.engine.round_step(
             self.global_params, xs, ys, coeffs, lr, rngs,
-            num_steps=num_steps)
+            num_steps=num_steps, num_examples=num_examples)
         return [float(l) for l in np.asarray(losses)]
 
     def _train_sequential(self, selected: np.ndarray, coeffs: np.ndarray,
@@ -178,9 +257,7 @@ class FederatedTrainer:
         lr = float(self.lr_schedule(jnp.asarray(t)))
         coeffs = fl_server.aggregation_weights(
             selected, q, self.w, self.params.sample_count)
-        fast = self.use_engine and not isinstance(self.controller,
-                                                  DivFLController)
-        if fast:
+        if self._fused:
             losses = self._train_fused(selected, coeffs, lr)
         else:
             losses = self._train_sequential(selected, coeffs, lr)
@@ -217,6 +294,14 @@ class FederatedTrainer:
                       f"cum {rec.cum_time:.0f}s acc {rec.test_accuracy}")
         if self.test_data is not None and self._records:
             self._records[-1].test_accuracy = self.evaluate()
-        return FLRunResult(records=self._records, params=self.global_params,
+        # With buffer donation on (GPU/TPU), any later fused round donates
+        # the live global_params buffers, which would invalidate a
+        # previously returned result's params — snapshot them so results
+        # stay readable.  The sequential path never donates, so it skips
+        # the copy.
+        params = (jax.tree_util.tree_map(jnp.copy, self.global_params)
+                  if self.engine.donate and self._fused
+                  else self.global_params)
+        return FLRunResult(records=self._records, params=params,
                            controller_name=getattr(self.controller, "name",
                                                    "unknown"))

@@ -80,7 +80,14 @@ def fl_aggregate(theta: Array, deltas: Array, coeffs: Array,
 
 def fl_aggregate_pytree(global_params, stacked_deltas, coeffs,
                         impl: str = "auto"):
-    """eq. (4) over a full parameter pytree (stacked client axis K)."""
+    """eq. (4) over a full parameter pytree (stacked client axis K).
+
+    Per-leaf variant (one kernel launch per leaf).  The canonical
+    fused-aggregation entry point is ``repro.fl.server.aggregate_fused``,
+    which ravels the whole model into ONE kernel call via ``ParamRavel``
+    and is what the round engine uses; prefer it for new code (this
+    per-leaf form is kept for leaf-shaped benchmarking/tests).
+    """
     def one(p, d):
         flat_p = p.reshape(-1)
         flat_d = d.reshape(d.shape[0], -1)

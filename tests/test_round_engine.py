@@ -80,9 +80,10 @@ def test_engine_handles_ragged_and_tiny_clients():
 def test_run_scan_full_rollout():
     trainer = _make_trainer(use_engine=True)
     eng = trainer.engine
-    all_x, all_y, all_steps = eng.stack_all_clients(trainer.client_data)
+    all_x, all_y, all_steps, all_sizes = eng.stack_all_clients(
+        trainer.client_data)
     assert all_x.shape[0] == N_DEVICES
-    assert all_steps.shape == (N_DEVICES,)
+    assert all_steps.shape == all_sizes.shape == (N_DEVICES,)
     rounds = 5
     chan = ChannelProcess(N_DEVICES, ChannelConfig(seed=1))
     h_seq = np.stack([chan.sample() for _ in range(rounds)])
@@ -91,7 +92,8 @@ def test_run_scan_full_rollout():
     params, queues, m = eng.run_scan(
         params0, trainer.params, all_x, all_y, h_seq,
         np.full(rounds, 0.1, np.float32), jax.random.PRNGKey(8),
-        num_steps=all_steps, policy="lroa", V=hp.V, lam=hp.lam)
+        num_steps=all_steps, num_examples=all_sizes, policy="lroa",
+        V=hp.V, lam=hp.lam)
     assert m["loss"].shape == (rounds,)
     assert m["selected"].shape == (rounds, trainer.params.sample_count)
     assert np.all(np.isfinite(m["loss"]))
@@ -102,6 +104,53 @@ def test_run_scan_full_rollout():
                     jax.tree_util.tree_leaves(params0)))
     assert moved > 0
     assert m["loss"][-1] < m["loss"][0]
+
+
+def test_warmup_compiles_all_buckets_without_mutating_state():
+    """warmup() must pre-build every executable the run can hit (ragged
+    sizes -> several buckets) while leaving the trainer's RNG streams,
+    params, channel, and controller untouched, so a warmed run reproduces
+    an unwarmed one exactly."""
+    sizes = [10, 33, 64, 100, 17, 48, 80, 12]
+    t_cold = _make_trainer(use_engine=True, client_sizes=sizes)
+    t_warm = _make_trainer(use_engine=True, client_sizes=sizes)
+    t_warm.warmup()
+
+    def traces():
+        return sum(f._cache_size()
+                   for f in t_warm.engine._step_fns.values())
+    n_compiled, n_traces = len(t_warm.engine._step_fns), traces()
+    assert n_compiled >= 2   # ragged sizes span more than one bucket
+    recs_cold = [t_cold.run_round(t) for t in range(3)]
+    recs_warm = [t_warm.run_round(t) for t in range(3)]
+    # the measured rounds built no new executables — neither a new bucket
+    # jit nor a new masked/unmasked trace under an existing one...
+    assert len(t_warm.engine._step_fns) == n_compiled
+    assert traces() == n_traces
+    # ...and warmup changed nothing observable
+    for a, b in zip(recs_cold, recs_warm):
+        assert a.selected == b.selected
+        assert a.mean_loss == pytest.approx(b.mean_loss, abs=1e-6)
+
+
+def test_run_scan_uni_d_policy():
+    """The uni_d branch of the fused scan (uniform q, dynamic f/p) must
+    trace and produce sane decisions, not just the lroa default."""
+    trainer = _make_trainer(use_engine=True)
+    eng = trainer.engine
+    all_x, all_y, all_steps, all_sizes = eng.stack_all_clients(
+        trainer.client_data)
+    rounds = 3
+    chan = ChannelProcess(N_DEVICES, ChannelConfig(seed=2))
+    h_seq = np.stack([chan.sample() for _ in range(rounds)])
+    params, queues, m = eng.run_scan(
+        trainer.task.init(jax.random.PRNGKey(3)), trainer.params, all_x,
+        all_y, h_seq, np.full(rounds, 0.1, np.float32),
+        jax.random.PRNGKey(4), num_steps=all_steps,
+        num_examples=all_sizes, policy="uni_d")
+    assert np.all(np.isfinite(m["loss"]))
+    np.testing.assert_allclose(m["q_min"], 1.0 / N_DEVICES, rtol=1e-6)
+    np.testing.assert_allclose(m["q_max"], 1.0 / N_DEVICES, rtol=1e-6)
 
 
 # -- satellite: _records regression ---------------------------------------
@@ -242,6 +291,82 @@ def test_num_steps_masks_to_true_step_count():
                                    atol=1e-6)
     assert float(l_mask[0]) == pytest.approx(float(l_ref), abs=1e-6)
 
+def test_bucket_contains_every_example_when_not_batch_divisible():
+    """Regression: n=40, bs=16 has floor(n/bs)=2 already a power of two, so
+    the bucket used to be 32 < n and the last 8 examples never trained on
+    the fused path.  The bucket must hold >= n rows (ceil-based sizing),
+    the tiled stream every example, and the applied step count must stay
+    the floor-based Algorithm-1 count."""
+    task = MLPTask(input_dim=16, num_classes=3, hidden=8)
+    eng = RoundEngine(task, ClientConfig(local_epochs=1, batch_size=16))
+    assert eng.bucket_examples([40]) >= 40
+    sizes = [40, 33, 17, 64]
+    rng = np.random.default_rng(0)
+    client_data = [(np.arange(n, dtype=np.float32)[:, None] + 1000 * j,
+                    rng.integers(0, 3, n))
+                   for j, n in enumerate(sizes)]
+    xs, ys, num_steps, num_examples = eng.stack_clients(
+        client_data, np.arange(len(sizes)))
+    b = xs.shape[1]
+    assert b >= max(sizes)
+    for j, n in enumerate(sizes):
+        # cyclic tiling: row r of the bucket is example r mod n, so every
+        # original example appears in the padded stream
+        np.testing.assert_array_equal(xs[j][:, 0],
+                                      (np.arange(b) % n) + 1000 * j)
+    np.testing.assert_array_equal(num_steps,
+                                  [max(n // 16, 1) for n in sizes])
+    np.testing.assert_array_equal(num_examples, sizes)
+    # a smaller-bucket selection is served by slicing the cached copy;
+    # the pad cache stays bounded at one entry per client
+    sx, _, _, _ = eng.stack_clients(client_data, np.asarray([2]))
+    assert sx.shape[1] == 32
+    np.testing.assert_array_equal(sx[0][:, 0], (np.arange(32) % 17) + 2000)
+    assert len(eng._pad_cache) == len(sizes)
+
+
+def test_padded_sampling_draws_each_real_example_at_most_once():
+    """A padded client's epoch must sample without replacement from its
+    true examples only: padded duplicate rows are never drawn, and no
+    example appears twice within an epoch — matching the sequential
+    path's statistics (no inclusion bias toward low-index examples)."""
+    from repro.fl.client import batched_local_sgd
+    B, n, bs = 64, 40, 16
+    x = np.eye(B, dtype=np.float32)        # row j = one-hot(j): gradient
+    y = np.zeros(B, np.int32)              # counts how often j is drawn
+    cfg = ClientConfig(local_epochs=1, batch_size=bs, momentum=0.0)
+    params = jnp.zeros((B,))
+
+    def loss_fn(p, batch):
+        return jnp.sum(p * batch["x"]) / bs
+
+    deltas, _ = batched_local_sgd(
+        loss_fn, params, x[None], y[None], jnp.float32(1.0),
+        jax.random.PRNGKey(0)[None], cfg, B // bs,
+        num_steps=jnp.asarray([n // bs]), num_examples=jnp.asarray([n]))
+    counts = -np.asarray(deltas[0]) * bs   # lr=1: delta_j = -count_j / bs
+    np.testing.assert_array_equal(counts[n:], 0.0)   # no padded rows
+    assert set(np.unique(np.round(counts, 5))) <= {0.0, 1.0}  # no repeats
+    assert counts.sum() == (n // bs) * bs  # exactly num_steps full batches
+
+    # tiny-client corner (n < bs): the single applied batch must fill up
+    # with the first bs - n padded rows — by the tiling contract, the
+    # exact deterministic duplicate multiset the sequential path produces
+    # when local_update tiles n up to one full batch
+    tiny = 10
+    deltas, _ = batched_local_sgd(
+        loss_fn, params, x[None], y[None], jnp.float32(1.0),
+        jax.random.PRNGKey(1)[None], cfg, B // bs,
+        num_steps=jnp.asarray([1]), num_examples=jnp.asarray([tiny]))
+    counts = -np.asarray(deltas[0]) * bs
+    # rows 0..tiny-1 are the real examples (drawn once each); rows
+    # tiny..bs-1 are the first padded duplicates — in a tiled stream they
+    # hold examples 0..bs-tiny-1, giving sequential counts [2]*6 + [1]*4
+    np.testing.assert_array_equal(counts[:bs],
+                                  [1.0] * tiny + [1.0] * (bs - tiny))
+    np.testing.assert_array_equal(counts[bs:], 0.0)
+
+
 def test_bucket_num_batches_power_of_two():
     assert [bucket_num_batches(s) for s in (1, 2, 3, 4, 5, 9)] == \
         [1, 2, 4, 4, 8, 16]
@@ -262,10 +387,15 @@ def test_pad_client_data_tiles_cyclically():
 def test_bench_smoke(tmp_path, monkeypatch, capsys):
     monkeypatch.chdir(tmp_path)
     from benchmarks.run import main
-    main(["--smoke", "--skip", "convergence,sweeps,roofline"])
+    # only roofline is skipped (it needs dry-run dumps): the smoke-mode
+    # branches of every other section must stay exercisable
+    main(["--smoke", "--skip", "roofline"])
     out = capsys.readouterr().out
     assert "kernels/fl_aggregate" in out
     assert "round_engine/fused" in out
+    assert "latency_saving_vs_uni_d" in out     # convergence section
+    assert "lambda_sweep" in out and "k_sweep" in out
+    assert "v_sweep" in out and "heterogeneity_sweep" in out
     # smoke mode writes its own artifact so the tracked full-scale
     # BENCH_round_engine.json is never clobbered by tiny-shape numbers
     bench = json.loads(

@@ -1,18 +1,26 @@
 """Round-engine benchmark: simulated FL rounds/sec, seed sequential path vs
-the fused round engine vs the multi-round ``lax.scan`` fast path.
+the fused round engine (bank-resident vs host-restacked data planes) vs the
+multi-round ``lax.scan`` fast path.
 
 The comparison holds everything fixed (task, controller, channel, client
 data, K) and only swaps the execution strategy:
 
-* ``sequential`` — the seed semantics: one jitted ``local_update`` dispatch
-  per sampled client + list-of-pytrees aggregation (``use_engine=False``);
-* ``engine``     — one fused jit per round (vmapped K-client training +
-  ravelled eq.-(4) reduction);
-* ``scan``       — whole rollout in one jit (decide/sample/train/aggregate/
-  queue-update inside ``lax.scan``), no host round-trips between rounds.
+* ``sequential``     — the seed semantics: one jitted ``local_update``
+  dispatch per sampled client + list-of-pytrees aggregation
+  (``use_engine=False``);
+* ``host_restacked`` — the PR-1 data plane: one fused jit per round, but
+  the K selected clients' ``[K, B, ...]`` batch is gathered on the host
+  and re-uploaded every round (``bank.gather_host`` +
+  ``round_step_stacked``);
+* ``engine``         — the ClientBank data plane: the ``[N, B, ...]``
+  stacks live on device and the round's jit gathers its K rows by
+  ``selected`` inside the trace — zero per-round client-data transfers;
+* ``scan``           — whole rollout in one jit (decide/sample/train/
+  aggregate/queue-update inside ``lax.scan`` over the same bank).
 
 Emits ``BENCH_round_engine.json`` with rounds/sec for the trajectory so the
-perf numbers are tracked across PRs.
+perf numbers are tracked across PRs.  The default shape is the acceptance
+operating point K=8, N=120.
 """
 
 from __future__ import annotations
@@ -35,7 +43,7 @@ from repro.optim import constant
 
 @dataclasses.dataclass
 class EngineBenchConfig:
-    num_devices: int = 20
+    num_devices: int = 120         # N=120: the paper's device population
     sample_count: int = 8          # K=8: the acceptance-criteria operating point
     examples_per_client: int = 64  # equal sizes => one compiled shape per path
     image_shape: tuple = (8, 8, 1)
@@ -88,21 +96,57 @@ def _rounds_per_sec(trainer: FederatedTrainer, cfg: EngineBenchConfig
     return cfg.rounds / (time.perf_counter() - t0)
 
 
+def _data_plane_rounds_per_sec(cfg: EngineBenchConfig, bank_resident: bool
+                               ) -> float:
+    """Isolate the round data plane: identical selections/coeffs/rngs per
+    round, only the client-data path differs — gathered inside the jit
+    from the device bank (``bank_resident``) vs host-restacked
+    ``[K, B, ...]`` uploads (the PR-1 plane: ``bank.gather_host`` +
+    ``round_step_stacked``)."""
+    trainer = _build_trainer(cfg, use_engine=True)
+    eng, bank = trainer.engine, trainer.bank
+    k = cfg.sample_count
+    rng = np.random.default_rng(cfg.seed)
+    params = trainer.global_params
+    rngs = jax.random.split(jax.random.PRNGKey(cfg.seed), k)
+    coeffs = np.full(k, 1.0 / k, np.float32)
+
+    def one_round(params):
+        selected = rng.integers(0, cfg.num_devices, k)
+        if bank_resident:
+            params, losses = eng.round_step(params, bank, selected, coeffs,
+                                            cfg.lr, rngs)
+        else:
+            xs, ys, ns, ne = bank.gather_host(selected)
+            params, losses = eng.round_step_stacked(params, xs, ys, coeffs,
+                                                    cfg.lr, rngs, ns, ne)
+        jax.block_until_ready(losses)
+        return params
+
+    # These loops time only the data plane (no controller/queue work), so
+    # rounds are ~ms each — run 10x the trainer budget to pull the
+    # bank-vs-host ratio out of scheduler noise.
+    plane_rounds = cfg.rounds * 10
+    for _ in range(cfg.warmup_rounds):
+        params = one_round(params)
+    t0 = time.perf_counter()
+    for _ in range(plane_rounds):
+        params = one_round(params)
+    return plane_rounds / (time.perf_counter() - t0)
+
+
 def _scan_rounds_per_sec(cfg: EngineBenchConfig) -> float:
     trainer = _build_trainer(cfg, use_engine=True)
-    eng = trainer.engine
-    all_x, all_y, all_steps, all_sizes = eng.stack_all_clients(
-        trainer.client_data)
+    eng, bank = trainer.engine, trainer.bank
     chan = ChannelProcess(cfg.num_devices, ChannelConfig(seed=cfg.seed))
-    h_seq = np.stack([chan.sample() for _ in range(cfg.rounds)])
+    h_seq = chan.sample_sequence(cfg.rounds)
     lr_seq = np.full(cfg.rounds, cfg.lr, np.float32)
     hp = trainer.controller.hp
 
     def once(seed):
         p, q, m = eng.run_scan(
             trainer.task.init(jax.random.PRNGKey(seed)), trainer.params,
-            all_x, all_y, h_seq, lr_seq, jax.random.PRNGKey(seed),
-            num_steps=all_steps, num_examples=all_sizes, policy="lroa",
+            bank, h_seq, lr_seq, jax.random.PRNGKey(seed), policy="lroa",
             V=hp.V, lam=hp.lam)
         jax.block_until_ready(jax.tree_util.tree_leaves(p))
         return m
@@ -123,14 +167,19 @@ def run(cfg: Optional[EngineBenchConfig] = None, smoke: bool = False,
                      else "BENCH_round_engine.json")
     seq = _rounds_per_sec(_build_trainer(cfg, use_engine=False), cfg)
     eng = _rounds_per_sec(_build_trainer(cfg, use_engine=True), cfg)
+    host = _data_plane_rounds_per_sec(cfg, bank_resident=False)
+    bank = _data_plane_rounds_per_sec(cfg, bank_resident=True)
     scan = _scan_rounds_per_sec(cfg)
     result = {
         "config": dataclasses.asdict(cfg),
         "backend": jax.default_backend(),
         "seq_rounds_per_sec": seq,
         "engine_rounds_per_sec": eng,
+        "host_restacked_rounds_per_sec": host,
+        "bank_resident_rounds_per_sec": bank,
         "scan_rounds_per_sec": scan,
         "speedup_engine_vs_seq": eng / seq,
+        "speedup_bank_vs_host_restacked": bank / host,
         "speedup_scan_vs_seq": scan / seq,
     }
     with open(json_path, "w") as f:
@@ -141,6 +190,11 @@ def run(cfg: Optional[EngineBenchConfig] = None, smoke: bool = False,
                 f"rounds_per_sec={seq:.2f}"),
         csv_row(f"round_engine/fused/{tag}", 1e6 / eng,
                 f"rounds_per_sec={eng:.2f};speedup_vs_seq={eng / seq:.2f}"),
+        csv_row(f"round_engine/host_restacked/{tag}", 1e6 / host,
+                f"rounds_per_sec={host:.2f}"),
+        csv_row(f"round_engine/bank_resident/{tag}", 1e6 / bank,
+                f"rounds_per_sec={bank:.2f};"
+                f"speedup_vs_host_restacked={bank / host:.2f}"),
         csv_row(f"round_engine/scan/{tag}", 1e6 / scan,
                 f"rounds_per_sec={scan:.2f};speedup_vs_seq={scan / seq:.2f}"),
     ]

@@ -4,5 +4,7 @@ from repro.data.partition import (dirichlet_partition, writer_partition,
                                   partition_stats)
 from repro.data.synthetic import (synthetic_image_classification,
                                   synthetic_lm_tokens)
-from repro.data.pipeline import (batch_iterator, make_client_datasets,
+from repro.data.pipeline import (batch_iterator, bucket_examples,
+                                 bucket_num_batches, make_client_datasets,
+                                 pad_client_data, stack_client_arrays,
                                  train_test_split, lm_batches)

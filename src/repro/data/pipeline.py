@@ -1,4 +1,7 @@
-"""Data pipeline: deterministic shuffled batch iterators + per-client views.
+"""Data pipeline: deterministic shuffled batch iterators, per-client views,
+and the host half of the ClientBank data plane (bucketing + cyclic tiling
+into ``[N, B, ...]`` stacks — see ``repro.fl.client_bank`` for the
+device-resident half).
 
 Kept dependency-free (numpy only) and deliberately simple: FL experiments
 iterate small per-client shards; the large-model training path consumes
@@ -11,6 +14,60 @@ from __future__ import annotations
 from typing import Dict, Iterator, List, Sequence, Tuple
 
 import numpy as np
+
+
+def bucket_num_batches(steps: int) -> int:
+    """Round a per-epoch step count up to the next power of two."""
+    return 1 << max(steps - 1, 0).bit_length()
+
+
+def pad_client_data(x: np.ndarray, y: np.ndarray,
+                    num_examples: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Cyclically tile a client's (x, y) to exactly ``num_examples`` rows."""
+    n = x.shape[0]
+    if n == num_examples:
+        return x, y
+    idx = np.arange(num_examples) % n
+    return x[idx], y[idx]
+
+
+def bucket_examples(sizes: Sequence[int], batch_size: int) -> int:
+    """Common bucketed example count B for a set of client dataset sizes.
+
+    Sized from ``ceil(n_i / bs)`` rounded up to the next power of two, so
+    ``B >= max_i n_i`` — the cyclic tiling then contains every client's
+    every example.  The *applied* per-epoch step count stays the
+    floor-based ``max(n_i // bs, 1)`` (see :func:`stack_client_arrays`).
+    """
+    steps = max(max(-(-int(s) // batch_size), 1) for s in sizes)
+    return bucket_num_batches(steps) * batch_size
+
+
+def stack_client_arrays(client_data: Sequence[Tuple[np.ndarray, np.ndarray]],
+                        batch_size: int
+                        ) -> Tuple[np.ndarray, np.ndarray,
+                                   np.ndarray, np.ndarray]:
+    """Tile every client to ONE common bucket -> ``[N, B, ...]`` stacks.
+
+    The host half of the ``ClientBank`` data plane (`repro.fl.client_bank`):
+    every client's (x, y) is cyclically tiled to the same bucket of ``B``
+    examples and stacked along a leading client axis.  Returns
+    ``(xs, ys, num_steps, num_examples)`` where ``num_steps[i]`` is client
+    i's true per-epoch optimizer step count ``max(n_i // bs, 1)`` and
+    ``num_examples[i]`` its true dataset size (the masks that keep padded
+    clients from over-training or sampling their duplicated rows).
+    """
+    sizes = [int(x.shape[0]) for x, _ in client_data]
+    b = bucket_examples(sizes, batch_size)
+    xs, ys = [], []
+    for x, y in client_data:
+        px, py = pad_client_data(np.asarray(x), np.asarray(y), b)
+        xs.append(px)
+        ys.append(py)
+    num_steps = np.asarray([max(n // batch_size, 1) for n in sizes],
+                           np.int32)
+    return (np.stack(xs), np.stack(ys), num_steps,
+            np.asarray(sizes, np.int32))
 
 
 def batch_iterator(x: np.ndarray, y: np.ndarray, batch_size: int,

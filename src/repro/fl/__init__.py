@@ -1,13 +1,16 @@
 """repro.fl — federated learning substrate: Algorithm 1 loop, clients,
-server aggregation (eq. 4), channel environment, and the fused
-device-resident round engine (vmapped K-client training + stacked
-aggregation in one jit)."""
+server aggregation (eq. 4), channel environment, the device-resident
+ClientBank data plane ([N, B, ...] stacks gathered inside the jit), and
+the fused round engine (vmapped K-client training + stacked aggregation
+in one jit, optionally shard_mapped over a mesh ``data`` axis)."""
 
 from repro.fl.client import (Task, ClientConfig, local_update,
                              batched_local_sgd, bucket_num_batches,
                              pad_client_data, flatten_update)
+from repro.fl.client_bank import ClientBank
 from repro.fl.server import (sample_clients, aggregation_weights, aggregate,
-                             aggregate_stacked, aggregate_fused, stack_deltas,
+                             aggregate_stacked, aggregate_fused,
+                             aggregate_fused_psum, stack_deltas,
                              ParamRavel, fedavg_reference)
 from repro.fl.environment import (ChannelConfig, ChannelProcess,
                                   HeterogeneityConfig, heterogeneous_params)

@@ -13,16 +13,16 @@ Two execution modes share the same SGD body (``_local_sgd_body``):
   per-client losses ``[K]``; a pure trace the engine fuses into its own
   jit alongside aggregation and the queue update.
 
-Padding / bucketing contract (round engine)
--------------------------------------------
+Padding / bucketing contract (ClientBank / round engine)
+--------------------------------------------------------
 ``vmap`` requires every client in the batch to share a static data shape, so
-client datasets are padded to a common per-round bucket of ``B`` examples:
+the ClientBank pads every client dataset to one GLOBAL bucket of ``B``
+examples (one compiled data shape per task):
 
 * ``B = bucket_num_batches(max_i ceil(n_i / batch_size)) * batch_size`` —
   the bucket is sized from the *ceil* step count rounded up to the next
   power of two, so ``B >= n_i`` always holds (the tiled stream contains
-  every example) and the set of compiled shapes per task is
-  O(log(max_n / batch_size)), so recompilation is bounded;
+  every example);
 * each client's data is padded by **cyclic tiling** (example ``j`` of the
   padded stream is example ``j mod n_i``), so every padded batch contains
   only real examples and gradients are never polluted by zero rows;
@@ -44,7 +44,12 @@ client datasets are padded to a common per-round bucket of ``B`` examples:
   the params/momentum/loss (``num_steps`` argument).  Padding therefore
   changes neither which examples a client trains on nor how many SGD steps
   it takes.  When ``n_i == B`` (no padding; ``num_steps``/``num_examples``
-  None) this is *exactly* the sequential semantics of :func:`local_update`.
+  None) this is *exactly* the sequential semantics of :func:`local_update`;
+* the epoch ordering is the argsort of iid uniform keys drawn identically
+  by the masked and unmasked traces, so a mask covering the full bucket
+  (``num_examples == B``, ``num_steps == B // bs``) reproduces the
+  unmasked trace bit-for-bit — the bank's always-masked gather path stays
+  bit-identical to an unmasked host-stacked round.
 """
 
 from __future__ import annotations
@@ -57,6 +62,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# Bucketing / cyclic tiling are host-side data-plane ops: they live in the
+# numpy-only data layer (shared with ClientBank construction) and are
+# re-exported here because they are part of the client-side contract.
+from repro.data.pipeline import bucket_num_batches, pad_client_data
 from repro.optim import SGD, apply_updates
 
 PyTree = Any
@@ -86,21 +95,6 @@ def _num_batches(num_examples: int, batch_size: int) -> int:
     return max(num_examples // batch_size, 1)
 
 
-def bucket_num_batches(steps: int) -> int:
-    """Round a per-epoch step count up to the next power of two."""
-    return 1 << max(steps - 1, 0).bit_length()
-
-
-def pad_client_data(x: np.ndarray, y: np.ndarray,
-                    num_examples: int) -> Tuple[np.ndarray, np.ndarray]:
-    """Cyclically tile a client's (x, y) to exactly ``num_examples`` rows."""
-    n = x.shape[0]
-    if n == num_examples:
-        return x, y
-    idx = np.arange(num_examples) % n
-    return x[idx], y[idx]
-
-
 def _local_sgd_body(loss_fn, params: PyTree, x: jax.Array, y: jax.Array,
                     lr: jax.Array, rng: jax.Array, cfg: ClientConfig,
                     steps_per_epoch: int,
@@ -123,9 +117,13 @@ def _local_sgd_body(loss_fn, params: PyTree, x: jax.Array, y: jax.Array,
 
     def epoch(carry, erng):
         params, opt_state = carry
-        if num_examples is None:
-            perm = jax.random.permutation(erng, n)
-        else:
+        # Epoch order = argsort of iid uniform keys (a uniform random
+        # permutation).  Masked and unmasked traces share the SAME key
+        # draw, so a mask covering the full bucket reproduces the
+        # unmasked ordering bit-for-bit — the ClientBank path (always
+        # masked) stays bit-identical to an unmasked host-stacked round.
+        scores = jax.random.uniform(erng, (n,))
+        if num_examples is not None:
             # without-replacement sample of the true examples: padded rows
             # get a sentinel key and sort last (stable, so in index
             # order), out of reach of the num_steps applied batches when
@@ -133,9 +131,8 @@ def _local_sgd_body(loss_fn, params: PyTree, x: jax.Array, y: jax.Array,
             # its single batch with the first padded rows — the same
             # duplicate multiset the sequential tile-to-one-batch path
             # uses (see module docstring)
-            scores = jnp.where(jnp.arange(n) < num_examples,
-                               jax.random.uniform(erng, (n,)), 2.0)
-            perm = jnp.argsort(scores)
+            scores = jnp.where(jnp.arange(n) < num_examples, scores, 2.0)
+        perm = jnp.argsort(scores)
         xs = jnp.take(x, perm[:steps_per_epoch * bs], axis=0)
         ys = jnp.take(y, perm[:steps_per_epoch * bs], axis=0)
         xs = xs.reshape((steps_per_epoch, bs) + x.shape[1:])

@@ -1,0 +1,171 @@
+"""ClientBank — the device-resident FL data plane.
+
+The trainer used to gather each round's K sampled clients on the host
+(``[K, B, ...]`` numpy stacks) and re-upload them to the device — the
+dominant non-compute cost once the round itself is one fused jit.  The
+bank inverts that: ALL N clients' bucketed data is tiled and stacked to
+``[N, B, ...]`` ONCE at construction, uploaded once, and every round
+gathers its K selected rows *inside* the jit with ``jnp.take`` — zero
+per-round host->device transfers of client data, and N (not K) becomes
+the unit the system scales over.
+
+Ownership / memory contract
+---------------------------
+* The bank owns the only device copy of the ``[N, B, ...]`` stacks plus
+  the ``[N]`` ``num_steps`` / ``num_examples`` masks.  They are
+  **never donated**: the round engine donates only the params (and scan
+  queue) buffers, so one bank serves every round, every policy, and any
+  number of concurrent rollouts.
+* Host retention is bounded by the TRUE data volume ``sum_i n_i`` (a
+  private copy per client, decoupled from caller mutation), never the
+  tiled ``O(N * max_i n_i)`` form: :meth:`client_view` (the sequential /
+  DivFL path) reads those copies directly, and :meth:`gather_host` (the
+  PR-1 host-stacked round, retained for equivalence tests and
+  transfer-cost benchmarking) lazily rebuilds — then caches — the tiled
+  stacks only if it is actually used.
+* With a mesh, the client axis is placed with
+  ``NamedSharding(P(mesh_axis))`` when ``N`` divides the axis size —
+  each shard holds ``N / axis_size`` clients' buckets and the round
+  engine's ``shard_map`` trains/reduces per shard (cross-shard ``psum``
+  in the aggregation).  Otherwise the bank is replicated.
+
+Bucketing contract (see ``repro.data.pipeline`` / ``repro.fl.client``):
+one GLOBAL bucket ``B = bucket_num_batches(max_i ceil(n_i / bs)) * bs``
+covers every client, so the whole system compiles exactly one data shape
+per task.  Clients are cyclically tiled to ``B`` rows; ``num_steps``
+keeps each client at its true ``max(n_i // bs, 1)`` applied optimizer
+steps and ``num_examples`` keeps epoch sampling off the padded duplicate
+rows, so padding changes neither training distributions nor step counts.
+
+Known limit: the single global bucket makes DEVICE memory
+``O(N * max_i n_i)`` — a heavily skewed partition (one giant client)
+taxes every row with the skew.  Sharding the N axis over the mesh
+divides the per-device cost; a bucket-ladder bank (a few size tiers, one
+stack per tier) is the ROADMAP item for removing the padding waste
+outright.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import stack_client_arrays
+from repro.fl import client as fl_client
+
+
+class ClientBank:
+    """Device-resident ``[N, B, ...]`` stacks of every client's data."""
+
+    def __init__(self, client_data: Sequence[tuple],
+                 client_cfg: fl_client.ClientConfig,
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 mesh_axis: str = "data"):
+        self.batch_size = client_cfg.batch_size
+        # Host retention is the TRUE data (sum_i n_i rows, private copies
+        # decoupled from caller mutation), not the tiled [N, B, ...]
+        # mirror: with skewed sizes the global bucket makes the tiled form
+        # O(N * max_i n_i), which would defeat scaling over N.  The tiled
+        # stacks exist transiently for the upload (and lazily again only
+        # if the test/bench-only gather_host is used).
+        self._clients = [(np.array(x), np.array(y)) for x, y in client_data]
+        host_x, host_y, num_steps, num_examples = stack_client_arrays(
+            self._clients, self.batch_size)
+        self._num_steps, self._num_examples = num_steps, num_examples
+        self._tiled: Optional[tuple] = None
+        self.num_clients = host_x.shape[0]
+        self.bucket_examples = host_x.shape[1]
+        self.steps_per_epoch = self.bucket_examples // self.batch_size
+        # Every client exactly fills the bucket => the masks are inert and
+        # the engine may use the cheaper unmasked SGD trace.
+        self.uniform = bool(np.all(num_examples == self.bucket_examples))
+        self.mesh, self.mesh_axis = mesh, mesh_axis
+        self.xs = self._to_device(host_x)
+        self.ys = self._to_device(host_y)
+        # the masks are also retained host-side (gather_host/sizes): upload
+        # private copies so a zero-copy device_put can't alias them
+        self.num_steps = self._to_device(num_steps.copy())
+        self.num_examples = self._to_device(num_examples.copy())
+        # The ONE host->device upload happens here, not lazily: block so
+        # the device copy can't race callers mutating their arrays after
+        # construction (transfers are async).
+        jax.block_until_ready((self.xs, self.ys, self.num_steps,
+                               self.num_examples))
+
+    def _to_device(self, arr: np.ndarray) -> jax.Array:
+        # ``arr`` is always a freshly built stack (never caller-owned), so
+        # uploads may read it in place.  With a mesh placement, device_put
+        # straight from host so each device receives only its shard — a
+        # jnp.array staging hop would commit the full unsharded stack to
+        # one device first, the exact OOM the sharded bank avoids.
+        placement = self._placement()
+        if placement is None:
+            # jnp.array (copy semantics) so the device buffer can't alias
+            # host memory the constructor is about to drop.
+            return jnp.array(arr)
+        return jax.device_put(arr, placement)
+
+    def _placement(self):
+        """NamedSharding over the client axis when the mesh divides N."""
+        if self.mesh is None:
+            return None
+        shards = self.mesh.shape[self.mesh_axis]
+        spec = (jax.sharding.PartitionSpec(self.mesh_axis)
+                if shards > 1 and self.num_clients % shards == 0
+                else jax.sharding.PartitionSpec())
+        return jax.sharding.NamedSharding(self.mesh, spec)
+
+    @property
+    def sizes(self) -> np.ndarray:
+        """True per-client dataset sizes ``n_i`` (host, [N])."""
+        return self._num_examples
+
+    def device_args(self) -> Tuple[jax.Array, jax.Array,
+                                   Optional[jax.Array],
+                                   Optional[jax.Array]]:
+        """(xs, ys, num_steps, num_examples) for in-jit gathering.
+
+        The masks come back None for a uniform bank (every client fills
+        the bucket) — selecting the cheaper unmasked SGD trace; thanks to
+        the shared epoch-permutation keys the two traces are
+        bit-identical there anyway.
+        """
+        if self.uniform:
+            return self.xs, self.ys, None, None
+        return self.xs, self.ys, self.num_steps, self.num_examples
+
+    # -- host-side views ---------------------------------------------------
+
+    def gather_host(self, selected: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray,
+                               Optional[np.ndarray], Optional[np.ndarray]]:
+        """PR-1-style host gather of the selected rows -> ``[K, B, ...]``.
+
+        Same bucket, same tiled rows as the device path — kept for the
+        bank-vs-host equivalence tests and the host-restacked benchmark
+        baseline (which is why the tiled stacks are cached after the
+        first call, matching PR 1's pad cache; production rounds never
+        call this, so the cache stays unbuilt there).  ``num_steps`` /
+        ``num_examples`` are None when every selected client exactly
+        fills the bucket (the PR-1 unmasked trace), else the selected
+        ``[K]`` mask rows.
+        """
+        if self._tiled is None:
+            self._tiled = stack_client_arrays(self._clients,
+                                              self.batch_size)[:2]
+        host_x, host_y = self._tiled
+        idx = np.asarray(selected, np.int64)
+        xs, ys = host_x[idx], host_y[idx]
+        if np.all(self._num_examples[idx] == self.bucket_examples):
+            return xs, ys, None, None
+        return xs, ys, self._num_steps[idx], self._num_examples[idx]
+
+    def client_view(self, i: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Client ``i``'s true (x, y) — the bank's private host copy (the
+        first ``n_i`` rows of its device slice hold the same values, by
+        the cyclic-tiling contract).  The sequential / DivFL path reads
+        these instead of retained caller datasets."""
+        return self._clients[i]

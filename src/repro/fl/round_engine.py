@@ -1,48 +1,61 @@
-"""Fused device-resident FL round engine.
+"""Fused device-resident FL round engine over a ClientBank.
 
-The seed trainer dispatched one jitted ``local_update`` per sampled client
-(K jit entries + K host<->device syncs per round) and aggregated with a
-Python loop over coefficients.  The engine collapses a round to
-(approximately) ONE jitted computation:
+PR 1 collapsed a round to one jitted computation but still stacked the K
+sampled clients' data on the host every round and re-uploaded it — the
+dominant non-compute cost on GPU/TPU once the round itself is fused.  The
+engine now consumes a :class:`repro.fl.client_bank.ClientBank`: all N
+clients' bucketed data lives on device as ``[N, B, ...]`` stacks, and a
+round is
 
-    stack K clients' bucketed data [K, B, ...]      (host, cached per bucket)
-      -> vmapped E-epoch local SGD                  (client.batched_local_sgd)
-      -> fused eq.-(4) aggregation over the ravelled
-         model vector                               (server.aggregate_fused,
-                                                     Pallas fl_aggregate on TPU)
-    all inside one jit with the params buffer donated off-CPU, so the
-    global model is updated in place instead of copied every round.
+    gather K selected rows inside the jit  (jnp.take over the bank)
+      -> vmapped E-epoch local SGD           (client.batched_local_sgd)
+      -> fused eq.-(4) aggregation           (server.aggregate_fused;
+                                              Pallas fl_aggregate on TPU)
+    with the params buffer donated off-CPU — ZERO per-round host->device
+    transfers of client data.
 
-Two entry points:
+One gather core (:meth:`_gathered_round`) serves every path, so the
+single-round and multi-round data planes can no longer diverge:
 
-* :meth:`RoundEngine.round_step` — one fused round given pre-stacked client
-  data; the trainer's hot path (controller decisions + sampling stay on the
-  host so stateful controllers and per-round callbacks keep working).
-* :meth:`RoundEngine.run_scan` — benchmark/sweep fast path: an entire
-  multi-round Algorithm-1 rollout (decide -> sample -> train -> aggregate ->
-  queue update) inside a single ``lax.scan``, with channel gains and the lr
-  schedule precomputed as ``[T, ...]`` arrays.  Zero host round-trips
-  between rounds; params and queues are donated through the scan.
+* :meth:`round_step` — one fused round from the bank + a ``selected``
+  index vector; the trainer's hot path (controller decisions + sampling
+  stay on the host so stateful controllers and callbacks keep working).
+* :meth:`run_scan` — benchmark/sweep fast path: an entire multi-round
+  Algorithm-1 rollout (decide -> sample -> train -> aggregate -> queue
+  update) inside a single ``lax.scan`` over the same bank.
+* :meth:`round_step_stacked` — the PR-1 host-stacked round, retained for
+  bank-vs-host equivalence tests and transfer-cost benchmarking.
 
-Bucketing contract: see ``repro.fl.client`` — client datasets are cyclically
-tiled to a power-of-two number of mini-batches, sized from ``ceil(n / bs)``
-so the bucket always holds at least ``n`` rows (every example appears in the
-tiled stream) while compiled shapes stay O(log(max_n / batch_size)) per task.
+Mesh sharding: pass ``mesh`` (e.g. ``launch.mesh.make_fl_mesh()`` or the
+``data`` axis of ``launch.mesh.make_production_mesh()``) and the K-client
+axis of every round is ``shard_map``ped over ``mesh_axis``: each shard
+trains K/shards clients and reduces its partial eq.-(4) term, the partials
+``psum`` across shards (``server.aggregate_fused_psum``), and params stay
+replicated.  The bank itself shards its N axis over the same mesh when
+divisible.
+
+Bucketing contract: see ``repro.fl.client`` / ``repro.data.pipeline`` —
+the bank tiles every client to ONE global power-of-two bucket, so each
+task compiles exactly one data shape, and ``num_steps``/``num_examples``
+masks preserve true per-client step counts and sampling statistics.
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core import queues as vq
 from repro.core import solver as slv
 from repro.core import system_model as sm
 from repro.fl import client as fl_client
 from repro.fl import server as fl_server
+from repro.fl.client_bank import ClientBank
 
 PyTree = Any
 
@@ -56,128 +69,159 @@ def _default_donate() -> bool:
 class RoundEngine:
     """Executes FL rounds as fused, device-resident computations.
 
-    Jitted executables are cached per (steps_per_epoch, K, policy) — the
-    bucketing contract keeps that cache small.  The host-side pad cache
-    assumes ``client_data`` is stable across calls (true for the trainer)
-    and is bounded at one tiled copy per client (the largest bucket seen;
-    smaller buckets are prefix slices of it).
+    Jitted executables are cached per (steps_per_epoch, masked) for single
+    rounds and (steps, K, policy, masked) for scans — with the bank's one
+    global bucket that is a single step executable per trainer.  Bank
+    buffers are never donated; only params (and the scan's queues) are.
     """
 
     def __init__(self, task: fl_client.Task, client_cfg: fl_client.ClientConfig,
-                 impl: str = "auto", donate: Optional[bool] = None):
+                 impl: str = "auto", donate: Optional[bool] = None,
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 mesh_axis: str = "data"):
         self.task = task
         self.cfg = client_cfg
         self.impl = impl
         self.donate = _default_donate() if donate is None else donate
-        self._step_fns: Dict[int, Any] = {}
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
+        self._step_fns: Dict[tuple, Any] = {}
+        self._stacked_fns: Dict[tuple, Any] = {}
         self._scan_fns: Dict[tuple, Any] = {}
-        self._pad_cache: Dict[int, tuple] = {}
 
-    # -- host-side data prep ---------------------------------------------
+    def make_bank(self, client_data) -> ClientBank:
+        """Build the device-resident bank this engine's rounds gather from
+        (client axis co-sharded with the engine's mesh)."""
+        return ClientBank(client_data, self.cfg, mesh=self.mesh,
+                          mesh_axis=self.mesh_axis)
 
-    def bucket_examples(self, sizes: Sequence[int]) -> int:
-        """Bucketed example count B for a set of client dataset sizes.
+    # -- shared round core -------------------------------------------------
 
-        Sized from ``ceil(n_i / bs)`` so ``B >= max_i n_i`` — the cyclic
-        tiling then contains every client's every example.  The *applied*
-        per-epoch step count stays the floor-based ``max(n_i // bs, 1)``
-        (see :meth:`stack_clients`), so step semantics are unchanged.
-        """
-        bs = self.cfg.batch_size
-        steps = max(max(-(-int(s) // bs), 1) for s in sizes)
-        return fl_client.bucket_num_batches(steps) * bs
+    def _shards(self) -> int:
+        if self.mesh is None:
+            return 1
+        return int(self.mesh.shape[self.mesh_axis])
 
-    def stack_clients(self, client_data: Sequence[tuple],
-                      selected: np.ndarray
-                      ) -> Tuple[np.ndarray, np.ndarray,
-                                 Optional[np.ndarray], Optional[np.ndarray]]:
-        """Gather + tile the selected clients' data to [K, B, ...].
-
-        Returns (xs, ys, num_steps, num_examples).  ``num_steps`` and
-        ``num_examples`` are both None when every selected client exactly
-        fills the bucket (selects the cheaper unmasked SGD trace — no
-        per-step ``where`` over the pytree); otherwise [K] true per-epoch
-        step counts and true dataset sizes (the latter keeps epoch
-        sampling off the padded duplicate rows).  Both traces live under
-        the same per-bucket jit executable;
-        :meth:`FederatedTrainer.warmup` pre-compiles the reachable ones.
-        """
-        bs = self.cfg.batch_size
-        idxs = [int(i) for i in np.asarray(selected)]
-        sizes = [client_data[i][0].shape[0] for i in idxs]
-        b = self.bucket_examples(sizes)
-        xs, ys = [], []
-        for i in idxs:
-            # Bounded cache: one entry per client, holding the largest
-            # bucket seen.  Cyclic tiling to a smaller bucket is a prefix
-            # of tiling to a larger one (row j is example j mod n), so
-            # smaller buckets are served by slicing.
-            cached = self._pad_cache.get(i)
-            if cached is None or cached[0].shape[0] < b:
-                x, y = client_data[i]
-                cached = fl_client.pad_client_data(np.asarray(x),
-                                                   np.asarray(y), b)
-                self._pad_cache[i] = cached
-            px, py = cached
-            xs.append(px[:b])
-            ys.append(py[:b])
-        steps = np.asarray([max(s // bs, 1) for s in sizes], np.int32)
-        if np.all(steps == b // bs):
-            return np.stack(xs), np.stack(ys), None, None
-        return (np.stack(xs), np.stack(ys), steps,
-                np.asarray(sizes, np.int32))
-
-    def stack_all_clients(self, client_data: Sequence[tuple]
-                          ) -> Tuple[np.ndarray, np.ndarray,
-                                     np.ndarray, np.ndarray]:
-        """Tile every client to one common bucket -> [N, B, ...] (scan path).
-
-        Always returns concrete ``num_steps`` / ``num_examples`` [N]
-        arrays (the scan body gathers per-selection values from them)."""
-        n = len(client_data)
-        xs, ys, num_steps, num_examples = self.stack_clients(
-            client_data, np.arange(n))
-        if num_steps is None:
-            num_steps = np.full(n, xs.shape[1] // self.cfg.batch_size,
-                                np.int32)
-            num_examples = np.full(n, xs.shape[1], np.int32)
-        return xs, ys, num_steps, num_examples
-
-    # -- single fused round ----------------------------------------------
-
-    def _build_step(self, steps: int):
+    def _round_core(self, params, xs, ys, coeffs, lr, rngs, num_steps,
+                    num_examples, steps: int):
+        """Train the stacked clients + aggregate — optionally shard_mapped
+        over the client axis.  Pure trace shared by every entry point."""
         loss_fn, cfg, impl = self.task.loss_fn, self.cfg, self.impl
-
-        def step(params, xs, ys, coeffs, lr, rngs, num_steps, num_examples):
+        shards = self._shards()
+        if shards <= 1:
             deltas, losses = fl_client.batched_local_sgd(
                 loss_fn, params, xs, ys, lr, rngs, cfg, steps,
                 num_steps=num_steps, num_examples=num_examples)
-            new_params = fl_server.aggregate_fused(params, deltas, coeffs,
-                                                   impl=impl)
+            return fl_server.aggregate_fused(params, deltas, coeffs,
+                                             impl=impl), losses
+        k = xs.shape[0]
+        if k % shards:
+            raise ValueError(
+                f"sample_count {k} not divisible by mesh axis "
+                f"{self.mesh_axis!r} size {shards}")
+        axis = self.mesh_axis
+
+        def body(params, lr, xs, ys, coeffs, rngs, ns, ne):
+            deltas, losses = fl_client.batched_local_sgd(
+                loss_fn, params, xs, ys, lr, rngs, cfg, steps,
+                num_steps=ns, num_examples=ne)
+            new_params = fl_server.aggregate_fused_psum(
+                params, deltas, coeffs, axis, impl=impl)
             return new_params, losses
+
+        # P(axis) specs on the None masks apply to zero leaves — one spec
+        # tuple covers both the masked and unmasked traces.
+        sharded = shard_map(
+            body, mesh=self.mesh,
+            in_specs=(P(), P(), P(axis), P(axis), P(axis), P(axis),
+                      P(axis), P(axis)),
+            out_specs=(P(), P(axis)), check_rep=False)
+        return sharded(params, lr, xs, ys, coeffs, rngs, num_steps,
+                       num_examples)
+
+    def _gathered_round(self, params, all_x, all_y, all_steps, all_sizes,
+                        selected, coeffs, lr, rngs, steps: int):
+        """THE gather core: select K clients from ``[N, ...]`` bank stacks
+        inside the trace (``jnp.take``) and run the round on them.  Both
+        ``round_step`` and the scan body go through here, so the two data
+        planes share one implementation."""
+        xs = jnp.take(all_x, selected, axis=0)
+        ys = jnp.take(all_y, selected, axis=0)
+        ns = None if all_steps is None else jnp.take(all_steps, selected)
+        ne = None if all_sizes is None else jnp.take(all_sizes, selected)
+        return self._round_core(params, xs, ys, coeffs, lr, rngs, ns, ne,
+                                steps)
+
+    # -- single fused round ------------------------------------------------
+
+    def _build_step(self, steps: int):
+        def step(params, all_x, all_y, all_steps, all_sizes, selected,
+                 coeffs, lr, rngs):
+            return self._gathered_round(params, all_x, all_y, all_steps,
+                                        all_sizes, selected, coeffs, lr,
+                                        rngs, steps)
 
         donate = (0,) if self.donate else ()
         return jax.jit(step, donate_argnums=donate)
 
-    def round_step(self, global_params: PyTree, xs: np.ndarray,
-                   ys: np.ndarray, coeffs: np.ndarray, lr: float,
-                   rngs: jax.Array, num_steps: Optional[np.ndarray] = None,
-                   num_examples: Optional[np.ndarray] = None
-                   ) -> Tuple[PyTree, jax.Array]:
-        """One fused round: K local trainings + eq.-(4) aggregation, one jit.
+    def round_step(self, global_params: PyTree, bank: ClientBank,
+                   selected: np.ndarray, coeffs: np.ndarray, lr: float,
+                   rngs: jax.Array) -> Tuple[PyTree, jax.Array]:
+        """One fused round gathered from the device-resident bank.
 
-        ``xs``/``ys``: bucketed [K, B, ...] stacks; ``coeffs``: [K] per-draw
-        aggregation weights; ``rngs``: [K, 2] per-client PRNG keys;
-        ``num_steps``: [K] true per-epoch step counts and ``num_examples``:
-        [K] true dataset sizes (both None => every client fills the
-        bucket).  Returns (new global params, per-client losses [K]).  The
-        params argument is donated off-CPU — callers must use the returned
-        pytree.
+        ``selected``: [K] client indices (any integer array — the gather
+        runs inside the jit, so no client data crosses the host boundary);
+        ``coeffs``: [K] per-draw aggregation weights; ``rngs``: [K, 2]
+        per-client PRNG keys.  Returns (new global params, per-client
+        losses [K]).  The params argument is donated off-CPU — callers
+        must use the returned pytree.  Bank buffers are never donated.
+        """
+        selected = np.asarray(selected)
+        if selected.size and not (0 <= int(selected.min()) and
+                                  int(selected.max()) < bank.num_clients):
+            # jnp.take clips out-of-range indices inside the jit, which
+            # would silently train the wrong client — keep the host
+            # path's IndexError semantics.
+            raise IndexError(
+                f"selected indices {selected} out of range for bank of "
+                f"{bank.num_clients} clients")
+        steps = bank.steps_per_epoch
+        all_x, all_y, all_steps, all_sizes = bank.device_args()
+        key = (steps, all_steps is not None)
+        fn = self._step_fns.get(key)
+        if fn is None:
+            fn = self._step_fns[key] = self._build_step(steps)
+        return fn(global_params, all_x, all_y, all_steps, all_sizes,
+                  jnp.asarray(selected, jnp.int32),
+                  jnp.asarray(coeffs, jnp.float32),
+                  jnp.asarray(lr, jnp.float32), rngs)
+
+    # -- PR-1 host-stacked round (equivalence / transfer benchmarking) -----
+
+    def _build_stacked(self, steps: int):
+        def step(params, xs, ys, coeffs, lr, rngs, num_steps, num_examples):
+            return self._round_core(params, xs, ys, coeffs, lr, rngs,
+                                    num_steps, num_examples, steps)
+
+        donate = (0,) if self.donate else ()
+        return jax.jit(step, donate_argnums=donate)
+
+    def round_step_stacked(self, global_params: PyTree, xs: np.ndarray,
+                           ys: np.ndarray, coeffs: np.ndarray, lr: float,
+                           rngs: jax.Array,
+                           num_steps: Optional[np.ndarray] = None,
+                           num_examples: Optional[np.ndarray] = None
+                           ) -> Tuple[PyTree, jax.Array]:
+        """The PR-1 data plane: host-stacked ``[K, B, ...]`` batches
+        uploaded per round (``bank.gather_host`` produces them).  Same
+        round core as :meth:`round_step` — kept so equivalence tests and
+        benchmarks can pin the bank path against it, byte for byte.
         """
         steps = xs.shape[1] // self.cfg.batch_size
-        fn = self._step_fns.get(steps)
+        key = (steps, num_steps is not None)
+        fn = self._stacked_fns.get(key)
         if fn is None:
-            fn = self._step_fns[steps] = self._build_step(steps)
+            fn = self._stacked_fns[key] = self._build_stacked(steps)
         if num_steps is not None:
             num_steps = jnp.asarray(num_steps, jnp.int32)
         if num_examples is not None:
@@ -187,11 +231,9 @@ class RoundEngine:
                   jnp.asarray(lr, jnp.float32), rngs, num_steps,
                   num_examples)
 
-    # -- multi-round scan fast path --------------------------------------
+    # -- multi-round scan fast path ----------------------------------------
 
-    def _build_scan(self, steps: int, k: int, policy: str):
-        loss_fn, cfg, impl = self.task.loss_fn, self.cfg, self.impl
-
+    def _build_scan(self, steps: int, k: int, policy: str, masked: bool):
         def scan_fn(params, queues, sp, all_x, all_y, all_steps, all_sizes,
                     h_seq, lr_seq, rng, V, lam):
             n = sp.num_devices
@@ -212,16 +254,11 @@ class RoundEngine:
                 rng, k_sel, k_cli = jax.random.split(rng, 3)
                 selected = jax.random.choice(k_sel, n, (k,), replace=True,
                                              p=dec.q)
-                xs = jnp.take(all_x, selected, axis=0)
-                ys = jnp.take(all_y, selected, axis=0)
                 rngs = jax.random.split(k_cli, k)
-                deltas, losses = fl_client.batched_local_sgd(
-                    loss_fn, params, xs, ys, lr, rngs, cfg, steps,
-                    num_steps=jnp.take(all_steps, selected),
-                    num_examples=jnp.take(all_sizes, selected))
                 coeffs = w[selected] / (float(k) * dec.q[selected])
-                params = fl_server.aggregate_fused(params, deltas, coeffs,
-                                                   impl=impl)
+                params, losses = self._gathered_round(
+                    params, all_x, all_y, all_steps, all_sizes, selected,
+                    coeffs, lr, rngs, steps)
                 queues = vq.update_queues(
                     queues, vq.energy_increment(sp, h, dec.p, dec.f, dec.q))
                 t = sm.round_time(sp, h, dec.p, dec.f)
@@ -246,39 +283,36 @@ class RoundEngine:
         return jax.jit(scan_fn, donate_argnums=donate)
 
     def run_scan(self, global_params: PyTree, sp: sm.SystemParams,
-                 all_x: np.ndarray, all_y: np.ndarray, h_seq: np.ndarray,
-                 lr_seq: np.ndarray, rng: jax.Array, *,
-                 num_steps: np.ndarray, num_examples: np.ndarray,
-                 queues: Optional[jax.Array] = None, policy: str = "lroa",
-                 V: float = 0.0, lam: float = 0.0
+                 bank: ClientBank, h_seq: np.ndarray, lr_seq: np.ndarray,
+                 rng: jax.Array, *, queues: Optional[jax.Array] = None,
+                 policy: str = "lroa", V: float = 0.0, lam: float = 0.0
                  ) -> Tuple[PyTree, jax.Array, Dict[str, np.ndarray]]:
         """Run ``h_seq.shape[0]`` full Algorithm-1 rounds in one jitted scan.
 
-        ``all_x``/``all_y``: [N, B, ...] bucketed data for every client,
-        ``num_steps``: [N] true per-epoch step counts, ``num_examples``:
-        [N] true dataset sizes — pass all four exactly as
-        :meth:`stack_all_clients` returned them (required so padded
-        clients can't silently over-train or over-sample their duplicated
-        rows relative to Algorithm 1); ``h_seq``: [T, N] channel gains;
-        ``lr_seq``: [T] learning rates.  ``policy`` is 'lroa' (Algorithm 2
-        decisions from V/lam) or 'uni_d' (uniform q, dynamic f/p).
-        Returns (final params, final queues, per-round metric arrays).
-        Both the params pytree and the ``queues`` array are donated
-        off-CPU — callers must use the returned values, not the arguments.
+        ``bank``: the device-resident all-client bank (its ``num_steps`` /
+        ``num_examples`` masks keep padded clients from over-training or
+        over-sampling their duplicated rows relative to Algorithm 1);
+        ``h_seq``: [T, N] channel gains (``ChannelProcess.sample_sequence``
+        or ``sample_jax`` precompute them without host loops); ``lr_seq``:
+        [T] learning rates.  ``policy`` is 'lroa' (Algorithm 2 decisions
+        from V/lam) or 'uni_d' (uniform q, dynamic f/p).  Returns (final
+        params, final queues, per-round metric arrays).  Both the params
+        pytree and the ``queues`` array are donated off-CPU — callers must
+        use the returned values, not the arguments.  Bank buffers are
+        never donated.
         """
         if policy not in ("lroa", "uni_d"):
             raise ValueError(f"unknown policy {policy!r}")
-        steps = all_x.shape[1] // self.cfg.batch_size
-        key = (steps, sp.sample_count, policy)
+        all_x, all_y, all_steps, all_sizes = bank.device_args()
+        key = (bank.steps_per_epoch, sp.sample_count, policy,
+               all_steps is not None)
         fn = self._scan_fns.get(key)
         if fn is None:
             fn = self._scan_fns[key] = self._build_scan(*key)
         if queues is None:
             queues = vq.init_queues(sp.num_devices)
         params, queues, outs = fn(
-            global_params, queues, sp, jnp.asarray(all_x),
-            jnp.asarray(all_y), jnp.asarray(num_steps, jnp.int32),
-            jnp.asarray(num_examples, jnp.int32),
+            global_params, queues, sp, all_x, all_y, all_steps, all_sizes,
             jnp.asarray(h_seq, jnp.float32),
             jnp.asarray(lr_seq, jnp.float32), rng,
             jnp.asarray(V, jnp.float32), jnp.asarray(lam, jnp.float32))

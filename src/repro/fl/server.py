@@ -7,11 +7,15 @@ aggregation rule (paper eq. (4), unbiasedness proof in Appendix A).
 axis ``[K, ...]`` and the weighted reduction lowers to one reduce per leaf.
 The legacy list-of-pytrees :func:`aggregate` stacks and delegates to it.
 
-``aggregate_fused`` is the round engine's device-resident path: the whole
-parameter pytree is ravelled to one flat ``[N]`` vector (``ParamRavel``),
-reduced by the Pallas ``fl_aggregate`` kernel (TPU; pure-jnp XLA reference
-elsewhere), and unravelled back — one fused streaming pass over the model
-instead of a reduce per leaf.
+``aggregate_fused`` is the round engine's device-resident path.  On TPU
+(or forced ``impl='pallas'``) the whole parameter pytree is ravelled to one
+flat ``[N]`` vector (``ParamRavel``), reduced by the Pallas ``fl_aggregate``
+kernel, and unravelled back — one fused streaming pass over the model.
+Off-TPU it dispatches leaf-chunked to ``aggregate_stacked`` (per-leaf
+tensordot): same math, and XLA fuses it without the ravel/concat
+round-trip.  ``aggregate_fused_psum`` is the mesh-sharded form — per-shard
+partial reduce over the local slice of the client axis + cross-shard psum
+(the round engine's ``shard_map`` body).
 """
 
 from __future__ import annotations
@@ -111,18 +115,34 @@ class ParamRavel:
         return jax.tree_util.tree_unflatten(self.treedef, parts)
 
 
+def _use_ravelled_kernel(impl: str) -> bool:
+    """Leaf-chunked dispatch policy: the ravel/concat round-trip only pays
+    off when it feeds the streaming Pallas kernel (TPU, or forced
+    interpret); off-TPU the per-leaf tensordot is the same math with zero
+    reshape/concat traffic (see the ``kernels/fl_aggregate_pytree`` bench
+    row).  Defers to the kernels' own dispatch predicate so the ravelled
+    path and the kernel it feeds can never disagree."""
+    from repro.kernels.ops import use_pallas_kernel  # late import: cycle
+    return use_pallas_kernel(impl)
+
+
 def aggregate_fused(global_params: PyTree, stacked_deltas: PyTree,
                     coeffs: jax.Array, impl: str = "auto",
                     adapter: ParamRavel | None = None) -> PyTree:
     """eq. (4) through the fused flat-vector kernel (Pallas on TPU).
 
-    Ravels the model to one ``[N]`` vector, applies ``fl_aggregate``
-    (``impl='auto'``: Pallas kernel on TPU, jnp reference on CPU — identical
-    math, XLA-fused), and unravels.  Pure trace: embed in the caller's jit
-    and donate the params buffer there to avoid a full-model copy.
+    On the kernel path the model is ravelled to one ``[N]`` vector,
+    reduced by ``fl_aggregate``, and unravelled; off-TPU (``impl='auto'``
+    on CPU/GPU) dispatches leaf-chunked to :func:`aggregate_stacked` —
+    identical math, one tensordot per leaf, no ravel/concat round-trip.
+    Pure trace: embed in the caller's jit and donate the params buffer
+    there to avoid a full-model copy.
     """
     from repro.kernels import fl_aggregate   # late import: avoid cycle
 
+    if not _use_ravelled_kernel(impl):
+        return aggregate_stacked(global_params, stacked_deltas,
+                                 coeffs.astype(jnp.float32))
     if adapter is None:
         adapter = ParamRavel(global_params)
     theta = adapter.ravel(global_params)
@@ -130,6 +150,39 @@ def aggregate_fused(global_params: PyTree, stacked_deltas: PyTree,
     new_theta = fl_aggregate(theta, deltas, coeffs.astype(jnp.float32),
                              impl=impl)
     return adapter.unravel(new_theta)
+
+
+def aggregate_fused_psum(global_params: PyTree, stacked_deltas: PyTree,
+                         coeffs: jax.Array, axis_name: str,
+                         impl: str = "auto",
+                         adapter: ParamRavel | None = None) -> PyTree:
+    """Mesh-sharded eq. (4): per-shard partial reduce + cross-shard psum.
+
+    ``shard_map`` body form of :func:`aggregate_fused`: ``stacked_deltas``
+    carries this shard's slice ``[K/shards, ...]`` of the client axis and
+    ``coeffs`` the matching slice, so each shard runs one partial weighted
+    reduce (Pallas ``fl_delta_reduce`` on TPU, tensordot elsewhere —
+    leaf-chunked off-TPU like the unsharded path), the partials are
+    ``psum``med over ``axis_name``, and theta is added once on the
+    replicated result.
+    """
+    from repro.kernels import fl_delta_reduce   # late import: avoid cycle
+
+    coeffs = coeffs.astype(jnp.float32)
+    if not _use_ravelled_kernel(impl):
+        def combine(p, d):
+            upd = jax.lax.psum(
+                jnp.tensordot(coeffs, d.astype(jnp.float32), axes=1),
+                axis_name)
+            return (p.astype(jnp.float32) + upd).astype(p.dtype)
+        return jax.tree_util.tree_map(combine, global_params,
+                                      stacked_deltas)
+    if adapter is None:
+        adapter = ParamRavel(global_params)
+    upd = fl_delta_reduce(adapter.ravel_stacked(stacked_deltas), coeffs,
+                          impl=impl)
+    upd = jax.lax.psum(upd, axis_name)
+    return adapter.unravel(adapter.ravel(global_params) + upd)
 
 
 def fedavg_reference(global_params: PyTree, deltas: Sequence[PyTree],

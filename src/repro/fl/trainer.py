@@ -3,30 +3,36 @@ latency and energy accounting, and periodic evaluation.
 
 How a round executes (dataflow)
 -------------------------------
+All N clients' bucketed data is stacked into a device-resident
+:class:`~repro.fl.client_bank.ClientBank` ONCE at trainer construction.
 Per round t:
   1. observe channel gains h^t (ChannelProcess)                      [host]
   2. controller decides (f^t, p^t, q^t) — Algorithm 2 for LROA       [jit]
   3. sample K^t draws with replacement by q^t (DivFL selects
      deterministically)                                              [host]
   4. + 5. the fused fast path (``RoundEngine.round_step``): the K
-     selected clients' bucketed data is stacked to [K, B, ...] and a
-     SINGLE jitted computation runs all K local trainings (vmapped
-     E-epoch SGD) and the unbiased aggregation (4) over the ravelled
-     model vector (Pallas ``fl_aggregate`` on TPU).  One dispatch +
-     one loss sync per round instead of ~K jit entries + K syncs.
+     selected clients are gathered from the bank *inside* a SINGLE
+     jitted computation (``jnp.take`` over the ``[N, B, ...]`` stacks)
+     that runs all K local trainings (vmapped E-epoch SGD) and the
+     unbiased aggregation (4) (Pallas ``fl_aggregate`` on TPU) — zero
+     per-round host->device transfers of client data, one dispatch +
+     one loss sync per round.  With a mesh, the client axis is
+     shard_mapped over the ``data`` axis (per-shard training + partial
+     reduce, cross-shard psum).
   6. queues update; latency += max_{n in K^t} T_n^t (eq. 10), energy
      accrues                                                         [host]
 
 DivFL keeps the sequential slow path (one ``local_update`` per client):
 its controller must observe each client's update vector between
-trainings.  ``use_engine=False`` forces the slow path everywhere — the
-equivalence tests pin the two paths against each other.
+trainings.  It reads each client's true examples as a bank slice
+(``ClientBank.client_view``), so the bank is the single source of client
+data either way.  ``use_engine=False`` forces the slow path everywhere —
+the equivalence tests pin the two paths against each other.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
@@ -38,6 +44,7 @@ from repro.core.baselines import DivFLController
 from repro.core.controller import realized_round_time
 from repro.fl import client as fl_client
 from repro.fl import server as fl_server
+from repro.fl.client_bank import ClientBank
 from repro.fl.environment import ChannelProcess
 from repro.fl.round_engine import RoundEngine
 
@@ -83,13 +90,13 @@ class FederatedTrainer:
                  lr_schedule: Callable[[jnp.ndarray], jnp.ndarray],
                  test_data: Optional[tuple] = None,
                  eval_every: int = 10, seed: int = 0,
-                 use_engine: bool = True):
+                 use_engine: bool = True,
+                 mesh: Optional[jax.sharding.Mesh] = None):
         assert len(client_data) == params.num_devices
         self.task = task
         self.params = params
         self.controller = controller
         self.channel = channel
-        self.client_data = client_data
         self.client_cfg = client_cfg
         self.lr_schedule = lr_schedule
         # Pre-convert the test set to device arrays once — evaluate() used to
@@ -99,7 +106,10 @@ class FederatedTrainer:
                            jnp.asarray(test_data[1])))
         self.eval_every = eval_every
         self.use_engine = use_engine
-        self.engine = RoundEngine(task, client_cfg)
+        self.engine = RoundEngine(task, client_cfg, mesh=mesh)
+        # The ONE device upload of client data: every round (fused or
+        # sequential) reads the bank from here on.
+        self.bank = self.engine.make_bank(client_data)
         self._np_rng = np.random.default_rng(seed)
         self._jax_rng = jax.random.PRNGKey(seed)
         self.global_params = task.init(jax.random.PRNGKey(seed + 1))
@@ -121,52 +131,27 @@ class FederatedTrainer:
         without mutating any trainer state — benchmarks call this so
         steady-state timings exclude jit compilation.
 
-        Fused path: for each distinct power-of-two bucket over the client
-        sizes, ``round_step`` runs once per *reachable* trace — unmasked
-        (a selection of exactly-filling clients) and/or masked (any
-        selection containing a padded client) — on a *copy* of the params
-        so donation never touches the live model.  Sequential path: one
-        ``local_update`` per distinct post-padding data shape
-        (``local_update``'s jit specializes on the array shape, not just
-        the step count).  All outputs are discarded.  Warmup *executes*
-        real calls rather than AOT ``lower().compile()`` because the AOT
-        path does not populate the jit call cache — a subsequent real
-        call would trace and compile again.
+        Fused path: the bank's single global bucket means ONE executable
+        covers every selection (`round_step`'s trace depends only on the
+        bank-wide masked/unmasked mode), so one call on a *copy* of the
+        params compiles it (donation never touches the live model).
+        Sequential path: one ``local_update`` per distinct post-padding
+        data shape (``local_update``'s jit specializes on the array
+        shape, not just the step count).  All outputs are discarded.
+        Warmup *executes* real calls rather than AOT ``lower().compile()``
+        because the AOT path does not populate the jit call cache — a
+        subsequent real call would trace and compile again.
         """
         rng = jax.random.PRNGKey(0)
-        sizes = [d[0].shape[0] for d in self.client_data]
+        sizes = [int(s) for s in self.bank.sizes]
         bs = self.client_cfg.batch_size
         if self._fused:
             k = self.params.sample_count
-            # per bucket: a client that fills it exactly (unmasked trace)
-            # and one that doesn't (masked trace), when either exists
-            exact: Dict[int, int] = {}
-            partial: Dict[int, int] = {}
-            for i, n in enumerate(sizes):
-                b = self.engine.bucket_examples([n])
-                (exact if n == b else partial).setdefault(b, i)
-            smallest = int(np.argmin(sizes))
-            selections = []
-            for b in sorted(set(exact) | set(partial)):
-                if b in exact:
-                    selections.append(np.full(k, exact[b], np.int64))
-                if b in partial:
-                    selections.append(np.full(k, partial[b], np.int64))
-                elif k > 1 and sizes[smallest] < b:
-                    # all bucket-b clients fill exactly, but mixing in a
-                    # smaller client still reaches the masked trace
-                    s = np.full(k, exact[b], np.int64)
-                    s[1:] = smallest
-                    selections.append(s)
-            for selected in selections:
-                xs, ys, num_steps, num_examples = self.engine.stack_clients(
-                    self.client_data, selected)
-                p = jax.tree_util.tree_map(jnp.copy, self.global_params)
-                new_p, _ = self.engine.round_step(
-                    p, xs, ys, np.zeros(k, np.float32), 0.0,
-                    jax.random.split(rng, k), num_steps=num_steps,
-                    num_examples=num_examples)
-                jax.block_until_ready(jax.tree_util.tree_leaves(new_p))
+            p = jax.tree_util.tree_map(jnp.copy, self.global_params)
+            new_p, _ = self.engine.round_step(
+                p, self.bank, np.zeros(k, np.int64),
+                np.zeros(k, np.float32), 0.0, jax.random.split(rng, k))
+            jax.block_until_ready(jax.tree_util.tree_leaves(new_p))
         else:
             seen = set()
             for i, n in enumerate(sizes):
@@ -174,7 +159,7 @@ class FederatedTrainer:
                 if eff in seen:
                     continue
                 seen.add(eff)
-                x, y = self.client_data[i]
+                x, y = self.bank.client_view(i)
                 delta, _ = fl_client.local_update(
                     self.task, self.global_params, x, y, 0.0, rng,
                     self.client_cfg)
@@ -209,21 +194,20 @@ class FederatedTrainer:
 
     def _train_fused(self, selected: np.ndarray, coeffs: np.ndarray,
                      lr: float) -> List[float]:
-        """Fast path: one fused jit for all K local trainings + eq. (4)."""
-        xs, ys, num_steps, num_examples = self.engine.stack_clients(
-            self.client_data, selected)
+        """Fast path: one fused jit gathers the selected clients from the
+        device-resident bank, trains all K, and applies eq. (4)."""
         rngs = self._client_rngs(len(selected))
         self.global_params, losses = self.engine.round_step(
-            self.global_params, xs, ys, coeffs, lr, rngs,
-            num_steps=num_steps, num_examples=num_examples)
+            self.global_params, self.bank, selected, coeffs, lr, rngs)
         return [float(l) for l in np.asarray(losses)]
 
     def _train_sequential(self, selected: np.ndarray, coeffs: np.ndarray,
                           lr: float) -> List[float]:
-        """Slow path: per-client dispatch (DivFL / reference semantics)."""
+        """Slow path: per-client dispatch (DivFL / reference semantics),
+        reading each client's true examples as a bank slice."""
         deltas, losses = [], []
         for idx in selected:
-            x, y = self.client_data[int(idx)]
+            x, y = self.bank.client_view(int(idx))
             self._jax_rng, sub = jax.random.split(self._jax_rng)
             delta, loss = fl_client.local_update(
                 self.task, self.global_params, x, y, lr, sub, self.client_cfg)

@@ -9,4 +9,4 @@ Each kernel ships with a jit'd wrapper (ops.py) and a pure-jnp oracle
 """
 
 from repro.kernels.ops import (flash_attention, ssd_chunk, fl_aggregate,
-                               fl_aggregate_pytree)
+                               fl_aggregate_pytree, fl_delta_reduce)

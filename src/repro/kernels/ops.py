@@ -27,6 +27,15 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def use_pallas_kernel(impl: str) -> bool:
+    """THE kernel-dispatch predicate: run the Pallas kernel body (natively
+    on TPU; forced interpret elsewhere via ``impl='pallas'``).  Every
+    wrapper here and the fused-aggregation dispatch in ``repro.fl.server``
+    share it, so a policy change (e.g. a GPU kernel path) lands everywhere
+    at once."""
+    return impl == "pallas" or (impl == "auto" and _on_tpu())
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
                                              "scale", "impl"))
 def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
@@ -34,7 +43,7 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
                     scale: Optional[float] = None,
                     impl: str = "auto") -> Array:
     """q: [B, H, Sq, D]; k, v: [B, Hkv, Sk, D] -> [B, H, Sq, D]."""
-    use_kernel = impl == "pallas" or (impl == "auto" and _on_tpu())
+    use_kernel = use_pallas_kernel(impl)
     interpret = impl == "pallas" and not _on_tpu()
     if use_kernel:
         return flash_attention_tpu(q, k, v, causal=causal, window=window,
@@ -47,7 +56,7 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
 @functools.partial(jax.jit, static_argnames=("chunk", "impl"))
 def ssd_chunk(x: Array, dt: Array, a_log: Array, b_in: Array, c_in: Array,
               *, chunk: int, impl: str = "auto") -> Tuple[Array, Array]:
-    use_kernel = impl == "pallas" or (impl == "auto" and _on_tpu())
+    use_kernel = use_pallas_kernel(impl)
     interpret = impl == "pallas" and not _on_tpu()
     if use_kernel:
         return ssd_chunk_tpu(x, dt, a_log, b_in, c_in, chunk=chunk,
@@ -71,11 +80,32 @@ def ssd_chunk(x: Array, dt: Array, a_log: Array, b_in: Array, c_in: Array,
 def fl_aggregate(theta: Array, deltas: Array, coeffs: Array,
                  impl: str = "auto") -> Array:
     """Fused eq.-(4) aggregation over flattened parameters."""
-    use_kernel = impl == "pallas" or (impl == "auto" and _on_tpu())
+    use_kernel = use_pallas_kernel(impl)
     interpret = impl == "pallas" and not _on_tpu()
     if use_kernel:
         return fl_aggregate_tpu(theta, deltas, coeffs, interpret=interpret)
     return ref.aggregate_reference(theta, deltas, coeffs)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def fl_delta_reduce(deltas: Array, coeffs: Array, impl: str = "auto"
+                    ) -> Array:
+    """Partial eq.-(4) reduce: ``sum_k coeff_k * delta_k`` (no theta add).
+
+    The per-shard term of the mesh-sharded aggregation: each shard reduces
+    its slice of the client axis with one streaming pass, the caller
+    ``psum``s the partials across the mesh, and theta is added once on the
+    replicated result (``repro.fl.server.aggregate_fused_psum``).  On TPU
+    this reuses the ``fl_aggregate`` Pallas kernel against a zero theta;
+    elsewhere it is a single tensordot.
+    """
+    use_kernel = use_pallas_kernel(impl)
+    interpret = impl == "pallas" and not _on_tpu()
+    if use_kernel:
+        zero = jnp.zeros(deltas.shape[1:], jnp.float32)
+        return fl_aggregate_tpu(zero, deltas, coeffs, interpret=interpret)
+    return jnp.tensordot(coeffs.astype(jnp.float32),
+                         deltas.astype(jnp.float32), axes=1)
 
 
 def fl_aggregate_pytree(global_params, stacked_deltas, coeffs,

@@ -21,6 +21,19 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_fl_mesh(num_shards: int | None = None):
+    """1-D ``('data',)`` mesh for FL client-axis sharding.
+
+    The FL round engine ``shard_map``s the K sampled clients (and the
+    ClientBank's N axis) over the ``data`` axis; this builds that axis
+    from the locally visible devices.  On a pod, pass the ``data`` axis
+    of :func:`make_production_mesh` to the engine instead — the axis name
+    is the contract, not the mesh shape.
+    """
+    n = len(jax.devices()) if num_shards is None else num_shards
+    return jax.make_mesh((n,), ("data",))
+
+
 # Roofline hardware constants (TPU v5e, per chip)
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s
 HBM_BW = 819e9                  # bytes/s

@@ -66,34 +66,32 @@ def test_engine_matches_sequential_e2e():
 
 def test_engine_handles_ragged_and_tiny_clients():
     """Unequal sizes (incl. n < batch_size) go through the tiling/bucketing
-    contract; the fused path must train without recompiling per client."""
+    contract; the fused path must train without recompiling per client —
+    the bank's single global bucket means exactly ONE step executable."""
     sizes = [10, 33, 64, 100, 17, 48, 80, 12]
     trainer = _make_trainer(use_engine=True, client_sizes=sizes)
     recs = [trainer.run_round(t) for t in range(3)]
     assert all(np.isfinite(r.mean_loss) for r in recs)
-    # power-of-two bucketing: at most one compiled step per round, and every
-    # cached entry is keyed by a power-of-two steps_per_epoch
-    assert len(trainer.engine._step_fns) <= 3
-    assert all(s & (s - 1) == 0 for s in trainer.engine._step_fns)
+    assert len(trainer.engine._step_fns) == 1
+    # the global bucket is a power-of-two number of batches
+    s = trainer.bank.steps_per_epoch
+    assert s & (s - 1) == 0
 
 
 def test_run_scan_full_rollout():
     trainer = _make_trainer(use_engine=True)
-    eng = trainer.engine
-    all_x, all_y, all_steps, all_sizes = eng.stack_all_clients(
-        trainer.client_data)
-    assert all_x.shape[0] == N_DEVICES
-    assert all_steps.shape == all_sizes.shape == (N_DEVICES,)
+    eng, bank = trainer.engine, trainer.bank
+    assert bank.xs.shape[0] == N_DEVICES
+    assert bank.num_steps.shape == bank.num_examples.shape == (N_DEVICES,)
     rounds = 5
     chan = ChannelProcess(N_DEVICES, ChannelConfig(seed=1))
-    h_seq = np.stack([chan.sample() for _ in range(rounds)])
+    h_seq = chan.sample_sequence(rounds)
     hp = trainer.controller.hp
     params0 = trainer.task.init(jax.random.PRNGKey(7))
     params, queues, m = eng.run_scan(
-        params0, trainer.params, all_x, all_y, h_seq,
+        params0, trainer.params, bank, h_seq,
         np.full(rounds, 0.1, np.float32), jax.random.PRNGKey(8),
-        num_steps=all_steps, num_examples=all_sizes, policy="lroa",
-        V=hp.V, lam=hp.lam)
+        policy="lroa", V=hp.V, lam=hp.lam)
     assert m["loss"].shape == (rounds,)
     assert m["selected"].shape == (rounds, trainer.params.sample_count)
     assert np.all(np.isfinite(m["loss"]))
@@ -107,10 +105,10 @@ def test_run_scan_full_rollout():
 
 
 def test_warmup_compiles_all_buckets_without_mutating_state():
-    """warmup() must pre-build every executable the run can hit (ragged
-    sizes -> several buckets) while leaving the trainer's RNG streams,
-    params, channel, and controller untouched, so a warmed run reproduces
-    an unwarmed one exactly."""
+    """warmup() must pre-build every executable the run can hit (the
+    bank's single global bucket -> exactly one) while leaving the
+    trainer's RNG streams, params, channel, and controller untouched, so
+    a warmed run reproduces an unwarmed one exactly."""
     sizes = [10, 33, 64, 100, 17, 48, 80, 12]
     t_cold = _make_trainer(use_engine=True, client_sizes=sizes)
     t_warm = _make_trainer(use_engine=True, client_sizes=sizes)
@@ -120,11 +118,10 @@ def test_warmup_compiles_all_buckets_without_mutating_state():
         return sum(f._cache_size()
                    for f in t_warm.engine._step_fns.values())
     n_compiled, n_traces = len(t_warm.engine._step_fns), traces()
-    assert n_compiled >= 2   # ragged sizes span more than one bucket
+    assert n_compiled == 1   # one global bucket -> one executable
     recs_cold = [t_cold.run_round(t) for t in range(3)]
     recs_warm = [t_warm.run_round(t) for t in range(3)]
-    # the measured rounds built no new executables — neither a new bucket
-    # jit nor a new masked/unmasked trace under an existing one...
+    # the measured rounds built no new executables and no new traces...
     assert len(t_warm.engine._step_fns) == n_compiled
     assert traces() == n_traces
     # ...and warmup changed nothing observable
@@ -138,16 +135,13 @@ def test_run_scan_uni_d_policy():
     trace and produce sane decisions, not just the lroa default."""
     trainer = _make_trainer(use_engine=True)
     eng = trainer.engine
-    all_x, all_y, all_steps, all_sizes = eng.stack_all_clients(
-        trainer.client_data)
     rounds = 3
     chan = ChannelProcess(N_DEVICES, ChannelConfig(seed=2))
-    h_seq = np.stack([chan.sample() for _ in range(rounds)])
+    h_seq = chan.sample_sequence(rounds)
     params, queues, m = eng.run_scan(
-        trainer.task.init(jax.random.PRNGKey(3)), trainer.params, all_x,
-        all_y, h_seq, np.full(rounds, 0.1, np.float32),
-        jax.random.PRNGKey(4), num_steps=all_steps,
-        num_examples=all_sizes, policy="uni_d")
+        trainer.task.init(jax.random.PRNGKey(3)), trainer.params,
+        trainer.bank, h_seq, np.full(rounds, 0.1, np.float32),
+        jax.random.PRNGKey(4), policy="uni_d")
     assert np.all(np.isfinite(m["loss"]))
     np.testing.assert_allclose(m["q_min"], 1.0 / N_DEVICES, rtol=1e-6)
     np.testing.assert_allclose(m["q_max"], 1.0 / N_DEVICES, rtol=1e-6)
@@ -294,35 +288,40 @@ def test_num_steps_masks_to_true_step_count():
 def test_bucket_contains_every_example_when_not_batch_divisible():
     """Regression: n=40, bs=16 has floor(n/bs)=2 already a power of two, so
     the bucket used to be 32 < n and the last 8 examples never trained on
-    the fused path.  The bucket must hold >= n rows (ceil-based sizing),
-    the tiled stream every example, and the applied step count must stay
-    the floor-based Algorithm-1 count."""
+    the fused path.  The global bank bucket must hold >= max_i n_i rows
+    (ceil-based sizing), the tiled stream every example, and the applied
+    step count must stay the floor-based Algorithm-1 count."""
+    from repro.data.pipeline import bucket_examples
     task = MLPTask(input_dim=16, num_classes=3, hidden=8)
     eng = RoundEngine(task, ClientConfig(local_epochs=1, batch_size=16))
-    assert eng.bucket_examples([40]) >= 40
+    assert bucket_examples([40], 16) >= 40
     sizes = [40, 33, 17, 64]
     rng = np.random.default_rng(0)
     client_data = [(np.arange(n, dtype=np.float32)[:, None] + 1000 * j,
                     rng.integers(0, 3, n))
                    for j, n in enumerate(sizes)]
-    xs, ys, num_steps, num_examples = eng.stack_clients(
-        client_data, np.arange(len(sizes)))
-    b = xs.shape[1]
+    bank = eng.make_bank(client_data)
+    b = bank.bucket_examples
     assert b >= max(sizes)
+    xs = np.asarray(bank.xs)
     for j, n in enumerate(sizes):
         # cyclic tiling: row r of the bucket is example r mod n, so every
         # original example appears in the padded stream
         np.testing.assert_array_equal(xs[j][:, 0],
                                       (np.arange(b) % n) + 1000 * j)
-    np.testing.assert_array_equal(num_steps,
+    np.testing.assert_array_equal(np.asarray(bank.num_steps),
                                   [max(n // 16, 1) for n in sizes])
-    np.testing.assert_array_equal(num_examples, sizes)
-    # a smaller-bucket selection is served by slicing the cached copy;
-    # the pad cache stays bounded at one entry per client
-    sx, _, _, _ = eng.stack_clients(client_data, np.asarray([2]))
-    assert sx.shape[1] == 32
-    np.testing.assert_array_equal(sx[0][:, 0], (np.arange(32) % 17) + 2000)
-    assert len(eng._pad_cache) == len(sizes)
+    np.testing.assert_array_equal(np.asarray(bank.num_examples), sizes)
+    # the host gather view serves the same tiled rows as the device bank
+    sx, _, ns, ne = bank.gather_host(np.asarray([2]))
+    assert sx.shape[1] == b
+    np.testing.assert_array_equal(sx[0][:, 0], (np.arange(b) % 17) + 2000)
+    np.testing.assert_array_equal(ns, [1])
+    np.testing.assert_array_equal(ne, [17])
+    # and the true-example view recovers exactly the original client data
+    vx, vy = bank.client_view(2)
+    np.testing.assert_array_equal(vx, client_data[2][0])
+    np.testing.assert_array_equal(vy, client_data[2][1])
 
 
 def test_padded_sampling_draws_each_real_example_at_most_once():
@@ -393,6 +392,8 @@ def test_bench_smoke(tmp_path, monkeypatch, capsys):
     out = capsys.readouterr().out
     assert "kernels/fl_aggregate" in out
     assert "round_engine/fused" in out
+    assert "round_engine/bank_resident" in out
+    assert "round_engine/host_restacked" in out
     assert "latency_saving_vs_uni_d" in out     # convergence section
     assert "lambda_sweep" in out and "k_sweep" in out
     assert "v_sweep" in out and "heterogeneity_sweep" in out
@@ -402,3 +403,4 @@ def test_bench_smoke(tmp_path, monkeypatch, capsys):
         (tmp_path / "BENCH_round_engine.smoke.json").read_text())
     assert bench["engine_rounds_per_sec"] > 0
     assert bench["speedup_scan_vs_seq"] > 0
+    assert bench["speedup_bank_vs_host_restacked"] > 0

@@ -18,6 +18,13 @@ data, K) and only swaps the execution strategy:
 * ``scan``           — whole rollout in one jit (decide/sample/train/
   aggregate/queue-update inside ``lax.scan`` over the same bank).
 
+A second section holds the data volume fixed but skews the partition
+(dirichlet-0.5 sizes, the non-iid workload of Luo et al. / Dinh et al.)
+and compares the single-global-bucket bank against the bucket-ladder
+``TieredClientBank``: device rows held (padded vs true example counts —
+the memory win the ladder exists for) and rounds/sec under identical
+mixed-tier selections.
+
 Emits ``BENCH_round_engine.json`` with rounds/sec for the trajectory so the
 perf numbers are tracked across PRs.  The default shape is the acceptance
 operating point K=8, N=120.
@@ -36,7 +43,8 @@ import numpy as np
 from benchmarks.common import csv_row
 from repro.core import LROAController, estimate_hyperparams, paper_default_params
 from repro.data import synthetic_image_classification
-from repro.fl import ChannelConfig, ChannelProcess, ClientConfig, FederatedTrainer
+from repro.fl import (ChannelConfig, ChannelProcess, ClientConfig,
+                      FederatedTrainer, RoundEngine)
 from repro.models import MLPTask
 from repro.optim import constant
 
@@ -157,6 +165,89 @@ def _scan_rounds_per_sec(cfg: EngineBenchConfig) -> float:
     return cfg.rounds / (time.perf_counter() - t0)
 
 
+def _skewed_client_data(cfg: EngineBenchConfig, alpha: float = 0.5):
+    """Dirichlet-``alpha`` split of the SAME total data volume as the
+    uniform sections (``N * examples_per_client``), so padded-row counts
+    are directly comparable."""
+    rng = np.random.default_rng(cfg.seed + 1)
+    n = cfg.num_devices
+    total = n * cfg.examples_per_client
+    props = rng.dirichlet(np.full(n, alpha))
+    sizes = np.maximum((props * total).astype(np.int64), 2)
+    # the largest client absorbs the floor/clamp remainder so the skewed
+    # partition holds EXACTLY the uniform sections' example count
+    sizes[np.argmax(sizes)] += total - sizes.sum()
+    assert sizes.min() >= 2 and sizes.sum() == total
+    x, y = synthetic_image_classification(int(sizes.sum()), cfg.image_shape,
+                                          cfg.num_classes, noise=0.3,
+                                          seed=cfg.seed)
+    offs = np.cumsum(np.concatenate([[0], sizes]))
+    return sizes, [(x[offs[i]:offs[i + 1]], y[offs[i]:offs[i + 1]])
+                   for i in range(n)]
+
+
+def _skewed_bank_section(cfg: EngineBenchConfig, alpha: float = 0.5):
+    """Single-bucket vs bucket-ladder bank on the skewed partition:
+    device rows held (padded vs true) and rounds/sec under identical
+    mixed-tier selections.  Returns (csv rows, json sub-dict)."""
+    sizes, cd = _skewed_client_data(cfg, alpha)
+    task = MLPTask(input_dim=int(np.prod(cfg.image_shape)),
+                   num_classes=cfg.num_classes, hidden=32)
+    eng = RoundEngine(task, ClientConfig(local_epochs=cfg.local_epochs,
+                                         batch_size=cfg.batch_size))
+    k = cfg.sample_count
+    plane_rounds = cfg.rounds * 10
+    # one fixed selection sequence: the warm pass compiles every hit-tier
+    # subset the timed pass will see, and both bank modes replay it
+    sel_rng = np.random.default_rng(cfg.seed)
+    selections = [sel_rng.integers(0, cfg.num_devices, k)
+                  for _ in range(plane_rounds)]
+    rngs = jax.random.split(jax.random.PRNGKey(cfg.seed), k)
+    coeffs = np.full(k, 1.0 / k, np.float32)
+    stats = {"alpha": alpha, "sizes_min": int(sizes.min()),
+             "sizes_max": int(sizes.max()),
+             "true_examples": int(sizes.sum())}
+    for mode in ("single", "tiered"):
+        bank = eng.make_bank(cd, tiered=mode)
+        stats[f"padded_examples_{mode}"] = bank.padded_examples
+        stats[f"padding_ratio_{mode}"] = (bank.padded_examples /
+                                          bank.true_examples)
+        if mode == "tiered":
+            stats["tier_buckets"] = list(bank.tier_buckets)
+            stats["tier_counts"] = [int(m.size)
+                                    for m in bank.tier_members]
+        params = task.init(jax.random.PRNGKey(0))
+        for sel in selections:                      # compile + warm pass
+            params, losses = eng.round_step(params, bank, sel, coeffs,
+                                            cfg.lr, rngs)
+        jax.block_until_ready(losses)
+        t0 = time.perf_counter()
+        for sel in selections:                      # timed replay
+            params, losses = eng.round_step(params, bank, sel, coeffs,
+                                            cfg.lr, rngs)
+            jax.block_until_ready(losses)
+        stats[f"{mode}_rounds_per_sec"] = (plane_rounds /
+                                           (time.perf_counter() - t0))
+    stats["padding_saving_tiered_vs_single"] = (
+        stats["padded_examples_single"] / stats["padded_examples_tiered"])
+    tag = f"K{cfg.sample_count}N{cfg.num_devices}dir{alpha}"
+    rows = [
+        csv_row(f"round_engine/skewed_single_bucket/{tag}",
+                1e6 / stats["single_rounds_per_sec"],
+                f"rounds_per_sec={stats['single_rounds_per_sec']:.2f};"
+                f"padded_examples={stats['padded_examples_single']};"
+                f"padding_ratio={stats['padding_ratio_single']:.2f}"),
+        csv_row(f"round_engine/skewed_tiered_bank/{tag}",
+                1e6 / stats["tiered_rounds_per_sec"],
+                f"rounds_per_sec={stats['tiered_rounds_per_sec']:.2f};"
+                f"padded_examples={stats['padded_examples_tiered']};"
+                f"padding_ratio={stats['padding_ratio_tiered']:.2f};"
+                f"mem_saving_vs_single="
+                f"{stats['padding_saving_tiered_vs_single']:.2f}"),
+    ]
+    return rows, stats
+
+
 def run(cfg: Optional[EngineBenchConfig] = None, smoke: bool = False,
         json_path: Optional[str] = None) -> List[str]:
     if cfg is None:
@@ -170,6 +261,7 @@ def run(cfg: Optional[EngineBenchConfig] = None, smoke: bool = False,
     host = _data_plane_rounds_per_sec(cfg, bank_resident=False)
     bank = _data_plane_rounds_per_sec(cfg, bank_resident=True)
     scan = _scan_rounds_per_sec(cfg)
+    skew_rows, skew_stats = _skewed_bank_section(cfg)
     result = {
         "config": dataclasses.asdict(cfg),
         "backend": jax.default_backend(),
@@ -181,6 +273,7 @@ def run(cfg: Optional[EngineBenchConfig] = None, smoke: bool = False,
         "speedup_engine_vs_seq": eng / seq,
         "speedup_bank_vs_host_restacked": bank / host,
         "speedup_scan_vs_seq": scan / seq,
+        "skewed": skew_stats,
     }
     with open(json_path, "w") as f:
         json.dump(result, f, indent=2)
@@ -197,7 +290,7 @@ def run(cfg: Optional[EngineBenchConfig] = None, smoke: bool = False,
                 f"speedup_vs_host_restacked={bank / host:.2f}"),
         csv_row(f"round_engine/scan/{tag}", 1e6 / scan,
                 f"rounds_per_sec={scan:.2f};speedup_vs_seq={scan / seq:.2f}"),
-    ]
+    ] + skew_rows
 
 
 if __name__ == "__main__":

@@ -26,15 +26,22 @@ def smoke_config():
                        image_shape=(4, 4, 1), examples=240)
 
 
-def main(argv=None) -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
+def build_parser() -> argparse.ArgumentParser:
+    """The CLI surface, importable without jax/numpy — the docs drift
+    guard (``tools/check_docs.py``) parses every ``python -m
+    benchmarks.run ...`` command quoted in docs/ against this parser."""
+    ap = argparse.ArgumentParser(prog="benchmarks.run", description=__doc__)
     ap.add_argument("--paper-scale", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes everywhere; exercises every bench path")
     ap.add_argument("--skip", default="",
                     help="comma list: convergence,sweeps,kernels,"
                          "round_engine,roofline")
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv=None) -> None:
+    args = build_parser().parse_args(argv)
     skip = set(filter(None, args.skip.split(",")))
 
     from benchmarks.common import BenchConfig

@@ -1,12 +1,31 @@
 """Data pipeline: deterministic shuffled batch iterators, per-client views,
 and the host half of the ClientBank data plane (bucketing + cyclic tiling
 into ``[N, B, ...]`` stacks — see ``repro.fl.client_bank`` for the
-device-resident half).
+device-resident half, and ``docs/architecture.md`` for the full story).
 
-Kept dependency-free (numpy only) and deliberately simple: FL experiments
-iterate small per-client shards; the large-model training path consumes
-``synthetic_lm_tokens`` through ``batch_iterator`` with drop-remainder
-semantics matching the global batch of the assigned input shapes.
+Bucket / tier invariants (the contract every consumer relies on)
+----------------------------------------------------------------
+* A client of ``n`` examples is bucketed to
+  ``client_bucket_examples(n, bs) = next_pow2(ceil(n / bs)) * bs`` rows —
+  sized from the *ceil* step count so the bucket always holds ``>= n``
+  rows and the cyclic tiling (:func:`pad_client_data`) contains every
+  example.  The *applied* per-epoch step count stays the floor-based
+  Algorithm-1 count ``max(n // bs, 1)``.
+* :func:`bucket_examples` is the single GLOBAL bucket (the max of the
+  per-client buckets): one compiled data shape for the whole bank.
+* :func:`assign_tiers` is the bucket LADDER: clients grouped by their
+  per-client power-of-two bucket, optionally merged down to at most
+  ``max_tiers`` rungs (each merge moves the cheapest rung up into the
+  next one, so a merged client's tier bucket still holds ``>= n`` rows).
+  One ``[N_t, B_t, ...]`` stack per tier bounds bank memory by roughly
+  ``sum_i n_i`` instead of the global bucket's ``O(N * max_i n_i)``,
+  while keeping one compiled data shape PER TIER.
+* All of this is host-side numpy only — device placement belongs to
+  ``repro.fl.client_bank``.
+
+The large-model training path consumes ``synthetic_lm_tokens`` through
+``batch_iterator`` with drop-remainder semantics matching the global batch
+of the assigned input shapes.
 """
 
 from __future__ import annotations
@@ -31,16 +50,61 @@ def pad_client_data(x: np.ndarray, y: np.ndarray,
     return x[idx], y[idx]
 
 
+def client_bucket_examples(num_examples: int, batch_size: int) -> int:
+    """One client's own power-of-two bucket: ``next_pow2(ceil(n/bs)) * bs``.
+
+    Sized from the *ceil* step count so the bucket holds ``>= n`` rows and
+    the cyclic tiling contains every example; the applied per-epoch step
+    count stays the floor-based ``max(n // bs, 1)``.
+    """
+    steps = max(-(-int(num_examples) // batch_size), 1)
+    return bucket_num_batches(steps) * batch_size
+
+
 def bucket_examples(sizes: Sequence[int], batch_size: int) -> int:
     """Common bucketed example count B for a set of client dataset sizes.
 
-    Sized from ``ceil(n_i / bs)`` rounded up to the next power of two, so
+    The max of the per-client buckets (:func:`client_bucket_examples`), so
     ``B >= max_i n_i`` — the cyclic tiling then contains every client's
     every example.  The *applied* per-epoch step count stays the
     floor-based ``max(n_i // bs, 1)`` (see :func:`stack_client_arrays`).
     """
-    steps = max(max(-(-int(s) // batch_size), 1) for s in sizes)
-    return bucket_num_batches(steps) * batch_size
+    return max(client_bucket_examples(s, batch_size) for s in sizes)
+
+
+def assign_tiers(sizes: Sequence[int], batch_size: int,
+                 max_tiers: int = 4) -> Tuple[np.ndarray, List[int]]:
+    """Group clients into a ladder of power-of-two bucket tiers.
+
+    Each client starts in the tier of its own bucket
+    (:func:`client_bucket_examples`); if that yields more than
+    ``max_tiers`` distinct rungs, the ladder is merged greedily: the rung
+    whose promotion into the next-larger rung adds the least total padding
+    (``count * (B_next - B)``) is folded upward until at most ``max_tiers``
+    rungs remain.  Merging only ever moves clients to a LARGER bucket, so
+    every tier bucket still holds ``>= n_i`` rows for its members and the
+    whole bucketing contract (cyclic tiling, floor-based applied steps,
+    ``num_examples`` epoch masking) applies per tier unchanged.
+
+    Returns ``(tier_of, tier_buckets)``: ``tier_of[i]`` is client i's tier
+    index into the ascending ``tier_buckets`` list.  Deterministic; a
+    uniform ladder (all clients sharing one bucket) collapses to a single
+    tier, which consumers treat exactly like the single global bucket.
+    """
+    if max_tiers < 1:
+        raise ValueError(f"max_tiers must be >= 1, got {max_tiers}")
+    per = np.asarray([client_bucket_examples(s, batch_size) for s in sizes],
+                     np.int64)
+    buckets = sorted(set(int(b) for b in per))
+    while len(buckets) > max_tiers:
+        counts = [int(np.sum(per == b)) for b in buckets]
+        costs = [counts[j] * (buckets[j + 1] - buckets[j])
+                 for j in range(len(buckets) - 1)]
+        j = int(np.argmin(costs))           # ties -> lowest rung (stable)
+        per[per == buckets[j]] = buckets[j + 1]
+        del buckets[j]
+    tier_of = np.searchsorted(np.asarray(buckets), per).astype(np.int32)
+    return tier_of, buckets
 
 
 def stack_client_arrays(client_data: Sequence[Tuple[np.ndarray, np.ndarray]],

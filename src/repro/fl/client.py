@@ -16,8 +16,11 @@ Two execution modes share the same SGD body (``_local_sgd_body``):
 Padding / bucketing contract (ClientBank / round engine)
 --------------------------------------------------------
 ``vmap`` requires every client in the batch to share a static data shape, so
-the ClientBank pads every client dataset to one GLOBAL bucket of ``B``
-examples (one compiled data shape per task):
+the bank pads every client dataset in a stack to one common bucket of ``B``
+examples — the GLOBAL bucket for a ``ClientBank`` (one compiled data shape
+per task), or that tier's bucket for each rung of a ``TieredClientBank``
+(one compiled data shape per tier; the contract below applies per stack
+verbatim):
 
 * ``B = bucket_num_batches(max_i ceil(n_i / batch_size)) * batch_size`` —
   the bucket is sized from the *ceil* step count rounded up to the next

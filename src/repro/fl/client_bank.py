@@ -37,12 +37,23 @@ keeps each client at its true ``max(n_i // bs, 1)`` applied optimizer
 steps and ``num_examples`` keeps epoch sampling off the padded duplicate
 rows, so padding changes neither training distributions nor step counts.
 
-Known limit: the single global bucket makes DEVICE memory
-``O(N * max_i n_i)`` — a heavily skewed partition (one giant client)
-taxes every row with the skew.  Sharding the N axis over the mesh
-divides the per-device cost; a bucket-ladder bank (a few size tiers, one
-stack per tier) is the ROADMAP item for removing the padding waste
-outright.
+Tier ladder (:class:`TieredClientBank`)
+---------------------------------------
+The single global bucket makes DEVICE memory ``O(N * max_i n_i)`` — a
+heavily skewed partition (one giant client) taxes every row with the
+skew.  :class:`TieredClientBank` removes that waste: clients are grouped
+by their own power-of-two bucket into a small ladder of size tiers
+(``data.pipeline.assign_tiers``), each tier is its own
+:class:`ClientBank` holding a ``[N_t, B_t, ...]`` stack, and global
+``tier_of`` / ``pos_in_tier`` index maps translate trainer-level client
+ids to (tier, row).  Device memory is bounded by
+``sum_t N_t * B_t ~ sum_i n_i`` instead of ``N * max_i n_i``, and the
+system compiles one data shape PER TIER instead of one global shape.
+All per-tier invariants (cyclic tiling, masks, masked/unmasked trace
+equivalence, never-donated buffers, mesh N-axis sharding when divisible)
+are inherited unchanged from the per-tier :class:`ClientBank`, and a
+one-tier ladder is literally a single :class:`ClientBank` — the round
+engine's tiered path is bit-identical to the single-bucket path there.
 """
 
 from __future__ import annotations
@@ -53,7 +64,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.data.pipeline import stack_client_arrays
+from repro.data.pipeline import assign_tiers, stack_client_arrays
 from repro.fl import client as fl_client
 
 
@@ -123,6 +134,16 @@ class ClientBank:
         """True per-client dataset sizes ``n_i`` (host, [N])."""
         return self._num_examples
 
+    @property
+    def true_examples(self) -> int:
+        """``sum_i n_i`` — the irreducible example count."""
+        return int(self._num_examples.sum())
+
+    @property
+    def padded_examples(self) -> int:
+        """``N * B`` — device rows actually held (incl. tiling padding)."""
+        return self.num_clients * self.bucket_examples
+
     def device_args(self) -> Tuple[jax.Array, jax.Array,
                                    Optional[jax.Array],
                                    Optional[jax.Array]]:
@@ -169,3 +190,81 @@ class ClientBank:
         the cyclic-tiling contract).  The sequential / DivFL path reads
         these instead of retained caller datasets."""
         return self._clients[i]
+
+
+class TieredClientBank:
+    """Bucket-ladder bank: one :class:`ClientBank` per power-of-two size
+    tier, plus global-index maps.
+
+    Clients are grouped by ``data.pipeline.assign_tiers`` (per-client
+    power-of-two buckets, greedily merged down to ``max_tiers`` rungs).
+    Tier ``t`` holds its members' data as an ordinary per-tier
+    :class:`ClientBank` — a ``[N_t, B_t, ...]`` device stack with that
+    tier's masks, inheriting every single-bucket invariant — so device
+    memory is ``sum_t N_t * B_t`` (~``sum_i n_i``) instead of the global
+    bucket's ``N * max_i n_i``.
+
+    The maps are the tiered contract: ``tier_of[i]`` names client i's
+    tier and ``pos_in_tier[i]`` its row in that tier's stack (members
+    keep ascending global order within a tier, so a one-tier ladder has
+    ``pos_in_tier == arange(N)`` and the single tier IS the single-bucket
+    bank).  ``tier_of_device`` / ``pos_device`` are the same maps as
+    device arrays for the round engine's in-jit tier loop (run_scan).
+    """
+
+    def __init__(self, client_data: Sequence[tuple],
+                 client_cfg: fl_client.ClientConfig,
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 mesh_axis: str = "data", max_tiers: int = 4,
+                 assignment: Optional[tuple] = None):
+        self.batch_size = client_cfg.batch_size
+        sizes = [int(np.asarray(x).shape[0]) for x, _ in client_data]
+        self.num_clients = len(sizes)
+        # ``assignment``: a precomputed ``assign_tiers`` result, so a
+        # caller that already ran the ladder decision (RoundEngine's
+        # 'auto' mode) can hand it over instead of recomputing it
+        if assignment is None:
+            assignment = assign_tiers(sizes, self.batch_size, max_tiers)
+        tier_of, buckets = assignment
+        self.tier_of = tier_of
+        self.tier_buckets = buckets
+        self.num_tiers = len(buckets)
+        self.tier_members = [np.flatnonzero(tier_of == t)
+                             for t in range(self.num_tiers)]
+        pos = np.zeros(self.num_clients, np.int32)
+        for members in self.tier_members:
+            pos[members] = np.arange(members.size, dtype=np.int32)
+        self.pos_in_tier = pos
+        self.tiers = [ClientBank([client_data[i] for i in members],
+                                 client_cfg, mesh=mesh, mesh_axis=mesh_axis)
+                      for members in self.tier_members]
+        # device copies for the in-jit tier loop (scan samples clients on
+        # device, so the tier routing must be traceable)
+        self.tier_of_device = jnp.asarray(tier_of, jnp.int32)
+        self.pos_device = jnp.asarray(pos, jnp.int32)
+        self.mesh, self.mesh_axis = mesh, mesh_axis
+
+    @property
+    def sizes(self) -> np.ndarray:
+        """True per-client dataset sizes ``n_i`` in GLOBAL order ([N])."""
+        out = np.zeros(self.num_clients, np.int32)
+        for members, bank in zip(self.tier_members, self.tiers):
+            out[members] = bank.sizes
+        return out
+
+    @property
+    def true_examples(self) -> int:
+        """``sum_i n_i`` — the irreducible example count."""
+        return sum(bank.true_examples for bank in self.tiers)
+
+    @property
+    def padded_examples(self) -> int:
+        """``sum_t N_t * B_t`` — device rows held across the ladder."""
+        return sum(bank.padded_examples for bank in self.tiers)
+
+    def client_view(self, i: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Client ``i``'s true (x, y) via its tier's private host copy
+        (the sequential / DivFL path, same contract as
+        :meth:`ClientBank.client_view`)."""
+        return self.tiers[self.tier_of[i]].client_view(
+            int(self.pos_in_tier[i]))

@@ -26,6 +26,23 @@ single-round and multi-round data planes can no longer diverge:
 * :meth:`round_step_stacked` — the PR-1 host-stacked round, retained for
   bank-vs-host equivalence tests and transfer-cost benchmarking.
 
+Tier ladder (:class:`repro.fl.client_bank.TieredClientBank`): a skewed
+bank holds one ``[N_t, B_t, ...]`` stack per power-of-two size tier, and
+a round runs ONE fused gathered round per non-empty tier of the selected
+set — each tier ``jnp.take``s its slots (non-members clamped to row 0 and
+masked out by zeroed coefficients) through the same :meth:`_gathered_round`
+core, and the per-tier eq.-(4) contributions are summed into the params
+(:meth:`_tier_loop_round`).  A selection that lands entirely in one tier
+(including every round of a one-tier ladder) short-circuits to the
+single-bucket executable, bit-identical to :class:`ClientBank` rounds.
+``run_scan`` rides the same tier loop (every tier runs inside the scan
+body; the sampled selection is traced, so emptiness cannot be tested),
+and the mesh-sharded path rides it too — each tier's round shard_maps its
+K-client axis exactly like the single-bucket path.  Executable count
+stays one compiled data shape per tier: per-tier single-bucket steps,
+plus one tiered executable per distinct hit-tier subset (bounded by the
+ladder's ``max_tiers``).
+
 Mesh sharding: pass ``mesh`` (e.g. ``launch.mesh.make_fl_mesh()`` or the
 ``data`` axis of ``launch.mesh.make_production_mesh()``) and the K-client
 axis of every round is ``shard_map``ped over ``mesh_axis``: each shard
@@ -35,9 +52,11 @@ replicated.  The bank itself shards its N axis over the same mesh when
 divisible.
 
 Bucketing contract: see ``repro.fl.client`` / ``repro.data.pipeline`` —
-the bank tiles every client to ONE global power-of-two bucket, so each
-task compiles exactly one data shape, and ``num_steps``/``num_examples``
-masks preserve true per-client step counts and sampling statistics.
+each bank stack tiles its clients to one power-of-two bucket (the global
+bucket for :class:`ClientBank`, one per rung for the tier ladder), so
+each task compiles exactly one data shape per tier, and ``num_steps``/
+``num_examples`` masks preserve true per-client step counts and sampling
+statistics.
 """
 
 from __future__ import annotations
@@ -55,9 +74,20 @@ from repro.core import solver as slv
 from repro.core import system_model as sm
 from repro.fl import client as fl_client
 from repro.fl import server as fl_server
-from repro.fl.client_bank import ClientBank
+from repro.fl.client_bank import ClientBank, TieredClientBank
 
 PyTree = Any
+AnyBank = Any   # ClientBank | TieredClientBank
+
+
+def _tier_parts(parts_key: tuple, buffers: tuple) -> list:
+    """Zip the static per-tier key ``(tid, steps, masked)`` with the
+    matching device buffers ``(xs, ys, ns, ne)`` into the
+    ``(tid, xs, ys, ns, ne, steps)`` entries ``_tier_loop_round``
+    consumes — the ONE place the parts layout is defined, shared by the
+    tiered step and the tiered scan."""
+    return [(tid, xs, ys, ns, ne, steps)
+            for (tid, steps, _), (xs, ys, ns, ne) in zip(parts_key, buffers)]
 
 
 def _default_donate() -> bool:
@@ -70,9 +100,12 @@ class RoundEngine:
     """Executes FL rounds as fused, device-resident computations.
 
     Jitted executables are cached per (steps_per_epoch, masked) for single
-    rounds and (steps, K, policy, masked) for scans — with the bank's one
-    global bucket that is a single step executable per trainer.  Bank
-    buffers are never donated; only params (and the scan's queues) are.
+    rounds and (steps, K, policy, masked) for scans — with a single-bucket
+    bank that is one step executable per trainer; a tier ladder adds one
+    step executable per tier plus one tier-loop executable per distinct
+    hit-tier subset (keyed by the static (tier, steps, masked) tuple).
+    Bank buffers are never donated; only params (and the scan's queues)
+    are.
     """
 
     def __init__(self, task: fl_client.Task, client_cfg: fl_client.ClientConfig,
@@ -88,12 +121,35 @@ class RoundEngine:
         self._step_fns: Dict[tuple, Any] = {}
         self._stacked_fns: Dict[tuple, Any] = {}
         self._scan_fns: Dict[tuple, Any] = {}
+        self._tiered_fns: Dict[tuple, Any] = {}
 
-    def make_bank(self, client_data) -> ClientBank:
+    def make_bank(self, client_data, tiered: str = "auto",
+                  max_tiers: int = 4) -> AnyBank:
         """Build the device-resident bank this engine's rounds gather from
-        (client axis co-sharded with the engine's mesh)."""
-        return ClientBank(client_data, self.cfg, mesh=self.mesh,
-                          mesh_axis=self.mesh_axis)
+        (client axis co-sharded with the engine's mesh).
+
+        ``tiered``: 'auto' builds the bucket-ladder
+        :class:`TieredClientBank` only when the partition actually spans
+        more than one size tier (a uniform ladder IS the single-bucket
+        bank); 'single' forces the one-global-bucket :class:`ClientBank`;
+        'tiered' forces the ladder even when it has one rung.
+        """
+        if tiered not in ("auto", "single", "tiered"):
+            raise ValueError(f"unknown bank mode {tiered!r}")
+        assignment = None
+        if tiered == "auto":
+            from repro.data.pipeline import assign_tiers
+            sizes = [int(np.asarray(x).shape[0]) for x, _ in client_data]
+            assignment = assign_tiers(sizes, self.cfg.batch_size, max_tiers)
+            # the bank reuses this exact assignment, so the auto decision
+            # and the constructed ladder cannot diverge
+            tiered = "single" if len(assignment[1]) == 1 else "tiered"
+        if tiered == "single":
+            return ClientBank(client_data, self.cfg, mesh=self.mesh,
+                              mesh_axis=self.mesh_axis)
+        return TieredClientBank(client_data, self.cfg, mesh=self.mesh,
+                                mesh_axis=self.mesh_axis,
+                                max_tiers=max_tiers, assignment=assignment)
 
     # -- shared round core -------------------------------------------------
 
@@ -152,6 +208,41 @@ class RoundEngine:
         return self._round_core(params, xs, ys, coeffs, lr, rngs, ns, ne,
                                 steps)
 
+    def _tier_loop_round(self, params, parts, tier_sel, pos_sel, coeffs,
+                         lr, rngs):
+        """THE tier loop: one fused gathered round per tier, contributions
+        summed across tiers.
+
+        ``parts``: static sequence of ``(tid, xs, ys, ns, ne, steps)`` —
+        one entry per tier to run; ``tier_sel`` / ``pos_sel``: ``[K]``
+        per-slot tier id and tier-local row.  Each tier runs ALL K slots
+        through :meth:`_gathered_round` on its own stack (one compiled
+        data shape per tier): non-member slots gather row 0 and carry a
+        zeroed coefficient, so they contribute exactly nothing to that
+        tier's eq.-(4) term and their loss is masked out.  The per-tier
+        aggregated params are turned back into update terms and summed —
+        mathematically eq. (4) over the full selection; the f32 summation
+        order differs from a flat single-bucket aggregation (tiers are
+        reduced innermost-first), which only matters at the ulp level.
+        Shared by the tiered ``round_step`` and the tiered scan body, so
+        the two tiered data planes cannot diverge; with a mesh each
+        tier's round shard_maps its K axis via :meth:`_round_core`
+        exactly like the single-bucket path.
+        """
+        upd, losses = None, jnp.zeros(pos_sel.shape, jnp.float32)
+        for tid, xs, ys, ns, ne, steps in parts:
+            mask = tier_sel == tid
+            pos = jnp.where(mask, pos_sel, 0)
+            cf = coeffs * mask.astype(coeffs.dtype)
+            p_t, l_t = self._gathered_round(params, xs, ys, ns, ne, pos,
+                                            cf, lr, rngs, steps)
+            u_t = jax.tree_util.tree_map(lambda a, b: a - b, p_t, params)
+            upd = (u_t if upd is None else
+                   jax.tree_util.tree_map(jnp.add, upd, u_t))
+            losses = losses + l_t.astype(jnp.float32) * mask
+        new_params = jax.tree_util.tree_map(jnp.add, params, upd)
+        return new_params, losses
+
     # -- single fused round ------------------------------------------------
 
     def _build_step(self, steps: int):
@@ -164,7 +255,7 @@ class RoundEngine:
         donate = (0,) if self.donate else ()
         return jax.jit(step, donate_argnums=donate)
 
-    def round_step(self, global_params: PyTree, bank: ClientBank,
+    def round_step(self, global_params: PyTree, bank: AnyBank,
                    selected: np.ndarray, coeffs: np.ndarray, lr: float,
                    rngs: jax.Array) -> Tuple[PyTree, jax.Array]:
         """One fused round gathered from the device-resident bank.
@@ -175,6 +266,11 @@ class RoundEngine:
         per-client PRNG keys.  Returns (new global params, per-client
         losses [K]).  The params argument is donated off-CPU — callers
         must use the returned pytree.  Bank buffers are never donated.
+
+        A :class:`TieredClientBank` routes through the tier loop: one
+        fused gathered round per tier the selection actually hits, with a
+        single-tier selection short-circuiting to the single-bucket
+        executable (bit-identical to a :class:`ClientBank` round).
         """
         selected = np.asarray(selected)
         if selected.size and not (0 <= int(selected.min()) and
@@ -185,6 +281,9 @@ class RoundEngine:
             raise IndexError(
                 f"selected indices {selected} out of range for bank of "
                 f"{bank.num_clients} clients")
+        if isinstance(bank, TieredClientBank):
+            return self._round_step_tiered(global_params, bank, selected,
+                                           coeffs, lr, rngs)
         steps = bank.steps_per_epoch
         all_x, all_y, all_steps, all_sizes = bank.device_args()
         key = (steps, all_steps is not None)
@@ -195,6 +294,58 @@ class RoundEngine:
                   jnp.asarray(selected, jnp.int32),
                   jnp.asarray(coeffs, jnp.float32),
                   jnp.asarray(lr, jnp.float32), rngs)
+
+    # -- tiered rounds -----------------------------------------------------
+
+    def _build_tiered_step(self, parts_key: tuple):
+        """One jit per distinct hit-tier subset: the whole tier loop
+        (every hit tier's gathered round + the cross-tier sum) fuses into
+        a single dispatch.  ``parts_key``: static ``(tid, steps, masked)``
+        per hit tier — buffer pytrees arrive as a matching tuple."""
+        def step(params, buffers, tier_sel, pos_sel, coeffs, rngs, lr):
+            return self._tier_loop_round(params,
+                                         _tier_parts(parts_key, buffers),
+                                         tier_sel, pos_sel, coeffs, lr,
+                                         rngs)
+
+        donate = (0,) if self.donate else ()
+        return jax.jit(step, donate_argnums=donate)
+
+    def _round_step_tiered(self, global_params: PyTree,
+                           bank: TieredClientBank, selected: np.ndarray,
+                           coeffs: np.ndarray, lr: float, rngs: jax.Array
+                           ) -> Tuple[PyTree, jax.Array]:
+        """Tier-aware round: host-side routing (selection indices are host
+        data anyway), device-side training.  Only the tiers the selection
+        hits run — an empty tier costs nothing."""
+        tier_sel = bank.tier_of[selected]
+        pos_sel = bank.pos_in_tier[selected]
+        hit = np.unique(tier_sel)
+        if hit.size <= 1:
+            # whole selection in one tier (or empty, matching the
+            # ClientBank no-op semantics): the tier IS a single-bucket
+            # bank — reuse the classic executable, bit-identical to a
+            # ClientBank round (and to the pre-ladder engine).
+            tier = bank.tiers[int(hit[0]) if hit.size else 0]
+            return self.round_step(global_params, tier, pos_sel, coeffs,
+                                   lr, rngs)
+        parts_key, buffers = [], []
+        for t in hit:
+            tier = bank.tiers[int(t)]
+            xs, ys, ns, ne = tier.device_args()
+            parts_key.append((int(t), tier.steps_per_epoch,
+                              ns is not None))
+            buffers.append((xs, ys, ns, ne))
+        parts_key = tuple(parts_key)
+        fn = self._tiered_fns.get(parts_key)
+        if fn is None:
+            fn = self._tiered_fns[parts_key] = \
+                self._build_tiered_step(parts_key)
+        return fn(global_params, tuple(buffers),
+                  jnp.asarray(tier_sel, jnp.int32),
+                  jnp.asarray(pos_sel, jnp.int32),
+                  jnp.asarray(coeffs, jnp.float32), rngs,
+                  jnp.asarray(lr, jnp.float32))
 
     # -- PR-1 host-stacked round (equivalence / transfer benchmarking) -----
 
@@ -233,9 +384,12 @@ class RoundEngine:
 
     # -- multi-round scan fast path ----------------------------------------
 
-    def _build_scan(self, steps: int, k: int, policy: str, masked: bool):
-        def scan_fn(params, queues, sp, all_x, all_y, all_steps, all_sizes,
-                    h_seq, lr_seq, rng, V, lam):
+    def _build_scan(self, k: int, policy: str, round_fn):
+        """Full-rollout scan over an opaque ``data`` pytree; ``round_fn``
+        (params, data, selected, coeffs, lr, rngs) -> (params, losses)
+        supplies the data plane — the single-bucket gathered round or the
+        tier loop — so both ride one decide/sample/queue-update body."""
+        def scan_fn(params, queues, sp, data, h_seq, lr_seq, rng, V, lam):
             n = sp.num_devices
             w = sp.data_weights
 
@@ -256,9 +410,8 @@ class RoundEngine:
                                              p=dec.q)
                 rngs = jax.random.split(k_cli, k)
                 coeffs = w[selected] / (float(k) * dec.q[selected])
-                params, losses = self._gathered_round(
-                    params, all_x, all_y, all_steps, all_sizes, selected,
-                    coeffs, lr, rngs, steps)
+                params, losses = round_fn(params, data, selected, coeffs,
+                                          lr, rngs)
                 queues = vq.update_queues(
                     queues, vq.energy_increment(sp, h, dec.p, dec.f, dec.q))
                 t = sm.round_time(sp, h, dec.p, dec.f)
@@ -283,7 +436,7 @@ class RoundEngine:
         return jax.jit(scan_fn, donate_argnums=donate)
 
     def run_scan(self, global_params: PyTree, sp: sm.SystemParams,
-                 bank: ClientBank, h_seq: np.ndarray, lr_seq: np.ndarray,
+                 bank: AnyBank, h_seq: np.ndarray, lr_seq: np.ndarray,
                  rng: jax.Array, *, queues: Optional[jax.Array] = None,
                  policy: str = "lroa", V: float = 0.0, lam: float = 0.0
                  ) -> Tuple[PyTree, jax.Array, Dict[str, np.ndarray]]:
@@ -291,28 +444,83 @@ class RoundEngine:
 
         ``bank``: the device-resident all-client bank (its ``num_steps`` /
         ``num_examples`` masks keep padded clients from over-training or
-        over-sampling their duplicated rows relative to Algorithm 1);
-        ``h_seq``: [T, N] channel gains (``ChannelProcess.sample_sequence``
-        or ``sample_jax`` precompute them without host loops); ``lr_seq``:
-        [T] learning rates.  ``policy`` is 'lroa' (Algorithm 2 decisions
-        from V/lam) or 'uni_d' (uniform q, dynamic f/p).  Returns (final
-        params, final queues, per-round metric arrays).  Both the params
-        pytree and the ``queues`` array are donated off-CPU — callers must
-        use the returned values, not the arguments.  Bank buffers are
-        never donated.
+        over-sampling their duplicated rows relative to Algorithm 1); a
+        :class:`TieredClientBank` runs the tier loop inside the scan body
+        — every tier executes each round (the sampled selection is traced,
+        so tier emptiness cannot be tested), with non-member slots masked
+        out by zeroed coefficients; a one-tier ladder delegates to the
+        single-bucket scan unchanged.  ``h_seq``: [T, N] channel gains
+        (``ChannelProcess.sample_sequence`` or ``sample_jax`` precompute
+        them without host loops); ``lr_seq``: [T] learning rates.
+        ``policy`` is 'lroa' (Algorithm 2 decisions from V/lam) or 'uni_d'
+        (uniform q, dynamic f/p).  Returns (final params, final queues,
+        per-round metric arrays).  Both the params pytree and the
+        ``queues`` array are donated off-CPU — callers must use the
+        returned values, not the arguments.  Bank buffers are never
+        donated.
         """
         if policy not in ("lroa", "uni_d"):
             raise ValueError(f"unknown policy {policy!r}")
+        if isinstance(bank, TieredClientBank):
+            if bank.num_tiers == 1:
+                bank = bank.tiers[0]        # the ladder IS one bucket
+            else:
+                return self._run_scan_tiered(global_params, sp, bank,
+                                             h_seq, lr_seq, rng,
+                                             queues=queues, policy=policy,
+                                             V=V, lam=lam)
         all_x, all_y, all_steps, all_sizes = bank.device_args()
-        key = (bank.steps_per_epoch, sp.sample_count, policy,
-               all_steps is not None)
+        steps, masked = bank.steps_per_epoch, all_steps is not None
+        key = (steps, sp.sample_count, policy, masked)
         fn = self._scan_fns.get(key)
         if fn is None:
-            fn = self._scan_fns[key] = self._build_scan(*key)
+            def round_fn(params, data, selected, coeffs, lr, rngs,
+                         steps=steps):
+                return self._gathered_round(params, *data, selected,
+                                            coeffs, lr, rngs, steps)
+            fn = self._scan_fns[key] = self._build_scan(
+                sp.sample_count, policy, round_fn)
         if queues is None:
             queues = vq.init_queues(sp.num_devices)
         params, queues, outs = fn(
-            global_params, queues, sp, all_x, all_y, all_steps, all_sizes,
+            global_params, queues, sp,
+            (all_x, all_y, all_steps, all_sizes),
+            jnp.asarray(h_seq, jnp.float32),
+            jnp.asarray(lr_seq, jnp.float32), rng,
+            jnp.asarray(V, jnp.float32), jnp.asarray(lam, jnp.float32))
+        metrics = {name: np.asarray(v) for name, v in outs.items()}
+        return params, queues, metrics
+
+    def _run_scan_tiered(self, global_params: PyTree, sp: sm.SystemParams,
+                         bank: TieredClientBank, h_seq: np.ndarray,
+                         lr_seq: np.ndarray, rng: jax.Array, *,
+                         queues: Optional[jax.Array], policy: str,
+                         V: float, lam: float
+                         ) -> Tuple[PyTree, jax.Array, Dict[str, np.ndarray]]:
+        """Multi-tier rollout: the scan body rides the same tier loop as
+        ``round_step`` (:meth:`_tier_loop_round`) over ALL tiers."""
+        parts_key, buffers = [], []
+        for t, tier in enumerate(bank.tiers):
+            xs, ys, ns, ne = tier.device_args()
+            parts_key.append((t, tier.steps_per_epoch, ns is not None))
+            buffers.append((xs, ys, ns, ne))
+        parts_key = tuple(parts_key)
+        key = (parts_key, sp.sample_count, policy)
+        fn = self._scan_fns.get(key)
+        if fn is None:
+            def round_fn(params, data, selected, coeffs, lr, rngs):
+                bufs, tier_of, pos = data
+                return self._tier_loop_round(
+                    params, _tier_parts(parts_key, bufs),
+                    jnp.take(tier_of, selected),
+                    jnp.take(pos, selected), coeffs, lr, rngs)
+            fn = self._scan_fns[key] = self._build_scan(
+                sp.sample_count, policy, round_fn)
+        if queues is None:
+            queues = vq.init_queues(sp.num_devices)
+        params, queues, outs = fn(
+            global_params, queues, sp,
+            (tuple(buffers), bank.tier_of_device, bank.pos_device),
             jnp.asarray(h_seq, jnp.float32),
             jnp.asarray(lr_seq, jnp.float32), rng,
             jnp.asarray(V, jnp.float32), jnp.asarray(lam, jnp.float32))

@@ -3,9 +3,13 @@ latency and energy accounting, and periodic evaluation.
 
 How a round executes (dataflow)
 -------------------------------
-All N clients' bucketed data is stacked into a device-resident
-:class:`~repro.fl.client_bank.ClientBank` ONCE at trainer construction.
-Per round t:
+All N clients' bucketed data is stacked into a device-resident bank ONCE
+at trainer construction — a single-bucket
+:class:`~repro.fl.client_bank.ClientBank` for (near-)uniform partitions,
+or the bucket-ladder :class:`~repro.fl.client_bank.TieredClientBank` when
+the partition spans multiple size tiers (``bank_mode='auto'``; skewed
+non-iid splits would otherwise inflate the single global bucket to
+``O(N * max_i n_i)`` device rows).  Per round t:
   1. observe channel gains h^t (ChannelProcess)                      [host]
   2. controller decides (f^t, p^t, q^t) — Algorithm 2 for LROA       [jit]
   3. sample K^t draws with replacement by q^t (DivFL selects
@@ -16,7 +20,9 @@ Per round t:
      that runs all K local trainings (vmapped E-epoch SGD) and the
      unbiased aggregation (4) (Pallas ``fl_aggregate`` on TPU) — zero
      per-round host->device transfers of client data, one dispatch +
-     one loss sync per round.  With a mesh, the client axis is
+     one loss sync per round.  A tiered bank runs one such fused round
+     per tier the selection hits (single-tier selections short-circuit
+     to the single-bucket executable).  With a mesh, the client axis is
      shard_mapped over the ``data`` axis (per-shard training + partial
      reduce, cross-shard psum).
   6. queues update; latency += max_{n in K^t} T_n^t (eq. 10), energy
@@ -44,7 +50,7 @@ from repro.core.baselines import DivFLController
 from repro.core.controller import realized_round_time
 from repro.fl import client as fl_client
 from repro.fl import server as fl_server
-from repro.fl.client_bank import ClientBank
+from repro.fl.client_bank import ClientBank, TieredClientBank
 from repro.fl.environment import ChannelProcess
 from repro.fl.round_engine import RoundEngine
 
@@ -91,7 +97,8 @@ class FederatedTrainer:
                  test_data: Optional[tuple] = None,
                  eval_every: int = 10, seed: int = 0,
                  use_engine: bool = True,
-                 mesh: Optional[jax.sharding.Mesh] = None):
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 bank_mode: str = "auto"):
         assert len(client_data) == params.num_devices
         self.task = task
         self.params = params
@@ -108,8 +115,10 @@ class FederatedTrainer:
         self.use_engine = use_engine
         self.engine = RoundEngine(task, client_cfg, mesh=mesh)
         # The ONE device upload of client data: every round (fused or
-        # sequential) reads the bank from here on.
-        self.bank = self.engine.make_bank(client_data)
+        # sequential) reads the bank from here on.  bank_mode 'auto'
+        # builds the bucket-ladder TieredClientBank only when the
+        # partition spans multiple size tiers.
+        self.bank = self.engine.make_bank(client_data, tiered=bank_mode)
         self._np_rng = np.random.default_rng(seed)
         self._jax_rng = jax.random.PRNGKey(seed)
         self.global_params = task.init(jax.random.PRNGKey(seed + 1))
@@ -131,10 +140,16 @@ class FederatedTrainer:
         without mutating any trainer state — benchmarks call this so
         steady-state timings exclude jit compilation.
 
-        Fused path: the bank's single global bucket means ONE executable
-        covers every selection (`round_step`'s trace depends only on the
-        bank-wide masked/unmasked mode), so one call on a *copy* of the
-        params compiles it (donation never touches the live model).
+        Fused path, single-bucket bank: ONE executable covers every
+        selection (`round_step`'s trace depends only on the bank-wide
+        masked/unmasked mode), so one call on a *copy* of the params
+        compiles it (donation never touches the live model).  Tiered
+        bank: one call per tier compiles each tier's single-bucket
+        executable, plus one mixed selection cycling through the tiers
+        compiles the tier-loop executable for that hit set; other
+        hit-tier subsets (rounds hitting a strict subset of >= 2 tiers)
+        still jit on first occurrence — the per-round compile universe is
+        bounded by the ladder's rung count, not by the selection.
         Sequential path: one ``local_update`` per distinct post-padding
         data shape (``local_update``'s jit specializes on the array
         shape, not just the step count).  All outputs are discarded.
@@ -148,10 +163,21 @@ class FederatedTrainer:
         if self._fused:
             k = self.params.sample_count
             p = jax.tree_util.tree_map(jnp.copy, self.global_params)
-            new_p, _ = self.engine.round_step(
-                p, self.bank, np.zeros(k, np.int64),
-                np.zeros(k, np.float32), 0.0, jax.random.split(rng, k))
-            jax.block_until_ready(jax.tree_util.tree_leaves(new_p))
+            if (isinstance(self.bank, TieredClientBank)
+                    and self.bank.num_tiers > 1):
+                reps = [int(m[0]) for m in self.bank.tier_members]
+                sels = [np.full(k, r, np.int64) for r in reps]
+                sels.append(np.asarray([reps[i % len(reps)]
+                                        for i in range(k)], np.int64))
+            else:
+                sels = [np.zeros(k, np.int64)]
+            for sel in sels:
+                # zero lr/coeffs keep the chained params numerically
+                # inert; chaining respects donation off-CPU
+                p, _ = self.engine.round_step(
+                    p, self.bank, sel, np.zeros(k, np.float32), 0.0,
+                    jax.random.split(rng, k))
+            jax.block_until_ready(jax.tree_util.tree_leaves(p))
         else:
             seen = set()
             for i, n in enumerate(sizes):

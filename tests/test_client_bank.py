@@ -36,7 +36,9 @@ def _engine_and_bank(sizes, **engine_kw):
     task = MLPTask(input_dim=64, num_classes=4, hidden=32)
     eng = RoundEngine(task, ClientConfig(local_epochs=2, batch_size=BS),
                       **engine_kw)
-    bank = eng.make_bank(_client_data(sizes))
+    # this file pins the single-global-bucket ClientBank contract; the
+    # bucket-ladder bank has its own suite (tests/test_tiered_bank.py)
+    bank = eng.make_bank(_client_data(sizes), tiered="single")
     params = task.init(jax.random.PRNGKey(0))
     return eng, bank, params
 
@@ -135,8 +137,9 @@ def test_round_step_reads_no_host_data_after_bank_construction():
     cd = _client_data(sizes)
     task = MLPTask(input_dim=64, num_classes=4, hidden=32)
     eng = RoundEngine(task, ClientConfig(local_epochs=2, batch_size=BS))
-    bank_ctl = eng.make_bank([(x.copy(), y.copy()) for x, y in cd])
-    bank = eng.make_bank(cd)
+    bank_ctl = eng.make_bank([(x.copy(), y.copy()) for x, y in cd],
+                             tiered="single")
+    bank = eng.make_bank(cd, tiered="single")
     assert isinstance(bank.xs, jax.Array)
     for x, y in cd:                      # scribble over the source data
         x[:] = np.nan
@@ -197,7 +200,8 @@ _SHARD_SCRIPT = textwrap.dedent("""
         cfg = ClientConfig(local_epochs=2, batch_size=16)
         eng_s = RoundEngine(task, cfg, mesh=make_fl_mesh())
         eng_1 = RoundEngine(task, cfg)
-        bank_s, bank_1 = eng_s.make_bank(cd), eng_1.make_bank(cd)
+        bank_s = eng_s.make_bank(cd, tiered="single")
+        bank_1 = eng_1.make_bank(cd, tiered="single")
         assert "data" in str(bank_s.xs.sharding)
         params = task.init(jax.random.PRNGKey(0))
         sel = np.asarray([0, 2, 5, 7])
@@ -221,6 +225,31 @@ _SHARD_SCRIPT = textwrap.dedent("""
         _, _, m_1 = eng_1.run_scan(params, sp, bank_1, h, lr,
                                    jax.random.PRNGKey(1), policy="uni_d")
         np.testing.assert_allclose(m_s["loss"], m_1["loss"], atol=1e-6)
+        # the tiered bank's tier loop must ride the same shard_map:
+        # mesh-sharded multi-tier round == single-device multi-tier round
+        tb_s = eng_s.make_bank(cd, tiered="tiered")
+        tb_1 = eng_1.make_bank(cd, tiered="tiered")
+        if tb_1.num_tiers > 1:
+            sel_m = np.asarray([1, 4, 0, 5])   # spans several tiers
+            assert len(np.unique(tb_1.tier_of[sel_m])) > 1
+            p_s, l_s = eng_s.round_step(params, tb_s, sel_m, coeffs, .1,
+                                        rngs)
+            p_1, l_1 = eng_1.round_step(params, tb_1, sel_m, coeffs, .1,
+                                        rngs)
+            for a, b in zip(jax.tree_util.tree_leaves(p_s),
+                            jax.tree_util.tree_leaves(p_1)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           atol=1e-6)
+            np.testing.assert_allclose(np.asarray(l_s), np.asarray(l_1),
+                                       atol=1e-6)
+            _, _, mt_s = eng_s.run_scan(params, sp, tb_s, h, lr,
+                                        jax.random.PRNGKey(1),
+                                        policy="uni_d")
+            _, _, mt_1 = eng_1.run_scan(params, sp, tb_1, h, lr,
+                                        jax.random.PRNGKey(1),
+                                        policy="uni_d")
+            np.testing.assert_allclose(mt_s["loss"], mt_1["loss"],
+                                       atol=1e-6)
     print("SHARDED-OK")
 """)
 

@@ -1,0 +1,17 @@
+"""Docs drift guard, wired into tier-1 so broken links or stale
+benchmark commands in README/docs fail locally, not just in the CI docs
+job (which runs the same tools/check_docs.py)."""
+
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def test_docs_links_and_commands_resolve():
+    out = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_docs.py")],
+        capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "check_docs: OK" in out.stdout

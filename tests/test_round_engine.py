@@ -25,7 +25,8 @@ PER_CLIENT = 64          # 64 = 4 batches of 16 -> power-of-two bucket, no pad
 
 
 def _make_trainer(use_engine, controller_cls=LROAController, seed=0,
-                  client_sizes=None, batch_size=16, with_test=False):
+                  client_sizes=None, batch_size=16, with_test=False,
+                  **trainer_kw):
     sizes = (np.full(N_DEVICES, PER_CLIENT, np.int64)
              if client_sizes is None else np.asarray(client_sizes))
     total = int(sizes.sum())
@@ -43,7 +44,8 @@ def _make_trainer(use_engine, controller_cls=LROAController, seed=0,
         task, params, controller_cls(params, hp),
         ChannelProcess(len(sizes), ChannelConfig(seed=seed)), client_data,
         ClientConfig(local_epochs=2, batch_size=batch_size), constant(0.1),
-        test_data=test, eval_every=100, seed=seed, use_engine=use_engine)
+        test_data=test, eval_every=100, seed=seed, use_engine=use_engine,
+        **trainer_kw)
 
 
 # -- tentpole: fused path == sequential seed path -------------------------
@@ -67,9 +69,12 @@ def test_engine_matches_sequential_e2e():
 def test_engine_handles_ragged_and_tiny_clients():
     """Unequal sizes (incl. n < batch_size) go through the tiling/bucketing
     contract; the fused path must train without recompiling per client —
-    the bank's single global bucket means exactly ONE step executable."""
+    the single-bucket bank (bank_mode='single'; the default now builds a
+    bucket ladder here, covered by tests/test_tiered_bank.py) means
+    exactly ONE step executable."""
     sizes = [10, 33, 64, 100, 17, 48, 80, 12]
-    trainer = _make_trainer(use_engine=True, client_sizes=sizes)
+    trainer = _make_trainer(use_engine=True, client_sizes=sizes,
+                            bank_mode="single")
     recs = [trainer.run_round(t) for t in range(3)]
     assert all(np.isfinite(r.mean_loss) for r in recs)
     assert len(trainer.engine._step_fns) == 1
@@ -106,12 +111,15 @@ def test_run_scan_full_rollout():
 
 def test_warmup_compiles_all_buckets_without_mutating_state():
     """warmup() must pre-build every executable the run can hit (the
-    bank's single global bucket -> exactly one) while leaving the
-    trainer's RNG streams, params, channel, and controller untouched, so
-    a warmed run reproduces an unwarmed one exactly."""
+    single-bucket bank -> exactly one; tiered warmup is covered in
+    tests/test_tiered_bank.py) while leaving the trainer's RNG streams,
+    params, channel, and controller untouched, so a warmed run reproduces
+    an unwarmed one exactly."""
     sizes = [10, 33, 64, 100, 17, 48, 80, 12]
-    t_cold = _make_trainer(use_engine=True, client_sizes=sizes)
-    t_warm = _make_trainer(use_engine=True, client_sizes=sizes)
+    t_cold = _make_trainer(use_engine=True, client_sizes=sizes,
+                           bank_mode="single")
+    t_warm = _make_trainer(use_engine=True, client_sizes=sizes,
+                           bank_mode="single")
     t_warm.warmup()
 
     def traces():
@@ -300,7 +308,7 @@ def test_bucket_contains_every_example_when_not_batch_divisible():
     client_data = [(np.arange(n, dtype=np.float32)[:, None] + 1000 * j,
                     rng.integers(0, 3, n))
                    for j, n in enumerate(sizes)]
-    bank = eng.make_bank(client_data)
+    bank = eng.make_bank(client_data, tiered="single")
     b = bank.bucket_examples
     assert b >= max(sizes)
     xs = np.asarray(bank.xs)
@@ -394,6 +402,8 @@ def test_bench_smoke(tmp_path, monkeypatch, capsys):
     assert "round_engine/fused" in out
     assert "round_engine/bank_resident" in out
     assert "round_engine/host_restacked" in out
+    assert "round_engine/skewed_tiered_bank" in out
+    assert "round_engine/skewed_single_bucket" in out
     assert "latency_saving_vs_uni_d" in out     # convergence section
     assert "lambda_sweep" in out and "k_sweep" in out
     assert "v_sweep" in out and "heterogeneity_sweep" in out
@@ -404,3 +414,8 @@ def test_bench_smoke(tmp_path, monkeypatch, capsys):
     assert bench["engine_rounds_per_sec"] > 0
     assert bench["speedup_scan_vs_seq"] > 0
     assert bench["speedup_bank_vs_host_restacked"] > 0
+    # the skewed section records the ladder's padding/memory win
+    skew = bench["skewed"]
+    assert skew["padded_examples_tiered"] <= skew["padded_examples_single"]
+    assert skew["padded_examples_tiered"] >= skew["true_examples"]
+    assert skew["tiered_rounds_per_sec"] > 0

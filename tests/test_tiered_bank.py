@@ -1,0 +1,353 @@
+"""Bucket-ladder bank: tier assignment edge cases, the TieredClientBank
+index maps and memory bound, and the round engine's tier loop — a one-tier
+ladder is bit-identical to the single-bucket ClientBank, a single-tier
+selection is bit-identical to that tier's host-stacked round, and a
+multi-tier selection matches the composed per-tier eq.-(4) reference
+(tiers the selection misses never run)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (LROAController, estimate_hyperparams,
+                        paper_default_params)
+from repro.data import synthetic_image_classification
+from repro.data.pipeline import assign_tiers, client_bucket_examples
+from repro.fl import (ChannelConfig, ChannelProcess, ClientBank,
+                      ClientConfig, FederatedTrainer, RoundEngine,
+                      TieredClientBank)
+from repro.models import MLPTask
+from repro.optim import constant
+
+BS = 16
+
+
+def _client_data(sizes, seed=3):
+    total = sum(sizes)
+    x, y = synthetic_image_classification(total, (8, 8, 1), num_classes=4,
+                                          noise=0.3, seed=seed)
+    offs = np.cumsum([0] + list(sizes))
+    return [(x[offs[i]:offs[i + 1]], y[offs[i]:offs[i + 1]])
+            for i in range(len(sizes))]
+
+
+def _engine(**kw):
+    task = MLPTask(input_dim=64, num_classes=4, hidden=32)
+    return task, RoundEngine(task, ClientConfig(local_epochs=2,
+                                                batch_size=BS), **kw)
+
+
+def _assert_trees_bitwise(a, b):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def _assert_trees_close(a, b, atol=1e-6):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   atol=atol)
+
+
+# -- tier assignment -------------------------------------------------------
+
+
+def test_assign_tiers_all_equal_collapses_to_one_tier():
+    tier_of, buckets = assign_tiers([64] * 9, BS)
+    np.testing.assert_array_equal(tier_of, 0)
+    assert buckets == [64]
+
+
+def test_assign_tiers_tiny_clients_share_the_one_batch_tier():
+    """n < batch_size buckets to exactly one batch (bs rows)."""
+    tier_of, buckets = assign_tiers([1, 5, 15, 16, 64], BS)
+    assert buckets[0] == BS
+    np.testing.assert_array_equal(tier_of, [0, 0, 0, 0, 1])
+    assert client_bucket_examples(1, BS) == BS
+
+
+def test_assign_tiers_ladder_is_per_client_pow2_buckets():
+    sizes = [64, 10, 33, 64, 100, 17]
+    tier_of, buckets = assign_tiers(sizes, BS)
+    assert buckets == [16, 32, 64, 128]
+    np.testing.assert_array_equal(tier_of, [2, 0, 2, 2, 3, 1])
+    # every client's tier bucket holds all its examples
+    for n, t in zip(sizes, tier_of):
+        assert buckets[t] >= n
+
+
+def test_assign_tiers_merges_down_to_max_tiers():
+    sizes = [10, 20, 40, 70, 140, 300, 600]   # 7 distinct buckets
+    tier_of, buckets = assign_tiers(sizes, BS, max_tiers=3)
+    assert len(buckets) == 3
+    for n, t in zip(sizes, tier_of):          # merge only moves UP
+        assert buckets[t] >= client_bucket_examples(n, BS)
+    # max_tiers=1 degenerates to the single global bucket
+    tier_of, buckets = assign_tiers(sizes, BS, max_tiers=1)
+    assert buckets == [1024] and set(tier_of) == {0}
+    with pytest.raises(ValueError):
+        assign_tiers(sizes, BS, max_tiers=0)
+
+
+# -- bank structure / memory bound -----------------------------------------
+
+
+def test_tiered_bank_maps_views_and_memory_bound():
+    sizes = [64, 10, 33, 64, 100, 17]
+    cd = _client_data(sizes)
+    _, eng = _engine()
+    bank = eng.make_bank(cd, tiered="tiered")
+    assert isinstance(bank, TieredClientBank) and bank.num_tiers == 4
+    np.testing.assert_array_equal(bank.sizes, sizes)
+    for i in range(len(sizes)):               # global -> (tier, row) maps
+        t, r = bank.tier_of[i], bank.pos_in_tier[i]
+        assert bank.tier_members[t][r] == i
+        vx, vy = bank.client_view(i)
+        np.testing.assert_array_equal(vx, cd[i][0])
+        np.testing.assert_array_equal(vy, cd[i][1])
+    single = eng.make_bank(cd, tiered="single")
+    # the ladder's device rows: sum_t N_t * B_t, strictly below the
+    # global bucket's N * B_max and within the per-client pow2 bound
+    assert bank.true_examples == single.true_examples == sum(sizes)
+    assert bank.padded_examples == sum(
+        m.size * b for m, b in zip(bank.tier_members, bank.tier_buckets))
+    assert bank.padded_examples < single.padded_examples
+    assert bank.padded_examples <= sum(
+        client_bucket_examples(n, BS) for n in sizes)
+
+
+def test_make_bank_modes():
+    cd = _client_data([64] * 4)
+    _, eng = _engine()
+    assert isinstance(eng.make_bank(cd), ClientBank)              # auto
+    assert isinstance(eng.make_bank(cd, tiered="tiered"),
+                      TieredClientBank)
+    skewed = _client_data([64, 10, 100, 64])
+    assert isinstance(eng.make_bank(skewed), TieredClientBank)    # auto
+    assert isinstance(eng.make_bank(skewed, tiered="single"), ClientBank)
+    with pytest.raises(ValueError):
+        eng.make_bank(cd, tiered="bogus")
+
+
+# -- tentpole: one-tier ladder == single-bucket bank, bit for bit ----------
+
+
+def test_one_tier_ladder_round_and_scan_bitwise_equal_single_bucket():
+    cd = _client_data([64] * 6)
+    task, eng = _engine()
+    single = eng.make_bank(cd, tiered="single")
+    ladder = eng.make_bank(cd, tiered="tiered")
+    assert ladder.num_tiers == 1
+    params = task.init(jax.random.PRNGKey(0))
+    sel = np.asarray([0, 2, 5, 1])
+    coeffs = np.asarray([.2, .3, .1, .4], np.float32)
+    rngs = jax.random.split(jax.random.PRNGKey(5), 4)
+    p_s, l_s = eng.round_step(params, single, sel, coeffs, .1, rngs)
+    p_t, l_t = eng.round_step(params, ladder, sel, coeffs, .1, rngs)
+    _assert_trees_bitwise(p_s, p_t)
+    np.testing.assert_array_equal(np.asarray(l_s), np.asarray(l_t))
+    sp = paper_default_params(num_devices=6, sample_count=4,
+                              data_sizes=np.full(6, 64, np.float32))
+    h = np.random.default_rng(0).uniform(0.05, 0.4, (4, 6)).astype(
+        np.float32)
+    lr = np.full(4, .1, np.float32)
+    p_s, _, m_s = eng.run_scan(params, sp, single, h, lr,
+                               jax.random.PRNGKey(2), policy="uni_d")
+    p_t, _, m_t = eng.run_scan(params, sp, ladder, h, lr,
+                               jax.random.PRNGKey(2), policy="uni_d")
+    _assert_trees_bitwise(p_s, p_t)
+    np.testing.assert_array_equal(m_s["loss"], m_t["loss"])
+
+
+# -- single-tier selection: bitwise vs that tier's host-stacked round ------
+
+
+def test_selection_within_one_tier_bitwise_equals_tier_stacked_round():
+    sizes = [64, 10, 33, 64, 100, 17]
+    cd = _client_data(sizes)
+    task, eng = _engine()
+    bank = eng.make_bank(cd, tiered="tiered")
+    params = task.init(jax.random.PRNGKey(0))
+    sel = np.asarray([0, 2, 3, 0])            # all in the 64-bucket tier
+    assert len(np.unique(bank.tier_of[sel])) == 1
+    coeffs = np.asarray([.2, .3, .1, .4], np.float32)
+    rngs = jax.random.split(jax.random.PRNGKey(5), 4)
+    p, l = eng.round_step(params, bank, sel, coeffs, .1, rngs)
+    tier = bank.tiers[int(bank.tier_of[sel[0]])]
+    xs, ys, ns, ne = tier.gather_host(bank.pos_in_tier[sel])
+    p_ref, l_ref = eng.round_step_stacked(params, xs, ys, coeffs, .1, rngs,
+                                          ns, ne)
+    _assert_trees_bitwise(p, p_ref)
+    np.testing.assert_array_equal(np.asarray(l), np.asarray(l_ref))
+
+
+# -- multi-tier selection: composed per-tier eq.-(4) reference -------------
+
+
+def _compose_reference(eng, bank, params, sel, coeffs, lr, rngs):
+    """theta + sum over hit tiers of that tier's masked eq.-(4) update,
+    built from per-tier host-stacked rounds — the tier loop's contract."""
+    upd, losses = None, np.zeros(len(sel), np.float32)
+    for t in np.unique(bank.tier_of[sel]):
+        tier = bank.tiers[int(t)]
+        mask = bank.tier_of[sel] == t
+        pos = np.where(mask, bank.pos_in_tier[sel], 0)
+        xs, ys, ns, ne = tier.gather_host(pos)
+        p_t, l_t = eng.round_step_stacked(
+            params, xs, ys, (coeffs * mask).astype(np.float32), lr, rngs,
+            ns, ne)
+        u_t = jax.tree_util.tree_map(lambda a, b: a - b, p_t, params)
+        upd = (u_t if upd is None else
+               jax.tree_util.tree_map(jnp.add, upd, u_t))
+        losses = losses + np.asarray(l_t) * mask
+    return jax.tree_util.tree_map(jnp.add, params, upd), losses
+
+
+def test_multi_tier_selection_matches_composed_reference():
+    sizes = [64, 10, 33, 64, 100, 17]
+    cd = _client_data(sizes)
+    task, eng = _engine()
+    bank = eng.make_bank(cd, tiered="tiered")
+    params = task.init(jax.random.PRNGKey(0))
+    coeffs = np.asarray([.2, .3, .1, .4], np.float32)
+    rngs = jax.random.split(jax.random.PRNGKey(5), 4)
+    sel = np.asarray([1, 4, 0, 5])            # hits 4 distinct tiers
+    assert len(np.unique(bank.tier_of[sel])) == 4
+    p, l = eng.round_step(params, bank, sel, coeffs, .1, rngs)
+    p_ref, l_ref = _compose_reference(eng, bank, params, sel, coeffs, .1,
+                                      rngs)
+    _assert_trees_close(p, p_ref)
+    np.testing.assert_allclose(np.asarray(l), l_ref, atol=1e-6)
+
+
+def test_round_with_empty_tier_skips_it_and_matches_reference():
+    """A selection that misses a tier entirely must not touch that
+    tier's executables — and must still match the composed reference
+    over the tiers it does hit."""
+    sizes = [64, 10, 33, 64, 100, 17]
+    cd = _client_data(sizes)
+    task, eng = _engine()
+    bank = eng.make_bank(cd, tiered="tiered")
+    params = task.init(jax.random.PRNGKey(0))
+    coeffs = np.asarray([.2, .3, .1, .4], np.float32)
+    rngs = jax.random.split(jax.random.PRNGKey(5), 4)
+    sel = np.asarray([1, 0, 2, 1])            # 16- and 64-bucket tiers only
+    hit = tuple(sorted(np.unique(bank.tier_of[sel]).tolist()))
+    assert len(hit) == 2 < bank.num_tiers
+    p, l = eng.round_step(params, bank, sel, coeffs, .1, rngs)
+    (key,) = eng._tiered_fns.keys()           # one executable, hit tiers only
+    assert tuple(t for t, _, _ in key) == hit
+    p_ref, l_ref = _compose_reference(eng, bank, params, sel, coeffs, .1,
+                                      rngs)
+    _assert_trees_close(p, p_ref)
+    np.testing.assert_allclose(np.asarray(l), l_ref, atol=1e-6)
+
+
+def test_tiered_round_accepts_empty_selection_like_single_bucket():
+    """An empty selection is a no-op on the single-bucket path (gather of
+    zero rows); the tiered path must match instead of crashing."""
+    task, eng = _engine()
+    bank = eng.make_bank(_client_data([64, 10, 33, 64]), tiered="tiered")
+    params = task.init(jax.random.PRNGKey(0))
+    empty = np.asarray([], np.int64)
+    coeffs = np.asarray([], np.float32)
+    rngs = jax.random.split(jax.random.PRNGKey(0), 1)[:0]
+    p, l = eng.round_step(params, bank, empty, coeffs, .1, rngs)
+    _assert_trees_bitwise(p, params)
+    assert np.asarray(l).shape == (0,)
+
+
+def test_tiered_round_rejects_out_of_range_selection():
+    _, eng = _engine()
+    bank = eng.make_bank(_client_data([64, 10, 33, 64]), tiered="tiered")
+    coeffs = np.asarray([1.0], np.float32)
+    rngs = jax.random.split(jax.random.PRNGKey(0), 1)
+    params = MLPTask(input_dim=64, num_classes=4, hidden=32).init(
+        jax.random.PRNGKey(0))
+    with pytest.raises(IndexError):
+        eng.round_step(params, bank, np.asarray([4]), coeffs, 0.1, rngs)
+
+
+# -- multi-tier scan -------------------------------------------------------
+
+
+def test_tiered_scan_trains_and_stays_finite():
+    sizes = [64, 10, 33, 64, 100, 17, 48, 12]
+    cd = _client_data(sizes)
+    task, eng = _engine()
+    bank = eng.make_bank(cd, tiered="tiered")
+    assert bank.num_tiers > 1
+    sp = paper_default_params(num_devices=len(sizes), sample_count=4,
+                              data_sizes=np.asarray(sizes, np.float32))
+    rounds = 5
+    h = ChannelProcess(len(sizes), ChannelConfig(seed=1)).sample_sequence(
+        rounds)
+    params0 = task.init(jax.random.PRNGKey(7))
+    params, queues, m = eng.run_scan(
+        params0, sp, bank, h, np.full(rounds, 0.1, np.float32),
+        jax.random.PRNGKey(8), policy="uni_d")
+    assert np.all(np.isfinite(m["loss"]))
+    assert m["selected"].shape == (rounds, 4)
+    assert np.all((m["selected"] >= 0) & (m["selected"] < len(sizes)))
+    moved = max(float(jnp.max(jnp.abs(a - b))) for a, b in
+                zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(params0)))
+    assert moved > 0
+    assert m["loss"][-1] < m["loss"][0]
+
+
+# -- trainer integration ---------------------------------------------------
+
+
+def _make_trainer(sizes, seed=0, **kw):
+    cd = _client_data(list(sizes))
+    params = paper_default_params(num_devices=len(sizes), sample_count=4,
+                                  data_sizes=np.asarray(sizes, np.float32))
+    task = MLPTask(input_dim=64, num_classes=4, hidden=32)
+    hp = estimate_hyperparams(params, 0.1, loss_scale=1.5, mu=1.0, nu=1e5)
+    return FederatedTrainer(
+        task, params, LROAController(params, hp),
+        ChannelProcess(len(sizes), ChannelConfig(seed=seed)), cd,
+        ClientConfig(local_epochs=2, batch_size=BS), constant(0.1),
+        seed=seed, **kw)
+
+
+def test_trainer_auto_bank_mode_picks_ladder_for_skewed_partitions():
+    skewed = [64, 10, 33, 64, 100, 17, 48, 12]
+    t = _make_trainer(skewed)
+    assert isinstance(t.bank, TieredClientBank)
+    recs = [t.run_round(i) for i in range(3)]
+    assert all(np.isfinite(r.mean_loss) for r in recs)
+    t_uni = _make_trainer([64] * 8)
+    assert isinstance(t_uni.bank, ClientBank)
+    # explicit override still available
+    t_single = _make_trainer(skewed, bank_mode="single")
+    assert isinstance(t_single.bank, ClientBank)
+
+
+def test_tiered_warmup_compiles_tier_executables_without_mutating_state():
+    skewed = [64, 10, 33, 64, 100, 17, 48, 12]
+    t_cold = _make_trainer(skewed)
+    t_warm = _make_trainer(skewed)
+    t_warm.warmup()
+    # each tier's single-bucket executable + the all-tier loop exist
+    assert (len(t_warm.engine._step_fns) == t_warm.bank.num_tiers)
+    assert len(t_warm.engine._tiered_fns) >= 1
+    recs_cold = [t_cold.run_round(i) for i in range(3)]
+    recs_warm = [t_warm.run_round(i) for i in range(3)]
+    for a, b in zip(recs_cold, recs_warm):
+        assert a.selected == b.selected
+        assert a.mean_loss == pytest.approx(b.mean_loss, abs=1e-6)
+
+
+def test_tiered_sequential_path_matches_divfl_contract():
+    """use_engine=False reads every client through the tiered bank's
+    client_view — the sequential path must run unchanged on a ladder."""
+    skewed = [64, 10, 33, 64, 100, 17, 48, 12]
+    t = _make_trainer(skewed, use_engine=False)
+    assert isinstance(t.bank, TieredClientBank)
+    rec = t.run_round(0)
+    assert np.isfinite(rec.mean_loss)

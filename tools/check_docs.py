@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""Doc drift guard: README/docs links must resolve, and every
+``python -m benchmarks.run ...`` command quoted in the docs must parse
+against the real benchmark CLI (``benchmarks.run.build_parser``).
+
+Dependency-free (stdlib only — ``benchmarks.run`` imports nothing heavy
+at module level) so CI can run it without installing the jax toolchain:
+
+    python tools/check_docs.py
+
+Exits non-zero with one line per problem.
+"""
+
+from __future__ import annotations
+
+import re
+import shlex
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# [text](target) — excluding images' alt brackets is unnecessary; the
+# target grammar is the same.  External/anchor links are skipped.
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_CMD = re.compile(r"python -m benchmarks\.run[^\n`]*")
+
+
+def doc_files() -> list[Path]:
+    docs = [REPO / "README.md"]
+    docs += sorted((REPO / "docs").glob("*.md"))
+    return [d for d in docs if d.exists()]
+
+
+def check_links(path: Path) -> list[str]:
+    problems = []
+    for target in _LINK.findall(path.read_text()):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not (path.parent / rel).exists():
+            problems.append(f"{path.relative_to(REPO)}: broken link "
+                            f"-> {target}")
+    return problems
+
+
+def check_bench_commands(path: Path) -> list[str]:
+    sys.path.insert(0, str(REPO))
+    from benchmarks.run import build_parser
+    problems = []
+    for cmd in _CMD.findall(path.read_text()):
+        argv = shlex.split(cmd)[3:]          # drop "python -m benchmarks.run"
+        try:
+            build_parser().parse_args(argv)
+        except SystemExit:
+            problems.append(f"{path.relative_to(REPO)}: command does not "
+                            f"parse -> {cmd!r}")
+    return problems
+
+
+def main() -> int:
+    problems = []
+    files = doc_files()
+    required = {"README.md", "docs/architecture.md", "docs/reproducing.md"}
+    present = {str(f.relative_to(REPO)) for f in files}
+    for missing in sorted(required - present):
+        problems.append(f"missing required doc: {missing}")
+    n_cmds = 0
+    for f in files:
+        problems += check_links(f)
+        if f.name == "reproducing.md":
+            cmds = check_bench_commands(f)
+            n_cmds = len(_CMD.findall(f.read_text()))
+            problems += cmds
+    if n_cmds == 0 and "docs/reproducing.md" in present:
+        problems.append("docs/reproducing.md quotes no benchmarks.run "
+                        "commands — the drift guard has nothing to guard")
+    for p in problems:
+        print(f"check_docs: {p}", file=sys.stderr)
+    if not problems:
+        print(f"check_docs: OK ({len(files)} docs, {n_cmds} bench "
+              f"commands verified)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

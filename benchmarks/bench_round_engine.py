@@ -228,6 +228,30 @@ def _skewed_bank_section(cfg: EngineBenchConfig, alpha: float = 0.5):
             jax.block_until_ready(losses)
         stats[f"{mode}_rounds_per_sec"] = (plane_rounds /
                                            (time.perf_counter() - t0))
+        # the scan path on the same skewed bank: the tiered scan body
+        # wraps each tier in a selection-conditioned lax.cond (tier-aware
+        # skipping), so rounds hitting few tiers stop paying
+        # K * sum_t B_t work — this row tracks that win vs the single
+        # global bucket's K * B_max
+        sp = paper_default_params(
+            num_devices=cfg.num_devices, sample_count=k,
+            local_epochs=cfg.local_epochs,
+            data_sizes=sizes.astype(np.float32))
+        chan = ChannelProcess(cfg.num_devices, ChannelConfig(seed=cfg.seed))
+        h_seq = chan.sample_sequence(cfg.rounds)
+        lr_seq = np.full(cfg.rounds, cfg.lr, np.float32)
+
+        def scan_once(seed):
+            p, q, m = eng.run_scan(
+                task.init(jax.random.PRNGKey(seed)), sp, bank, h_seq,
+                lr_seq, jax.random.PRNGKey(seed), policy="uni_d")
+            jax.block_until_ready(jax.tree_util.tree_leaves(p))
+
+        scan_once(0)                                # compile
+        t0 = time.perf_counter()
+        scan_once(1)
+        stats[f"{mode}_scan_rounds_per_sec"] = (cfg.rounds /
+                                                (time.perf_counter() - t0))
     stats["padding_saving_tiered_vs_single"] = (
         stats["padded_examples_single"] / stats["padded_examples_tiered"])
     tag = f"K{cfg.sample_count}N{cfg.num_devices}dir{alpha}"
@@ -244,6 +268,16 @@ def _skewed_bank_section(cfg: EngineBenchConfig, alpha: float = 0.5):
                 f"padding_ratio={stats['padding_ratio_tiered']:.2f};"
                 f"mem_saving_vs_single="
                 f"{stats['padding_saving_tiered_vs_single']:.2f}"),
+        csv_row(f"round_engine/skewed_scan_single/{tag}",
+                1e6 / stats["single_scan_rounds_per_sec"],
+                f"rounds_per_sec="
+                f"{stats['single_scan_rounds_per_sec']:.2f}"),
+        csv_row(f"round_engine/skewed_scan_tiered/{tag}",
+                1e6 / stats["tiered_scan_rounds_per_sec"],
+                f"rounds_per_sec="
+                f"{stats['tiered_scan_rounds_per_sec']:.2f};"
+                f"vs_single_bucket_scan="
+                f"{stats['tiered_scan_rounds_per_sec'] / stats['single_scan_rounds_per_sec']:.2f}"),
     ]
     return rows, stats
 
@@ -275,6 +309,15 @@ def run(cfg: Optional[EngineBenchConfig] = None, smoke: bool = False,
         "speedup_scan_vs_seq": scan / seq,
         "skewed": skew_stats,
     }
+    # bench_sweeps.arena_sweep merges its ScenarioArena section into the
+    # same tracked file — keep it when this bench rewrites the record
+    try:
+        with open(json_path) as f:
+            prev = json.load(f)
+        if "arena" in prev:
+            result["arena"] = prev["arena"]
+    except (OSError, ValueError):
+        pass
     with open(json_path, "w") as f:
         json.dump(result, f, indent=2)
     tag = f"K{cfg.sample_count}N{cfg.num_devices}"

@@ -2,7 +2,9 @@
 
 Prints ``name,us_per_call,derived`` CSV:
   * convergence (Figs. 1/2): LROA vs Uni-D/Uni-S/DivFL + % latency saved
-  * lambda sweep (Fig. 3), V sweep (Fig. 4), K sweep (Figs. 5/6)
+  * lambda sweep (Fig. 3), V sweep (Fig. 4), K sweep (Figs. 5/6), and the
+    ScenarioArena grid throughput (S-batched vs host-looped rollouts,
+    recorded in the ``arena`` section of BENCH_round_engine.json)
   * kernel microbenches + Algorithm-2 solver latency
   * round-engine throughput (sequential vs fused vs scan rounds/sec,
     written to BENCH_round_engine.json)
@@ -73,6 +75,8 @@ def main(argv=None) -> None:
             (bench_sweeps.k_sweep, dict(ks=(2,))),
             (bench_sweeps.heterogeneity_sweep,
              dict(spreads=(2.0,), rounds=10)),
+            (bench_sweeps.arena_sweep,
+             dict(s_values=(2, 4), rounds=3, smoke=True)),
         ]
         for fn, smoke_kwargs in sweeps:
             for row in fn(cfg, **(smoke_kwargs if args.smoke else {})):

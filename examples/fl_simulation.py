@@ -3,13 +3,60 @@ with LROA and the baselines over a non-IID synthetic image dataset (offline
 stand-in for CIFAR-10/FEMNIST — same Dirichlet(0.5) partition, same system
 model), then print the accuracy/latency comparison.
 
+The controller comparison grid (LROA vs Uni-D vs Uni-S, any number of
+seeds) runs through the ScenarioArena: ONE jitted, scenario-batched
+program executes every rollout over the shared ClientBank instead of a
+Python loop of trainers.  DivFL cannot be expressed as a pure per-round
+rule (stateful submodular selection), so requesting it falls back to the
+sequential trainer loop for that controller only.
+
     PYTHONPATH=src python examples/fl_simulation.py [--rounds 60] \
-        [--devices 30] [--controllers lroa,uni_d,uni_s,divfl]
+        [--devices 30] [--controllers lroa,uni_d,uni_s,divfl] [--seeds 3]
 """
 
 import argparse
 
-from benchmarks.common import BenchConfig, run_controller
+import jax
+import numpy as np
+
+from benchmarks.common import BenchConfig, build_testbed, run_controller
+from repro.core import estimate_hyperparams
+from repro.fl import ClientConfig, RoundEngine
+from repro.optim import paper_step_decay
+from repro.sim import Arena, ScenarioGrid
+
+
+def run_arena_grid(names, cfg: BenchConfig, num_seeds: int):
+    """All scan-traceable controllers x seeds as one batched arena run;
+    returns {controller: (mean final accuracy, mean total latency)}."""
+    params, task, client_data, (xte, yte) = build_testbed(cfg)
+    hp = estimate_hyperparams(params, 0.1, loss_scale=1.5, mu=cfg.mu,
+                              nu=cfg.nu)
+    engine = RoundEngine(task, ClientConfig(local_epochs=cfg.local_epochs,
+                                            batch_size=cfg.batch_size))
+    bank = engine.make_bank(client_data)
+    grid = ScenarioGrid.product(controllers=names,
+                                seeds=np.arange(num_seeds) + cfg.seed,
+                                V=(hp.V,), lam=(hp.lam,),
+                                sample_count=(cfg.sample_count,))
+    arena = Arena(engine)
+    sched = paper_step_decay(cfg.lr, cfg.rounds)
+    lr_seq = np.asarray([float(sched(t)) for t in range(cfg.rounds)],
+                        np.float32)
+    report = arena.run(task.init(jax.random.PRNGKey(cfg.seed + 1)), params,
+                       bank, grid, cfg.rounds, lr_seq)
+    xte, yte = jax.numpy.asarray(xte), jax.numpy.asarray(yte)
+    total = report.total_latency()
+    results = {}
+    for name in grid.controller_names():
+        results.setdefault(name, ([], []))
+    for s, name in enumerate(grid.controller_names()):
+        acc = float(task.metrics(report.scenario_params(s),
+                                 {"x": xte, "y": yte})["accuracy"])
+        results[name][0].append(acc)
+        results[name][1].append(float(total[s]))
+    return {name: (float(np.mean(accs)), float(np.mean(times)))
+            for name, (accs, times) in results.items()}
 
 
 def main():
@@ -17,26 +64,37 @@ def main():
     ap.add_argument("--rounds", type=int, default=40)
     ap.add_argument("--devices", type=int, default=24)
     ap.add_argument("--controllers", default="lroa,uni_d,uni_s")
+    ap.add_argument("--seeds", type=int, default=1,
+                    help="seeds per controller (arena lanes = "
+                         "controllers x seeds)")
     ap.add_argument("--cnn", action="store_true",
                     help="use the CNN task (slower, closer to the paper)")
     args = ap.parse_args()
 
     cfg = BenchConfig(num_devices=args.devices, rounds=args.rounds,
                       use_cnn=args.cnn)
+    names = args.controllers.split(",")
+    arena_names = [n for n in names if n != "divfl"]
     results = {}
-    for name in args.controllers.split(","):
-        print(f"=== {name} ===")
-        results[name] = run_controller(name, cfg, verbose=True)
+    if arena_names:
+        s = len(arena_names) * args.seeds
+        print(f"=== arena: {','.join(arena_names)} x {args.seeds} "
+              f"seed(s) = {s} rollouts in one batched program ===")
+        results.update(run_arena_grid(arena_names, cfg, args.seeds))
+    if "divfl" in names:
+        # DivFL's stateful selection needs the sequential trainer path
+        print("=== divfl (sequential trainer fallback) ===")
+        res = run_controller("divfl", cfg, verbose=True)
+        results["divfl"] = (res.accuracy_curve()[-1][2], res.total_time)
 
     print(f"\n{'controller':10s} {'final acc':>10s} {'total time':>12s}")
-    for name, res in results.items():
-        acc = res.accuracy_curve()[-1][2]
-        print(f"{name:10s} {acc:10.3f} {res.total_time:11.0f}s")
+    for name, (acc, total) in results.items():
+        print(f"{name:10s} {acc:10.3f} {total:11.0f}s")
     if "lroa" in results:
-        for base, res in results.items():
+        for base, (_, total) in results.items():
             if base == "lroa":
                 continue
-            save = 100 * (1 - results["lroa"].total_time / res.total_time)
+            save = 100 * (1 - results["lroa"][1] / total)
             print(f"LROA saves {save:.1f}% total latency vs {base}")
 
 

@@ -12,12 +12,16 @@ from repro.core.solver import (ControlDecision, SolverConfig, solve_f,
                                p22_objective)
 from repro.core.queues import (init_queues, update_queues, energy_increment,
                                lyapunov, drift, lemma1_constant)
+from repro.core.policy import (POLICIES, POLICY_IDS, DECIDE_FNS,
+                               decide_lroa, decide_uni_d, decide_uni_s,
+                               decide_by_id, static_frequency)
 from repro.core.controller import (LROAController, LROAHyperParams,
-                                   estimate_hyperparams, realized_round_time,
-                                   realized_energy)
+                                   estimate_hyperparams,
+                                   estimate_hyperparams_arrays,
+                                   realized_round_time, realized_energy)
 from repro.core.baselines import (UniformDynamicController,
                                   UniformStaticController, DivFLController,
-                                  facility_location_greedy, static_frequency)
+                                  facility_location_greedy)
 from repro.core.convergence import (BoundConstants, convergence_bound,
                                     sampling_error_term, max_learning_rate)
 from repro.core.arch_bridge import (EdgeProfile, system_params_for_arch,

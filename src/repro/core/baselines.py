@@ -11,7 +11,13 @@
 
 All controllers expose the same interface as ``LROAController``:
 ``decide(h) -> ControlDecision`` and ``step_queues`` (queues still tracked for
-reporting, even though the baselines ignore them when deciding).
+reporting, even though the baselines ignore them when deciding).  The
+Uni-D / Uni-S decision *rules* are the pure functions in
+``repro.core.policy`` (this module's classes are thin stateful wrappers),
+so ``run_scan`` and the ScenarioArena dispatch the identical math as
+traced controller ids; DivFL is the one controller that cannot be a pure
+per-round rule (stateful submodular selection over observed updates) and
+stays host-side.
 """
 
 from __future__ import annotations
@@ -22,10 +28,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import policy as pol
 from repro.core import queues as vq
 from repro.core import solver as slv
 from repro.core import system_model as sm
 from repro.core.controller import LROAHyperParams
+from repro.core.policy import static_frequency  # noqa: F401  (re-export)
 
 Array = jax.Array
 
@@ -44,34 +52,14 @@ class UniformDynamicController:
         self.history: list[dict] = []
 
     def decide(self, h: Array) -> slv.ControlDecision:
-        n = self.params.num_devices
-        q = jnp.full((n,), 1.0 / n, jnp.float32)
-        f = slv.solve_f(self.params, q, self.queues, self.hp.V)
-        p = slv.solve_p(self.params, q, self.queues, h, self.hp.V,
-                        self.cfg.bisect_iters)
-        return slv.ControlDecision(f=f, p=p, q=q)
+        return pol.decide_uni_d(self.params, h, self.queues, self.hp.V,
+                                self.hp.lam, self.cfg)
 
     def step_queues(self, h: Array, decision: slv.ControlDecision) -> Array:
         inc = vq.energy_increment(self.params, h, decision.p, decision.f,
                                   decision.q)
         self.queues = vq.update_queues(self.queues, inc)
         return self.queues
-
-
-def static_frequency(params: sm.SystemParams, h: Array, p: Array) -> Array:
-    """Solve the Uni-S energy-balance for f (projected to [f_min, f_max]).
-
-    [E alpha c D f^2 / 2 + p M K / (B log2(1 + h p / N0))] * sel = Ebar
-    with sel = 1 - (1 - 1/N)^K  =>  f^2 = 2 (Ebar/sel - E_com) / (E alpha c D).
-    """
-    n = params.num_devices
-    sel = 1.0 - (1.0 - 1.0 / n) ** params.sample_count
-    e_com = sm.comm_energy(params, h, p)
-    cycles = params.local_epochs * params.capacitance * \
-        params.cycles_per_sample * params.data_sizes
-    f_sq = 2.0 * (params.energy_budget / sel - e_com) / jnp.maximum(cycles, 1e-30)
-    f = jnp.sqrt(jnp.maximum(f_sq, 0.0))
-    return jnp.clip(f, params.f_min, params.f_max)
 
 
 class UniformStaticController:
@@ -87,11 +75,8 @@ class UniformStaticController:
         self.history: list[dict] = []
 
     def decide(self, h: Array) -> slv.ControlDecision:
-        n = self.params.num_devices
-        q = jnp.full((n,), 1.0 / n, jnp.float32)
-        p = 0.5 * (self.params.p_min + self.params.p_max)
-        f = static_frequency(self.params, h, p)
-        return slv.ControlDecision(f=f, p=p, q=q)
+        return pol.decide_uni_s(self.params, h, self.queues,
+                                jnp.float32(0.0), jnp.float32(0.0))
 
     def step_queues(self, h: Array, decision: slv.ControlDecision) -> Array:
         inc = vq.energy_increment(self.params, h, decision.p, decision.f,

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import policy as pol
 from repro.core import queues as vq
 from repro.core import solver as slv
 from repro.core import system_model as sm
@@ -39,29 +40,53 @@ class LROAHyperParams:
     nu: float
 
 
+def estimate_hyperparams_arrays(params: sm.SystemParams, mean_gain,
+                                loss_scale=1.0, mu=1.0, nu=1e5
+                                ) -> Tuple[Array, Array, Array, Array]:
+    """Pure-jax Sec. VII-B estimates: ``(lam, V, lam0, V0)`` as jnp scalars.
+
+    Every input past ``params`` may be a traced scalar, so the whole
+    estimate jits and ``vmap``s — the ScenarioArena derives per-scenario
+    hyperparameters from (mean_gain, mu, nu) grids inside its setup jit
+    (the old implementation round-tripped ``t0``/``a0`` through host
+    ``float()``s, which broke under trace).
+    """
+    f_mid = 0.5 * (params.f_min + params.f_max)
+    p_mid = 0.5 * (params.p_min + params.p_max)
+    h = jnp.broadcast_to(jnp.asarray(mean_gain, jnp.float32),
+                         (params.num_devices,))
+    t0 = jnp.sum(params.data_weights *
+                 sm.round_time(params, h, p_mid, f_mid))
+    f0 = jnp.asarray(loss_scale, jnp.float32)
+    lam0 = t0 / jnp.maximum(f0, 1e-12)
+    lam = mu * lam0
+    q_w = params.data_weights
+    e0 = sm.round_energy(params, h, p_mid, f_mid)
+    a0 = jnp.mean(jnp.abs(
+        sm.selection_probability(q_w, params.sample_count) * e0
+        - params.energy_budget))
+    v0 = jnp.square(a0) / jnp.maximum(t0 + lam * f0, 1e-12)
+    return lam, nu * v0, lam0, v0
+
+
 def estimate_hyperparams(params: sm.SystemParams, mean_gain: float,
                          loss_scale: float = 1.0, mu: float = 1.0,
                          nu: float = 1e5) -> LROAHyperParams:
     """lambda_0 = T_0/F_0 and V_0 = a_0^2/(T_0 + lambda F_0) (Sec. VII-B)."""
-    f_mid = 0.5 * (params.f_min + params.f_max)
-    p_mid = 0.5 * (params.p_min + params.p_max)
-    h = jnp.full((params.num_devices,), mean_gain, jnp.float32)
-    t0 = float(jnp.sum(params.data_weights *
-                       sm.round_time(params, h, p_mid, f_mid)))
-    f0 = float(loss_scale)
-    lam0 = t0 / max(f0, 1e-12)
-    lam = mu * lam0
-    q_w = params.data_weights
-    e0 = sm.round_energy(params, h, p_mid, f_mid)
-    a0 = float(jnp.mean(jnp.abs(
-        sm.selection_probability(q_w, params.sample_count) * e0
-        - params.energy_budget)))
-    v0 = a0 ** 2 / max(t0 + lam * f0, 1e-12)
-    return LROAHyperParams(lam=lam, V=nu * v0, lam0=lam0, V0=v0, mu=mu, nu=nu)
+    lam, v, lam0, v0 = estimate_hyperparams_arrays(
+        params, mean_gain, loss_scale=loss_scale, mu=mu, nu=nu)
+    return LROAHyperParams(lam=float(lam), V=float(v), lam0=float(lam0),
+                           V0=float(v0), mu=mu, nu=nu)
 
 
 class LROAController:
-    """Stateful wrapper: virtual queues + Algorithm 2 decisions."""
+    """Stateful wrapper: virtual queues + Algorithm 2 decisions.
+
+    The decision rule itself is the pure :func:`repro.core.policy.
+    decide_lroa` — this class only carries the queue state and
+    hyper-parameters for the host-driven loop, so the fused rollout
+    paths (``run_scan`` / ScenarioArena) share the identical rule.
+    """
 
     name = "lroa"
 
@@ -74,8 +99,8 @@ class LROAController:
         self.history: list[dict] = []
 
     def decide(self, h: Array) -> slv.ControlDecision:
-        return slv.solve_p2(self.params, h, self.queues,
-                            self.hp.V, self.hp.lam, self.cfg)
+        return pol.decide_lroa(self.params, h, self.queues,
+                               self.hp.V, self.hp.lam, self.cfg)
 
     def step_queues(self, h: Array, decision: slv.ControlDecision) -> Array:
         inc = vq.energy_increment(self.params, h, decision.p, decision.f,

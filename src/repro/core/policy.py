@@ -1,0 +1,126 @@
+"""Controllers as data: pure per-round decision functions + traced dispatch.
+
+The stateful controller classes (``LROAController``, ``UniformDynamic...``,
+``UniformStatic...``) exist for the host-driven Algorithm-1 loop, but the
+fused rollout paths — ``RoundEngine.run_scan`` and the ScenarioArena's
+scenario-batched sweeps (``repro.sim``) — need the *decision rule itself*
+to be a pure, jit/vmap-composable function of ``(params, h, queues, V,
+lam)``.  This module is the single home of those rules:
+
+* :func:`decide_lroa`  — Algorithm 2 (``solver.solve_p2``);
+* :func:`decide_uni_d` — uniform q, LROA's dynamic (f, p) closed forms;
+* :func:`decide_uni_s` — uniform q, mid-range p, f from the Uni-S
+  energy-balance equation (:func:`static_frequency`).
+
+``POLICIES`` fixes the id order and :func:`decide_by_id` dispatches on a
+*traced* integer via ``lax.switch`` — the controller becomes per-scenario
+data, so a single jitted program can run a mixed-controller grid (each
+scenario lane selects its own branch; under ``vmap`` every branch runs on
+the full batch and the select keeps each lane bit-identical to the pure
+branch).  The stateful classes are thin wrappers over these functions, so
+the host loop and the fused paths cannot diverge.
+
+DivFL is deliberately absent: its selection is a stateful submodular
+maximisation over observed client updates (host-side, data-dependent
+control flow) and cannot be expressed as a pure per-round decision — it
+stays on the sequential trainer path.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import solver as slv
+from repro.core import system_model as sm
+
+Array = jax.Array
+
+#: Scan-traceable policies, in controller-id order (the ``lax.switch``
+#: branch index).  The names are the public contract — ``run_scan``'s
+#: ``policy=`` strings and the ScenarioArena's grid both resolve through
+#: ``POLICY_IDS``.
+POLICIES = ("lroa", "uni_d", "uni_s")
+POLICY_IDS = {name: i for i, name in enumerate(POLICIES)}
+
+
+def _uniform_q(n: int) -> Array:
+    return jnp.full((n,), 1.0 / n, jnp.float32)
+
+
+def decide_lroa(params: sm.SystemParams, h: Array, queues: Array,
+                V: Array, lam: Array,
+                cfg: slv.SolverConfig = slv.SolverConfig()
+                ) -> slv.ControlDecision:
+    """LROA: the full Algorithm-2 drift-plus-penalty solve."""
+    return slv.solve_p2(params, h, queues, V, lam, cfg)
+
+
+def decide_uni_d(params: sm.SystemParams, h: Array, queues: Array,
+                 V: Array, lam: Array,
+                 cfg: slv.SolverConfig = slv.SolverConfig()
+                 ) -> slv.ControlDecision:
+    """Uni-D: q = 1/N; (f, p) from the Theorem-2/3 closed forms."""
+    q = _uniform_q(params.num_devices)
+    f = slv.solve_f(params, q, queues, V)
+    p = slv.solve_p(params, q, queues, h, V, cfg.bisect_iters)
+    return slv.ControlDecision(f=f, p=p, q=q)
+
+
+def static_frequency(params: sm.SystemParams, h: Array, p: Array) -> Array:
+    """Solve the Uni-S energy-balance for f (projected to [f_min, f_max]).
+
+    [E alpha c D f^2 / 2 + p M K / (B log2(1 + h p / N0))] * sel = Ebar
+    with sel = 1 - (1 - 1/N)^K  =>  f^2 = 2 (Ebar/sel - E_com) / (E alpha c D).
+    """
+    n = params.num_devices
+    sel = 1.0 - (1.0 - 1.0 / n) ** params.sample_count
+    e_com = sm.comm_energy(params, h, p)
+    cycles = params.local_epochs * params.capacitance * \
+        params.cycles_per_sample * params.data_sizes
+    f_sq = 2.0 * (params.energy_budget / sel - e_com) / jnp.maximum(cycles,
+                                                                    1e-30)
+    f = jnp.sqrt(jnp.maximum(f_sq, 0.0))
+    return jnp.clip(f, params.f_min, params.f_max)
+
+
+def decide_uni_s(params: sm.SystemParams, h: Array, queues: Array,
+                 V: Array, lam: Array,
+                 cfg: slv.SolverConfig = slv.SolverConfig()
+                 ) -> slv.ControlDecision:
+    """Uni-S: q = 1/N, p mid-range, f from the energy-balance equation.
+
+    ``queues`` / ``V`` / ``lam`` are accepted (and ignored) so every
+    policy shares one signature — the requirement for ``lax.switch``
+    dispatch and for the scenario grid to carry (V, lam) uniformly.
+    """
+    q = _uniform_q(params.num_devices)
+    p = jnp.broadcast_to(0.5 * (params.p_min + params.p_max),
+                         (params.num_devices,))
+    f = static_frequency(params, h, p)
+    return slv.ControlDecision(f=f, p=p, q=q)
+
+
+#: Branches in POLICY id order — ``DECIDE_FNS[POLICY_IDS[name]]`` is the
+#: pure rule behind controller ``name``.
+DECIDE_FNS = (decide_lroa, decide_uni_d, decide_uni_s)
+
+
+def decide_by_id(controller_id: Array, params: sm.SystemParams, h: Array,
+                 queues: Array, V: Array, lam: Array,
+                 cfg: slv.SolverConfig = slv.SolverConfig()
+                 ) -> slv.ControlDecision:
+    """Dispatch on a *traced* controller id (``lax.switch``).
+
+    The id indexes :data:`POLICIES`; out-of-range ids clamp (lax.switch
+    semantics).  Under ``vmap`` with a batched id every branch executes on
+    the full batch and each lane selects its own — which is exactly what
+    lets the ScenarioArena run a mixed-controller grid in ONE jitted
+    program while staying bit-identical per lane to the fixed-policy
+    rollout.
+    """
+    branches = [partial(fn, cfg=cfg) for fn in DECIDE_FNS]
+    return jax.lax.switch(controller_id, branches, params, h, queues, V,
+                          lam)

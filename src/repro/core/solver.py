@@ -94,7 +94,11 @@ def solve_p(params: sm.SystemParams, q: Array, queues: Array, h: Array,
     """
     sel = sm.selection_probability(q, params.sample_count)
     denom = queues * sel * params.noise_power
-    a1 = V * q * h / jnp.maximum(denom, _EPS)
+    # single multiply by V: `V * q * h / ...` lets XLA's algebraic
+    # simplifier reassociate the scalar-V multiply in the unbatched trace
+    # but not in a vmapped one (V is then a per-lane vector), breaking the
+    # ScenarioArena's lane-vs-single bitwise equality at the last ulp
+    a1 = V * (q * h / jnp.maximum(denom, _EPS))
     x_max = h * params.p_max / params.noise_power
 
     # Bisect on [0, hi] with hi doubled until phi(hi) >= a1 (bounded by the

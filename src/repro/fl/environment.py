@@ -31,6 +31,27 @@ class ChannelConfig:
     seed: int = 0
 
 
+def sample_gains(key: jax.Array, num_rounds: int, num_devices: int,
+                 mean_gain, min_gain, max_gain) -> jax.Array:
+    """Pure device-side truncated-exponential gains, ``[T, N]`` float32.
+
+    The functional core of :meth:`ChannelProcess.sample_jax` with the
+    distribution parameters as (possibly traced) arguments, so the
+    ScenarioArena can ``vmap`` it over a per-scenario (key, mean, clip)
+    axis and pregenerate every scenario's channel sequence in one jit.
+    Same redraw scheme as the numpy path: a ``[_REDRAWS, T, N]`` candidate
+    block, each slot takes its first in-range draw, and only the
+    measure-~exp(-64) no-valid-draw case is clipped to the boundary.
+    """
+    draws = (jax.random.exponential(
+        key, (_REDRAWS, num_rounds, num_devices)) *
+        jnp.asarray(mean_gain, jnp.float32))
+    ok = (draws >= min_gain) & (draws <= max_gain)
+    first = jnp.argmax(ok, axis=0)
+    h = jnp.take_along_axis(draws, first[None], axis=0)[0]
+    return jnp.clip(h, min_gain, max_gain).astype(jnp.float32)
+
+
 class ChannelProcess:
     """IID exponential channel gains, clipped to a reasonable range.
 
@@ -82,12 +103,12 @@ class ChannelProcess:
         """Device-array gains — [T, N] (or [N] when ``num_rounds`` is
         None) drawn entirely on device, so ``run_scan``'s precomputed
         channel sequences never touch the host.  Keyed by ``key``, not
-        the process seed (jax and numpy streams are independent)."""
+        the process seed (jax and numpy streams are independent).
+        Delegates to the pure :func:`sample_gains` (the form the
+        ScenarioArena vmaps over per-scenario channel statistics)."""
         t = 1 if num_rounds is None else num_rounds
-        draws = (jax.random.exponential(key, (_REDRAWS, t,
-                                              self.num_devices)) *
-                 self.cfg.mean_gain)
-        h = self._first_in_range(draws, xp=jnp)
+        h = sample_gains(key, t, self.num_devices, self.cfg.mean_gain,
+                         self.cfg.min_gain, self.cfg.max_gain)
         return h[0] if num_rounds is None else h
 
     def stream(self) -> Iterator[np.ndarray]:

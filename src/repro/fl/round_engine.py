@@ -35,8 +35,9 @@ core, and the per-tier eq.-(4) contributions are summed into the params
 (:meth:`_tier_loop_round`).  A selection that lands entirely in one tier
 (including every round of a one-tier ladder) short-circuits to the
 single-bucket executable, bit-identical to :class:`ClientBank` rounds.
-``run_scan`` rides the same tier loop (every tier runs inside the scan
-body; the sampled selection is traced, so emptiness cannot be tested),
+``run_scan`` rides the same tier loop with each tier's training behind a
+selection-conditioned ``lax.cond`` (the sampled selection is traced, so
+the skip is a runtime branch — a round that hits one tier pays one tier),
 and the mesh-sharded path rides it too — each tier's round shard_maps its
 K-client axis exactly like the single-bucket path.  Executable count
 stays one compiled data shape per tier: per-tier single-bucket steps,
@@ -61,6 +62,7 @@ statistics.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -69,8 +71,8 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.core import policy as pol
 from repro.core import queues as vq
-from repro.core import solver as slv
 from repro.core import system_model as sm
 from repro.fl import client as fl_client
 from repro.fl import server as fl_server
@@ -209,7 +211,7 @@ class RoundEngine:
                                 steps)
 
     def _tier_loop_round(self, params, parts, tier_sel, pos_sel, coeffs,
-                         lr, rngs):
+                         lr, rngs, cond_skip: bool = False):
         """THE tier loop: one fused gathered round per tier, contributions
         summed across tiers.
 
@@ -228,18 +230,45 @@ class RoundEngine:
         the two tiered data planes cannot diverge; with a mesh each
         tier's round shard_maps its K axis via :meth:`_round_core`
         exactly like the single-bucket path.
+
+        ``cond_skip``: wrap each tier's training in a selection-
+        conditioned ``lax.cond`` so a tier the (traced) selection misses
+        costs a predicate instead of a full ``K * B_t`` vmapped SGD — the
+        scan body's path, where tier emptiness cannot be routed on the
+        host.  A hit tier runs the identical trace as the unconditional
+        loop, and a missed tier's contribution was exactly zero anyway
+        (zeroed coefficients), so the two modes agree.  Off by default:
+        ``round_step`` routes hit tiers on the host, every part it
+        passes is non-empty, and a cond would only add overhead (under
+        ``vmap`` — the ScenarioArena — the cond degenerates to running
+        both branches and selecting, which is still correct).
         """
         upd, losses = None, jnp.zeros(pos_sel.shape, jnp.float32)
         for tid, xs, ys, ns, ne, steps in parts:
             mask = tier_sel == tid
             pos = jnp.where(mask, pos_sel, 0)
             cf = coeffs * mask.astype(coeffs.dtype)
-            p_t, l_t = self._gathered_round(params, xs, ys, ns, ne, pos,
-                                            cf, lr, rngs, steps)
-            u_t = jax.tree_util.tree_map(lambda a, b: a - b, p_t, params)
+
+            def run_tier(pos, cf, xs=xs, ys=ys, ns=ns, ne=ne, steps=steps,
+                         mask=mask):
+                p_t, l_t = self._gathered_round(params, xs, ys, ns, ne,
+                                                pos, cf, lr, rngs, steps)
+                u_t = jax.tree_util.tree_map(lambda a, b: a - b, p_t,
+                                             params)
+                return u_t, l_t.astype(jnp.float32) * mask
+
+            if cond_skip:
+                def skip_tier(pos, cf):
+                    return (jax.tree_util.tree_map(jnp.zeros_like, params),
+                            jnp.zeros(pos_sel.shape, jnp.float32))
+
+                u_t, l_t = jax.lax.cond(jnp.any(mask), run_tier, skip_tier,
+                                        pos, cf)
+            else:
+                u_t, l_t = run_tier(pos, cf)
             upd = (u_t if upd is None else
                    jax.tree_util.tree_map(jnp.add, upd, u_t))
-            losses = losses + l_t.astype(jnp.float32) * mask
+            losses = losses + l_t
         new_params = jax.tree_util.tree_map(jnp.add, params, upd)
         return new_params, losses
 
@@ -384,27 +413,79 @@ class RoundEngine:
 
     # -- multi-round scan fast path ----------------------------------------
 
-    def _build_scan(self, k: int, policy: str, round_fn):
-        """Full-rollout scan over an opaque ``data`` pytree; ``round_fn``
-        (params, data, selected, coeffs, lr, rngs) -> (params, losses)
-        supplies the data plane — the single-bucket gathered round or the
-        tier loop — so both ride one decide/sample/queue-update body."""
-        def scan_fn(params, queues, sp, data, h_seq, lr_seq, rng, V, lam):
-            n = sp.num_devices
-            w = sp.data_weights
+    def _scan_plan(self, bank: AnyBank):
+        """(round_fn, data, bank_key) — the data-plane half of a rollout
+        over ``bank``: ``round_fn(params, data, selected, coeffs, lr,
+        rngs)`` is the single-bucket gathered round or the tier loop, and
+        ``data`` the opaque device-buffer pytree it consumes.  Shared by
+        :meth:`run_scan` and the ScenarioArena (``repro.sim``), so the
+        host-looped and scenario-batched rollouts ride ONE data plane.
+        A one-tier ladder collapses to its single bucket here (bitwise
+        the :class:`ClientBank` plan); a multi-tier ladder's round runs
+        every tier under a selection-conditioned ``lax.cond``
+        (``cond_skip`` — rounds whose draw lands in few tiers stop
+        paying ``K * sum_t B_t`` work)."""
+        if isinstance(bank, TieredClientBank) and bank.num_tiers == 1:
+            bank = bank.tiers[0]            # the ladder IS one bucket
+        if isinstance(bank, TieredClientBank):
+            parts_key, buffers = [], []
+            for t, tier in enumerate(bank.tiers):
+                xs, ys, ns, ne = tier.device_args()
+                parts_key.append((t, tier.steps_per_epoch, ns is not None))
+                buffers.append((xs, ys, ns, ne))
+            parts_key = tuple(parts_key)
+
+            def round_fn(params, data, selected, coeffs, lr, rngs):
+                bufs, tier_of, pos = data
+                return self._tier_loop_round(
+                    params, _tier_parts(parts_key, bufs),
+                    jnp.take(tier_of, selected),
+                    jnp.take(pos, selected), coeffs, lr, rngs,
+                    cond_skip=True)
+
+            data = (tuple(buffers), bank.tier_of_device, bank.pos_device)
+            return round_fn, data, parts_key
+        all_x, all_y, all_steps, all_sizes = bank.device_args()
+        steps, masked = bank.steps_per_epoch, all_steps is not None
+
+        def round_fn(params, data, selected, coeffs, lr, rngs):
+            return self._gathered_round(params, *data, selected, coeffs,
+                                        lr, rngs, steps)
+
+        return round_fn, (all_x, all_y, all_steps, all_sizes), (steps,
+                                                                masked)
+
+    def _build_scan(self, k: int, decide_fn, round_fn):
+        """Full-rollout scan body; UN-jitted (``run_scan`` jits it, the
+        ScenarioArena vmaps it over a scenario axis first).
+
+        ``decide_fn(sp, h, queues, V, lam, cid) -> ControlDecision``
+        supplies the control plane — a fixed ``repro.core.policy`` rule
+        (``cid`` ignored) or the traced ``lax.switch`` dispatch
+        (controller-as-data); ``round_fn`` the data plane from
+        :meth:`_scan_plan`.  ``eb`` is the rollout's energy budget
+        ``[N]`` as a traced input (the scenario axis sweeps it), applied
+        over ``sp`` before anything reads it.
+
+        Bitwise contract with the ScenarioArena: ``V`` and ``lam`` must
+        arrive MATERIALIZED as ``[N]`` vector arguments, not rank-0
+        scalars.  A scalar V lets XLA's algebraic simplifier reassociate
+        scalar-multiply chains inside the solver in the unbatched trace
+        but not in a vmapped one (V is a per-lane vector there), drifting
+        arena lanes from this scan at the last ulp; an array argument's
+        producer is opaque to XLA, so both traces compute the identical
+        elementwise graph.
+        """
+        def scan_fn(params, queues, sp, eb, data, h_seq, lr_seq, rng, V,
+                    lam, cid):
+            sp_run = dataclasses.replace(sp, energy_budget=eb)
+            n = sp_run.num_devices
+            w = sp_run.data_weights
 
             def body(carry, inp):
                 params, queues, rng = carry
                 h, lr = inp
-                if policy == "lroa":
-                    dec = slv.solve_p2(sp, h, queues, V, lam)
-                elif policy == "uni_d":
-                    q = jnp.full((n,), 1.0 / n, jnp.float32)
-                    f = slv.solve_f(sp, q, queues, V)
-                    p = slv.solve_p(sp, q, queues, h, V)
-                    dec = slv.ControlDecision(f=f, p=p, q=q)
-                else:
-                    raise ValueError(f"unknown policy {policy!r}")
+                dec = decide_fn(sp_run, h, queues, V, lam, cid)
                 rng, k_sel, k_cli = jax.random.split(rng, 3)
                 selected = jax.random.choice(k_sel, n, (k,), replace=True,
                                              p=dec.q)
@@ -413,9 +494,10 @@ class RoundEngine:
                 params, losses = round_fn(params, data, selected, coeffs,
                                           lr, rngs)
                 queues = vq.update_queues(
-                    queues, vq.energy_increment(sp, h, dec.p, dec.f, dec.q))
-                t = sm.round_time(sp, h, dec.p, dec.f)
-                e = sm.round_energy(sp, h, dec.p, dec.f)
+                    queues,
+                    vq.energy_increment(sp_run, h, dec.p, dec.f, dec.q))
+                t = sm.round_time(sp_run, h, dec.p, dec.f)
+                e = sm.round_energy(sp_run, h, dec.p, dec.f)
                 mask = jnp.zeros((n,), jnp.float32).at[selected].set(1.0)
                 out = dict(
                     loss=jnp.mean(losses),
@@ -423,6 +505,7 @@ class RoundEngine:
                     energy_mean=(jnp.sum(e * mask) /
                                  jnp.maximum(jnp.sum(mask), 1.0)),
                     queue_mean=jnp.mean(queues),
+                    queue_norm=jnp.linalg.norm(queues),
                     q_min=jnp.min(dec.q), q_max=jnp.max(dec.q),
                     selected=selected,
                 )
@@ -432,8 +515,19 @@ class RoundEngine:
                 body, (params, queues, rng), (h_seq, lr_seq))
             return params, queues, outs
 
-        donate = (0, 1) if self.donate else ()
-        return jax.jit(scan_fn, donate_argnums=donate)
+        return scan_fn
+
+    @staticmethod
+    def _fixed_policy_decide(policy: str):
+        """A ``decide_fn`` for :meth:`_build_scan` that always runs one
+        named ``repro.core.policy`` rule (the traced ``cid`` is ignored —
+        the policy is baked into the executable, no switch overhead)."""
+        fn = pol.DECIDE_FNS[pol.POLICY_IDS[policy]]
+
+        def decide(sp, h, queues, V, lam, cid):
+            return fn(sp, h, queues, V, lam)
+
+        return decide
 
     def run_scan(self, global_params: PyTree, sp: sm.SystemParams,
                  bank: AnyBank, h_seq: np.ndarray, lr_seq: np.ndarray,
@@ -446,83 +540,44 @@ class RoundEngine:
         ``num_examples`` masks keep padded clients from over-training or
         over-sampling their duplicated rows relative to Algorithm 1); a
         :class:`TieredClientBank` runs the tier loop inside the scan body
-        — every tier executes each round (the sampled selection is traced,
-        so tier emptiness cannot be tested), with non-member slots masked
-        out by zeroed coefficients; a one-tier ladder delegates to the
-        single-bucket scan unchanged.  ``h_seq``: [T, N] channel gains
+        — each tier's training sits behind a selection-conditioned
+        ``lax.cond`` (the selection is traced, so the skip is a runtime
+        branch, not host routing), with non-member slots of a hit tier
+        masked out by zeroed coefficients; a one-tier ladder delegates to
+        the single-bucket scan unchanged.  ``h_seq``: [T, N] channel gains
         (``ChannelProcess.sample_sequence`` or ``sample_jax`` precompute
         them without host loops); ``lr_seq``: [T] learning rates.
-        ``policy`` is 'lroa' (Algorithm 2 decisions from V/lam) or 'uni_d'
-        (uniform q, dynamic f/p).  Returns (final params, final queues,
-        per-round metric arrays).  Both the params pytree and the
-        ``queues`` array are donated off-CPU — callers must use the
-        returned values, not the arguments.  Bank buffers are never
-        donated.
+        ``policy`` is any scan-traceable rule in ``repro.core.policy.
+        POLICIES`` — 'lroa' (Algorithm 2 decisions from V/lam), 'uni_d'
+        (uniform q, dynamic f/p), or 'uni_s' (uniform q, static
+        resources).  Returns (final params, final queues, per-round
+        metric arrays).  Both the params pytree and the ``queues`` array
+        are donated off-CPU — callers must use the returned values, not
+        the arguments.  Bank buffers are never donated.
         """
-        if policy not in ("lroa", "uni_d"):
-            raise ValueError(f"unknown policy {policy!r}")
-        if isinstance(bank, TieredClientBank):
-            if bank.num_tiers == 1:
-                bank = bank.tiers[0]        # the ladder IS one bucket
-            else:
-                return self._run_scan_tiered(global_params, sp, bank,
-                                             h_seq, lr_seq, rng,
-                                             queues=queues, policy=policy,
-                                             V=V, lam=lam)
-        all_x, all_y, all_steps, all_sizes = bank.device_args()
-        steps, masked = bank.steps_per_epoch, all_steps is not None
-        key = (steps, sp.sample_count, policy, masked)
+        if policy not in pol.POLICY_IDS:
+            raise ValueError(f"unknown policy {policy!r} (scan-traceable: "
+                             f"{pol.POLICIES}; DivFL is host-only)")
+        round_fn, data, bank_key = self._scan_plan(bank)
+        key = (bank_key, sp.sample_count, policy)
         fn = self._scan_fns.get(key)
         if fn is None:
-            def round_fn(params, data, selected, coeffs, lr, rngs,
-                         steps=steps):
-                return self._gathered_round(params, *data, selected,
-                                            coeffs, lr, rngs, steps)
-            fn = self._scan_fns[key] = self._build_scan(
-                sp.sample_count, policy, round_fn)
+            scan_fn = self._build_scan(sp.sample_count,
+                                       self._fixed_policy_decide(policy),
+                                       round_fn)
+            donate = (0, 1) if self.donate else ()
+            fn = self._scan_fns[key] = jax.jit(scan_fn,
+                                               donate_argnums=donate)
         if queues is None:
             queues = vq.init_queues(sp.num_devices)
+        n = sp.num_devices
         params, queues, outs = fn(
             global_params, queues, sp,
-            (all_x, all_y, all_steps, all_sizes),
+            jnp.asarray(sp.energy_budget, jnp.float32), data,
             jnp.asarray(h_seq, jnp.float32),
             jnp.asarray(lr_seq, jnp.float32), rng,
-            jnp.asarray(V, jnp.float32), jnp.asarray(lam, jnp.float32))
-        metrics = {name: np.asarray(v) for name, v in outs.items()}
-        return params, queues, metrics
-
-    def _run_scan_tiered(self, global_params: PyTree, sp: sm.SystemParams,
-                         bank: TieredClientBank, h_seq: np.ndarray,
-                         lr_seq: np.ndarray, rng: jax.Array, *,
-                         queues: Optional[jax.Array], policy: str,
-                         V: float, lam: float
-                         ) -> Tuple[PyTree, jax.Array, Dict[str, np.ndarray]]:
-        """Multi-tier rollout: the scan body rides the same tier loop as
-        ``round_step`` (:meth:`_tier_loop_round`) over ALL tiers."""
-        parts_key, buffers = [], []
-        for t, tier in enumerate(bank.tiers):
-            xs, ys, ns, ne = tier.device_args()
-            parts_key.append((t, tier.steps_per_epoch, ns is not None))
-            buffers.append((xs, ys, ns, ne))
-        parts_key = tuple(parts_key)
-        key = (parts_key, sp.sample_count, policy)
-        fn = self._scan_fns.get(key)
-        if fn is None:
-            def round_fn(params, data, selected, coeffs, lr, rngs):
-                bufs, tier_of, pos = data
-                return self._tier_loop_round(
-                    params, _tier_parts(parts_key, bufs),
-                    jnp.take(tier_of, selected),
-                    jnp.take(pos, selected), coeffs, lr, rngs)
-            fn = self._scan_fns[key] = self._build_scan(
-                sp.sample_count, policy, round_fn)
-        if queues is None:
-            queues = vq.init_queues(sp.num_devices)
-        params, queues, outs = fn(
-            global_params, queues, sp,
-            (tuple(buffers), bank.tier_of_device, bank.pos_device),
-            jnp.asarray(h_seq, jnp.float32),
-            jnp.asarray(lr_seq, jnp.float32), rng,
-            jnp.asarray(V, jnp.float32), jnp.asarray(lam, jnp.float32))
+            jnp.full((n,), V, jnp.float32), jnp.full((n,), lam,
+                                                     jnp.float32),
+            jnp.int32(pol.POLICY_IDS[policy]))
         metrics = {name: np.asarray(v) for name, v in outs.items()}
         return params, queues, metrics

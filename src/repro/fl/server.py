@@ -67,12 +67,19 @@ def aggregate_stacked(global_params: PyTree, stacked_deltas: PyTree,
 
     ``stacked_deltas`` leaves have shape ``[K, ...]`` (client axis shardable
     over the mesh ``data`` axis); the weighted reduction lowers to a single
-    reduce per leaf.
+    reduce per leaf.  The reduce is written as broadcast-multiply + sum over
+    the client axis rather than ``tensordot``: under ``jax.vmap`` (the
+    ScenarioArena batches whole rollouts over a scenario axis) a tensordot
+    becomes a batched matmul whose f32 reduction order differs from the
+    unbatched lowering at the ulp level, while an explicit axis-0 sum keeps
+    every lane bit-identical to the unbatched trace.
     """
     def combine(p, d):
-        upd = jnp.tensordot(coeffs.astype(jnp.float32),
-                            d.astype(jnp.float32), axes=1)
-        return (p.astype(jnp.float32) + upd).astype(p.dtype)
+        d = d.astype(jnp.float32)
+        c = coeffs.astype(jnp.float32).reshape(
+            d.shape[:1] + (1,) * (d.ndim - 1))
+        return (p.astype(jnp.float32) + jnp.sum(c * d, axis=0)).astype(
+            p.dtype)
 
     return jax.tree_util.tree_map(combine, global_params, stacked_deltas)
 
@@ -171,9 +178,9 @@ def aggregate_fused_psum(global_params: PyTree, stacked_deltas: PyTree,
     coeffs = coeffs.astype(jnp.float32)
     if not _use_ravelled_kernel(impl):
         def combine(p, d):
-            upd = jax.lax.psum(
-                jnp.tensordot(coeffs, d.astype(jnp.float32), axes=1),
-                axis_name)
+            d = d.astype(jnp.float32)
+            c = coeffs.reshape(d.shape[:1] + (1,) * (d.ndim - 1))
+            upd = jax.lax.psum(jnp.sum(c * d, axis=0), axis_name)
             return (p.astype(jnp.float32) + upd).astype(p.dtype)
         return jax.tree_util.tree_map(combine, global_params,
                                       stacked_deltas)

@@ -22,13 +22,22 @@ def make_host_mesh():
 
 
 def make_fl_mesh(num_shards: int | None = None):
-    """1-D ``('data',)`` mesh for FL client-axis sharding.
+    """1-D ``('data',)`` mesh for FL client-axis OR scenario-axis sharding.
 
-    The FL round engine ``shard_map``s the K sampled clients (and the
-    ClientBank's N axis) over the ``data`` axis; this builds that axis
-    from the locally visible devices.  On a pod, pass the ``data`` axis
-    of :func:`make_production_mesh` to the engine instead — the axis name
-    is the contract, not the mesh shape.
+    Two consumers share the axis name contract (the name, not the mesh
+    shape, is the contract):
+
+    * the FL round engine ``shard_map``s the K sampled clients (and the
+      ClientBank's N axis) over ``data`` — intra-rollout scaling;
+    * the ScenarioArena (``repro.sim.Arena(mesh=...)``) ``shard_map``s
+      its *scenario* axis over ``data`` — whole rollouts per shard, no
+      cross-shard collectives, the strong-scaling axis for Sec.-VII
+      sweep grids.  The arena's engine must then be mesh-free (the two
+      shardings compose by handing each consumer its own axis of a
+      larger mesh, not by nesting shard_maps).
+
+    On a pod, pass the ``data`` axis of :func:`make_production_mesh`
+    instead.
     """
     n = len(jax.devices()) if num_shards is None else num_shards
     return jax.make_mesh((n,), ("data",))

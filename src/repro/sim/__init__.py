@@ -1,0 +1,9 @@
+"""repro.sim — the ScenarioArena sweep engine: struct-of-arrays scenario
+grids (controller-as-data via traced ``lax.switch`` ids), whole evaluation
+grids vmapped over the fused rollout scan in one jitted program (optionally
+scenario-sharded over a mesh ``data`` axis), and structured RolloutReports
+with the paper's Sec. VII trade-off reducers."""
+
+from repro.sim.arena import (Arena, ScenarioGrid, derive_hyperparams,
+                             scenario_keys)
+from repro.sim.report import RolloutReport

@@ -1,0 +1,478 @@
+"""ScenarioArena — device-batched multi-rollout sweeps over the fused scan.
+
+The paper's entire evaluation (Sec. VII) is a grid of rollouts: LROA vs
+Uni-D / Uni-S across seeds, Lyapunov weights (mu, nu), energy budgets,
+and channel statistics.  Host-looping ``RoundEngine.run_scan`` pays one
+dispatch chain per grid point; the arena instead stacks the S scenarios
+struct-of-arrays (:class:`ScenarioGrid`) and lays the engine's scan body
+out over the scenario axis — ``jax.vmap`` lanes by default, or
+``lax.map`` lanes (``batch='map'``, the CPU/strong-scaling mode; see
+:class:`Arena`) — so ONE jitted program executes every rollout, sharing
+the read-only (never-donated) ClientBank across all lanes:
+
+* **Controller-as-data.**  Each lane carries a traced ``controller_id``;
+  the scan body dispatches ``repro.core.policy.decide_by_id``
+  (``lax.switch``), so a single executable runs a mixed LROA/Uni-D/Uni-S
+  grid.  DivFL is host-stateful and rejected at grid construction.
+* **Bit-identical model rollouts.**  Lane ``s`` of ``Arena.run``
+  reproduces ``engine.run_scan`` on scenario ``s``'s (seed, channels, V,
+  lam, budget): the model trajectory — final params, per-round losses,
+  selections, realised latency — is bit-for-bit identical on the
+  leaf-chunked aggregation path (CPU/GPU), because the scan body, data
+  plane, and PRNG stream are shared code and the eq.-(4) reduction is
+  written vmap-stably (see ``server.aggregate_stacked``).  The
+  control-plane diagnostics (queue/energy scalars from Algorithm 2's
+  bisection solver) agree to float32 resolution (~1e-6 relative) rather
+  than bitwise: XLA fuses those elementwise chains shape-dependently,
+  so the batched and unbatched programs may round a final ulp apart.
+  Tiered banks relax the model half to f32 resolution too — the tier
+  loop's per-tier ``lax.cond`` lowers as a real branch unbatched but as
+  a both-branches select under vmap.  The contract is regression-tested
+  in ``tests/test_arena.py``.
+* **Channels pregenerated on device.**  Per-scenario (mean, clip) channel
+  statistics feed a vmapped ``environment.sample_gains`` — the whole
+  ``[S, T, N]`` gain tensor is drawn in one jit from the scenario seeds.
+* **Scenario-axis sharding.**  Pass ``mesh=`` (e.g. ``launch.mesh.
+  make_fl_mesh()``) and the scenario axis is ``shard_map``ped over the
+  ``data`` axis: whole rollouts per shard, zero cross-shard collectives
+  (embarrassingly parallel — the strong-scaling axis for sweep grids).
+  The engine itself must then be mesh-free: client-axis and
+  scenario-axis sharding compose by running the arena on the ``data``
+  axis of a larger mesh, not by nesting shard_maps.
+* **Static shapes.**  ``K`` (``sample_count``) shapes the per-round
+  selection, so scenarios are grouped by K and each group runs as one
+  jitted program (a uniform-K grid — the common case — is exactly one).
+
+Outputs land in a :class:`repro.sim.report.RolloutReport` (``[S, T]``
+metric arrays + stacked final params/queues) whose reducers emit the
+paper's latency / loss / energy trade-off curves.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import policy as pol
+from repro.core import system_model as sm
+from repro.core.controller import estimate_hyperparams_arrays
+from repro.fl.environment import sample_gains
+from repro.sim.report import RolloutReport
+
+PyTree = Any
+
+_DIVFL_ERROR = (
+    "DivFL is not scan-traceable: its selection is a stateful submodular "
+    "maximisation over observed client updates, so it cannot run in the "
+    "ScenarioArena.  Run it on the sequential trainer path instead "
+    "(FederatedTrainer with a DivFLController) and compare reports "
+    "host-side.")
+
+
+def _as_f32(value, s: int) -> np.ndarray:
+    return np.broadcast_to(np.asarray(value, np.float32), (s,)).copy()
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioGrid:
+    """Struct-of-arrays stack of S scenarios (all fields shape ``[S]``).
+
+    ``controller`` holds ``repro.core.policy.POLICY_IDS`` ids;
+    ``energy_scale`` multiplies the base ``SystemParams.energy_budget``;
+    (``mean_gain``, ``min_gain``, ``max_gain``) are the per-scenario
+    truncated-exponential channel statistics; ``sample_count`` is K.
+    Build with :meth:`create` (broadcasting scalars) or :meth:`product`
+    (cartesian sweep axes).
+    """
+
+    controller: np.ndarray
+    seed: np.ndarray
+    V: np.ndarray
+    lam: np.ndarray
+    energy_scale: np.ndarray
+    mean_gain: np.ndarray
+    min_gain: np.ndarray
+    max_gain: np.ndarray
+    sample_count: np.ndarray
+
+    def __len__(self) -> int:
+        return int(self.controller.shape[0])
+
+    def __post_init__(self):
+        s = len(self)
+        for f in dataclasses.fields(self):
+            arr = getattr(self, f.name)
+            if arr.shape != (s,):
+                raise ValueError(f"ScenarioGrid.{f.name} must have shape "
+                                 f"({s},), got {arr.shape}")
+        if s == 0:
+            raise ValueError("empty ScenarioGrid")
+        # jax.random.PRNGKey truncates seeds to 32 bits under the default
+        # x64-disabled runtime, so seeds differing only above bit 31 would
+        # silently run IDENTICAL lanes — reject them instead
+        if np.any(self.seed < 0) or np.any(self.seed >= 2 ** 32):
+            raise ValueError("ScenarioGrid seeds must fit in uint32 "
+                             "(PRNGKey truncates wider seeds, which would "
+                             "silently alias scenarios)")
+
+    @staticmethod
+    def _controller_ids(controllers) -> np.ndarray:
+        ids = []
+        for c in np.atleast_1d(np.asarray(controllers, object)):
+            if isinstance(c, (int, np.integer)):
+                cid = int(c)
+                if not 0 <= cid < len(pol.POLICIES):
+                    raise ValueError(f"controller id {cid} out of range "
+                                     f"for {pol.POLICIES}")
+            else:
+                name = str(c)
+                if name == "divfl":
+                    raise ValueError(_DIVFL_ERROR)
+                if name not in pol.POLICY_IDS:
+                    raise ValueError(f"unknown controller {name!r} "
+                                     f"(scan-traceable: {pol.POLICIES})")
+                cid = pol.POLICY_IDS[name]
+            ids.append(cid)
+        return np.asarray(ids, np.int32)
+
+    @classmethod
+    def create(cls, controllers, seeds, V, lam, *, energy_scale=1.0,
+               mean_gain=0.1, min_gain=0.01, max_gain=0.5,
+               sample_count=2) -> "ScenarioGrid":
+        """Element-wise grid: every argument broadcasts to the common
+        scenario count S (controllers by name or id)."""
+        ids = cls._controller_ids(controllers)
+        seeds = np.atleast_1d(np.asarray(seeds, np.int64))
+        s = max(ids.shape[0], seeds.shape[0],
+                *(np.atleast_1d(np.asarray(v)).shape[0]
+                  for v in (V, lam, energy_scale, mean_gain, min_gain,
+                            max_gain, sample_count)))
+        return cls(
+            controller=np.broadcast_to(ids, (s,)).copy(),
+            seed=np.broadcast_to(seeds, (s,)).copy(),
+            V=_as_f32(V, s), lam=_as_f32(lam, s),
+            energy_scale=_as_f32(energy_scale, s),
+            mean_gain=_as_f32(mean_gain, s),
+            min_gain=_as_f32(min_gain, s),
+            max_gain=_as_f32(max_gain, s),
+            sample_count=np.broadcast_to(
+                np.asarray(sample_count, np.int32), (s,)).copy(),
+        )
+
+    @classmethod
+    def product(cls, controllers, seeds, V, lam, *, energy_scale=(1.0,),
+                mean_gain=(0.1,), min_gain=(0.01,), max_gain=(0.5,),
+                sample_count=(2,)) -> "ScenarioGrid":
+        """Cartesian sweep: one scenario per element of the cross product
+        of the given axes (the Sec. VII comparison grid: controllers x
+        seeds x hyper-parameters x budgets x channels x K)."""
+        ids = cls._controller_ids(controllers)
+        axes = [ids.tolist(), np.atleast_1d(seeds).tolist(),
+                np.atleast_1d(V).tolist(), np.atleast_1d(lam).tolist(),
+                np.atleast_1d(energy_scale).tolist(),
+                np.atleast_1d(mean_gain).tolist(),
+                np.atleast_1d(min_gain).tolist(),
+                np.atleast_1d(max_gain).tolist(),
+                np.atleast_1d(sample_count).tolist()]
+        rows = list(itertools.product(*axes))
+        cols = list(zip(*rows))
+        return cls(
+            controller=np.asarray(cols[0], np.int32),
+            seed=np.asarray(cols[1], np.int64),
+            V=np.asarray(cols[2], np.float32),
+            lam=np.asarray(cols[3], np.float32),
+            energy_scale=np.asarray(cols[4], np.float32),
+            mean_gain=np.asarray(cols[5], np.float32),
+            min_gain=np.asarray(cols[6], np.float32),
+            max_gain=np.asarray(cols[7], np.float32),
+            sample_count=np.asarray(cols[8], np.int32),
+        )
+
+    def take(self, idx: np.ndarray) -> "ScenarioGrid":
+        """Sub-grid of the given scenario indices (grid order kept)."""
+        return ScenarioGrid(**{f.name: getattr(self, f.name)[idx]
+                               for f in dataclasses.fields(self)})
+
+    def controller_names(self) -> list:
+        return [pol.POLICIES[c] for c in self.controller]
+
+    def scenario_system_params(self, sp: sm.SystemParams, s: int
+                               ) -> sm.SystemParams:
+        """Scenario ``s``'s SystemParams — the exact parameters an
+        individual ``run_scan`` reproduction of lane ``s`` must use."""
+        eb = np.asarray(sp.energy_budget, np.float32) * self.energy_scale[s]
+        return dataclasses.replace(sp, sample_count=int(
+            self.sample_count[s]), energy_budget=jnp.asarray(eb))
+
+
+# module-level jits: a jit wrapper built inside a method would retrace
+# and recompile on every call (jax caches on callable identity)
+_sample_channels = jax.jit(
+    jax.vmap(sample_gains, in_axes=(0, None, None, 0, 0, 0)),
+    static_argnums=(1, 2))
+
+
+@jax.jit
+def _scenario_keys(seeds: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    # vmapped PRNGKey/split are bitwise identical to the per-seed host
+    # loop (threefry init and split are elementwise on the key words) —
+    # regression-tested — and one fused dispatch instead of S tiny ones.
+    roots = jax.vmap(jax.random.PRNGKey)(seeds)
+    return jax.vmap(lambda k: tuple(jax.random.split(k)))(roots)
+
+
+def scenario_keys(grid: ScenarioGrid) -> Tuple[jax.Array, jax.Array]:
+    """Per-scenario PRNG streams: ``(channel_keys [S, 2], rollout_keys
+    [S, 2])``, both split from ``PRNGKey(seed)``.  This split IS the
+    reproducibility contract — an individual ``run_scan`` with
+    ``rng=rollout_keys[s]`` over ``h_all[s]`` replays arena lane ``s``.
+    """
+    return _scenario_keys(jnp.asarray(grid.seed, jnp.uint32))
+
+
+@jax.jit
+def _grid_hyperparams(sp_k, gains, scales, mus, nus, scale_f0):
+    def one(gain, escale, m, n, f0):
+        sp_s = dataclasses.replace(
+            sp_k, energy_budget=sp_k.energy_budget * escale)
+        lam_s, v_s, _, _ = estimate_hyperparams_arrays(
+            sp_s, gain, loss_scale=f0, mu=m, nu=n)
+        return lam_s, v_s
+    return jax.vmap(one)(gains, scales, mus, nus, scale_f0)
+
+
+def derive_hyperparams(sp: sm.SystemParams, grid: ScenarioGrid, mu, nu,
+                       loss_scale=1.0) -> ScenarioGrid:
+    """Fill the grid's (lam, V) from per-scenario (mu, nu) via the
+    Sec. VII-B estimates — computed INSIDE one jit per K group
+    (``estimate_hyperparams_arrays`` is pure jax), using each scenario's
+    own mean channel gain and scaled energy budget."""
+    s = len(grid)
+    mu = _as_f32(mu, s)
+    nu = _as_f32(nu, s)
+    loss_scale = _as_f32(loss_scale, s)
+    lam = np.zeros(s, np.float32)
+    v = np.zeros(s, np.float32)
+    for k in np.unique(grid.sample_count):
+        idx = np.flatnonzero(grid.sample_count == k)
+        sp_k = dataclasses.replace(sp, sample_count=int(k))
+        lam_k, v_k = _grid_hyperparams(
+            sp_k, jnp.asarray(grid.mean_gain[idx]),
+            jnp.asarray(grid.energy_scale[idx]),
+            jnp.asarray(mu[idx]), jnp.asarray(nu[idx]),
+            jnp.asarray(loss_scale[idx]))
+        lam[idx] = np.asarray(lam_k)
+        v[idx] = np.asarray(v_k)
+    return dataclasses.replace(grid, lam=lam, V=v)
+
+
+class Arena:
+    """Runs a :class:`ScenarioGrid` as one batched program over one engine.
+
+    ``engine``: a mesh-free :class:`repro.fl.round_engine.RoundEngine`
+    (the arena owns the parallel axis — see the module docstring).
+    ``mesh``: optional 1-D mesh whose ``mesh_axis`` shards the scenario
+    axis, whole rollouts per shard.  ``batch`` picks how lanes are laid
+    out inside each (per-shard) program:
+
+    * ``'vmap'`` (default) — lanes batched into wide ops.  The
+      accelerator-friendly mode: S tiny rollouts become one set of
+      S-wide kernels.  Algorithm 2's ``while_loop``s run in cross-lane
+      lockstep (every lane pays the slowest lane's trip count).
+    * ``'map'`` — lanes laid out sequentially (``lax.map``), each
+      executing the exact unbatched rollout trace with its own solver
+      trip counts.  The CPU-friendly mode: combined with scenario
+      sharding it strong-scales near-linearly in local devices, with no
+      lockstep amplification.
+
+    Compiled executables are cached per (bank layout, K, shard count);
+    the bank and the initial params are never donated, so one arena
+    serves any number of grids.
+    """
+
+    def __init__(self, engine, mesh: Optional[jax.sharding.Mesh] = None,
+                 mesh_axis: str = "data", batch: str = "vmap"):
+        if engine.mesh is not None:
+            raise ValueError(
+                "ScenarioArena shards the scenario axis; build the "
+                "RoundEngine without a mesh (client-axis shard_map does "
+                "not nest under the arena's vmap/shard_map)")
+        if batch not in ("vmap", "map"):
+            raise ValueError(f"unknown batch mode {batch!r} "
+                             "(expected 'vmap' or 'map')")
+        self.engine = engine
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
+        self.batch = batch
+        self._fns: Dict[tuple, Any] = {}
+
+    def _shards(self) -> int:
+        if self.mesh is None:
+            return 1
+        return int(self.mesh.shape[self.mesh_axis])
+
+    # -- channel pregeneration ----------------------------------------------
+
+    def sample_channels(self, grid: ScenarioGrid, num_rounds: int,
+                        num_devices: int) -> jax.Array:
+        """Every scenario's channel sequence, ``[S, T, N]``, drawn on
+        device in one jit from the per-scenario (seed, mean, clip)
+        columns (vmapped ``environment.sample_gains``)."""
+        chan_keys, _ = scenario_keys(grid)
+        return _sample_channels(chan_keys, num_rounds, num_devices,
+                                jnp.asarray(grid.mean_gain),
+                                jnp.asarray(grid.min_gain),
+                                jnp.asarray(grid.max_gain))
+
+    # -- the batched rollout ------------------------------------------------
+
+    def _build_group_fn(self, bank_key, k: int, round_fn):
+        """jit( [shard_map(] vmap(scan body) [)] ) for one K group —
+        cached per (bank layout, K, shard count).  ``round_fn`` closes
+        over only static layout captured in ``bank_key`` (the device
+        buffers arrive via the ``data`` argument), so caching on
+        ``bank_key`` alone is sound — same contract as the engine's
+        ``_scan_fns``."""
+        def decide(sp, h, queues, V, lam, cid):
+            return pol.decide_by_id(cid, sp, h, queues, V, lam)
+
+        scan_fn = self.engine._build_scan(k, decide, round_fn)
+        if self.batch == "vmap":
+            batched = jax.vmap(scan_fn,
+                               in_axes=(None, 0, None, 0, None, 0, None,
+                                        0, 0, 0, 0))
+        else:
+            def batched(params, queues, sp, eb, data, h_seq, lr_seq, rng,
+                        V, lam, cid):
+                def one(lane):
+                    q0, eb_s, h_s, rng_s, V_s, lam_s, cid_s = lane
+                    return scan_fn(params, q0, sp, eb_s, data, h_s,
+                                   lr_seq, rng_s, V_s, lam_s, cid_s)
+                return jax.lax.map(one, (queues, eb, h_seq, rng, V, lam,
+                                         cid))
+        if self.mesh is not None:
+            ax = self.mesh_axis
+            batched = shard_map(
+                batched, mesh=self.mesh,
+                in_specs=(P(), P(ax), P(), P(ax), P(), P(ax), P(), P(ax),
+                          P(ax), P(ax), P(ax)),
+                out_specs=(P(ax), P(ax), P(ax)), check_rep=False)
+        fn = jax.jit(batched)
+        self._fns[(bank_key, k, self._shards())] = fn
+        return fn
+
+    def _run_group(self, global_params: PyTree, sp: sm.SystemParams,
+                   bank, grid: ScenarioGrid, h_all, lr_seq, queues0):
+        """One K group as one jitted program; returns stacked lane
+        results in the group's grid order."""
+        k = int(grid.sample_count[0])
+        sp_k = dataclasses.replace(sp, sample_count=k)
+        round_fn, data, bank_key = self.engine._scan_plan(bank)
+        fn = self._fns.get((bank_key, k, self._shards()))
+        if fn is None:
+            fn = self._build_group_fn(bank_key, k, round_fn)
+        s = len(grid)
+        if s % self._shards():
+            raise ValueError(
+                f"scenario count {s} not divisible by mesh axis "
+                f"{self.mesh_axis!r} size {self._shards()} (per-K group "
+                f"sizes must split evenly across shards)")
+        _, roll_keys = scenario_keys(grid)
+        n = sp.num_devices
+        eb = (np.asarray(sp.energy_budget, np.float32)[None, :] *
+              grid.energy_scale[:, None])
+        if queues0 is None:
+            queues0 = jnp.zeros((s, n), jnp.float32)
+        # V/lam materialized [S, N] — each lane receives the [N] vector
+        # form _build_scan's bitwise contract requires
+        params, queues, outs = fn(
+            global_params, queues0, sp_k, jnp.asarray(eb), data,
+            jnp.asarray(h_all, jnp.float32),
+            jnp.asarray(lr_seq, jnp.float32), roll_keys,
+            jnp.asarray(np.broadcast_to(grid.V[:, None], (s, n))),
+            jnp.asarray(np.broadcast_to(grid.lam[:, None], (s, n))),
+            jnp.asarray(grid.controller))
+        return params, queues, outs
+
+    def run(self, global_params: PyTree, sp: sm.SystemParams, bank,
+            grid: ScenarioGrid, num_rounds: int, lr_seq,
+            *, h_all: Optional[jax.Array] = None) -> RolloutReport:
+        """Execute every scenario of ``grid`` for ``num_rounds`` rounds.
+
+        ``global_params``: the shared initial model (broadcast to every
+        lane, never donated).  ``sp``: base SystemParams — each lane
+        overrides ``energy_budget`` (scaled) and ``sample_count`` from
+        the grid.  ``bank``: the shared read-only ClientBank (single or
+        tiered).  ``lr_seq``: ``[T]`` learning rates shared across
+        scenarios.  ``h_all``: optional precomputed ``[S, T, N]`` channel
+        tensor (defaults to :meth:`sample_channels` from the grid's
+        seeds/statistics).  Returns a :class:`RolloutReport`; lane ``s``
+        reproduces — bit-identically for the model trajectory
+        (params/loss/selected/wall_time, leaf-chunked aggregation path),
+        to f32 resolution for the queue/energy diagnostics —::
+
+            engine.run_scan(global_params,
+                            grid.scenario_system_params(sp, s), bank,
+                            h_all[s], lr_seq, rng=scenario_keys(grid)[1][s],
+                            policy=grid.controller_names()[s],
+                            V=grid.V[s], lam=grid.lam[s])
+        """
+        s = len(grid)
+        lr_seq = np.asarray(lr_seq, np.float32)
+        if lr_seq.shape != (num_rounds,):
+            raise ValueError(f"lr_seq must have shape ({num_rounds},), "
+                             f"got {lr_seq.shape}")
+        if h_all is None:
+            h_all = self.sample_channels(grid, num_rounds, sp.num_devices)
+        h_all = jnp.asarray(h_all)
+        if h_all.shape != (s, num_rounds, sp.num_devices):
+            raise ValueError(
+                f"h_all must have shape {(s, num_rounds, sp.num_devices)},"
+                f" got {h_all.shape}")
+
+        ks = np.unique(grid.sample_count)
+        if ks.size == 1:
+            params, queues, outs = self._run_group(
+                global_params, sp, bank, grid, h_all, lr_seq, None)
+            metrics = {name: np.asarray(v) for name, v in outs.items()}
+            return RolloutReport(grid=grid, num_rounds=num_rounds,
+                                 params=params, queues=np.asarray(queues),
+                                 metrics=metrics)
+        # Mixed sampling counts: K shapes the per-round selection, so each
+        # distinct K runs as its own jitted group and the lanes are
+        # scattered back into grid order ("selected" right-pads to max K).
+        k_max = int(ks.max())
+        lane_params = [None] * s
+        queues_all = np.zeros((s, sp.num_devices), np.float32)
+        metrics: Dict[str, np.ndarray] = {}
+        for k in ks:
+            idx = np.flatnonzero(grid.sample_count == k)
+            sub = grid.take(idx)
+            params_g, queues_g, outs_g = self._run_group(
+                global_params, sp, bank, sub, h_all[jnp.asarray(idx)],
+                lr_seq, None)
+            queues_all[idx] = np.asarray(queues_g)
+            for j, lane in enumerate(idx):
+                lane_params[lane] = jax.tree_util.tree_map(
+                    lambda a, j=j: a[j], params_g)
+            for name, v in outs_g.items():
+                v = np.asarray(v)
+                if name == "selected" and v.shape[-1] < k_max:
+                    pad = np.full(v.shape[:-1] + (k_max - v.shape[-1],),
+                                  -1, v.dtype)
+                    v = np.concatenate([v, pad], axis=-1)
+                if name not in metrics:
+                    metrics[name] = np.zeros((s,) + v.shape[1:], v.dtype)
+                metrics[name][idx] = v
+        params = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls),
+                                        *lane_params)
+        return RolloutReport(grid=grid, num_rounds=num_rounds,
+                             params=params, queues=queues_all,
+                             metrics=metrics)

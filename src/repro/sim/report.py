@@ -1,0 +1,130 @@
+"""RolloutReport — the structured result of a ScenarioArena sweep, plus
+host-side reducers for the paper's Sec. VII trade-off figures.
+
+The arena returns every scenario's rollout stacked on a leading scenario
+axis: params ``[S, ...]``, final queues ``[S, N]``, and per-round metric
+arrays ``[S, T]`` (``selected`` is ``[S, T, K]``, right-padded with -1
+when the grid mixes sampling counts).  The reducers below turn those into
+the curves the paper plots — cumulative latency, loss-vs-time,
+time-averaged energy against the budget, queue-norm stability — and
+:meth:`tradeoff_table` aggregates seeds so a (controller, V, lam, budget,
+channel, K) grid collapses to one trade-off point per configuration,
+exactly the comparison methodology of Figs. 1-6.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class RolloutReport:
+    """Stacked results of ``Arena.run`` over an S-scenario grid."""
+
+    grid: Any                      # the ScenarioGrid that produced this
+    num_rounds: int
+    params: PyTree                 # final params, leaves [S, ...]
+    queues: np.ndarray             # final virtual queues [S, N]
+    metrics: Dict[str, np.ndarray]  # [S, T] per-round ([S, T, K] selected)
+
+    @property
+    def num_scenarios(self) -> int:
+        return len(self.grid)
+
+    def scenario_params(self, s: int) -> PyTree:
+        """Scenario ``s``'s final model (one lane of the stacked pytree)."""
+        return jax.tree_util.tree_map(lambda a: a[s], self.params)
+
+    # -- per-scenario curves ([S, T]) ---------------------------------------
+
+    def latency_curve(self) -> np.ndarray:
+        """Cumulative realised wall-clock (eq. 10) per scenario, [S, T]."""
+        return np.cumsum(self.metrics["wall_time"], axis=1)
+
+    def loss_curve(self) -> np.ndarray:
+        return self.metrics["loss"]
+
+    def queue_norm_curve(self) -> np.ndarray:
+        """||Q^t||_2 per round — the stability trace behind constraint
+        (16); bounded iff the time-averaged energy meets the budget."""
+        return self.metrics["queue_norm"]
+
+    # -- per-scenario scalars ([S]) -----------------------------------------
+
+    def total_latency(self) -> np.ndarray:
+        return self.metrics["wall_time"].sum(axis=1)
+
+    def final_loss(self) -> np.ndarray:
+        return self.metrics["loss"][:, -1]
+
+    def mean_energy(self) -> np.ndarray:
+        """Time-averaged per-round mean energy of the selected sets."""
+        return self.metrics["energy_mean"].mean(axis=1)
+
+    def final_queue_norm(self) -> np.ndarray:
+        return self.metrics["queue_norm"][:, -1]
+
+    def selection_counts(self, num_devices: int) -> np.ndarray:
+        """How often each client was drawn, [S, N] (padding ignored)."""
+        sel = self.metrics["selected"]
+        out = np.zeros((sel.shape[0], num_devices), np.int64)
+        for s in range(sel.shape[0]):
+            ids, counts = np.unique(sel[s][sel[s] >= 0], return_counts=True)
+            out[s, ids.astype(np.int64)] = counts
+        return out
+
+    # -- cross-seed aggregation ---------------------------------------------
+
+    def summary(self) -> List[dict]:
+        """One plain dict per scenario (grid coordinates + reduced
+        metrics) — the rows behind :meth:`tradeoff_table`."""
+        g = self.grid
+        names = g.controller_names()
+        tot = self.total_latency()
+        loss = self.final_loss()
+        energy = self.mean_energy()
+        qnorm = self.final_queue_norm()
+        return [dict(controller=names[s], seed=int(g.seed[s]),
+                     V=float(g.V[s]), lam=float(g.lam[s]),
+                     energy_scale=float(g.energy_scale[s]),
+                     mean_gain=float(g.mean_gain[s]),
+                     sample_count=int(g.sample_count[s]),
+                     total_latency=float(tot[s]),
+                     final_loss=float(loss[s]),
+                     mean_energy=float(energy[s]),
+                     final_queue_norm=float(qnorm[s]))
+                for s in range(len(g))]
+
+    def tradeoff_table(self) -> List[dict]:
+        """Seed-aggregated trade-off points, one per distinct
+        (controller, V, lam, energy_scale, mean_gain, K) configuration —
+        mean/std of total latency, final loss, and time-averaged energy
+        across that configuration's seeds.  Sorted by (controller, V), so
+        a V (resp. lambda / budget) sweep reads off as the paper's
+        latency-energy (resp. latency-accuracy) trade-off curve.
+        """
+        rows = self.summary()
+        groups: Dict[tuple, List[dict]] = {}
+        for r in rows:
+            key = (r["controller"], r["V"], r["lam"], r["energy_scale"],
+                   r["mean_gain"], r["sample_count"])
+            groups.setdefault(key, []).append(r)
+        table = []
+        for key in sorted(groups):
+            rs = groups[key]
+            ctrl, v, lam, escale, gain, k = key
+            agg = dict(controller=ctrl, V=v, lam=lam, energy_scale=escale,
+                       mean_gain=gain, sample_count=k, num_seeds=len(rs))
+            for field in ("total_latency", "final_loss", "mean_energy",
+                          "final_queue_norm"):
+                vals = np.asarray([r[field] for r in rs])
+                agg[field] = float(vals.mean())
+                agg[field + "_std"] = float(vals.std())
+            table.append(agg)
+        return table

@@ -1,0 +1,508 @@
+"""ScenarioArena: the scenario-batched sweep engine reproduces individual
+``run_scan`` rollouts lane for lane (model trajectory bitwise, control
+diagnostics to f32 resolution), including mixed-controller grids, tiered
+banks, mixed sampling counts, and a 2-device CPU scenario-sharded
+subprocess case; plus the controller-as-data dispatch, grid construction,
+report reducers, tier-skipping cond, and the pure-jax hyper-parameter
+estimates the arena derives per scenario."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (POLICIES, POLICY_IDS, decide_by_id,
+                        estimate_hyperparams, estimate_hyperparams_arrays,
+                        paper_default_params)
+from repro.core import policy as pol
+from repro.data import synthetic_image_classification
+from repro.fl import ClientConfig, RoundEngine
+from repro.models import MLPTask
+from repro.sim import (Arena, RolloutReport, ScenarioGrid,
+                       derive_hyperparams, scenario_keys)
+
+N = 6
+BS = 16
+# the model trajectory must match bitwise; the queue/energy diagnostics
+# come out of Algorithm 2's bisection solver, whose elementwise chains
+# XLA fuses shape-dependently — those agree to f32 resolution instead
+BITWISE_METRICS = ("loss", "selected", "wall_time")
+TOL = dict(rtol=1e-5, atol=1e-4)
+
+
+def _client_data(sizes, seed=3):
+    total = sum(sizes)
+    x, y = synthetic_image_classification(total, (8, 8, 1), num_classes=4,
+                                          noise=0.3, seed=seed)
+    offs = np.cumsum([0] + list(sizes))
+    return [(x[offs[i]:offs[i + 1]], y[offs[i]:offs[i + 1]])
+            for i in range(len(sizes))]
+
+
+def _setup(sizes=None, bank_mode="single"):
+    sizes = [64] * N if sizes is None else sizes
+    task = MLPTask(input_dim=64, num_classes=4, hidden=32)
+    eng = RoundEngine(task, ClientConfig(local_epochs=2, batch_size=BS))
+    bank = eng.make_bank(_client_data(sizes), tiered=bank_mode)
+    sp = paper_default_params(num_devices=len(sizes), sample_count=4,
+                              data_sizes=np.asarray(sizes, np.float32))
+    params0 = task.init(jax.random.PRNGKey(0))
+    return task, eng, bank, sp, params0
+
+
+def _mixed_grid(s=8, k=4):
+    """Mixed-controller, mixed-(V, lam, budget, channel) grid of S lanes."""
+    ctrl = [POLICIES[i % len(POLICIES)] for i in range(s)]
+    return ScenarioGrid.create(
+        controllers=ctrl, seeds=np.arange(s),
+        V=np.linspace(10.0, 1e4, s).astype(np.float32),
+        lam=np.linspace(0.1, 5.0, s).astype(np.float32),
+        energy_scale=([1.0, 2.0, 0.5, 1.0] * ((s + 3) // 4))[:s],
+        mean_gain=([0.1, 0.2, 0.05, 0.1] * ((s + 3) // 4))[:s],
+        sample_count=k)
+
+
+def _assert_lane_matches(rep, eng, bank, sp, params0, grid, h_all, lr, s,
+                         model_bitwise=True):
+    """Arena lane ``s`` == the individual run_scan reproduction of it.
+
+    ``model_bitwise=False`` relaxes the model trajectory to tight
+    allclose — the tiered scan's per-tier ``lax.cond`` lowers as a real
+    branch in the unbatched program but as a both-branches select under
+    the arena's vmap, so tiered lanes agree to f32 resolution instead of
+    bitwise."""
+    _, roll_keys = scenario_keys(grid)
+    sp_s = grid.scenario_system_params(sp, s)
+    p, q, m = eng.run_scan(params0, sp_s, bank, np.asarray(h_all[s]), lr,
+                           roll_keys[s], policy=grid.controller_names()[s],
+                           V=float(grid.V[s]), lam=float(grid.lam[s]))
+    for a, b in zip(jax.tree_util.tree_leaves(p),
+                    jax.tree_util.tree_leaves(rep.scenario_params(s))):
+        if model_bitwise:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        else:
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5)
+    k = int(grid.sample_count[s])
+    for name in BITWISE_METRICS:
+        got = rep.metrics[name][s]
+        if name == "selected":
+            got = got[..., :k]       # strip mixed-K right-padding
+        if model_bitwise or name == "selected":
+            np.testing.assert_array_equal(m[name], got)
+        else:
+            np.testing.assert_allclose(m[name], got, **TOL)
+    for name in m:
+        if name in BITWISE_METRICS:
+            continue
+        np.testing.assert_allclose(m[name], rep.metrics[name][s], **TOL)
+    np.testing.assert_allclose(np.asarray(q), rep.queues[s], **TOL)
+
+
+# -- tentpole: S-lane arena == S individual run_scan rollouts --------------
+
+
+def test_arena_mixed_controller_grid_matches_individual_rollouts():
+    """An S=8 mixed-controller (lroa/uni_d/uni_s), mixed-hyperparameter
+    grid runs as ONE vmapped program whose every lane reproduces the
+    fixed-policy run_scan rollout of that scenario."""
+    task, eng, bank, sp, params0 = _setup()
+    grid = _mixed_grid(s=8)
+    arena = Arena(eng)
+    T = 4
+    lr = np.full(T, 0.1, np.float32)
+    h_all = arena.sample_channels(grid, T, N)
+    assert h_all.shape == (8, T, N)
+    rep = arena.run(params0, sp, bank, grid, T, lr, h_all=h_all)
+    assert isinstance(rep, RolloutReport)
+    assert rep.metrics["loss"].shape == (8, T)
+    assert rep.metrics["selected"].shape == (8, T, 4)
+    # exactly one executable compiled for the whole mixed grid
+    assert len(arena._fns) == 1
+    for s in range(8):
+        _assert_lane_matches(rep, eng, bank, sp, params0, grid, h_all, lr,
+                             s)
+
+
+def test_arena_map_mode_lanes_match_individual_rollouts():
+    """batch='map' lays lanes out as lax.map iterations (per-lane solver
+    trip counts, no vmap lockstep) — the model trajectory must still be
+    bitwise against the individual run_scan reproductions."""
+    task, eng, bank, sp, params0 = _setup()
+    grid = _mixed_grid(s=4)
+    arena = Arena(eng, batch="map")
+    T = 4
+    lr = np.full(T, 0.1, np.float32)
+    h_all = arena.sample_channels(grid, T, N)
+    rep = arena.run(params0, sp, bank, grid, T, lr, h_all=h_all)
+    for s in range(len(grid)):
+        _assert_lane_matches(rep, eng, bank, sp, params0, grid, h_all, lr,
+                             s)
+    with pytest.raises(ValueError, match="batch mode"):
+        Arena(eng, batch="bogus")
+
+
+def test_scenario_keys_vectorised_matches_per_seed_host_loop():
+    """The jitted/vmapped key derivation must be bitwise identical to
+    building PRNGKey(seed) and splitting per scenario on the host — the
+    reproducibility contract individual run_scan replays rely on."""
+    grid = ScenarioGrid.create(controllers=["lroa"] * 4,
+                               seeds=[0, 1, 7, 123456], V=1.0, lam=1.0)
+    chan, roll = scenario_keys(grid)
+    for s, seed in enumerate(grid.seed):
+        root = jax.random.PRNGKey(int(seed))
+        ck, rk = jax.random.split(root)
+        np.testing.assert_array_equal(np.asarray(chan[s]), np.asarray(ck))
+        np.testing.assert_array_equal(np.asarray(roll[s]), np.asarray(rk))
+
+
+def test_arena_tiered_bank_lanes_match_individual_tiered_scans():
+    """The arena rides the tiered scan plan (per-tier lax.cond inside the
+    vmapped body) — every lane must still reproduce the individual
+    tiered run_scan."""
+    sizes = [64, 10, 33, 64, 100, 17]
+    task, eng, bank, sp, params0 = _setup(sizes, bank_mode="tiered")
+    assert bank.num_tiers > 1
+    grid = ScenarioGrid.create(controllers=["lroa", "uni_d", "uni_s",
+                                            "lroa"],
+                               seeds=[3, 4, 5, 6], V=200.0, lam=1.0,
+                               sample_count=4)
+    arena = Arena(eng)
+    T = 3
+    lr = np.full(T, 0.1, np.float32)
+    h_all = arena.sample_channels(grid, T, len(sizes))
+    rep = arena.run(params0, sp, bank, grid, T, lr, h_all=h_all)
+    for s in range(len(grid)):
+        _assert_lane_matches(rep, eng, bank, sp, params0, grid, h_all, lr,
+                             s, model_bitwise=False)
+
+
+def test_arena_mixed_sample_counts_group_by_k():
+    """K shapes the selection, so a mixed-K grid runs one jitted program
+    per distinct K and scatters lanes back into grid order (selected
+    right-padded with -1)."""
+    task, eng, bank, sp, params0 = _setup()
+    grid = ScenarioGrid.create(controllers=["lroa", "uni_d", "lroa",
+                                            "uni_s"],
+                               seeds=[0, 1, 2, 3], V=100.0, lam=0.5,
+                               sample_count=[2, 4, 2, 4])
+    arena = Arena(eng)
+    T = 3
+    lr = np.full(T, 0.1, np.float32)
+    h_all = arena.sample_channels(grid, T, N)
+    rep = arena.run(params0, sp, bank, grid, T, lr, h_all=h_all)
+    assert len(arena._fns) == 2                      # one program per K
+    assert rep.metrics["selected"].shape == (4, T, 4)
+    assert np.all(rep.metrics["selected"][0, :, 2:] == -1)   # K=2 lanes
+    assert np.all(rep.metrics["selected"][1, :, 2:] >= 0)    # K=4 lanes
+    for s in range(len(grid)):
+        _assert_lane_matches(rep, eng, bank, sp, params0, grid, h_all, lr,
+                             s)
+
+
+# -- controller-as-data dispatch -------------------------------------------
+
+
+def test_decide_by_id_matches_named_policies():
+    sp = paper_default_params(num_devices=N, sample_count=3,
+                              data_sizes=np.full(N, 64, np.float32))
+    h = jnp.asarray(np.random.default_rng(0).uniform(0.02, 0.4, N)
+                    .astype(np.float32))
+    queues = jnp.asarray(np.random.default_rng(1).uniform(0, 300, N)
+                         .astype(np.float32))
+    v = jnp.full((N,), 50.0, jnp.float32)
+    lam = jnp.full((N,), 0.7, jnp.float32)
+    for name, fn in zip(POLICIES, pol.DECIDE_FNS):
+        direct = fn(sp, h, queues, v, lam)
+        switched = jax.jit(decide_by_id)(jnp.int32(POLICY_IDS[name]), sp,
+                                         h, queues, v, lam)
+        for a, b in zip(direct, switched):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_controllers_are_thin_wrappers_over_policy_fns():
+    """The stateful classes and the pure rules must make identical
+    decisions — the wrapper refactor cannot fork the math."""
+    from repro.core import (LROAController, UniformDynamicController,
+                            UniformStaticController)
+    sp = paper_default_params(num_devices=N, sample_count=3,
+                              data_sizes=np.full(N, 64, np.float32))
+    hp = estimate_hyperparams(sp, 0.1, loss_scale=1.5, mu=1.0, nu=1e5)
+    h = jnp.asarray(np.random.default_rng(2).uniform(0.02, 0.4, N)
+                    .astype(np.float32))
+    for cls, fn, (v, lam) in [
+            (LROAController, pol.decide_lroa, (hp.V, hp.lam)),
+            (UniformDynamicController, pol.decide_uni_d, (hp.V, hp.lam)),
+            (UniformStaticController, pol.decide_uni_s, (0.0, 0.0))]:
+        ctrl = cls(sp, hp)
+        ctrl.queues = jnp.asarray(
+            np.random.default_rng(3).uniform(0, 300, N).astype(np.float32))
+        got = ctrl.decide(h)
+        want = fn(sp, h, ctrl.queues, jnp.float32(v), jnp.float32(lam))
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-6)
+
+
+def test_run_scan_uni_s_policy():
+    """uni_s joins the scan-traceable policies (static resources)."""
+    task, eng, bank, sp, params0 = _setup()
+    T = 3
+    h = np.random.default_rng(0).uniform(0.05, 0.4, (T, N)).astype(
+        np.float32)
+    params, queues, m = eng.run_scan(params0, sp, bank, h,
+                                     np.full(T, 0.1, np.float32),
+                                     jax.random.PRNGKey(1),
+                                     policy="uni_s")
+    assert np.all(np.isfinite(m["loss"]))
+    np.testing.assert_allclose(m["q_min"], 1.0 / N, rtol=1e-6)
+    with pytest.raises(ValueError, match="host-only"):
+        eng.run_scan(params0, sp, bank, h, np.full(T, 0.1, np.float32),
+                     jax.random.PRNGKey(1), policy="divfl")
+
+
+# -- grid construction ------------------------------------------------------
+
+
+def test_grid_product_and_validation():
+    grid = ScenarioGrid.product(controllers=("lroa", "uni_d"),
+                                seeds=(0, 1, 2), V=(10.0, 100.0),
+                                lam=(0.5,))
+    assert len(grid) == 12
+    assert set(grid.controller_names()) == {"lroa", "uni_d"}
+    sub = grid.take(np.asarray([0, 5]))
+    assert len(sub) == 2
+    with pytest.raises(ValueError, match="DivFL"):
+        ScenarioGrid.create(controllers=["divfl"], seeds=[0], V=1.0,
+                            lam=1.0)
+    with pytest.raises(ValueError, match="unknown controller"):
+        ScenarioGrid.create(controllers=["bogus"], seeds=[0], V=1.0,
+                            lam=1.0)
+    with pytest.raises(ValueError, match="out of range"):
+        ScenarioGrid.create(controllers=[7], seeds=[0], V=1.0, lam=1.0)
+    # PRNGKey truncates to 32 bits: wider seeds would silently alias lanes
+    with pytest.raises(ValueError, match="uint32"):
+        ScenarioGrid.create(controllers=["lroa"], seeds=[2 ** 32 + 1],
+                            V=1.0, lam=1.0)
+
+
+def test_arena_rejects_meshed_engine():
+    task = MLPTask(input_dim=64, num_classes=4, hidden=32)
+    eng = RoundEngine(task, ClientConfig(local_epochs=2, batch_size=BS),
+                      mesh=jax.make_mesh((1,), ("data",)))
+    with pytest.raises(ValueError, match="without a mesh"):
+        Arena(eng)
+
+
+# -- report reducers --------------------------------------------------------
+
+
+def test_report_reducers_and_tradeoff_table():
+    task, eng, bank, sp, params0 = _setup()
+    grid = ScenarioGrid.product(controllers=("lroa", "uni_d"),
+                                seeds=(0, 1), V=(100.0,), lam=(0.5,),
+                                sample_count=(4,))
+    arena = Arena(eng)
+    T = 3
+    lr = np.full(T, 0.1, np.float32)
+    rep = arena.run(params0, sp, bank, grid, T, lr)
+    s = len(grid)
+    assert rep.latency_curve().shape == (s, T)
+    assert np.all(np.diff(rep.latency_curve(), axis=1) > 0)
+    np.testing.assert_allclose(rep.total_latency(),
+                               rep.latency_curve()[:, -1], rtol=1e-6)
+    counts = rep.selection_counts(N)
+    assert counts.shape == (s, N)
+    assert np.all(counts.sum(axis=1) == T * 4)
+    table = rep.tradeoff_table()
+    # 2 controllers x 1 (V, lam) config, each aggregating 2 seeds
+    assert len(table) == 2
+    assert all(row["num_seeds"] == 2 for row in table)
+    assert {row["controller"] for row in table} == {"lroa", "uni_d"}
+    rows = rep.summary()
+    assert len(rows) == s and rows[0]["total_latency"] > 0
+
+
+# -- tier-aware scan skipping ----------------------------------------------
+
+
+def test_tier_loop_cond_skip_matches_unconditional():
+    """The selection-conditioned lax.cond wrapper around each tier's body
+    (the scan path's skip) must reproduce the unconditional tier loop."""
+    sizes = [64, 10, 33, 64, 100, 17]
+    task, eng, bank, sp, params0 = _setup(sizes, bank_mode="tiered")
+    round_fn, data, _ = eng._scan_plan(bank)
+    sel = np.asarray([1, 4, 0, 5])           # hits several tiers
+    assert len(np.unique(bank.tier_of[sel])) > 1
+    coeffs = jnp.asarray([.2, .3, .1, .4], jnp.float32)
+    rngs = jax.random.split(jax.random.PRNGKey(5), 4)
+
+    from repro.fl.round_engine import _tier_parts
+    parts_key = tuple((t, tier.steps_per_epoch,
+                       tier.device_args()[2] is not None)
+                      for t, tier in enumerate(bank.tiers))
+    bufs = tuple(tier.device_args() for tier in bank.tiers)
+    tier_sel = jnp.asarray(bank.tier_of[sel], jnp.int32)
+    pos_sel = jnp.asarray(bank.pos_in_tier[sel], jnp.int32)
+
+    def run(cond_skip):
+        fn = jax.jit(lambda p: eng._tier_loop_round(
+            p, _tier_parts(parts_key, bufs), tier_sel, pos_sel, coeffs,
+            jnp.float32(0.1), rngs, cond_skip=cond_skip))
+        return fn(params0)
+
+    p_cond, l_cond = run(True)
+    p_ref, l_ref = run(False)
+    for a, b in zip(jax.tree_util.tree_leaves(p_cond),
+                    jax.tree_util.tree_leaves(p_ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-7)
+    np.testing.assert_allclose(np.asarray(l_cond), np.asarray(l_ref),
+                               atol=1e-7)
+
+
+# -- pure-jax hyper-parameter estimates ------------------------------------
+
+
+def test_estimate_hyperparams_arrays_matches_host_and_jits():
+    sp = paper_default_params(num_devices=N, sample_count=3,
+                              data_sizes=np.full(N, 64, np.float32))
+    hp = estimate_hyperparams(sp, 0.1, loss_scale=1.5, mu=2.0, nu=1e4)
+    lam, v, lam0, v0 = jax.jit(estimate_hyperparams_arrays,
+                               static_argnums=())(
+        sp, jnp.float32(0.1), jnp.float32(1.5), jnp.float32(2.0),
+        jnp.float32(1e4))
+    assert float(lam) == pytest.approx(hp.lam, rel=1e-6)
+    assert float(v) == pytest.approx(hp.V, rel=1e-6)
+    assert float(lam0) == pytest.approx(hp.lam0, rel=1e-6)
+    assert float(v0) == pytest.approx(hp.V0, rel=1e-6)
+    # vmappable over per-scenario (mean_gain, mu, nu) — the arena's
+    # setup-jit use case
+    lam_b, v_b, _, _ = jax.jit(jax.vmap(
+        lambda g, m, n: estimate_hyperparams_arrays(sp, g, 1.5, m, n)))(
+        jnp.asarray([0.1, 0.2]), jnp.asarray([2.0, 1.0]),
+        jnp.asarray([1e4, 1e5]))
+    assert float(lam_b[0]) == pytest.approx(hp.lam, rel=1e-6)
+    assert float(v_b[0]) == pytest.approx(hp.V, rel=1e-6)
+
+
+def test_derive_hyperparams_fills_grid_per_scenario():
+    sp = paper_default_params(num_devices=N, sample_count=4,
+                              data_sizes=np.full(N, 64, np.float32))
+    grid = ScenarioGrid.create(controllers=["lroa", "uni_d"],
+                               seeds=[0, 1], V=0.0, lam=0.0,
+                               mean_gain=[0.1, 0.2], sample_count=[4, 2])
+    out = derive_hyperparams(sp, grid, mu=1.0, nu=1e5, loss_scale=1.5)
+    hp0 = estimate_hyperparams(sp, 0.1, loss_scale=1.5, mu=1.0, nu=1e5)
+    assert out.lam[0] == pytest.approx(hp0.lam, rel=1e-6)
+    assert out.V[0] == pytest.approx(hp0.V, rel=1e-6)
+    # lane 1 uses its own K and channel mean
+    import dataclasses as dc
+    sp1 = dc.replace(sp, sample_count=2)
+    hp1 = estimate_hyperparams(sp1, 0.2, loss_scale=1.5, mu=1.0, nu=1e5)
+    assert out.lam[1] == pytest.approx(hp1.lam, rel=1e-6)
+    assert out.V[1] == pytest.approx(hp1.V, rel=1e-6)
+
+
+# -- channel pregeneration --------------------------------------------------
+
+
+def test_sample_channels_per_scenario_statistics():
+    task, eng, bank, sp, params0 = _setup()
+    grid = ScenarioGrid.create(controllers=["lroa"] * 3, seeds=[0, 1, 2],
+                               V=1.0, lam=1.0,
+                               mean_gain=[0.05, 0.1, 0.3],
+                               min_gain=[0.01, 0.01, 0.05],
+                               max_gain=[0.2, 0.5, 0.9])
+    arena = Arena(eng)
+    h = np.asarray(arena.sample_channels(grid, 200, N))
+    assert h.shape == (3, 200, N)
+    for s in range(3):
+        assert h[s].min() >= grid.min_gain[s]
+        assert h[s].max() <= grid.max_gain[s]
+    # larger mean_gain must shift the realised mean up
+    assert h[0].mean() < h[1].mean() < h[2].mean()
+    # deterministic in the grid seeds
+    h2 = np.asarray(arena.sample_channels(grid, 200, N))
+    np.testing.assert_array_equal(h, h2)
+
+
+# -- 2-device CPU scenario sharding ----------------------------------------
+
+_SHARD_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=2")
+    import numpy as np, jax
+    from repro.core import paper_default_params
+    from repro.data import synthetic_image_classification
+    from repro.fl import ClientConfig, RoundEngine
+    from repro.launch.mesh import make_fl_mesh
+    from repro.models import MLPTask
+    from repro.sim import Arena, ScenarioGrid
+
+    assert jax.device_count() == 2, jax.devices()
+    N, BS, T, S = 6, 16, 3, 4
+    sizes = [64] * N
+    x, y = synthetic_image_classification(sum(sizes), (8, 8, 1), 4,
+                                          noise=0.3, seed=3)
+    offs = np.cumsum([0] + sizes)
+    cd = [(x[offs[i]:offs[i + 1]], y[offs[i]:offs[i + 1]])
+          for i in range(N)]
+    task = MLPTask(input_dim=64, num_classes=4, hidden=32)
+    eng = RoundEngine(task, ClientConfig(local_epochs=2, batch_size=BS))
+    bank = eng.make_bank(cd, tiered="single")
+    sp = paper_default_params(num_devices=N, sample_count=4,
+                              data_sizes=np.asarray(sizes, np.float32))
+    params0 = task.init(jax.random.PRNGKey(0))
+    grid = ScenarioGrid.create(
+        controllers=["lroa", "uni_d", "uni_s", "lroa"], seeds=[0, 1, 2, 3],
+        V=[100.0, 50.0, 0.0, 200.0], lam=0.5, sample_count=4)
+    lr = np.full(T, 0.1, np.float32)
+    plain = Arena(eng)
+    h_all = plain.sample_channels(grid, T, N)
+    sharded = Arena(eng, mesh=make_fl_mesh())
+    rep_1 = plain.run(params0, sp, bank, grid, T, lr, h_all=h_all)
+    rep_2 = sharded.run(params0, sp, bank, grid, T, lr, h_all=h_all)
+    for a, b in zip(jax.tree_util.tree_leaves(rep_1.params),
+                    jax.tree_util.tree_leaves(rep_2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6)
+    for name in rep_1.metrics:
+        np.testing.assert_allclose(rep_1.metrics[name],
+                                   rep_2.metrics[name], rtol=1e-5,
+                                   atol=1e-4)
+    np.testing.assert_allclose(rep_1.queues, rep_2.queues, rtol=1e-5,
+                               atol=1e-4)
+    # indivisible scenario counts are a clear error, not silent padding
+    bad = ScenarioGrid.create(controllers=["lroa"] * 3, seeds=[0, 1, 2],
+                              V=1.0, lam=1.0, sample_count=4)
+    try:
+        sharded.run(params0, sp, bank, bad, T, lr)
+        raise SystemExit("expected divisibility error")
+    except ValueError as e:
+        assert "divisible" in str(e)
+    print("ARENA-SHARDED-OK")
+""")
+
+
+def test_scenario_sharded_arena_matches_unsharded(tmp_path):
+    """Whole-rollout-per-shard over a 2-device CPU ('data',) mesh (forced
+    host devices in a subprocess) must reproduce the unsharded arena —
+    the scenario axis has no cross-shard communication."""
+    script = tmp_path / "arena_shard_check.py"
+    script.write_text(_SHARD_SCRIPT)
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env = dict(os.environ,
+               PYTHONPATH=src + os.pathsep + os.environ.get("PYTHONPATH",
+                                                            ""))
+    out = subprocess.run([sys.executable, str(script)], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "ARENA-SHARDED-OK" in out.stdout

@@ -404,9 +404,15 @@ def test_bench_smoke(tmp_path, monkeypatch, capsys):
     assert "round_engine/host_restacked" in out
     assert "round_engine/skewed_tiered_bank" in out
     assert "round_engine/skewed_single_bucket" in out
+    # tier-aware scan skipping: the skewed scan rows for both bank modes
+    assert "round_engine/skewed_scan_single" in out
+    assert "round_engine/skewed_scan_tiered" in out
     assert "latency_saving_vs_uni_d" in out     # convergence section
     assert "lambda_sweep" in out and "k_sweep" in out
     assert "v_sweep" in out and "heterogeneity_sweep" in out
+    # ScenarioArena section: batched vs host-looped rollout grids
+    assert "arena_sweep/batched" in out
+    assert "arena_sweep/host_looped" in out
     # smoke mode writes its own artifact so the tracked full-scale
     # BENCH_round_engine.json is never clobbered by tiny-shape numbers
     bench = json.loads(
@@ -419,3 +425,12 @@ def test_bench_smoke(tmp_path, monkeypatch, capsys):
     assert skew["padded_examples_tiered"] <= skew["padded_examples_single"]
     assert skew["padded_examples_tiered"] >= skew["true_examples"]
     assert skew["tiered_rounds_per_sec"] > 0
+    assert skew["tiered_scan_rounds_per_sec"] > 0
+    assert skew["single_scan_rounds_per_sec"] > 0
+    # the arena section lands in the same tracked record
+    arena = bench["arena"]
+    assert arena["K"] > 0 and arena["N"] > 0
+    for key, section in arena.items():
+        if key.startswith("S"):
+            assert section["batched_rounds_per_sec"] > 0
+            assert section["host_looped_rounds_per_sec"] > 0

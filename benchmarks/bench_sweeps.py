@@ -8,7 +8,10 @@ sweep-engine section.
 * arena (Sec. VII grid execution): S-batched ``Arena.run`` vs S
   host-looped ``run_scan`` calls on a mixed-controller grid at the
   round-engine operating point (K=8, N=120), recorded in the ``arena``
-  section of ``BENCH_round_engine.json``.
+  section of ``BENCH_round_engine.json``; the ``arena.mixed_k``
+  sub-section additionally pits the padded-K single program against the
+  per-K-group execution of a mixed-K grid, and the on-device batched
+  EvalBank evaluation against the host-side per-lane eval loop.
 """
 
 from __future__ import annotations
@@ -223,7 +226,113 @@ def _arena_measure(s_values, rounds: int, smoke: bool) -> dict:
             "speedup_batched_vs_host_looped": vmap_rps / host_rps,
             "speedup_sharded_vs_host_looped": shard_rps / host_rps,
         }
+    stats["mixed_k"] = _mixed_k_measure(trainer, rounds, smoke)
     return stats
+
+
+def _mixed_k_measure(trainer, rounds: int, smoke: bool) -> dict:
+    """Mixed-K grid execution + evaluation (runs INSIDE the arena
+    subprocess): a controllers x seeds x K grid executed per-K-group
+    (``k_mode='group'``, one compile + one dispatch chain per distinct
+    K) vs as ONE padded-K program (``k_mode='pad'``), and the S-lane
+    evaluation done as a host loop (jitted per-lane ``task.metrics`` over
+    sliced params — the pre-EvalBank workflow) vs one vmapped on-device
+    batched pass.
+
+    Records both the steady-state throughput (executables cached) and
+    the WORKFLOW throughput of a fresh grid execution including
+    compilation — the operating point the fusion exists for: an
+    iterate-on-the-grid sweep pays the compile chain on every new shape,
+    and the padded program compiles (and dispatches) once instead of
+    once per K."""
+    import jax
+    import jax.numpy as jnp
+    from benchmarks.bench_round_engine import EngineBenchConfig
+    from repro.data import synthetic_image_classification
+    from repro.sim import Arena, EvalBank, ScenarioGrid
+
+    ecfg = EngineBenchConfig.smoke() if smoke else EngineBenchConfig()
+    eng, bank, sp = trainer.engine, trainer.bank, trainer.params
+    hp = trainer.controller.hp
+    params0 = trainer.task.init(jax.random.PRNGKey(0))
+    lr_seq = np.full(rounds, ecfg.lr, np.float32)
+    n = ecfg.num_devices
+    ks = (2, 4) if smoke else (4, 8, 16)
+    grid = ScenarioGrid.product(
+        controllers=("lroa", "uni_d"), seeds=(0, 1), V=(hp.V,),
+        lam=(hp.lam,), sample_count=ks, num_devices=n)
+    s_count = len(grid)
+    mk = {"K_values": [int(k) for k in ks], "S": s_count,
+          "rounds": rounds, "controllers": ["lroa", "uni_d"],
+          "num_seeds": 2}
+    probe = Arena(eng)
+    h_all = probe.sample_channels(grid, rounds, n)
+    jax.block_until_ready(h_all)
+
+    def run(a, **kw):
+        rep = a.run(params0, sp, bank, grid, rounds, lr_seq, h_all=h_all,
+                    **kw)
+        jax.block_until_ready(jax.tree_util.tree_leaves(rep.params))
+        return rep
+
+    reports = {}
+    for mode in ("group", "pad"):
+        a = Arena(eng, k_mode=mode)
+        t0 = time.perf_counter()
+        cold_rep = run(a)                  # cold: compiles + executes
+        cold = time.perf_counter() - t0
+        best = float("inf")
+        for _ in range(3):                 # steady: executables cached
+            t0 = time.perf_counter()
+            rep = run(a)
+            best = min(best, time.perf_counter() - t0)
+        tag = "grouped" if mode == "group" else "padded"
+        # executables the cold run actually compiled for THIS grid (the
+        # fusion claim), not the arena-lifetime cache size
+        mk[f"{tag}_executables"] = cold_rep.meta["executables_built"]
+        mk[f"{tag}_dispatches"] = rep.meta["dispatches"]
+        mk[f"{tag}_cold_seconds"] = cold
+        mk[f"{tag}_workflow_rounds_per_sec"] = s_count * rounds / cold
+        mk[f"{tag}_rounds_per_sec"] = s_count * rounds / best
+        reports[mode] = rep
+    mk["speedup_padded_vs_grouped_workflow"] = (
+        mk["grouped_cold_seconds"] / mk["padded_cold_seconds"])
+    mk["speedup_padded_vs_grouped_steady"] = (
+        mk["padded_rounds_per_sec"] / mk["grouped_rounds_per_sec"])
+
+    # -- S-lane evaluation: host loop vs on-device batched ------------------
+    test_n = 64 if smoke else 1024
+    xte, yte = synthetic_image_classification(
+        test_n, ecfg.image_shape, ecfg.num_classes, noise=0.3, seed=123)
+    ebank = EvalBank(trainer.task, xte, yte)
+    rep = reports["pad"]
+    xte_d, yte_d = jnp.asarray(xte), jnp.asarray(yte)
+    host_metrics = jax.jit(trainer.task.metrics)
+
+    def eval_host_loop():
+        for s in range(s_count):
+            out = host_metrics(rep.scenario_params(s),
+                               {"x": xte_d, "y": yte_d})
+            jax.block_until_ready(out["accuracy"])
+
+    def eval_batched():
+        ebank.evaluate_stacked(rep.params)
+
+    def best_seconds(fn):
+        fn()                               # compile / warm
+        best = float("inf")
+        for _ in range(5):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    mk["eval_test_examples"] = test_n
+    mk["eval_host_loop_seconds"] = best_seconds(eval_host_loop)
+    mk["eval_batched_seconds"] = best_seconds(eval_batched)
+    mk["speedup_eval_batched_vs_host_loop"] = (
+        mk["eval_host_loop_seconds"] / mk["eval_batched_seconds"])
+    return mk
 
 
 def arena_sweep(cfg: BenchConfig, s_values=(4, 16), rounds: int = 5,
@@ -242,9 +351,13 @@ def arena_sweep(cfg: BenchConfig, s_values=(4, 16), rounds: int = 5,
     round_engine scan row's job), and merges an ``arena`` section into
     ``BENCH_round_engine.json`` (the tracked record of
     execution-strategy throughput; ``bench_round_engine`` preserves the
-    section when it rewrites the file).  Measurement runs in a
-    subprocess because the forced host-device count must be set before
-    jax initialises.
+    section when it rewrites the file).  The ``arena.mixed_k``
+    sub-section (``_mixed_k_measure``) compares a mixed-K grid run
+    per-K-group vs as ONE padded-K program — workflow (compile included)
+    and steady-state throughput, executable/dispatch counts — plus the
+    S-lane evaluation as a host loop vs the EvalBank's batched on-device
+    pass.  Measurement runs in a subprocess because the forced
+    host-device count must be set before jax initialises.
 
     Scaling note: the sharded row's ceiling is the local device count.
     On the 2-core recording host the fused per-rollout scan baseline
@@ -309,6 +422,35 @@ def arena_sweep(cfg: BenchConfig, s_values=(4, 16), rounds: int = 5,
                     f"speedup_vs_host_looped="
                     f"{sec['speedup_sharded_vs_host_looped']:.2f}"),
         ]
+    mk = stats["mixed_k"]
+    mtag = (f"S{mk['S']}K" + "+".join(str(k) for k in mk["K_values"]) +
+            f"N{stats['N']}")
+    rows += [
+        csv_row(f"arena_sweep/mixed_k_grouped/{mtag}",
+                1e6 / mk["grouped_workflow_rounds_per_sec"],
+                f"workflow_rounds_per_sec="
+                f"{mk['grouped_workflow_rounds_per_sec']:.2f};"
+                f"steady_rounds_per_sec={mk['grouped_rounds_per_sec']:.2f};"
+                f"executables={mk['grouped_executables']};"
+                f"dispatches={mk['grouped_dispatches']}"),
+        csv_row(f"arena_sweep/mixed_k_padded/{mtag}",
+                1e6 / mk["padded_workflow_rounds_per_sec"],
+                f"workflow_rounds_per_sec="
+                f"{mk['padded_workflow_rounds_per_sec']:.2f};"
+                f"steady_rounds_per_sec={mk['padded_rounds_per_sec']:.2f};"
+                f"executables={mk['padded_executables']};"
+                f"dispatches={mk['padded_dispatches']};"
+                f"speedup_workflow_vs_grouped="
+                f"{mk['speedup_padded_vs_grouped_workflow']:.2f}"),
+        csv_row(f"arena_sweep/mixed_k_eval_host_loop/{mtag}",
+                1e6 * mk["eval_host_loop_seconds"],
+                f"seconds={mk['eval_host_loop_seconds']:.4f}"),
+        csv_row(f"arena_sweep/mixed_k_eval_batched/{mtag}",
+                1e6 * mk["eval_batched_seconds"],
+                f"seconds={mk['eval_batched_seconds']:.4f};"
+                f"speedup_vs_host_loop="
+                f"{mk['speedup_eval_batched_vs_host_loop']:.2f}"),
+    ]
     try:
         with open(json_path) as f:
             record = json.load(f)

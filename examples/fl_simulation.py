@@ -23,37 +23,43 @@ from benchmarks.common import BenchConfig, build_testbed, run_controller
 from repro.core import estimate_hyperparams
 from repro.fl import ClientConfig, RoundEngine
 from repro.optim import paper_step_decay
-from repro.sim import Arena, ScenarioGrid
+from repro.sim import Arena, EvalBank, ScenarioGrid
 
 
 def run_arena_grid(names, cfg: BenchConfig, num_seeds: int):
     """All scan-traceable controllers x seeds as one batched arena run;
-    returns {controller: (mean final accuracy, mean total latency)}."""
+    returns {controller: (mean final accuracy, mean total latency)}.
+
+    Accuracy comes from the arena's on-device batched evaluation (an
+    ``EvalBank`` holding the test set, evaluated for every lane in one
+    vmapped dispatch) — the old host-side per-lane ``task.metrics`` loop
+    is gone."""
     params, task, client_data, (xte, yte) = build_testbed(cfg)
     hp = estimate_hyperparams(params, 0.1, loss_scale=1.5, mu=cfg.mu,
                               nu=cfg.nu)
     engine = RoundEngine(task, ClientConfig(local_epochs=cfg.local_epochs,
                                             batch_size=cfg.batch_size))
     bank = engine.make_bank(client_data)
+    eval_bank = EvalBank(task, xte, yte)
     grid = ScenarioGrid.product(controllers=names,
                                 seeds=np.arange(num_seeds) + cfg.seed,
                                 V=(hp.V,), lam=(hp.lam,),
-                                sample_count=(cfg.sample_count,))
+                                sample_count=(cfg.sample_count,),
+                                num_devices=cfg.num_devices)
     arena = Arena(engine)
     sched = paper_step_decay(cfg.lr, cfg.rounds)
     lr_seq = np.asarray([float(sched(t)) for t in range(cfg.rounds)],
                         np.float32)
     report = arena.run(task.init(jax.random.PRNGKey(cfg.seed + 1)), params,
-                       bank, grid, cfg.rounds, lr_seq)
-    xte, yte = jax.numpy.asarray(xte), jax.numpy.asarray(yte)
+                       bank, grid, cfg.rounds, lr_seq,
+                       eval_bank=eval_bank)
     total = report.total_latency()
+    accuracy = report.final_accuracy()
     results = {}
     for name in grid.controller_names():
         results.setdefault(name, ([], []))
     for s, name in enumerate(grid.controller_names()):
-        acc = float(task.metrics(report.scenario_params(s),
-                                 {"x": xte, "y": yte})["accuracy"])
-        results[name][0].append(acc)
+        results[name][0].append(float(accuracy[s]))
         results[name][1].append(float(total[s]))
     return {name: (float(np.mean(accs)), float(np.mean(times)))
             for name, (accs, times) in results.items()}

@@ -52,32 +52,40 @@ def _uniform_q(n: int) -> Array:
 
 def decide_lroa(params: sm.SystemParams, h: Array, queues: Array,
                 V: Array, lam: Array,
-                cfg: slv.SolverConfig = slv.SolverConfig()
-                ) -> slv.ControlDecision:
-    """LROA: the full Algorithm-2 drift-plus-penalty solve."""
-    return slv.solve_p2(params, h, queues, V, lam, cfg)
+                cfg: slv.SolverConfig = slv.SolverConfig(),
+                k: Array = None) -> slv.ControlDecision:
+    """LROA: the full Algorithm-2 drift-plus-penalty solve.
+
+    ``k`` (every rule accepts it) optionally replaces the static
+    ``params.sample_count`` with a traced per-rollout K — the padded-K
+    rollout paths sweep K per scenario lane, so the decision math must
+    read it from data, not from the executable.  ``None`` keeps the
+    static host-controller path byte-identical to before.
+    """
+    return slv.solve_p2(params, h, queues, V, lam, cfg, k=k)
 
 
 def decide_uni_d(params: sm.SystemParams, h: Array, queues: Array,
                  V: Array, lam: Array,
-                 cfg: slv.SolverConfig = slv.SolverConfig()
-                 ) -> slv.ControlDecision:
+                 cfg: slv.SolverConfig = slv.SolverConfig(),
+                 k: Array = None) -> slv.ControlDecision:
     """Uni-D: q = 1/N; (f, p) from the Theorem-2/3 closed forms."""
     q = _uniform_q(params.num_devices)
-    f = slv.solve_f(params, q, queues, V)
-    p = slv.solve_p(params, q, queues, h, V, cfg.bisect_iters)
+    f = slv.solve_f(params, q, queues, V, k=k)
+    p = slv.solve_p(params, q, queues, h, V, cfg.bisect_iters, k=k)
     return slv.ControlDecision(f=f, p=p, q=q)
 
 
-def static_frequency(params: sm.SystemParams, h: Array, p: Array) -> Array:
+def static_frequency(params: sm.SystemParams, h: Array, p: Array,
+                     k: Array = None) -> Array:
     """Solve the Uni-S energy-balance for f (projected to [f_min, f_max]).
 
     [E alpha c D f^2 / 2 + p M K / (B log2(1 + h p / N0))] * sel = Ebar
     with sel = 1 - (1 - 1/N)^K  =>  f^2 = 2 (Ebar/sel - E_com) / (E alpha c D).
     """
     n = params.num_devices
-    sel = 1.0 - (1.0 - 1.0 / n) ** params.sample_count
-    e_com = sm.comm_energy(params, h, p)
+    sel = 1.0 - (1.0 - 1.0 / n) ** sm.effective_k(params, k)
+    e_com = sm.comm_energy(params, h, p, k=k)
     cycles = params.local_epochs * params.capacitance * \
         params.cycles_per_sample * params.data_sizes
     f_sq = 2.0 * (params.energy_budget / sel - e_com) / jnp.maximum(cycles,
@@ -88,8 +96,8 @@ def static_frequency(params: sm.SystemParams, h: Array, p: Array) -> Array:
 
 def decide_uni_s(params: sm.SystemParams, h: Array, queues: Array,
                  V: Array, lam: Array,
-                 cfg: slv.SolverConfig = slv.SolverConfig()
-                 ) -> slv.ControlDecision:
+                 cfg: slv.SolverConfig = slv.SolverConfig(),
+                 k: Array = None) -> slv.ControlDecision:
     """Uni-S: q = 1/N, p mid-range, f from the energy-balance equation.
 
     ``queues`` / ``V`` / ``lam`` are accepted (and ignored) so every
@@ -99,7 +107,7 @@ def decide_uni_s(params: sm.SystemParams, h: Array, queues: Array,
     q = _uniform_q(params.num_devices)
     p = jnp.broadcast_to(0.5 * (params.p_min + params.p_max),
                          (params.num_devices,))
-    f = static_frequency(params, h, p)
+    f = static_frequency(params, h, p, k=k)
     return slv.ControlDecision(f=f, p=p, q=q)
 
 
@@ -110,8 +118,8 @@ DECIDE_FNS = (decide_lroa, decide_uni_d, decide_uni_s)
 
 def decide_by_id(controller_id: Array, params: sm.SystemParams, h: Array,
                  queues: Array, V: Array, lam: Array,
-                 cfg: slv.SolverConfig = slv.SolverConfig()
-                 ) -> slv.ControlDecision:
+                 cfg: slv.SolverConfig = slv.SolverConfig(),
+                 k: Array = None) -> slv.ControlDecision:
     """Dispatch on a *traced* controller id (``lax.switch``).
 
     The id indexes :data:`POLICIES`; out-of-range ids clamp (lax.switch
@@ -119,8 +127,16 @@ def decide_by_id(controller_id: Array, params: sm.SystemParams, h: Array,
     the full batch and each lane selects its own — which is exactly what
     lets the ScenarioArena run a mixed-controller grid in ONE jitted
     program while staying bit-identical per lane to the fixed-policy
-    rollout.
+    rollout.  ``k`` (optional traced per-rollout K) is forwarded to every
+    branch — the padded-K arena path, where K is per-scenario data.
     """
-    branches = [partial(fn, cfg=cfg) for fn in DECIDE_FNS]
+    if k is None:
+        branches = [partial(fn, cfg=cfg) for fn in DECIDE_FNS]
+        return jax.lax.switch(controller_id, branches, params, h, queues,
+                              V, lam)
+    branches = [
+        (lambda p, hh, qq, vv, ll, kk, fn=fn: fn(p, hh, qq, vv, ll,
+                                                 cfg=cfg, k=kk))
+        for fn in DECIDE_FNS]
     return jax.lax.switch(controller_id, branches, params, h, queues, V,
-                          lam)
+                          lam, k)

@@ -21,9 +21,14 @@ def init_queues(num_devices: int) -> Array:
 
 
 def energy_increment(params: sm.SystemParams, h: Array, p: Array, f: Array,
-                     q: Array) -> Array:
-    """a_n^t = (1-(1-q)^K) E_n^t - Ebar_n — eq. (20)."""
-    return (sm.expected_energy(params, h, p, f, q) - params.energy_budget)
+                     q: Array, k=None) -> Array:
+    """a_n^t = (1-(1-q)^K) E_n^t - Ebar_n — eq. (20).
+
+    ``k`` optionally replaces the static ``params.sample_count`` with a
+    traced per-rollout K (the padded-K sweep paths).
+    """
+    return (sm.expected_energy(params, h, p, f, q, k=k) -
+            params.energy_budget)
 
 
 def update_queues(queues: Array, increment: Array) -> Array:

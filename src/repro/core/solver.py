@@ -59,14 +59,17 @@ class SolverConfig:
 # Theorem 2 — CPU frequency
 # --------------------------------------------------------------------------
 
-def solve_f(params: sm.SystemParams, q: Array, queues: Array, V: float) -> Array:
+def solve_f(params: sm.SystemParams, q: Array, queues: Array, V: float,
+            k=None) -> Array:
     """(f_n^t)* = clip(cbrt(V q_n / (Q_n (1-(1-q_n)^K) alpha_n))).
 
     When the energy queue (or selection probability) is zero the energy
     pressure vanishes and the latency term alone drives f to f_max, which the
-    clip reproduces (the unconstrained root diverges to +inf).
+    clip reproduces (the unconstrained root diverges to +inf).  ``k``
+    optionally replaces the static ``params.sample_count`` with a traced
+    per-rollout K (the padded-K sweep paths).
     """
-    sel = sm.selection_probability(q, params.sample_count)
+    sel = sm.selection_probability(q, sm.effective_k(params, k))
     denom = queues * sel * params.capacitance
     num = V * q
     cube = num / jnp.maximum(denom, _EPS)
@@ -85,14 +88,14 @@ def _phi(x: Array) -> Array:
 
 
 def solve_p(params: sm.SystemParams, q: Array, queues: Array, h: Array,
-            V: float, num_iters: int = 64) -> Array:
+            V: float, num_iters: int = 64, k=None) -> Array:
     """Solve ``phi(x) = A_1`` for x = h p / N0 by bisection, then clip p.
 
     A_{1,n} = V q_n h_n / (Q_n (1-(1-q_n)^K) N0).  phi is strictly increasing
     on x >= 0, so the root is unique; Q_n -> 0 sends A_1 -> inf and the clip
     returns p_max (no energy pressure => fastest feasible upload).
     """
-    sel = sm.selection_probability(q, params.sample_count)
+    sel = sm.selection_probability(q, sm.effective_k(params, k))
     denom = queues * sel * params.noise_power
     # single multiply by V: `V * q * h / ...` lets XLA's algebraic
     # simplifier reassociate the scalar-V multiply in the unbatched trace
@@ -163,18 +166,19 @@ def _waterfill_simplex(b: Array, a3: Array, q_floor: float,
 
 
 def p22_objective(params: sm.SystemParams, q: Array, t_round: Array,
-                  energy: Array, queues: Array, V: float, lam: float) -> Array:
+                  energy: Array, queues: Array, V: float, lam: float,
+                  k=None) -> Array:
     """f(q) of P2.2 (with the derived Q_n weight on the concave term)."""
     w = params.data_weights
     convex = V * jnp.sum(t_round * q + lam * jnp.square(w) / q)
     concave = -jnp.sum(queues * energy *
-                       jnp.power(1.0 - q, params.sample_count))
+                       jnp.power(1.0 - q, sm.effective_k(params, k)))
     return convex + concave
 
 
 def solve_q(params: sm.SystemParams, t_round: Array, energy: Array,
             queues: Array, V: float, lam: float, q_init: Array,
-            cfg: SolverConfig = SolverConfig()) -> Array:
+            cfg: SolverConfig = SolverConfig(), k=None) -> Array:
     """SUM iterations for P2.2.
 
     Each step linearises ``f_cve(q) = -sum Q_n E_n (1-q_n)^K`` at the current
@@ -184,7 +188,7 @@ def solve_q(params: sm.SystemParams, t_round: Array, energy: Array,
     w = params.data_weights
     a2 = V * t_round                    # A_{2,n}
     a3 = V * lam * jnp.square(w)        # A_{3,n}
-    K = params.sample_count
+    K = sm.effective_k(params, k)
 
     def cond(carry):
         q, q_prev, it = carry
@@ -208,24 +212,28 @@ def solve_q(params: sm.SystemParams, t_round: Array, energy: Array,
 # --------------------------------------------------------------------------
 
 def p2_objective(params: sm.SystemParams, h: Array, decision: ControlDecision,
-                 queues: Array, V: float, lam: float) -> Array:
+                 queues: Array, V: float, lam: float, k=None) -> Array:
     """V sum_n (q T + lam w^2/q) + sum_n Q_n a_n  — the P2 objective."""
     f, p, q = decision
-    t = sm.round_time(params, h, p, f)
-    e = sm.round_energy(params, h, p, f)
+    t = sm.round_time(params, h, p, f, k=k)
+    e = sm.round_energy(params, h, p, f, k=k)
     w = params.data_weights
     penalty = V * jnp.sum(q * t + lam * jnp.square(w) / q)
-    a = sm.selection_probability(q, params.sample_count) * e - params.energy_budget
+    a = (sm.selection_probability(q, sm.effective_k(params, k)) * e -
+        params.energy_budget)
     return penalty + jnp.sum(queues * a)
 
 
 @partial(jax.jit, static_argnames=("cfg",))
 def solve_p2(params: sm.SystemParams, h: Array, queues: Array,
              V: float, lam: float,
-             cfg: SolverConfig = SolverConfig()) -> ControlDecision:
+             cfg: SolverConfig = SolverConfig(), k=None) -> ControlDecision:
     """Algorithm 2: alternate (f, p) closed forms with SUM on q.
 
     Initial guesses follow the paper: mid-range f and p, uniform q.
+    ``k`` optionally replaces the static ``params.sample_count`` with a
+    traced per-rollout K everywhere Algorithm 2 reads it (the padded-K
+    sweep paths, where K is per-scenario data).
     """
     n = params.num_devices
     f0 = 0.5 * (params.f_min + params.f_max)
@@ -243,11 +251,11 @@ def solve_p2(params: sm.SystemParams, h: Array, queues: Array,
 
     def body(carry):
         dec, _, it = carry
-        f_new = solve_f(params, dec.q, queues, V)
-        p_new = solve_p(params, dec.q, queues, h, V, cfg.bisect_iters)
-        t = sm.round_time(params, h, p_new, f_new)
-        e = sm.round_energy(params, h, p_new, f_new)
-        q_new = solve_q(params, t, e, queues, V, lam, dec.q, cfg)
+        f_new = solve_f(params, dec.q, queues, V, k=k)
+        p_new = solve_p(params, dec.q, queues, h, V, cfg.bisect_iters, k=k)
+        t = sm.round_time(params, h, p_new, f_new, k=k)
+        e = sm.round_energy(params, h, p_new, f_new, k=k)
+        q_new = solve_q(params, t, e, queues, V, lam, dec.q, cfg, k=k)
         return ControlDecision(f_new, p_new, q_new), dec, it + 1
 
     init = ControlDecision(f0, p0, q0)

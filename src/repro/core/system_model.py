@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -134,15 +134,31 @@ def paper_default_params(num_devices: int = 120,
 # Time model (eqs. (5)-(11))
 # --------------------------------------------------------------------------
 
-def uplink_rate(params: SystemParams, h: Array, p: Array) -> Array:
-    """r_{n,u}^t = B_n log2(1 + h p / N0) — eq. (5)."""
-    bn = params.per_device_bandwidth
+def effective_k(params: SystemParams, k) -> Any:
+    """The K a computation should read: the traced per-rollout override
+    when given (scalar or ``[N]`` array — the padded-K rollout paths
+    sweep K per scenario lane), else the static ``params.sample_count``.
+    THE fallback idiom for every K-parameterised function below and in
+    ``core.solver`` / ``core.policy``."""
+    return params.sample_count if k is None else k
+
+
+def uplink_rate(params: SystemParams, h: Array, p: Array,
+                k: Optional[Array] = None) -> Array:
+    """r_{n,u}^t = B_n log2(1 + h p / N0) — eq. (5).
+
+    With a traced ``k``, B_n = B / K is computed in-trace; when ``k`` is
+    None the static host path divides by the python int (the same value
+    ``per_device_bandwidth`` precomputes).
+    """
+    bn = params.bandwidth_hz / effective_k(params, k)
     return bn * jnp.log2(1.0 + h * p / params.noise_power)
 
 
-def upload_time(params: SystemParams, h: Array, p: Array) -> Array:
+def upload_time(params: SystemParams, h: Array, p: Array,
+                k: Optional[Array] = None) -> Array:
     """T_{n,u}^{t,com} = M / r_{n,u}^t — eq. (6)."""
-    return params.model_bits / uplink_rate(params, h, p)
+    return params.model_bits / uplink_rate(params, h, p, k)
 
 
 def download_time(params: SystemParams) -> Array:
@@ -158,9 +174,10 @@ def compute_time(params: SystemParams, f: Array) -> Array:
 
 
 def round_time(params: SystemParams, h: Array, p: Array, f: Array,
-               include_download: bool = False) -> Array:
+               include_download: bool = False,
+               k: Optional[Array] = None) -> Array:
     """T_n^t — eq. (9). The paper's experiments ignore the download term."""
-    t = compute_time(params, f) + upload_time(params, h, p)
+    t = compute_time(params, f) + upload_time(params, h, p, k)
     if include_download:
         t = t + download_time(params)
     return t
@@ -181,22 +198,30 @@ def compute_energy(params: SystemParams, f: Array) -> Array:
     return 0.5 * params.capacitance * cycles * jnp.square(f)
 
 
-def comm_energy(params: SystemParams, h: Array, p: Array) -> Array:
+def comm_energy(params: SystemParams, h: Array, p: Array,
+                k: Optional[Array] = None) -> Array:
     """E_n^{t,com} = p * T_{n,u}^{t,com} — eq. (14)."""
-    return p * upload_time(params, h, p)
+    return p * upload_time(params, h, p, k)
 
 
-def round_energy(params: SystemParams, h: Array, p: Array, f: Array) -> Array:
+def round_energy(params: SystemParams, h: Array, p: Array, f: Array,
+                 k: Optional[Array] = None) -> Array:
     """E_n^t — eq. (15)."""
-    return compute_energy(params, f) + comm_energy(params, h, p)
+    return compute_energy(params, f) + comm_energy(params, h, p, k)
 
 
-def selection_probability(q: Array, sample_count: int) -> Array:
-    """1 - (1 - q)^K — probability device selected at least once (Sec. III-F)."""
+def selection_probability(q: Array, sample_count) -> Array:
+    """1 - (1 - q)^K — probability device selected at least once (Sec. III-F).
+
+    ``sample_count`` may be the static python int (host controllers) or a
+    traced scalar / ``[N]`` array (the padded-K rollout paths, where K is
+    per-scenario data).
+    """
     return 1.0 - jnp.power(1.0 - q, sample_count)
 
 
 def expected_energy(params: SystemParams, h: Array, p: Array, f: Array,
-                    q: Array) -> Array:
+                    q: Array, k: Optional[Array] = None) -> Array:
     """Per-round expected energy draw entering constraint (16)."""
-    return selection_probability(q, params.sample_count) * round_energy(params, h, p, f)
+    return (selection_probability(q, effective_k(params, k)) *
+            round_energy(params, h, p, f, k))

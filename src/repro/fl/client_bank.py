@@ -37,6 +37,13 @@ keeps each client at its true ``max(n_i // bs, 1)`` applied optimizer
 steps and ``num_examples`` keeps epoch sampling off the padded duplicate
 rows, so padding changes neither training distributions nor step counts.
 
+The evaluation half of the data plane follows the same contract:
+``repro.sim.eval.EvalBank`` holds the TEST set device-resident (uploaded
+once at construction, blocking, never-aliasing, never-donated) and
+evaluates stacked ``[S, ...]`` params in one vmapped ``task.metrics``
+pass — the ScenarioArena's on-device replacement for host-side per-lane
+evaluation loops.
+
 Tier ladder (:class:`TieredClientBank`)
 ---------------------------------------
 The single global bucket makes DEVICE memory ``O(N * max_i n_i)`` — a

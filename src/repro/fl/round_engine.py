@@ -22,7 +22,16 @@ single-round and multi-round data planes can no longer diverge:
   stay on the host so stateful controllers and callbacks keep working).
 * :meth:`run_scan` — benchmark/sweep fast path: an entire multi-round
   Algorithm-1 rollout (decide -> sample -> train -> aggregate -> queue
-  update) inside a single ``lax.scan`` over the same bank.
+  update) inside a single ``lax.scan`` over the same bank.  The scan
+  body (:meth:`_build_scan`, shared with the ScenarioArena) treats the
+  sampling count K as TRACED data over a static slot count ``K_max``:
+  per-slot draws are prefix-stable (``fold_in(round_key, slot)``) and
+  slots beyond the traced ``k_act`` are inert (row-0 gather, zeroed
+  eq.-(4) coefficients and metric contributions), which is what lets a
+  mixed-K arena grid fuse into one padded-K executable whose lanes stay
+  bitwise-equal to the per-K programs.  It can also evaluate a test set
+  on device every ``eval_every`` rounds (``eval_fn`` — see
+  ``repro.sim.eval.EvalBank``).
 * :meth:`round_step_stacked` — the PR-1 host-stacked round, retained for
   bank-vs-host equivalence tests and transfer-cost benchmarking.
 
@@ -455,11 +464,12 @@ class RoundEngine:
         return round_fn, (all_x, all_y, all_steps, all_sizes), (steps,
                                                                 masked)
 
-    def _build_scan(self, k: int, decide_fn, round_fn):
+    def _build_scan(self, k: int, decide_fn, round_fn, eval_fn=None,
+                    eval_every: int = 0):
         """Full-rollout scan body; UN-jitted (``run_scan`` jits it, the
         ScenarioArena vmaps it over a scenario axis first).
 
-        ``decide_fn(sp, h, queues, V, lam, cid) -> ControlDecision``
+        ``decide_fn(sp, h, queues, V, lam, cid, kvec) -> ControlDecision``
         supplies the control plane — a fixed ``repro.core.policy`` rule
         (``cid`` ignored) or the traced ``lax.switch`` dispatch
         (controller-as-data); ``round_fn`` the data plane from
@@ -467,52 +477,117 @@ class RoundEngine:
         ``[N]`` as a traced input (the scenario axis sweeps it), applied
         over ``sp`` before anything reads it.
 
-        Bitwise contract with the ScenarioArena: ``V`` and ``lam`` must
-        arrive MATERIALIZED as ``[N]`` vector arguments, not rank-0
-        scalars.  A scalar V lets XLA's algebraic simplifier reassociate
-        scalar-multiply chains inside the solver in the unbatched trace
-        but not in a vmapped one (V is a per-lane vector there), drifting
-        arena lanes from this scan at the last ulp; an array argument's
-        producer is opaque to XLA, so both traces compute the identical
-        elementwise graph.
+        Padded-K contract: ``k`` is the STATIC slot count ``K_max`` and
+        the traced ``k_act`` (scalar int) / ``kvec`` (``[N]`` float, the
+        same K broadcast — see the materialization note below) carry the
+        rollout's TRUE sampling count.  Every per-slot quantity is
+        prefix-stable in the slot index — slot ``i`` draws its selection
+        and its client PRNG key from ``fold_in(key, i)``, independent of
+        ``K_max`` — and slots ``i >= k_act`` are inert: their draw clamps
+        to row 0, their eq.-(4) coefficient, loss contribution, and
+        wall-time/energy terms are zeroed (the exact non-member masking
+        ``_tier_loop_round`` uses), and their ``selected`` output is -1.
+        A padded rollout (``k_act < K_max``) is therefore bit-identical
+        on the model trajectory to the same rollout built with
+        ``K_max == k_act`` — zero coefficients contribute exactly 0.0 to
+        the vmap-stable eq.-(4) sum, and masked additions of 0.0 are
+        exact — which is what lets a mixed-K ScenarioArena grid run as
+        ONE executable (see ``repro.sim.arena``).
+
+        Bitwise contract with the ScenarioArena: ``V``, ``lam`` — and the
+        per-rollout K, ``kvec`` — must arrive MATERIALIZED as ``[N]``
+        vector arguments, not rank-0 scalars.  A scalar lets XLA's
+        algebraic simplifier reassociate scalar-multiply chains inside
+        the solver in the unbatched trace but not in a vmapped one (it is
+        a per-lane vector there), drifting arena lanes from this scan at
+        the last ulp; an array argument's producer is opaque to XLA, so
+        both traces compute the identical elementwise graph.
+
+        ``eval_fn(params, eval_data) -> {name: scalar}`` (optional) adds
+        an on-device test-set evaluation every ``eval_every`` rounds: the
+        scan carry holds the last evaluation (the "stacked carry" — under
+        the arena's vmap it is the whole ``[S, ...]`` lane stack), the
+        round index drives an UNBATCHED ``lax.cond`` (the predicate
+        depends only on the shared round counter, so vmap keeps it a real
+        branch — off-rounds pay a predicate, not an evaluation), and each
+        round emits ``test_<name>`` columns holding the most recent
+        evaluation.  Round 0's carry is an evaluation of the initial
+        params.  Evaluation only reads ``params``; the model trajectory
+        is unchanged.
         """
         def scan_fn(params, queues, sp, eb, data, h_seq, lr_seq, rng, V,
-                    lam, cid):
+                    lam, cid, kvec, k_act, eval_data):
             sp_run = dataclasses.replace(sp, energy_budget=eb)
             n = sp_run.num_devices
             w = sp_run.data_weights
+            slots = jnp.arange(k)
+            active = slots < k_act
+            af = active.astype(jnp.float32)
+            k_f = k_act.astype(jnp.float32)
 
             def body(carry, inp):
-                params, queues, rng = carry
-                h, lr = inp
-                dec = decide_fn(sp_run, h, queues, V, lam, cid)
+                if eval_fn is not None:
+                    params, queues, rng, last_ev = carry
+                else:
+                    params, queues, rng = carry
+                t_idx, h, lr = inp
+                dec = decide_fn(sp_run, h, queues, V, lam, cid, kvec)
                 rng, k_sel, k_cli = jax.random.split(rng, 3)
-                selected = jax.random.choice(k_sel, n, (k,), replace=True,
-                                             p=dec.q)
-                rngs = jax.random.split(k_cli, k)
-                coeffs = w[selected] / (float(k) * dec.q[selected])
+                # prefix-stable draws: slot i's selection / client key
+                # depend only on (round key, i), never on K_max — the
+                # padded-K invariant above
+                sel_keys = jax.vmap(
+                    lambda i: jax.random.fold_in(k_sel, i))(slots)
+                drawn = jax.vmap(
+                    lambda sk: jax.random.choice(sk, n, (), replace=True,
+                                                 p=dec.q))(sel_keys)
+                selected = jnp.where(active, drawn, 0)
+                rngs = jax.vmap(
+                    lambda i: jax.random.fold_in(k_cli, i))(slots)
+                coeffs = (jnp.take(w, selected) /
+                          (jnp.take(kvec, selected) *
+                           jnp.take(dec.q, selected)) * af)
                 params, losses = round_fn(params, data, selected, coeffs,
                                           lr, rngs)
                 queues = vq.update_queues(
                     queues,
-                    vq.energy_increment(sp_run, h, dec.p, dec.f, dec.q))
-                t = sm.round_time(sp_run, h, dec.p, dec.f)
-                e = sm.round_energy(sp_run, h, dec.p, dec.f)
-                mask = jnp.zeros((n,), jnp.float32).at[selected].set(1.0)
+                    vq.energy_increment(sp_run, h, dec.p, dec.f, dec.q,
+                                        k=kvec))
+                t = sm.round_time(sp_run, h, dec.p, dec.f, k=kvec)
+                e = sm.round_energy(sp_run, h, dec.p, dec.f, k=kvec)
+                # inactive slots scatter to the dropped out-of-range row n
+                mask = jnp.zeros((n,), jnp.float32).at[
+                    jnp.where(active, selected, n)].set(1.0, mode="drop")
                 out = dict(
-                    loss=jnp.mean(losses),
-                    wall_time=jnp.max(jnp.take(t, selected)),
+                    loss=jnp.sum(losses * af) / k_f,
+                    wall_time=jnp.max(jnp.where(
+                        active, jnp.take(t, selected), -jnp.inf)),
                     energy_mean=(jnp.sum(e * mask) /
                                  jnp.maximum(jnp.sum(mask), 1.0)),
                     queue_mean=jnp.mean(queues),
                     queue_norm=jnp.linalg.norm(queues),
                     q_min=jnp.min(dec.q), q_max=jnp.max(dec.q),
-                    selected=selected,
+                    selected=jnp.where(active, selected, -1),
                 )
+                if eval_fn is not None:
+                    last_ev = jax.lax.cond(
+                        (t_idx + 1) % eval_every == 0,
+                        lambda op: eval_fn(op[0], eval_data),
+                        lambda op: op[1],
+                        (params, last_ev))
+                    out.update({"test_" + name: v
+                                for name, v in last_ev.items()})
+                    return (params, queues, rng, last_ev), out
                 return (params, queues, rng), out
 
-            (params, queues, _), outs = jax.lax.scan(
-                body, (params, queues, rng), (h_seq, lr_seq))
+            num_rounds = h_seq.shape[0]
+            xs = (jnp.arange(num_rounds), h_seq, lr_seq)
+            if eval_fn is not None:
+                carry0 = (params, queues, rng, eval_fn(params, eval_data))
+            else:
+                carry0 = (params, queues, rng)
+            carry, outs = jax.lax.scan(body, carry0, xs)
+            params, queues = carry[0], carry[1]
             return params, queues, outs
 
         return scan_fn
@@ -524,8 +599,8 @@ class RoundEngine:
         the policy is baked into the executable, no switch overhead)."""
         fn = pol.DECIDE_FNS[pol.POLICY_IDS[policy]]
 
-        def decide(sp, h, queues, V, lam, cid):
-            return fn(sp, h, queues, V, lam)
+        def decide(sp, h, queues, V, lam, cid, kvec):
+            return fn(sp, h, queues, V, lam, k=kvec)
 
         return decide
 
@@ -571,6 +646,10 @@ class RoundEngine:
         if queues is None:
             queues = vq.init_queues(sp.num_devices)
         n = sp.num_devices
+        # K is passed as DATA even though it is static here — both as the
+        # materialized [N] vector the decide rules consume (kvec) and the
+        # scalar active-slot count (k_act) — so this trace is the exact
+        # graph a padded-K arena lane computes (bitwise contract).
         params, queues, outs = fn(
             global_params, queues, sp,
             jnp.asarray(sp.energy_budget, jnp.float32), data,
@@ -578,6 +657,8 @@ class RoundEngine:
             jnp.asarray(lr_seq, jnp.float32), rng,
             jnp.full((n,), V, jnp.float32), jnp.full((n,), lam,
                                                      jnp.float32),
-            jnp.int32(pol.POLICY_IDS[policy]))
+            jnp.int32(pol.POLICY_IDS[policy]),
+            jnp.full((n,), sp.sample_count, jnp.float32),
+            jnp.int32(sp.sample_count), None)
         metrics = {name: np.asarray(v) for name, v in outs.items()}
         return params, queues, metrics

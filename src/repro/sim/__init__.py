@@ -6,4 +6,5 @@ with the paper's Sec. VII trade-off reducers."""
 
 from repro.sim.arena import (Arena, ScenarioGrid, derive_hyperparams,
                              scenario_keys)
+from repro.sim.eval import EvalBank
 from repro.sim.report import RolloutReport

@@ -39,13 +39,31 @@ the read-only (never-donated) ClientBank across all lanes:
   The engine itself must then be mesh-free: client-axis and
   scenario-axis sharding compose by running the arena on the ``data``
   axis of a larger mesh, not by nesting shard_maps.
-* **Static shapes.**  ``K`` (``sample_count``) shapes the per-round
-  selection, so scenarios are grouped by K and each group runs as one
-  jitted program (a uniform-K grid — the common case — is exactly one).
+* **Padded-K dispatch fusion.**  K is per-scenario DATA, not shape: the
+  scan body is built at the grid's static ``K_max`` and each lane's
+  true K rides in as traced ``k_act``/``kvec`` (slots beyond ``k_act``
+  are inert — row-0 gather, zeroed eq.-(4) coefficients and
+  loss/latency/energy contributions — so padded lanes stay bitwise
+  equal on the model trajectory to the per-K groups they replace).  A
+  mixed-K grid is ONE compiled executable and ONE dispatch
+  (``k_mode='pad'``, the default; ``'group'`` keeps the legacy
+  one-program-per-K path for comparison).
+* **On-device evaluation.**  Pass an :class:`repro.sim.eval.EvalBank`
+  and the final ``[S, ...]`` params are evaluated in one vmapped
+  ``task.metrics`` dispatch (``RolloutReport.final_metrics``);
+  ``eval_every=E`` also evaluates inside the rollout executable every E
+  rounds behind an unbatched ``lax.cond`` (``test_*`` per-round
+  columns) — no host-side per-lane eval loop.
+* **Warmup / executable cache.**  Executables are cached per (bank
+  layout, K_max, shards, eval config); :meth:`Arena.warmup` compiles
+  them eagerly so same-shape ``run`` calls (the iterate-on-V workflow)
+  never retrace — ``Arena.traces`` counts scan-body traces for
+  asserting exactly that.
 
 Outputs land in a :class:`repro.sim.report.RolloutReport` (``[S, T]``
-metric arrays + stacked final params/queues) whose reducers emit the
-paper's latency / loss / energy trade-off curves.
+metric arrays + stacked final params/queues + ``meta`` execution-shape
+counters) whose reducers emit the paper's latency / accuracy / loss /
+energy trade-off curves.
 """
 
 from __future__ import annotations
@@ -121,6 +139,24 @@ class ScenarioGrid:
             raise ValueError("ScenarioGrid seeds must fit in uint32 "
                              "(PRNGKey truncates wider seeds, which would "
                              "silently alias scenarios)")
+        if np.any(self.sample_count < 1):
+            raise ValueError(
+                f"ScenarioGrid sample_count values must be >= 1, got "
+                f"{self.sample_count.tolist()}")
+
+    @staticmethod
+    def _check_sample_counts(sample_count, num_devices) -> None:
+        """Reject K > N at construction — the paper's sampling draws K of
+        N devices, and an oversized K would otherwise surface only as a
+        shape/semantics failure deep inside the rollout trace."""
+        if num_devices is None:
+            return
+        ks = np.atleast_1d(np.asarray(sample_count, np.int64))
+        if np.any(ks > int(num_devices)):
+            bad = sorted(int(v) for v in np.unique(ks[ks > num_devices]))
+            raise ValueError(
+                f"sample_count values {bad} exceed num_devices="
+                f"{int(num_devices)} (K must satisfy K <= N)")
 
     @staticmethod
     def _controller_ids(controllers) -> np.ndarray:
@@ -145,9 +181,11 @@ class ScenarioGrid:
     @classmethod
     def create(cls, controllers, seeds, V, lam, *, energy_scale=1.0,
                mean_gain=0.1, min_gain=0.01, max_gain=0.5,
-               sample_count=2) -> "ScenarioGrid":
+               sample_count=2, num_devices=None) -> "ScenarioGrid":
         """Element-wise grid: every argument broadcasts to the common
-        scenario count S (controllers by name or id)."""
+        scenario count S (controllers by name or id).  ``num_devices``
+        (optional) validates every K against N up front."""
+        cls._check_sample_counts(sample_count, num_devices)
         ids = cls._controller_ids(controllers)
         seeds = np.atleast_1d(np.asarray(seeds, np.int64))
         s = max(ids.shape[0], seeds.shape[0],
@@ -169,10 +207,14 @@ class ScenarioGrid:
     @classmethod
     def product(cls, controllers, seeds, V, lam, *, energy_scale=(1.0,),
                 mean_gain=(0.1,), min_gain=(0.01,), max_gain=(0.5,),
-                sample_count=(2,)) -> "ScenarioGrid":
+                sample_count=(2,), num_devices=None) -> "ScenarioGrid":
         """Cartesian sweep: one scenario per element of the cross product
         of the given axes (the Sec. VII comparison grid: controllers x
-        seeds x hyper-parameters x budgets x channels x K)."""
+        seeds x hyper-parameters x budgets x channels x K).
+        ``num_devices`` (optional) validates every K against N up front —
+        a clear construction-time error instead of a failure inside the
+        rollout trace."""
+        cls._check_sample_counts(sample_count, num_devices)
         ids = cls._controller_ids(controllers)
         axes = [ids.tolist(), np.atleast_1d(seeds).tolist(),
                 np.atleast_1d(V).tolist(), np.atleast_1d(lam).tolist(),
@@ -292,13 +334,43 @@ class Arena:
       sharding it strong-scales near-linearly in local devices, with no
       lockstep amplification.
 
-    Compiled executables are cached per (bank layout, K, shard count);
-    the bank and the initial params are never donated, so one arena
-    serves any number of grids.
+    ``k_mode`` picks how a mixed-K grid is executed:
+
+    * ``'pad'`` (default) — ONE padded-K executable for the whole grid:
+      the program is shaped by ``K_max = max(grid.sample_count)`` and
+      each lane carries its true K as traced data (``k_act``/``kvec``,
+      see ``RoundEngine._build_scan``); padded slots are inert (row-0
+      gather, zeroed coefficients), so every lane stays bit-identical on
+      the model trajectory to the per-K group it replaces — at one
+      compile and one dispatch instead of one per distinct K.
+    * ``'group'`` — the legacy path: one jitted program per distinct K,
+      lanes scattered back into grid order on the host.  Kept for the
+      bench baseline and for grids so K-skewed that padding waste
+      (every lane trains ``K_max`` slots) beats compile/dispatch savings.
+
+    Compiled executables are cached per (bank layout, K_max, shard
+    count, eval config) — :meth:`warmup` populates the cache eagerly so
+    repeated same-shape ``run`` calls (the iterate-on-V workflow) never
+    trace or compile again; ``self.traces`` counts scan-body traces for
+    asserting that.  The bank and the initial params are never donated,
+    so one arena serves any number of grids; the per-lane queue carry IS
+    donated off-CPU (the arena allocates it per run).
+
+    Memory audit (padded-K vs per-K groups): the executable's live state
+    is the per-lane scan carry — params ``[S, ...]`` + queues ``[S, N]``
+    (+ the last-eval carry with ``eval_every``) — plus one ``K_max``-wide
+    training buffer per lane.  Grouped execution holds the same ``[S]``
+    stacked outputs anyway (all groups' results are concatenated on the
+    host), so padding adds only the ``(K_max - K_s)`` inert training
+    slots per lane, bounded by ``S * (K_max - K_min) * B`` bucket rows —
+    and removes the host-side per-lane params re-stack the grouped
+    scatter pays.  Queue-carry donation keeps the padded program's peak
+    at parity with the per-K programs'.
     """
 
     def __init__(self, engine, mesh: Optional[jax.sharding.Mesh] = None,
-                 mesh_axis: str = "data", batch: str = "vmap"):
+                 mesh_axis: str = "data", batch: str = "vmap",
+                 k_mode: str = "pad"):
         if engine.mesh is not None:
             raise ValueError(
                 "ScenarioArena shards the scenario axis; build the "
@@ -307,11 +379,19 @@ class Arena:
         if batch not in ("vmap", "map"):
             raise ValueError(f"unknown batch mode {batch!r} "
                              "(expected 'vmap' or 'map')")
+        if k_mode not in ("pad", "group"):
+            raise ValueError(f"unknown k_mode {k_mode!r} "
+                             "(expected 'pad' or 'group')")
         self.engine = engine
         self.mesh = mesh
         self.mesh_axis = mesh_axis
         self.batch = batch
+        self.k_mode = k_mode
         self._fns: Dict[tuple, Any] = {}
+        #: scan-body trace count — every jit (re)trace of a group
+        #: executable runs the counted wrapper once, so a warmed arena
+        #: must keep this constant across same-shape ``run`` calls
+        self.traces = 0
 
     def _shards(self) -> int:
         if self.mesh is None:
@@ -333,51 +413,92 @@ class Arena:
 
     # -- the batched rollout ------------------------------------------------
 
-    def _build_group_fn(self, bank_key, k: int, round_fn):
-        """jit( [shard_map(] vmap(scan body) [)] ) for one K group —
-        cached per (bank layout, K, shard count).  ``round_fn`` closes
-        over only static layout captured in ``bank_key`` (the device
-        buffers arrive via the ``data`` argument), so caching on
-        ``bank_key`` alone is sound — same contract as the engine's
-        ``_scan_fns``."""
-        def decide(sp, h, queues, V, lam, cid):
-            return pol.decide_by_id(cid, sp, h, queues, V, lam)
+    def _eval_key(self, eval_bank, eval_every):
+        if eval_bank is None or not eval_every:
+            return None
+        return (id(eval_bank.task), int(eval_every))
 
-        scan_fn = self.engine._build_scan(k, decide, round_fn)
+    def _build_group_fn(self, key: tuple, k: int, round_fn, eval_bank,
+                        eval_every):
+        """jit( [shard_map(] vmap(scan body) [)] ) for one K group,
+        stored in ``self._fns`` under the caller's ``key`` — (bank
+        layout, K_max, shard count, eval config), built ONCE in
+        ``_run_group`` so lookup and insertion cannot drift apart.
+        ``round_fn`` closes over only static layout captured in the
+        bank-layout key component (the device buffers arrive via the
+        ``data`` argument) and the eval data arrives traced too, so the
+        cache key is sound — same contract as the engine's
+        ``_scan_fns``."""
+        def decide(sp, h, queues, V, lam, cid, kvec):
+            return pol.decide_by_id(cid, sp, h, queues, V, lam, k=kvec)
+
+        ek = self._eval_key(eval_bank, eval_every)
+        # make_eval_fn closes over the TASK, not the bank: the cached
+        # executable lives for the arena's lifetime, and capturing a
+        # bank-bound callable would pin the test-set device buffers with
+        # it (the data itself arrives as traced arguments)
+        eval_fn = (None if ek is None
+                   else eval_bank.make_eval_fn(eval_bank.task))
+        inner = self.engine._build_scan(k, decide, round_fn,
+                                        eval_fn=eval_fn,
+                                        eval_every=eval_every or 0)
+
+        def scan_fn(*args):
+            # runs at TRACE time only (the executable replays without
+            # re-entering Python) — the zero-retrace warmup assertion
+            self.traces += 1
+            return inner(*args)
+
         if self.batch == "vmap":
             batched = jax.vmap(scan_fn,
                                in_axes=(None, 0, None, 0, None, 0, None,
-                                        0, 0, 0, 0))
+                                        0, 0, 0, 0, 0, 0, None))
         else:
             def batched(params, queues, sp, eb, data, h_seq, lr_seq, rng,
-                        V, lam, cid):
+                        V, lam, cid, kvec, k_act, eval_data):
                 def one(lane):
-                    q0, eb_s, h_s, rng_s, V_s, lam_s, cid_s = lane
+                    (q0, eb_s, h_s, rng_s, V_s, lam_s, cid_s, kv_s,
+                     ka_s) = lane
                     return scan_fn(params, q0, sp, eb_s, data, h_s,
-                                   lr_seq, rng_s, V_s, lam_s, cid_s)
+                                   lr_seq, rng_s, V_s, lam_s, cid_s,
+                                   kv_s, ka_s, eval_data)
                 return jax.lax.map(one, (queues, eb, h_seq, rng, V, lam,
-                                         cid))
+                                         cid, kvec, k_act))
         if self.mesh is not None:
             ax = self.mesh_axis
             batched = shard_map(
                 batched, mesh=self.mesh,
                 in_specs=(P(), P(ax), P(), P(ax), P(), P(ax), P(), P(ax),
-                          P(ax), P(ax), P(ax)),
+                          P(ax), P(ax), P(ax), P(ax), P(ax), P()),
                 out_specs=(P(ax), P(ax), P(ax)), check_rep=False)
-        fn = jax.jit(batched)
-        self._fns[(bank_key, k, self._shards())] = fn
+        # the queue carry (argnum 1) is donated off-CPU: the arena
+        # allocates it per run, so the padded program reuses that buffer
+        # for the [S, N] carry instead of holding both — part of the
+        # padded-vs-grouped peak-memory parity audit (class docstring).
+        # params (argnum 0) are shared across lanes and never donated.
+        donate = (1,) if self.engine.donate else ()
+        fn = jax.jit(batched, donate_argnums=donate)
+        self._fns[key] = fn
         return fn
 
     def _run_group(self, global_params: PyTree, sp: sm.SystemParams,
-                   bank, grid: ScenarioGrid, h_all, lr_seq, queues0):
-        """One K group as one jitted program; returns stacked lane
-        results in the group's grid order."""
-        k = int(grid.sample_count[0])
-        sp_k = dataclasses.replace(sp, sample_count=k)
+                   bank, grid: ScenarioGrid, h_all, lr_seq,
+                   k_max: Optional[int] = None, eval_bank=None,
+                   eval_every=None):
+        """One K group (uniform K, or a padded mixed-K grid when
+        ``k_max`` is given) as one jitted program; returns stacked lane
+        results in the group's grid order plus per-call stats."""
+        if k_max is None:
+            k_max = int(grid.sample_count[0])
+        sp_k = dataclasses.replace(sp, sample_count=k_max)
         round_fn, data, bank_key = self.engine._scan_plan(bank)
-        fn = self._fns.get((bank_key, k, self._shards()))
-        if fn is None:
-            fn = self._build_group_fn(bank_key, k, round_fn)
+        ek = self._eval_key(eval_bank, eval_every)
+        key = (bank_key, k_max, self._shards(), ek)
+        fn = self._fns.get(key)
+        compiled_new = fn is None
+        if compiled_new:
+            fn = self._build_group_fn(key, k_max, round_fn,
+                                      eval_bank, eval_every)
         s = len(grid)
         if s % self._shards():
             raise ValueError(
@@ -388,22 +509,30 @@ class Arena:
         n = sp.num_devices
         eb = (np.asarray(sp.energy_budget, np.float32)[None, :] *
               grid.energy_scale[:, None])
-        if queues0 is None:
-            queues0 = jnp.zeros((s, n), jnp.float32)
-        # V/lam materialized [S, N] — each lane receives the [N] vector
-        # form _build_scan's bitwise contract requires
+        # allocated HERE unconditionally: the queue carry is donated into
+        # the executable (argnum 1), so no caller-owned buffer may ever
+        # flow in — Q^0 = 0 is the paper's init in any case
+        queues0 = jnp.zeros((s, n), jnp.float32)
+        eval_data = None if ek is None else eval_bank.device_args()
+        # V/lam — and each lane's true K — materialized [S, N]: each lane
+        # receives the [N] vector form _build_scan's bitwise contract
+        # requires; k_act is the per-lane active-slot count
         params, queues, outs = fn(
             global_params, queues0, sp_k, jnp.asarray(eb), data,
             jnp.asarray(h_all, jnp.float32),
             jnp.asarray(lr_seq, jnp.float32), roll_keys,
             jnp.asarray(np.broadcast_to(grid.V[:, None], (s, n))),
             jnp.asarray(np.broadcast_to(grid.lam[:, None], (s, n))),
-            jnp.asarray(grid.controller))
-        return params, queues, outs
+            jnp.asarray(grid.controller),
+            jnp.asarray(np.broadcast_to(
+                grid.sample_count[:, None].astype(np.float32), (s, n))),
+            jnp.asarray(grid.sample_count, jnp.int32), eval_data)
+        return params, queues, outs, compiled_new
 
     def run(self, global_params: PyTree, sp: sm.SystemParams, bank,
             grid: ScenarioGrid, num_rounds: int, lr_seq,
-            *, h_all: Optional[jax.Array] = None) -> RolloutReport:
+            *, h_all: Optional[jax.Array] = None, eval_bank=None,
+            eval_every: Optional[int] = None) -> RolloutReport:
         """Execute every scenario of ``grid`` for ``num_rounds`` rounds.
 
         ``global_params``: the shared initial model (broadcast to every
@@ -413,7 +542,24 @@ class Arena:
         tiered).  ``lr_seq``: ``[T]`` learning rates shared across
         scenarios.  ``h_all``: optional precomputed ``[S, T, N]`` channel
         tensor (defaults to :meth:`sample_channels` from the grid's
-        seeds/statistics).  Returns a :class:`RolloutReport`; lane ``s``
+        seeds/statistics).
+
+        ``eval_bank``: optional :class:`repro.sim.eval.EvalBank` — the
+        final ``[S, ...]`` params are evaluated in ONE vmapped dispatch
+        and land as ``test_*`` columns in ``RolloutReport.final_metrics``
+        (closing the accuracy half of the Sec.-VII trade-off on device).
+        ``eval_every``: additionally evaluate INSIDE the rollout
+        executable every that many rounds (``test_*`` per-round columns
+        in ``metrics`` — a step curve holding the latest evaluation; the
+        model trajectory is unchanged).
+
+        A mixed-K grid runs as ONE padded-``K_max`` executable by
+        default (``k_mode='pad'``; ``'group'`` restores one program per
+        distinct K).  ``RolloutReport.meta`` records the execution shape
+        — ``k_groups``, per-run ``dispatches``, ``executables_built``
+        (compiles triggered by this call) and ``executables_cached`` —
+        so callers can assert "one executable" instead of inferring it
+        from timing.  Returns a :class:`RolloutReport`; lane ``s``
         reproduces — bit-identically for the model trajectory
         (params/loss/selected/wall_time, leaf-chunked aggregation path),
         to f32 resolution for the queue/energy diagnostics —::
@@ -425,6 +571,12 @@ class Arena:
                             V=grid.V[s], lam=grid.lam[s])
         """
         s = len(grid)
+        # same invariant (and message) as construction-time validation —
+        # one source of truth for K <= N
+        ScenarioGrid._check_sample_counts(grid.sample_count,
+                                          sp.num_devices)
+        if eval_every is not None and eval_bank is None:
+            raise ValueError("eval_every requires an eval_bank")
         lr_seq = np.asarray(lr_seq, np.float32)
         if lr_seq.shape != (num_rounds,):
             raise ValueError(f"lr_seq must have shape ({num_rounds},), "
@@ -438,26 +590,37 @@ class Arena:
                 f" got {h_all.shape}")
 
         ks = np.unique(grid.sample_count)
-        if ks.size == 1:
-            params, queues, outs = self._run_group(
-                global_params, sp, bank, grid, h_all, lr_seq, None)
-            metrics = {name: np.asarray(v) for name, v in outs.items()}
-            return RolloutReport(grid=grid, num_rounds=num_rounds,
-                                 params=params, queues=np.asarray(queues),
-                                 metrics=metrics)
-        # Mixed sampling counts: K shapes the per-round selection, so each
-        # distinct K runs as its own jitted group and the lanes are
-        # scattered back into grid order ("selected" right-pads to max K).
         k_max = int(ks.max())
+        meta = dict(k_mode=self.k_mode, k_groups=[int(k) for k in ks],
+                    k_max=k_max, batch=self.batch, shards=self._shards())
+        if self.k_mode == "pad" or ks.size == 1:
+            # padded-K fusion: the whole grid — mixed K included — is ONE
+            # executable and ONE dispatch (K_max slots per lane, each
+            # lane's true K traced as data)
+            params, queues, outs, built = self._run_group(
+                global_params, sp, bank, grid, h_all, lr_seq,
+                k_max=k_max, eval_bank=eval_bank, eval_every=eval_every)
+            metrics = {name: np.asarray(v) for name, v in outs.items()}
+            meta.update(dispatches=1, executables_built=int(built),
+                        executables_cached=len(self._fns))
+            return RolloutReport(
+                grid=grid, num_rounds=num_rounds, params=params,
+                queues=np.asarray(queues), metrics=metrics, meta=meta,
+                final_metrics=self._final_eval(eval_bank, params))
+        # Legacy mixed-K grouping: K shapes the per-round selection, so
+        # each distinct K runs as its own jitted group and the lanes are
+        # scattered back into grid order ("selected" right-pads to max K).
         lane_params = [None] * s
         queues_all = np.zeros((s, sp.num_devices), np.float32)
         metrics: Dict[str, np.ndarray] = {}
+        built_total = 0
         for k in ks:
             idx = np.flatnonzero(grid.sample_count == k)
             sub = grid.take(idx)
-            params_g, queues_g, outs_g = self._run_group(
+            params_g, queues_g, outs_g, built = self._run_group(
                 global_params, sp, bank, sub, h_all[jnp.asarray(idx)],
-                lr_seq, None)
+                lr_seq, eval_bank=eval_bank, eval_every=eval_every)
+            built_total += int(built)
             queues_all[idx] = np.asarray(queues_g)
             for j, lane in enumerate(idx):
                 lane_params[lane] = jax.tree_util.tree_map(
@@ -473,6 +636,47 @@ class Arena:
                 metrics[name][idx] = v
         params = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls),
                                         *lane_params)
+        meta.update(dispatches=int(ks.size),
+                    executables_built=built_total,
+                    executables_cached=len(self._fns))
         return RolloutReport(grid=grid, num_rounds=num_rounds,
                              params=params, queues=queues_all,
-                             metrics=metrics)
+                             metrics=metrics, meta=meta,
+                             final_metrics=self._final_eval(eval_bank,
+                                                            params))
+
+    def _final_eval(self, eval_bank, params_stacked) -> Dict[str, Any]:
+        """One vmapped ``task.metrics`` dispatch over the final ``[S,
+        ...]`` params — the batched replacement for the host-side
+        per-lane evaluation loop."""
+        if eval_bank is None:
+            return {}
+        return {"test_" + name: v for name, v in
+                eval_bank.evaluate_stacked(params_stacked).items()}
+
+    def warmup(self, global_params: PyTree, sp: sm.SystemParams, bank,
+               grid: ScenarioGrid, num_rounds: int,
+               lr_seq=None, *, h_all: Optional[jax.Array] = None,
+               eval_bank=None, eval_every: Optional[int] = None) -> dict:
+        """Compile the executable(s) a same-shape :meth:`run` will hit,
+        so iterating on grid VALUES (the V/lam/seed/channel sweep
+        workflow — shapes fixed, data varying) never traces or compiles
+        again.  Mirrors ``FederatedTrainer.warmup``: it *executes* one
+        real same-shape run and discards the results (AOT
+        ``lower().compile()`` does not populate the jit call cache), so
+        warmup costs one grid execution.  Nothing observable changes —
+        the arena holds no rollout state, the bank is read-only, params
+        are never donated.  Returns ``{'executables_built', 'traces'}``
+        for the zero-retrace assertion; subsequent same-shape runs keep
+        ``self.traces`` constant.
+        """
+        before = self.traces
+        if lr_seq is None:
+            lr_seq = np.zeros(num_rounds, np.float32)
+        rep = self.run(global_params, sp, bank, grid, num_rounds, lr_seq,
+                       h_all=h_all, eval_bank=eval_bank,
+                       eval_every=eval_every)
+        jax.block_until_ready(jax.tree_util.tree_leaves(rep.params))
+        return {"executables_built": rep.meta["executables_built"],
+                "executables_cached": len(self._fns),
+                "traces": self.traces - before}

@@ -4,9 +4,17 @@ host-side reducers for the paper's Sec. VII trade-off figures.
 The arena returns every scenario's rollout stacked on a leading scenario
 axis: params ``[S, ...]``, final queues ``[S, N]``, and per-round metric
 arrays ``[S, T]`` (``selected`` is ``[S, T, K]``, right-padded with -1
-when the grid mixes sampling counts).  The reducers below turn those into
-the curves the paper plots — cumulative latency, loss-vs-time,
-time-averaged energy against the budget, queue-norm stability — and
+when the grid mixes sampling counts — padded-K lanes emit the -1s on
+device).  With an ``EvalBank``, on-device test metrics land here too:
+``final_metrics`` holds one batched-evaluation scalar per lane
+(``test_accuracy`` / ``test_loss``, ``[S]``), and ``eval_every`` adds
+``test_*`` per-round columns to ``metrics`` (a step curve holding the
+latest in-scan evaluation).  ``meta`` records the execution shape —
+``k_mode``, ``k_groups``, ``dispatches``, ``executables_built`` — so
+benches and tests can assert "one executable" instead of inferring it
+from timing.  The reducers below turn all of it into the curves the
+paper plots — cumulative latency, loss/accuracy-vs-time, time-averaged
+energy against the budget, queue-norm stability — and
 :meth:`tradeoff_table` aggregates seeds so a (controller, V, lam, budget,
 channel, K) grid collapses to one trade-off point per configuration,
 exactly the comparison methodology of Figs. 1-6.
@@ -32,6 +40,9 @@ class RolloutReport:
     params: PyTree                 # final params, leaves [S, ...]
     queues: np.ndarray             # final virtual queues [S, N]
     metrics: Dict[str, np.ndarray]  # [S, T] per-round ([S, T, K] selected)
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    final_metrics: Dict[str, np.ndarray] = dataclasses.field(
+        default_factory=dict)         # [S] batched final-params eval
 
     @property
     def num_scenarios(self) -> int:
@@ -55,6 +66,16 @@ class RolloutReport:
         (16); bounded iff the time-averaged energy meets the budget."""
         return self.metrics["queue_norm"]
 
+    def accuracy_curve(self) -> np.ndarray:
+        """On-device test accuracy per round, [S, T] — a step curve
+        holding the latest in-scan evaluation.  Requires the arena run
+        to have been given ``eval_bank`` + ``eval_every``."""
+        if "test_accuracy" not in self.metrics:
+            raise KeyError(
+                "no in-scan test accuracy recorded — pass eval_bank= and "
+                "eval_every= to Arena.run to evaluate inside the rollout")
+        return self.metrics["test_accuracy"]
+
     # -- per-scenario scalars ([S]) -----------------------------------------
 
     def total_latency(self) -> np.ndarray:
@@ -69,6 +90,15 @@ class RolloutReport:
 
     def final_queue_norm(self) -> np.ndarray:
         return self.metrics["queue_norm"][:, -1]
+
+    def final_accuracy(self) -> np.ndarray:
+        """Final-params test accuracy per scenario, [S] (the batched
+        on-device evaluation — requires ``eval_bank``)."""
+        if "test_accuracy" not in self.final_metrics:
+            raise KeyError(
+                "no final test accuracy recorded — pass eval_bank= to "
+                "Arena.run to evaluate the final params on device")
+        return self.final_metrics["test_accuracy"]
 
     def selection_counts(self, num_devices: int) -> np.ndarray:
         """How often each client was drawn, [S, N] (padding ignored)."""
@@ -90,7 +120,7 @@ class RolloutReport:
         loss = self.final_loss()
         energy = self.mean_energy()
         qnorm = self.final_queue_norm()
-        return [dict(controller=names[s], seed=int(g.seed[s]),
+        rows = [dict(controller=names[s], seed=int(g.seed[s]),
                      V=float(g.V[s]), lam=float(g.lam[s]),
                      energy_scale=float(g.energy_scale[s]),
                      mean_gain=float(g.mean_gain[s]),
@@ -100,6 +130,10 @@ class RolloutReport:
                      mean_energy=float(energy[s]),
                      final_queue_norm=float(qnorm[s]))
                 for s in range(len(g))]
+        for name, vals in self.final_metrics.items():
+            for s, row in enumerate(rows):
+                row[name] = float(vals[s])
+        return rows
 
     def tradeoff_table(self) -> List[dict]:
         """Seed-aggregated trade-off points, one per distinct
@@ -115,14 +149,15 @@ class RolloutReport:
             key = (r["controller"], r["V"], r["lam"], r["energy_scale"],
                    r["mean_gain"], r["sample_count"])
             groups.setdefault(key, []).append(r)
+        fields = ["total_latency", "final_loss", "mean_energy",
+                  "final_queue_norm"] + sorted(self.final_metrics)
         table = []
         for key in sorted(groups):
             rs = groups[key]
             ctrl, v, lam, escale, gain, k = key
             agg = dict(controller=ctrl, V=v, lam=lam, energy_scale=escale,
                        mean_gain=gain, sample_count=k, num_seeds=len(rs))
-            for field in ("total_latency", "final_loss", "mean_energy",
-                          "final_queue_norm"):
+            for field in fields:
                 vals = np.asarray([r[field] for r in rs])
                 agg[field] = float(vals.mean())
                 agg[field + "_std"] = float(vals.std())

@@ -23,7 +23,7 @@ from repro.core import policy as pol
 from repro.data import synthetic_image_classification
 from repro.fl import ClientConfig, RoundEngine
 from repro.models import MLPTask
-from repro.sim import (Arena, RolloutReport, ScenarioGrid,
+from repro.sim import (Arena, EvalBank, RolloutReport, ScenarioGrid,
                        derive_hyperparams, scenario_keys)
 
 N = 6
@@ -182,27 +182,116 @@ def test_arena_tiered_bank_lanes_match_individual_tiered_scans():
                              s, model_bitwise=False)
 
 
+def _mixed_k_grid():
+    return ScenarioGrid.create(controllers=["lroa", "uni_d", "lroa",
+                                            "uni_s", "uni_d", "lroa"],
+                               seeds=[0, 1, 2, 3, 4, 5], V=100.0, lam=0.5,
+                               sample_count=[2, 4, 2, 4, 3, 3])
+
+
 def test_arena_mixed_sample_counts_group_by_k():
-    """K shapes the selection, so a mixed-K grid runs one jitted program
-    per distinct K and scatters lanes back into grid order (selected
-    right-padded with -1)."""
+    """The legacy grouped path (k_mode='group'): one jitted program per
+    distinct K, lanes scattered back into grid order (selected
+    right-padded with -1), and the per-group compile/dispatch counts
+    reported in the report metadata."""
     task, eng, bank, sp, params0 = _setup()
-    grid = ScenarioGrid.create(controllers=["lroa", "uni_d", "lroa",
-                                            "uni_s"],
-                               seeds=[0, 1, 2, 3], V=100.0, lam=0.5,
-                               sample_count=[2, 4, 2, 4])
-    arena = Arena(eng)
+    grid = _mixed_k_grid()
+    arena = Arena(eng, k_mode="group")
     T = 3
     lr = np.full(T, 0.1, np.float32)
     h_all = arena.sample_channels(grid, T, N)
     rep = arena.run(params0, sp, bank, grid, T, lr, h_all=h_all)
-    assert len(arena._fns) == 2                      # one program per K
-    assert rep.metrics["selected"].shape == (4, T, 4)
+    assert len(arena._fns) == 3                      # one program per K
+    assert rep.meta["k_mode"] == "group"
+    assert rep.meta["k_groups"] == [2, 3, 4]
+    assert rep.meta["dispatches"] == 3
+    assert rep.meta["executables_built"] == 3
+    assert rep.metrics["selected"].shape == (6, T, 4)
     assert np.all(rep.metrics["selected"][0, :, 2:] == -1)   # K=2 lanes
     assert np.all(rep.metrics["selected"][1, :, 2:] >= 0)    # K=4 lanes
     for s in range(len(grid)):
         _assert_lane_matches(rep, eng, bank, sp, params0, grid, h_all, lr,
                              s)
+
+
+# -- tentpole: padded-K dispatch fusion ------------------------------------
+
+
+def test_padded_mixed_k_single_program_bitwise_vs_groups():
+    """A mixed-K grid (3 distinct K values) under the default
+    k_mode='pad' runs as ONE compiled executable whose padded lanes
+    (k_active < K_max) are bitwise-equal — params / loss / selected /
+    wall_time on the leaf-chunked path — to the per-K groups they
+    replace, and to the individual run_scan reproductions."""
+    task, eng, bank, sp, params0 = _setup()
+    grid = _mixed_k_grid()
+    T = 3
+    lr = np.full(T, 0.1, np.float32)
+    arena = Arena(eng)
+    h_all = arena.sample_channels(grid, T, N)
+    rep = arena.run(params0, sp, bank, grid, T, lr, h_all=h_all)
+    assert rep.meta["k_mode"] == "pad"
+    assert rep.meta["dispatches"] == 1
+    assert rep.meta["executables_built"] == 1
+    assert len(arena._fns) == 1                  # ONE padded executable
+    # output layout matches the grouped convention: [S, T, K_max], -1 pad
+    assert rep.metrics["selected"].shape == (6, T, 4)
+    assert np.all(rep.metrics["selected"][0, :, 2:] == -1)
+    # bitwise vs the per-K grouped execution of the SAME grid
+    grouped = Arena(eng, k_mode="group")
+    rep_g = grouped.run(params0, sp, bank, grid, T, lr, h_all=h_all)
+    for a, b in zip(jax.tree_util.tree_leaves(rep.params),
+                    jax.tree_util.tree_leaves(rep_g.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for name in BITWISE_METRICS:
+        np.testing.assert_array_equal(rep.metrics[name],
+                                      rep_g.metrics[name])
+    for name in rep.metrics:
+        if name not in BITWISE_METRICS:
+            np.testing.assert_allclose(rep.metrics[name],
+                                       rep_g.metrics[name], **TOL)
+    # ...and vs the individual fixed-policy run_scan rollouts
+    for s in range(len(grid)):
+        _assert_lane_matches(rep, eng, bank, sp, params0, grid, h_all, lr,
+                             s)
+
+
+def test_padded_mixed_k_map_mode_bitwise():
+    """batch='map' lanes of a padded mixed-K grid (sequential traces, no
+    vmap lockstep) keep the bitwise padded-lane contract."""
+    task, eng, bank, sp, params0 = _setup()
+    grid = _mixed_k_grid().take(np.arange(4))
+    T = 3
+    lr = np.full(T, 0.1, np.float32)
+    arena = Arena(eng, batch="map")
+    h_all = arena.sample_channels(grid, T, N)
+    rep = arena.run(params0, sp, bank, grid, T, lr, h_all=h_all)
+    assert len(arena._fns) == 1
+    for s in range(len(grid)):
+        _assert_lane_matches(rep, eng, bank, sp, params0, grid, h_all, lr,
+                             s)
+
+
+def test_padded_mixed_k_tiered_bank_lanes():
+    """A tiered-bank mixed-K padded grid still reproduces the individual
+    tiered run_scan per lane (f32 resolution — the per-tier lax.cond
+    lowers as select under vmap)."""
+    sizes = [64, 10, 33, 64, 100, 17]
+    task, eng, bank, sp, params0 = _setup(sizes, bank_mode="tiered")
+    assert bank.num_tiers > 1
+    grid = ScenarioGrid.create(controllers=["lroa", "uni_d", "uni_s",
+                                            "lroa"],
+                               seeds=[3, 4, 5, 6], V=200.0, lam=1.0,
+                               sample_count=[2, 4, 3, 4])
+    arena = Arena(eng)
+    T = 3
+    lr = np.full(T, 0.1, np.float32)
+    h_all = arena.sample_channels(grid, T, len(sizes))
+    rep = arena.run(params0, sp, bank, grid, T, lr, h_all=h_all)
+    assert len(arena._fns) == 1
+    for s in range(len(grid)):
+        _assert_lane_matches(rep, eng, bank, sp, params0, grid, h_all, lr,
+                             s, model_bitwise=False)
 
 
 # -- controller-as-data dispatch -------------------------------------------
@@ -364,6 +453,128 @@ def test_tier_loop_cond_skip_matches_unconditional():
                                    atol=1e-7)
     np.testing.assert_allclose(np.asarray(l_cond), np.asarray(l_ref),
                                atol=1e-7)
+
+
+# -- on-device batched evaluation ------------------------------------------
+
+
+def _test_set(n=48, seed=11):
+    return synthetic_image_classification(n, (8, 8, 1), num_classes=4,
+                                          noise=0.3, seed=seed)
+
+
+def test_on_device_eval_matches_host_metrics_per_lane():
+    """EvalBank's batched final evaluation and the in-scan eval columns
+    must match per-lane host-side task.metrics to f32 resolution, on a
+    padded mixed-K grid, without touching the model trajectory."""
+    task, eng, bank, sp, params0 = _setup()
+    xte, yte = _test_set()
+    eb = EvalBank(task, xte, yte)
+    grid = _mixed_k_grid()
+    T = 4
+    lr = np.full(T, 0.1, np.float32)
+    arena = Arena(eng)
+    h_all = arena.sample_channels(grid, T, N)
+    rep_plain = arena.run(params0, sp, bank, grid, T, lr, h_all=h_all)
+    arena_ev = Arena(eng)
+    rep = arena_ev.run(params0, sp, bank, grid, T, lr, h_all=h_all,
+                       eval_bank=eb, eval_every=2)
+    # evaluation only READS params: trajectory identical to the plain run
+    for a, b in zip(jax.tree_util.tree_leaves(rep.params),
+                    jax.tree_util.tree_leaves(rep_plain.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for name in rep_plain.metrics:
+        np.testing.assert_array_equal(rep.metrics[name],
+                                      rep_plain.metrics[name])
+    assert rep.metrics["test_accuracy"].shape == (len(grid), T)
+    assert rep.metrics["test_loss"].shape == (len(grid), T)
+    xte_d, yte_d = jnp.asarray(xte), jnp.asarray(yte)
+    for s in range(len(grid)):
+        host = task.metrics(rep.scenario_params(s),
+                            {"x": xte_d, "y": yte_d})
+        # final batched eval == host per-lane eval
+        assert rep.final_metrics["test_accuracy"][s] == pytest.approx(
+            float(host["accuracy"]), abs=1e-5)
+        assert rep.final_metrics["test_loss"][s] == pytest.approx(
+            float(host["loss"]), rel=1e-5)
+        # T=4, eval_every=2: the last column evaluated the final params
+        assert rep.metrics["test_accuracy"][s, -1] == pytest.approx(
+            float(host["accuracy"]), abs=1e-5)
+        assert rep.metrics["test_loss"][s, -1] == pytest.approx(
+            float(host["loss"]), rel=1e-5)
+        # off-rounds hold the previous evaluation (step curve)
+        np.testing.assert_array_equal(rep.metrics["test_accuracy"][s, 2],
+                                      rep.metrics["test_accuracy"][s, 1])
+    # reducers surface the accuracy half of the trade-off
+    assert rep.accuracy_curve().shape == (len(grid), T)
+    np.testing.assert_array_equal(rep.final_accuracy(),
+                                  rep.final_metrics["test_accuracy"])
+    table = rep.tradeoff_table()
+    assert all("test_accuracy" in row for row in table)
+    with pytest.raises(KeyError, match="eval_bank"):
+        rep_plain.accuracy_curve()
+    with pytest.raises(ValueError, match="eval_bank"):
+        arena.run(params0, sp, bank, grid, T, lr, h_all=h_all,
+                  eval_every=2)
+
+
+# -- warmup / executable cache ---------------------------------------------
+
+
+def test_arena_warmup_then_run_zero_new_traces():
+    """Arena.warmup compiles the padded executable; subsequent same-shape
+    runs (different V/lam/seeds — the iterate-on-V workflow) must perform
+    ZERO new scan-body traces."""
+    task, eng, bank, sp, params0 = _setup()
+    xte, yte = _test_set()
+    eb = EvalBank(task, xte, yte)
+    grid = _mixed_k_grid()
+    T = 3
+    arena = Arena(eng)
+    stats = arena.warmup(params0, sp, bank, grid, T, eval_bank=eb,
+                         eval_every=2)
+    assert stats["executables_built"] == 1
+    assert stats["traces"] >= 1
+    traces0 = arena.traces
+    # same shapes, different values: new V/lam, new seeds, real lr
+    import dataclasses as dc
+    grid2 = dc.replace(grid, V=grid.V * 3.0, lam=grid.lam + 0.5,
+                       seed=grid.seed + 100)
+    lr = np.full(T, 0.1, np.float32)
+    rep = arena.run(params0, sp, bank, grid2, T, lr, eval_bank=eb,
+                    eval_every=2)
+    rep2 = arena.run(params0, sp, bank, grid2, T, lr * 0.5, eval_bank=eb,
+                     eval_every=2)
+    assert arena.traces == traces0          # zero new traces after warmup
+    assert rep.meta["executables_built"] == 0
+    assert rep2.meta["executables_built"] == 0
+    assert np.all(np.isfinite(rep.metrics["loss"]))
+
+
+# -- K validation -----------------------------------------------------------
+
+
+def test_grid_validates_sample_count_against_n():
+    with pytest.raises(ValueError, match="exceed num_devices"):
+        ScenarioGrid.product(controllers=("lroa",), seeds=(0,), V=(1.0,),
+                             lam=(1.0,), sample_count=(2, 99),
+                             num_devices=N)
+    with pytest.raises(ValueError, match="exceed num_devices"):
+        ScenarioGrid.create(controllers=["lroa"], seeds=[0], V=1.0,
+                            lam=1.0, sample_count=N + 1, num_devices=N)
+    with pytest.raises(ValueError, match=">= 1"):
+        ScenarioGrid.create(controllers=["lroa"], seeds=[0], V=1.0,
+                            lam=1.0, sample_count=0)
+    # without num_devices construction passes, but Arena.run still
+    # rejects the oversized K before tracing anything
+    grid = ScenarioGrid.create(controllers=["lroa"], seeds=[0], V=1.0,
+                               lam=1.0, sample_count=N + 2)
+    task, eng, bank, sp, params0 = _setup()
+    with pytest.raises(ValueError, match="K <= N"):
+        Arena(eng).run(params0, sp, bank, grid, 2,
+                       np.full(2, 0.1, np.float32))
+    with pytest.raises(ValueError, match="k_mode"):
+        Arena(eng, k_mode="bogus")
 
 
 # -- pure-jax hyper-parameter estimates ------------------------------------

@@ -10,8 +10,15 @@ sweep-engine section.
   round-engine operating point (K=8, N=120), recorded in the ``arena``
   section of ``BENCH_round_engine.json``; the ``arena.mixed_k``
   sub-section additionally pits the padded-K single program against the
-  per-K-group execution of a mixed-K grid, and the on-device batched
-  EvalBank evaluation against the host-side per-lane eval loop.
+  per-K-group execution of a mixed-K grid — and against the
+  shape-adaptive ``k_mode='auto'`` dispatch planner (cold collapses to
+  the padded workflow win, warmed recovers the grouped steady
+  throughput) — plus the on-device batched EvalBank evaluation against
+  the host-side per-lane eval loop.  The ``arena.skewed`` sub-section
+  shows the auto planner's static per-bucket tier subsets recovering
+  the tiered bank's scan-skip under vmap batching, and
+  ``planner_guard`` asserts the planner's split/no-split contract in
+  the parent process (CI's smoke guard).
 """
 
 from __future__ import annotations
@@ -227,6 +234,7 @@ def _arena_measure(s_values, rounds: int, smoke: bool) -> dict:
             "speedup_sharded_vs_host_looped": shard_rps / host_rps,
         }
     stats["mixed_k"] = _mixed_k_measure(trainer, rounds, smoke)
+    stats["skewed"] = _skewed_arena_measure(trainer, rounds, smoke)
     return stats
 
 
@@ -300,6 +308,44 @@ def _mixed_k_measure(trainer, rounds: int, smoke: bool) -> dict:
     mk["speedup_padded_vs_grouped_steady"] = (
         mk["padded_rounds_per_sec"] / mk["grouped_rounds_per_sec"])
 
+    # -- shape-adaptive dispatch (k_mode='auto') ----------------------------
+    # cold: a fresh auto arena plans at the one-run horizon, which
+    # collapses to the single padded executable — it must keep the padded
+    # workflow win; steady: an auto arena warmed through Arena.warmup
+    # compiles the runs=inf signature split, and the cache-aware replan
+    # snaps every later run to those buckets — it must recover (or beat)
+    # the grouped steady throughput.  Both taxes die in one mode.
+    a_cold = Arena(eng, k_mode="auto")
+    t0 = time.perf_counter()
+    cold_rep = run(a_cold)
+    cold = time.perf_counter() - t0
+    mk["auto_executables"] = cold_rep.meta["executables_built"]
+    mk["auto_cold_dispatches"] = cold_rep.meta["dispatches"]
+    mk["auto_cold_seconds"] = cold
+    mk["auto_workflow_rounds_per_sec"] = s_count * rounds / cold
+    a_steady = Arena(eng, k_mode="auto")
+    warm = a_steady.warmup(params0, sp, bank, grid, rounds, lr_seq,
+                           h_all=h_all)
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        rep = run(a_steady)
+        best = min(best, time.perf_counter() - t0)
+    rep.dispatch_accounting()          # additive per-bucket counters
+    # auto lanes are bitwise-identical to the padded program (the
+    # prefix-stable padded-K invariant) — assert it where it's measured
+    np.testing.assert_array_equal(rep.metrics["loss"],
+                                  reports["pad"].metrics["loss"])
+    mk["auto_rounds_per_sec"] = s_count * rounds / best
+    mk["auto_steady_dispatches"] = rep.meta["dispatches"]
+    mk["auto_steady_executables"] = warm["executables_built"]
+    mk["auto_warmup_aot"] = warm["aot"]
+    mk["auto_steady_plan"] = rep.meta["plan"]
+    mk["speedup_auto_vs_grouped_workflow"] = (
+        mk["grouped_cold_seconds"] / mk["auto_cold_seconds"])
+    mk["speedup_auto_vs_grouped_steady"] = (
+        mk["auto_rounds_per_sec"] / mk["grouped_rounds_per_sec"])
+
     # -- S-lane evaluation: host loop vs on-device batched ------------------
     test_n = 64 if smoke else 1024
     xte, yte = synthetic_image_classification(
@@ -335,6 +381,103 @@ def _mixed_k_measure(trainer, rounds: int, smoke: bool) -> dict:
     return mk
 
 
+def _skewed_arena_measure(trainer, rounds: int, smoke: bool) -> dict:
+    """Tier-subset scan-skip recovered under batching (runs INSIDE the
+    arena subprocess): on a Dirichlet-skewed tiered bank the per-round
+    tier bodies are selection-conditioned ``lax.cond``s, so a SINGLE
+    rollout's scan skips the tiers a round misses — but vmapping S lanes
+    lowers cond to select and every lane pays every tier body on every
+    round (``k_mode='pad'`` ships the full ladder in its one
+    executable: the tier-select tax).  ``k_mode='auto'`` probes each
+    lane's realised tier footprint on the control plane, buckets lanes
+    by it, and compiles each bucket with ONLY its hit tiers — the
+    batched-execution form of the skip.  Pad-warmed vs auto-warmed
+    steady throughput on the same uniform-K grid."""
+    import jax
+    from benchmarks.bench_round_engine import (EngineBenchConfig,
+                                               _skewed_client_data)
+    from repro.core import paper_default_params
+    from repro.core.policy import POLICIES
+    from repro.sim import Arena, ScenarioGrid
+
+    ecfg = EngineBenchConfig.smoke() if smoke else EngineBenchConfig()
+    eng = trainer.engine
+    sizes, cd = _skewed_client_data(ecfg)
+    bank = eng.make_bank(cd, tiered="tiered")
+    sp = paper_default_params(
+        num_devices=ecfg.num_devices, sample_count=ecfg.sample_count,
+        local_epochs=ecfg.local_epochs,
+        data_sizes=sizes.astype(np.float32))
+    hp = trainer.controller.hp
+    s_count = 4 if smoke else 8
+    k = 2 if smoke else 4          # few draws/lane => sparse footprints
+    grid = ScenarioGrid.create(
+        controllers=[POLICIES[i % len(POLICIES)] for i in range(s_count)],
+        seeds=np.arange(s_count), V=hp.V, lam=hp.lam, sample_count=k)
+    params0 = trainer.task.init(jax.random.PRNGKey(0))
+    lr_seq = np.full(rounds, ecfg.lr, np.float32)
+    h_all = Arena(eng).sample_channels(grid, rounds, ecfg.num_devices)
+    jax.block_until_ready(h_all)
+    stats = {"S": s_count, "K": k, "rounds": rounds,
+             "num_tiers": int(bank.num_tiers),
+             "tier_buckets": [int(b) for b in bank.tier_buckets]}
+
+    def steady(a):
+        a.warmup(params0, sp, bank, grid, rounds, lr_seq, h_all=h_all)
+        best, rep = float("inf"), None
+        for _ in range(3):
+            t0 = time.perf_counter()
+            rep = a.run(params0, sp, bank, grid, rounds, lr_seq,
+                        h_all=h_all)
+            jax.block_until_ready(jax.tree_util.tree_leaves(rep.params))
+            best = min(best, time.perf_counter() - t0)
+        return s_count * rounds / best, rep
+
+    pad_rps, _ = steady(Arena(eng, k_mode="pad"))
+    auto_rps, auto_rep = steady(Arena(eng, k_mode="auto"))
+    stats["padded_rounds_per_sec"] = pad_rps
+    stats["auto_rounds_per_sec"] = auto_rps
+    stats["auto_executables"] = len(auto_rep.meta["plan"])
+    stats["auto_plan"] = auto_rep.meta["plan"]
+    stats["tiers_per_bucket"] = [
+        bank.num_tiers if b["tiers"] is None else len(b["tiers"])
+        for b in auto_rep.meta["plan"]]
+    stats["speedup_auto_vs_padded_steady"] = auto_rps / pad_rps
+    return stats
+
+
+def planner_guard() -> List[str]:
+    """CI guard for the ``k_mode='auto'`` planner (pure host logic, no
+    rollouts — runs in the arena_sweep PARENT process): the steady-state
+    plan must SPLIT a synthetic K-skewed grid (the padded-slot waste is
+    real work), a uniform grid must stay ONE bucket at every horizon (no
+    spurious executables), and the cold one-run horizon must collapse
+    the skewed grid back to the single padded program (the workflow
+    win).  Assertion failures fail the bench — and CI's smoke run."""
+    import math
+
+    from repro.sim import plan_dispatch
+
+    work = {0: 128.0}
+    skewed_ks = np.array([2] * 10 + [16, 16])
+    skew = plan_dispatch(skewed_ks, rounds=5, tier_work=work,
+                         runs=math.inf)
+    assert skew.num_buckets > 1, (
+        f"planner failed to split the K-skewed grid: {skew.describe()}")
+    uni = plan_dispatch(np.array([8] * 12), rounds=5, tier_work=work,
+                        runs=math.inf)
+    assert uni.num_buckets == 1, (
+        f"planner split a uniform grid: {uni.describe()}")
+    cold = plan_dispatch(skewed_ks, rounds=5, tier_work=work, runs=1.0)
+    assert cold.num_buckets == 1, (
+        f"cold horizon failed to collapse to padded: {cold.describe()}")
+    return [csv_row(
+        "arena_sweep/planner_guard", 0.0,
+        f"skewed_steady_buckets={skew.num_buckets};"
+        f"uniform_steady_buckets={uni.num_buckets};"
+        f"skewed_cold_buckets={cold.num_buckets}")]
+
+
 def arena_sweep(cfg: BenchConfig, s_values=(4, 16), rounds: int = 5,
                 smoke: bool = False, json_path: Optional[str] = None
                 ) -> List[str]:
@@ -353,11 +496,16 @@ def arena_sweep(cfg: BenchConfig, s_values=(4, 16), rounds: int = 5,
     execution-strategy throughput; ``bench_round_engine`` preserves the
     section when it rewrites the file).  The ``arena.mixed_k``
     sub-section (``_mixed_k_measure``) compares a mixed-K grid run
-    per-K-group vs as ONE padded-K program — workflow (compile included)
-    and steady-state throughput, executable/dispatch counts — plus the
-    S-lane evaluation as a host loop vs the EvalBank's batched on-device
-    pass.  Measurement runs in a subprocess because the forced
-    host-device count must be set before jax initialises.
+    per-K-group vs as ONE padded-K program vs the cost-model
+    ``k_mode='auto'`` dispatch (cold and ``Arena.warmup``-primed steady
+    rows) — workflow (compile included) and steady-state throughput,
+    executable/dispatch counts — plus the S-lane evaluation as a host
+    loop vs the EvalBank's batched on-device pass; ``arena.skewed``
+    (``_skewed_arena_measure``) adds the tiered-bank row where auto's
+    per-bucket tier subsets recover the scan-skip under batching.
+    Measurement runs in a subprocess because the forced host-device
+    count must be set before jax initialises; :func:`planner_guard`
+    asserts the planner's split/no-split contract host-side.
 
     Scaling note: the sharded row's ceiling is the local device count.
     On the 2-core recording host the fused per-rollout scan baseline
@@ -442,6 +590,17 @@ def arena_sweep(cfg: BenchConfig, s_values=(4, 16), rounds: int = 5,
                 f"dispatches={mk['padded_dispatches']};"
                 f"speedup_workflow_vs_grouped="
                 f"{mk['speedup_padded_vs_grouped_workflow']:.2f}"),
+        csv_row(f"arena_sweep/mixed_k_auto/{mtag}",
+                1e6 / mk["auto_workflow_rounds_per_sec"],
+                f"workflow_rounds_per_sec="
+                f"{mk['auto_workflow_rounds_per_sec']:.2f};"
+                f"steady_rounds_per_sec={mk['auto_rounds_per_sec']:.2f};"
+                f"cold_executables={mk['auto_executables']};"
+                f"steady_dispatches={mk['auto_steady_dispatches']};"
+                f"speedup_workflow_vs_grouped="
+                f"{mk['speedup_auto_vs_grouped_workflow']:.2f};"
+                f"speedup_steady_vs_grouped="
+                f"{mk['speedup_auto_vs_grouped_steady']:.2f}"),
         csv_row(f"arena_sweep/mixed_k_eval_host_loop/{mtag}",
                 1e6 * mk["eval_host_loop_seconds"],
                 f"seconds={mk['eval_host_loop_seconds']:.4f}"),
@@ -451,6 +610,23 @@ def arena_sweep(cfg: BenchConfig, s_values=(4, 16), rounds: int = 5,
                 f"speedup_vs_host_loop="
                 f"{mk['speedup_eval_batched_vs_host_loop']:.2f}"),
     ]
+    sk = stats["skewed"]
+    stag = f"S{sk['S']}K{sk['K']}N{stats['N']}tiers{sk['num_tiers']}"
+    rows += [
+        csv_row(f"arena_sweep/skewed_padded/{stag}",
+                1e6 / sk["padded_rounds_per_sec"],
+                f"rounds_per_sec={sk['padded_rounds_per_sec']:.2f};"
+                f"tiers_compiled={sk['num_tiers']}"),
+        csv_row(f"arena_sweep/skewed_auto/{stag}",
+                1e6 / sk["auto_rounds_per_sec"],
+                f"rounds_per_sec={sk['auto_rounds_per_sec']:.2f};"
+                f"executables={sk['auto_executables']};"
+                "tiers_per_bucket="
+                + "+".join(str(t) for t in sk["tiers_per_bucket"]) + ";"
+                f"speedup_vs_padded="
+                f"{sk['speedup_auto_vs_padded_steady']:.2f}"),
+    ]
+    rows += planner_guard()
     try:
         with open(json_path) as f:
             record = json.load(f)

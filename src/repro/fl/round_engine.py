@@ -101,6 +101,25 @@ def _tier_parts(parts_key: tuple, buffers: tuple) -> list:
             for (tid, steps, _), (xs, ys, ns, ne) in zip(parts_key, buffers)]
 
 
+def bank_layout_key(bank: AnyBank, tier_subset=None) -> tuple:
+    """The ``bank_key`` that :meth:`RoundEngine._scan_plan` would return
+    for ``bank`` (optionally restricted to a static ``tier_subset``),
+    computed WITHOUT touching device buffers.  The arena's dispatch
+    planner uses this to ask "is this bucket's executable already
+    compiled?" against the arena cache before paying for a plan — so the
+    two layouts must stay in lockstep: ``masked`` here is
+    ``not tier.uniform``, exactly when ``device_args`` returns non-None
+    step masks."""
+    if isinstance(bank, TieredClientBank) and bank.num_tiers == 1:
+        bank = bank.tiers[0]
+    if isinstance(bank, TieredClientBank):
+        tiers = (tuple(range(bank.num_tiers)) if tier_subset is None
+                 else tuple(tier_subset))
+        return tuple((t, bank.tiers[t].steps_per_epoch,
+                      not bank.tiers[t].uniform) for t in tiers)
+    return (bank.steps_per_epoch, not bank.uniform)
+
+
 def _default_donate() -> bool:
     # Buffer donation is a no-op (warning) on CPU; enable it only where the
     # runtime honours it.
@@ -422,7 +441,7 @@ class RoundEngine:
 
     # -- multi-round scan fast path ----------------------------------------
 
-    def _scan_plan(self, bank: AnyBank):
+    def _scan_plan(self, bank: AnyBank, tier_subset=None):
         """(round_fn, data, bank_key) — the data-plane half of a rollout
         over ``bank``: ``round_fn(params, data, selected, coeffs, lr,
         rngs)`` is the single-bucket gathered round or the tier loop, and
@@ -433,12 +452,44 @@ class RoundEngine:
         the :class:`ClientBank` plan); a multi-tier ladder's round runs
         every tier under a selection-conditioned ``lax.cond``
         (``cond_skip`` — rounds whose draw lands in few tiers stop
-        paying ``K * sum_t B_t`` work)."""
+        paying ``K * sum_t B_t`` work).
+
+        ``tier_subset`` (sorted tier-id tuple, tiered banks only) builds
+        the round against a STATIC subset of the ladder: tiers outside
+        the subset simply do not exist in the trace.  This is the arena
+        dispatch planner's scan-skip lever — a bucket of lanes that can
+        never draw tier ``t`` compiles a body without it, recovering the
+        skewed-ladder win that ``cond_skip`` loses under ``vmap`` (cond
+        lowers to select there, so every tier body executes).  Callers
+        OWN the safety argument: selections that land outside the subset
+        would gather garbage positions; the planner only emits subsets
+        covering each lane's replayed footprint.  The returned
+        ``bank_key`` keeps the per-tier layout triples, so distinct
+        subsets cache distinct executables."""
         if isinstance(bank, TieredClientBank) and bank.num_tiers == 1:
             bank = bank.tiers[0]            # the ladder IS one bucket
+        if not isinstance(bank, TieredClientBank):
+            if tier_subset is not None and tuple(tier_subset) != (0,):
+                raise ValueError(
+                    f"tier_subset={tier_subset!r} on a single-bucket "
+                    f"bank — only None or (0,) make sense there")
+            tier_subset = None
         if isinstance(bank, TieredClientBank):
+            if tier_subset is None:
+                tier_subset = tuple(range(bank.num_tiers))
+            else:
+                tier_subset = tuple(tier_subset)
+                if tier_subset != tuple(sorted(set(tier_subset))):
+                    raise ValueError(f"tier_subset must be sorted and "
+                                     f"unique, got {tier_subset!r}")
+                if not tier_subset or not set(tier_subset) <= set(
+                        range(bank.num_tiers)):
+                    raise ValueError(
+                        f"tier_subset {tier_subset!r} outside the "
+                        f"ladder's {bank.num_tiers} tiers")
             parts_key, buffers = [], []
-            for t, tier in enumerate(bank.tiers):
+            for t in tier_subset:
+                tier = bank.tiers[t]
                 xs, ys, ns, ne = tier.device_args()
                 parts_key.append((t, tier.steps_per_epoch, ns is not None))
                 buffers.append((xs, ys, ns, ne))

@@ -69,8 +69,10 @@ energy trade-off curves.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import itertools
-from typing import Any, Dict, Optional, Tuple
+import math
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -82,9 +84,41 @@ from repro.core import policy as pol
 from repro.core import system_model as sm
 from repro.core.controller import estimate_hyperparams_arrays
 from repro.fl.environment import sample_gains
+from repro.fl.round_engine import bank_layout_key
+from repro.sim.cost_model import CostModel
+from repro.sim.dispatch import DispatchPlan, lane_footprints, plan_dispatch
 from repro.sim.report import RolloutReport
 
 PyTree = Any
+
+_AOT_WARMUP_SUPPORTED: Optional[bool] = None
+
+
+def aot_cache_warmup_supported() -> bool:
+    """Does THIS jax populate the jit call cache from AOT
+    ``jit(f).lower(...).compile()``?  Probed once per process with a
+    trace-counting scalar function: lower+compile it, then call it — if
+    the call re-traces, AOT warming buys nothing and ``Arena.warmup``
+    must fall back to executing a real run.  (jax 0.4.x re-traces; the
+    probe keeps the warmup honest across jax upgrades instead of
+    hard-coding a version check.)"""
+    global _AOT_WARMUP_SUPPORTED
+    if _AOT_WARMUP_SUPPORTED is None:
+        traces: List[int] = []
+
+        def probe(x):
+            traces.append(1)
+            return x + 1.0
+
+        fn = jax.jit(probe)
+        x = jnp.zeros(())
+        try:
+            fn.lower(x).compile()
+            jax.block_until_ready(fn(x))
+            _AOT_WARMUP_SUPPORTED = len(traces) == 1
+        except Exception:       # pragma: no cover - AOT API missing
+            _AOT_WARMUP_SUPPORTED = False
+    return _AOT_WARMUP_SUPPORTED
 
 _DIVFL_ERROR = (
     "DivFL is not scan-traceable: its selection is a stateful submodular "
@@ -347,6 +381,25 @@ class Arena:
       lanes scattered back into grid order on the host.  Kept for the
       bench baseline and for grids so K-skewed that padding waste
       (every lane trains ``K_max`` slots) beats compile/dispatch savings.
+    * ``'auto'`` — shape-adaptive dispatch: a
+      :func:`repro.sim.dispatch.plan_dispatch` cost model buckets the
+      lanes by ``(K, tier footprint)`` signature into a small ladder of
+      executables under ``max_executables``, with pad and group as
+      reachable degenerate plans.  ``run`` plans for a ONE-run horizon
+      (cold grids collapse toward the single padded executable — the
+      workflow win), :meth:`warmup` for a steady-state horizon (buckets
+      split by signature — the throughput win) and compiles every bucket
+      in that plan; post-warmup ``run`` calls see the warmed buckets via
+      the cache-aware cost model and re-pick them.  Multi-tier banks
+      additionally get per-bucket STATIC tier subsets: lane footprints
+      are replayed by a control-plane probe (selections depend only on
+      the control plane, never on training — the same determinism the
+      lane-equivalence tests pin down), so a bucket whose lanes never
+      draw tier ``t`` compiles a scan body without it, recovering the
+      skewed-ladder scan-skip that ``vmap`` otherwise erases.  Results
+      are stitched back to grid order (device-side ``concatenate`` +
+      ``take`` per params leaf); per-bucket lanes stay bitwise-equal on
+      the model trajectory to their pad/group counterparts.
 
     Compiled executables are cached per (bank layout, K_max, shard
     count, eval config) — :meth:`warmup` populates the cache eagerly so
@@ -370,7 +423,9 @@ class Arena:
 
     def __init__(self, engine, mesh: Optional[jax.sharding.Mesh] = None,
                  mesh_axis: str = "data", batch: str = "vmap",
-                 k_mode: str = "pad"):
+                 k_mode: str = "pad",
+                 cost_model: Optional[CostModel] = None,
+                 max_executables: int = 4):
         if engine.mesh is not None:
             raise ValueError(
                 "ScenarioArena shards the scenario axis; build the "
@@ -379,15 +434,29 @@ class Arena:
         if batch not in ("vmap", "map"):
             raise ValueError(f"unknown batch mode {batch!r} "
                              "(expected 'vmap' or 'map')")
-        if k_mode not in ("pad", "group"):
+        if k_mode not in ("pad", "group", "auto"):
             raise ValueError(f"unknown k_mode {k_mode!r} "
-                             "(expected 'pad' or 'group')")
+                             "(expected 'pad', 'group' or 'auto')")
+        if max_executables < 1:
+            raise ValueError(f"max_executables must be >= 1, "
+                             f"got {max_executables}")
         self.engine = engine
         self.mesh = mesh
         self.mesh_axis = mesh_axis
         self.batch = batch
         self.k_mode = k_mode
+        #: prices for ``k_mode='auto'`` planning (``None`` = the tracked
+        #: calibration defaults; see ``repro.sim.cost_model``)
+        self.cost_model = (cost_model if cost_model is not None
+                           else CostModel())
+        #: hard cap on buckets an ``'auto'`` plan may emit
+        self.max_executables = max_executables
         self._fns: Dict[tuple, Any] = {}
+        # control-plane probe executables / replayed footprints, kept
+        # OUT of self._fns so executables_cached keeps counting rollout
+        # programs only
+        self._probe_fns: Dict[tuple, Any] = {}
+        self._footprint_cache: Dict[bytes, list] = {}
         #: scan-body trace count — every jit (re)trace of a group
         #: executable runs the counted wrapper once, so a warmed arena
         #: must keep this constant across same-shape ``run`` calls
@@ -484,14 +553,23 @@ class Arena:
     def _run_group(self, global_params: PyTree, sp: sm.SystemParams,
                    bank, grid: ScenarioGrid, h_all, lr_seq,
                    k_max: Optional[int] = None, eval_bank=None,
-                   eval_every=None):
+                   eval_every=None, tier_subset=None,
+                   warm_aot: bool = False):
         """One K group (uniform K, or a padded mixed-K grid when
         ``k_max`` is given) as one jitted program; returns stacked lane
-        results in the group's grid order plus per-call stats."""
+        results in the group's grid order plus per-call stats.
+        ``tier_subset`` builds (and caches) the executable against a
+        static subset of a tiered bank's ladder — the dispatch planner's
+        scan-skip lever; the caller guarantees the group's lanes never
+        select outside it.  ``warm_aot=True`` AOT-lowers and compiles
+        the executable instead of running it (results come back None) —
+        only useful where :func:`aot_cache_warmup_supported` says the
+        jit call cache is populated by it."""
         if k_max is None:
             k_max = int(grid.sample_count[0])
         sp_k = dataclasses.replace(sp, sample_count=k_max)
-        round_fn, data, bank_key = self.engine._scan_plan(bank)
+        round_fn, data, bank_key = self.engine._scan_plan(bank,
+                                                          tier_subset)
         ek = self._eval_key(eval_bank, eval_every)
         key = (bank_key, k_max, self._shards(), ek)
         fn = self._fns.get(key)
@@ -517,7 +595,7 @@ class Arena:
         # V/lam — and each lane's true K — materialized [S, N]: each lane
         # receives the [N] vector form _build_scan's bitwise contract
         # requires; k_act is the per-lane active-slot count
-        params, queues, outs = fn(
+        call_args = (
             global_params, queues0, sp_k, jnp.asarray(eb), data,
             jnp.asarray(h_all, jnp.float32),
             jnp.asarray(lr_seq, jnp.float32), roll_keys,
@@ -527,7 +605,179 @@ class Arena:
             jnp.asarray(np.broadcast_to(
                 grid.sample_count[:, None].astype(np.float32), (s, n))),
             jnp.asarray(grid.sample_count, jnp.int32), eval_data)
+        if warm_aot:
+            fn.lower(*call_args).compile()
+            return None, None, None, compiled_new
+        params, queues, outs = fn(*call_args)
         return params, queues, outs, compiled_new
+
+    # -- shape-adaptive dispatch planning -----------------------------------
+
+    def _tier_work(self, bank) -> Dict[int, float]:
+        """``{tier id: bucket rows per padded slot per round}`` — the
+        cost model's work weights: local epochs x steps/epoch x batch
+        rows, per tier of the ladder (a single bank is tier 0)."""
+        banks = (bank.tiers if hasattr(bank, "tiers") else [bank])
+        epochs = float(self.engine.cfg.local_epochs)
+        return {t: epochs * b.steps_per_epoch * b.batch_size
+                for t, b in enumerate(banks)}
+
+    def _probe_footprints(self, sp, bank, grid: ScenarioGrid, h_all,
+                          num_rounds: int) -> list:
+        """Per-lane tier footprints, replayed WITHOUT training: the
+        scan's selections depend only on the control plane — queues
+        evolve from the decide outputs, the rng carry evolves by
+        ``split`` alone, slot draws are prefix-stable ``fold_in`` —
+        never on the model, so a probe scan whose round_fn is a no-op
+        reproduces every lane's exact selection trace at control-plane
+        cost (the same determinism the lane-equivalence tests pin
+        down).  Probe executables are cached per (K_max, batch mode);
+        probe RESULTS are cached by content hash of the inputs that
+        shape selections, so steady-state re-runs of one grid replan
+        from memory."""
+        s, n = len(grid), sp.num_devices
+        k_max = int(grid.sample_count.max())
+        eb_base = np.asarray(sp.energy_budget, np.float32)
+        h_np = np.asarray(h_all, np.float32)
+        hasher = hashlib.sha1()
+        for part in (h_np, grid.controller, grid.seed, grid.V, grid.lam,
+                     grid.energy_scale, grid.sample_count, eb_base):
+            hasher.update(np.ascontiguousarray(part).tobytes())
+        hasher.update(str((k_max, n, num_rounds)).encode())
+        cache_key = hasher.digest()
+        hit = self._footprint_cache.get(cache_key)
+        if hit is not None:
+            return hit
+
+        pk = (k_max, self.batch)
+        fn = self._probe_fns.get(pk)
+        if fn is None:
+            def decide(sp_run, h, queues, V, lam, cid, kvec):
+                return pol.decide_by_id(cid, sp_run, h, queues, V, lam,
+                                        k=kvec)
+
+            def noop_round(params, data, selected, coeffs, lr, rngs):
+                return params, jnp.zeros(selected.shape, jnp.float32)
+
+            inner = self.engine._build_scan(k_max, decide, noop_round)
+            if self.batch == "vmap":
+                batched = jax.vmap(inner,
+                                   in_axes=(None, 0, None, 0, None, 0,
+                                            None, 0, 0, 0, 0, 0, 0,
+                                            None))
+            else:
+                def batched(params, queues, sp_run, eb, data, h_seq,
+                            lr_seq, rng, V, lam, cid, kvec, k_act,
+                            eval_data):
+                    def one(lane):
+                        (q0, eb_s, h_s, rng_s, V_s, lam_s, cid_s, kv_s,
+                         ka_s) = lane
+                        return inner(params, q0, sp_run, eb_s, data,
+                                     h_s, lr_seq, rng_s, V_s, lam_s,
+                                     cid_s, kv_s, ka_s, eval_data)
+                    return jax.lax.map(one, (queues, eb, h_seq, rng, V,
+                                             lam, cid, kvec, k_act))
+            fn = self._probe_fns[pk] = jax.jit(batched)
+        _, roll_keys = scenario_keys(grid)
+        eb = eb_base[None, :] * grid.energy_scale[:, None]
+        sp_k = dataclasses.replace(sp, sample_count=k_max)
+        _, _, outs = fn(
+            jnp.zeros((1,)), jnp.zeros((s, n), jnp.float32), sp_k,
+            jnp.asarray(eb), None, jnp.asarray(h_np),
+            jnp.zeros((num_rounds,), jnp.float32), roll_keys,
+            jnp.asarray(np.broadcast_to(grid.V[:, None], (s, n))),
+            jnp.asarray(np.broadcast_to(grid.lam[:, None], (s, n))),
+            jnp.asarray(grid.controller),
+            jnp.asarray(np.broadcast_to(
+                grid.sample_count[:, None].astype(np.float32), (s, n))),
+            jnp.asarray(grid.sample_count, jnp.int32), None)
+        fps = lane_footprints(np.asarray(outs["selected"]),
+                              np.asarray(bank.tier_of))
+        self._footprint_cache[cache_key] = fps
+        return fps
+
+    def _plan(self, sp, bank, grid: ScenarioGrid, num_rounds: int,
+              h_all, *, runs: float, eval_key) -> DispatchPlan:
+        """The ``k_mode='auto'`` plan for this grid at the given reuse
+        horizon (``runs=1`` for a cold :meth:`run`, ``math.inf`` for
+        :meth:`warmup`'s steady state).  The cost model sees the arena's
+        executable cache through ``is_cached``, so a warmed arena's
+        plans snap to the already-compiled buckets."""
+        multi_tier = hasattr(bank, "tiers") and bank.num_tiers > 1
+        footprints = (self._probe_footprints(sp, bank, grid, h_all,
+                                             num_rounds)
+                      if multi_tier else None)
+
+        def is_cached(bucket) -> bool:
+            bk = bank_layout_key(bank, bucket.tiers)
+            return (bk, bucket.k_pad, self._shards(),
+                    eval_key) in self._fns
+
+        return plan_dispatch(
+            grid.sample_count, rounds=num_rounds,
+            tier_work=self._tier_work(bank), footprints=footprints,
+            cost_model=self.cost_model,
+            max_executables=self.max_executables, is_cached=is_cached,
+            runs=runs)
+
+    def _run_plan(self, global_params: PyTree, sp, bank,
+                  grid: ScenarioGrid, h_all, lr_seq,
+                  plan: DispatchPlan, eval_bank=None, eval_every=None,
+                  warm_aot: bool = False):
+        """Execute (or, with ``warm_aot``, AOT-compile) every bucket of
+        ``plan`` and stitch the lanes back to grid order.  Params are
+        stitched on DEVICE — one ``concatenate`` + one ``take`` per
+        leaf — instead of the legacy grouped path's per-lane slice/
+        re-stack (O(S x leaves) dispatches); metrics/queues are host
+        arrays and concatenate there.  Returns ``(params, queues,
+        metrics, built_total, bucket_meta)`` with everything but
+        ``bucket_meta`` None under ``warm_aot``."""
+        k_max = int(grid.sample_count.max())
+        chunks = []
+        built_total = 0
+        bucket_meta = []
+        for b in plan.buckets:
+            idx = np.asarray(b.lanes, np.int64)
+            params_g, queues_g, outs_g, built = self._run_group(
+                global_params, sp, bank, grid.take(idx),
+                h_all[jnp.asarray(idx)], lr_seq, k_max=b.k_pad,
+                eval_bank=eval_bank, eval_every=eval_every,
+                tier_subset=b.tiers, warm_aot=warm_aot)
+            built_total += int(built)
+            bucket_meta.append(dict(
+                lanes=[int(i) for i in b.lanes], k_pad=int(b.k_pad),
+                tiers=None if b.tiers is None else list(b.tiers),
+                dispatches=0 if warm_aot else 1,
+                executables_built=int(built)))
+            chunks.append((params_g, queues_g, outs_g))
+        if warm_aot:
+            return None, None, None, built_total, bucket_meta
+        if plan.num_buckets == 1:
+            # single bucket = the padded fast path: lanes already in
+            # grid order, no permutation or concatenation needed
+            params_g, queues_g, outs_g = chunks[0]
+            metrics = {name: np.asarray(v) for name, v in outs_g.items()}
+            return (params_g, np.asarray(queues_g), metrics,
+                    built_total, bucket_meta)
+        inv = plan.inverse_permutation()
+        inv_dev = jnp.asarray(inv)
+        params = jax.tree_util.tree_map(
+            lambda *ls: jnp.take(jnp.concatenate(ls, axis=0), inv_dev,
+                                 axis=0), *[c[0] for c in chunks])
+        queues = np.concatenate([np.asarray(c[1]) for c in chunks],
+                                axis=0)[inv]
+        metrics: Dict[str, np.ndarray] = {}
+        for name in chunks[0][2]:
+            parts = []
+            for _, _, outs_g in chunks:
+                v = np.asarray(outs_g[name])
+                if name == "selected" and v.shape[-1] < k_max:
+                    pad = np.full(v.shape[:-1] + (k_max - v.shape[-1],),
+                                  -1, v.dtype)
+                    v = np.concatenate([v, pad], axis=-1)
+                parts.append(v)
+            metrics[name] = np.concatenate(parts, axis=0)[inv]
+        return params, queues, metrics, built_total, bucket_meta
 
     def run(self, global_params: PyTree, sp: sm.SystemParams, bank,
             grid: ScenarioGrid, num_rounds: int, lr_seq,
@@ -593,6 +843,25 @@ class Arena:
         k_max = int(ks.max())
         meta = dict(k_mode=self.k_mode, k_groups=[int(k) for k in ks],
                     k_max=k_max, batch=self.batch, shards=self._shards())
+        if self.k_mode == "auto":
+            # shape-adaptive dispatch: plan at the ONE-run horizon — a
+            # cold arena collapses toward the padded single bucket, a
+            # warmed arena's cached steady buckets win through is_cached
+            plan = self._plan(sp, bank, grid, num_rounds, h_all,
+                              runs=1.0,
+                              eval_key=self._eval_key(eval_bank,
+                                                      eval_every))
+            params, queues, metrics, built, bucket_meta = self._run_plan(
+                global_params, sp, bank, grid, h_all, lr_seq, plan,
+                eval_bank=eval_bank, eval_every=eval_every)
+            meta.update(dispatches=plan.num_buckets,
+                        executables_built=built,
+                        executables_cached=len(self._fns),
+                        plan=plan.describe(), buckets=bucket_meta)
+            return RolloutReport(
+                grid=grid, num_rounds=num_rounds, params=params,
+                queues=queues, metrics=metrics, meta=meta,
+                final_metrics=self._final_eval(eval_bank, params))
         if self.k_mode == "pad" or ks.size == 1:
             # padded-K fusion: the whole grid — mixed K included — is ONE
             # executable and ONE dispatch (K_max slots per lane, each
@@ -601,8 +870,13 @@ class Arena:
                 global_params, sp, bank, grid, h_all, lr_seq,
                 k_max=k_max, eval_bank=eval_bank, eval_every=eval_every)
             metrics = {name: np.asarray(v) for name, v in outs.items()}
+            plan = DispatchPlan.padded(grid.sample_count)
             meta.update(dispatches=1, executables_built=int(built),
-                        executables_cached=len(self._fns))
+                        executables_cached=len(self._fns),
+                        plan=plan.describe(),
+                        buckets=[dict(lanes=list(range(s)), k_pad=k_max,
+                                      tiers=None, dispatches=1,
+                                      executables_built=int(built))])
             return RolloutReport(
                 grid=grid, num_rounds=num_rounds, params=params,
                 queues=np.asarray(queues), metrics=metrics, meta=meta,
@@ -614,6 +888,7 @@ class Arena:
         queues_all = np.zeros((s, sp.num_devices), np.float32)
         metrics: Dict[str, np.ndarray] = {}
         built_total = 0
+        bucket_meta = []
         for k in ks:
             idx = np.flatnonzero(grid.sample_count == k)
             sub = grid.take(idx)
@@ -621,6 +896,9 @@ class Arena:
                 global_params, sp, bank, sub, h_all[jnp.asarray(idx)],
                 lr_seq, eval_bank=eval_bank, eval_every=eval_every)
             built_total += int(built)
+            bucket_meta.append(dict(
+                lanes=[int(i) for i in idx], k_pad=int(k), tiers=None,
+                dispatches=1, executables_built=int(built)))
             queues_all[idx] = np.asarray(queues_g)
             for j, lane in enumerate(idx):
                 lane_params[lane] = jax.tree_util.tree_map(
@@ -638,7 +916,10 @@ class Arena:
                                         *lane_params)
         meta.update(dispatches=int(ks.size),
                     executables_built=built_total,
-                    executables_cached=len(self._fns))
+                    executables_cached=len(self._fns),
+                    plan=DispatchPlan.grouped(grid.sample_count
+                                              ).describe(),
+                    buckets=bucket_meta)
         return RolloutReport(grid=grid, num_rounds=num_rounds,
                              params=params, queues=queues_all,
                              metrics=metrics, meta=meta,
@@ -657,26 +938,62 @@ class Arena:
     def warmup(self, global_params: PyTree, sp: sm.SystemParams, bank,
                grid: ScenarioGrid, num_rounds: int,
                lr_seq=None, *, h_all: Optional[jax.Array] = None,
-               eval_bank=None, eval_every: Optional[int] = None) -> dict:
-        """Compile the executable(s) a same-shape :meth:`run` will hit,
+               eval_bank=None, eval_every: Optional[int] = None,
+               aot: Optional[bool] = None) -> dict:
+        """Compile EVERY executable a same-shape :meth:`run` will hit,
         so iterating on grid VALUES (the V/lam/seed/channel sweep
         workflow — shapes fixed, data varying) never traces or compiles
-        again.  Mirrors ``FederatedTrainer.warmup``: it *executes* one
-        real same-shape run and discards the results (AOT
-        ``lower().compile()`` does not populate the jit call cache), so
-        warmup costs one grid execution.  Nothing observable changes —
-        the arena holds no rollout state, the bank is read-only, params
-        are never donated.  Returns ``{'executables_built', 'traces'}``
-        for the zero-retrace assertion; subsequent same-shape runs keep
-        ``self.traces`` constant.
+        again.  The warmed set is a full :class:`DispatchPlan` per the
+        arena's ``k_mode`` — the padded single bucket, every per-K
+        group, or (``'auto'``) the STEADY-STATE plan (``runs=inf``
+        horizon: the signature-split buckets a warmed arena's runs
+        snap to via the cache-aware cost model), each bucket warmed
+        individually.
+
+        ``aot`` picks how: ``True`` forces AOT
+        ``jit(...).lower(...).compile()`` per bucket (no paid real
+        execution), ``False`` forces one real discarded run, ``None``
+        (default) asks :func:`aot_cache_warmup_supported` whether this
+        jax populates the jit call cache from AOT — falling back
+        cleanly to the executed path otherwise (jax 0.4.x re-traces on
+        call, so AOT warming there would compile everything twice).
+        Nothing observable changes — the arena holds no rollout state,
+        the bank is read-only, params are never donated.  Returns
+        ``{'executables_built', 'executables_cached', 'traces', 'aot',
+        'plan'}`` for the zero-retrace assertion; subsequent same-shape
+        runs keep ``self.traces`` constant.
         """
         before = self.traces
         if lr_seq is None:
             lr_seq = np.zeros(num_rounds, np.float32)
-        rep = self.run(global_params, sp, bank, grid, num_rounds, lr_seq,
-                       h_all=h_all, eval_bank=eval_bank,
-                       eval_every=eval_every)
-        jax.block_until_ready(jax.tree_util.tree_leaves(rep.params))
-        return {"executables_built": rep.meta["executables_built"],
+        if h_all is None:
+            h_all = self.sample_channels(grid, num_rounds,
+                                         sp.num_devices)
+        h_all = jnp.asarray(h_all)
+        ek = self._eval_key(eval_bank, eval_every)
+        if self.k_mode == "auto":
+            plan = self._plan(sp, bank, grid, num_rounds, h_all,
+                              runs=math.inf, eval_key=ek)
+        elif self.k_mode == "group":
+            plan = DispatchPlan.grouped(grid.sample_count)
+        else:
+            plan = DispatchPlan.padded(grid.sample_count)
+        use_aot = (bool(aot) if aot is not None
+                   else aot_cache_warmup_supported())
+        params, _, _, built, _ = self._run_plan(
+            global_params, sp, bank, grid, h_all, lr_seq, plan,
+            eval_bank=eval_bank, eval_every=eval_every,
+            warm_aot=use_aot)
+        if use_aot:
+            if eval_bank is not None:
+                eval_bank.aot_warm(len(grid), global_params)
+        else:
+            # executed path: block on (and discard) the real results,
+            # and run the final batched evaluation so the EvalBank's
+            # stacked executable is warmed too
+            jax.block_until_ready(jax.tree_util.tree_leaves(params))
+            self._final_eval(eval_bank, params)
+        return {"executables_built": built,
                 "executables_cached": len(self._fns),
-                "traces": self.traces - before}
+                "traces": self.traces - before,
+                "aot": use_aot, "plan": plan.describe()}

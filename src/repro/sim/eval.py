@@ -82,3 +82,18 @@ class EvalBank:
         """Single-model evaluation (host convenience / reference)."""
         out = self.eval_fn(params, (self.x, self.y))
         return {name: float(v) for name, v in out.items()}
+
+    def aot_warm(self, s: int, params_example: PyTree) -> bool:
+        """AOT-compile the stacked evaluator for an ``[s, ...]`` params
+        stack from shape structs alone (no execution) — the EvalBank
+        half of ``Arena.warmup(aot=True)``.  Only populates the jit call
+        cache where ``repro.sim.arena.aot_cache_warmup_supported`` says
+        this jax does; returns whether the lowering itself succeeded."""
+        structs = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct((s,) + tuple(a.shape),
+                                           a.dtype), params_example)
+        try:
+            self._stacked.lower(structs, (self.x, self.y)).compile()
+            return True
+        except Exception:       # pragma: no cover - AOT API missing
+            return False

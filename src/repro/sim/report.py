@@ -10,9 +10,14 @@ device).  With an ``EvalBank``, on-device test metrics land here too:
 (``test_accuracy`` / ``test_loss``, ``[S]``), and ``eval_every`` adds
 ``test_*`` per-round columns to ``metrics`` (a step curve holding the
 latest in-scan evaluation).  ``meta`` records the execution shape —
-``k_mode``, ``k_groups``, ``dispatches``, ``executables_built`` — so
-benches and tests can assert "one executable" instead of inferring it
-from timing.  The reducers below turn all of it into the curves the
+``k_mode``, ``k_groups``, ``dispatches``, ``executables_built``, the
+``plan`` (the ``repro.sim.dispatch.DispatchPlan`` the run executed,
+JSON-shaped) and per-bucket ``buckets`` counters — so benches and tests
+can assert "one executable" instead of inferring it from timing.  The
+per-bucket counters are ADDITIVE: every execution mode (pad / group /
+auto) emits one ``buckets`` entry per executable dispatched, and
+:meth:`RolloutReport.dispatch_accounting` cross-checks that their sums
+reproduce the run totals exactly.  The reducers below turn all of it into the curves the
 paper plots — cumulative latency, loss/accuracy-vs-time, time-averaged
 energy against the budget, queue-norm stability — and
 :meth:`tradeoff_table` aggregates seeds so a (controller, V, lam, budget,
@@ -99,6 +104,38 @@ class RolloutReport:
                 "no final test accuracy recorded — pass eval_bank= to "
                 "Arena.run to evaluate the final params on device")
         return self.final_metrics["test_accuracy"]
+
+    def dispatch_accounting(self) -> Dict[str, int]:
+        """Summed per-bucket execution counters, cross-checked against
+        the run totals — the multi-executable accounting contract:
+        ``meta['buckets']`` entries are per-executable and ADDITIVE, so
+        ``sum(bucket dispatches) == meta['dispatches']`` and
+        ``sum(bucket executables_built) == meta['executables_built']``
+        in every k_mode.  Raises ``ValueError`` when a mode breaks the
+        sum (a bucket counted twice or dropped), returns the sums plus
+        lane coverage otherwise."""
+        buckets = self.meta.get("buckets")
+        if not buckets:
+            raise KeyError("meta carries no per-bucket counters — was "
+                           "this report produced by Arena.run?")
+        sums = dict(
+            dispatches=sum(int(b["dispatches"]) for b in buckets),
+            executables_built=sum(int(b["executables_built"])
+                                  for b in buckets),
+            buckets=len(buckets),
+            lanes_covered=sum(len(b["lanes"]) for b in buckets))
+        for field in ("dispatches", "executables_built"):
+            if sums[field] != int(self.meta[field]):
+                raise ValueError(
+                    f"per-bucket {field} sum to {sums[field]} but "
+                    f"meta[{field!r}] records {self.meta[field]} — the "
+                    f"additive accounting contract is broken")
+        lanes = sorted(i for b in buckets for i in b["lanes"])
+        if lanes != list(range(self.num_scenarios)):
+            raise ValueError(
+                f"bucket lanes {lanes} do not partition the "
+                f"{self.num_scenarios} grid lanes")
+        return sums
 
     def selection_counts(self, num_devices: int) -> np.ndarray:
         """How often each client was drawn, [S, N] (padding ignored)."""

@@ -23,7 +23,8 @@ from repro.core import policy as pol
 from repro.data import synthetic_image_classification
 from repro.fl import ClientConfig, RoundEngine
 from repro.models import MLPTask
-from repro.sim import (Arena, EvalBank, RolloutReport, ScenarioGrid,
+from repro.sim import (Arena, CostModel, EvalBank, RolloutReport,
+                       ScenarioGrid, aot_cache_warmup_supported,
                        derive_hyperparams, scenario_keys)
 
 N = 6
@@ -549,6 +550,250 @@ def test_arena_warmup_then_run_zero_new_traces():
     assert rep.meta["executables_built"] == 0
     assert rep2.meta["executables_built"] == 0
     assert np.all(np.isfinite(rep.metrics["loss"]))
+
+
+# -- shape-adaptive dispatch (k_mode='auto') --------------------------------
+
+
+# compile amortisation zeroed out: the planner splits by signature even
+# on a cold arena, so one run exercises the full multi-bucket path
+_SPLIT_CM = CostModel(compile_cost=0.0)
+
+
+def test_auto_mixed_k_multi_bucket_bitwise_vs_pad_and_group():
+    """k_mode='auto' forced into its signature-split plan on a K-skewed
+    interleaved grid: three buckets, lanes permuted in and out, every
+    lane bitwise-equal (model trajectory, leaf-chunked path) to the
+    padded and grouped executions and to its run_scan replay — the cost
+    model decides speed, never results."""
+    task, eng, bank, sp, params0 = _setup()
+    grid = _mixed_k_grid()
+    T = 3
+    lr = np.full(T, 0.1, np.float32)
+    auto = Arena(eng, k_mode="auto", cost_model=_SPLIT_CM)
+    h_all = auto.sample_channels(grid, T, N)
+    rep = auto.run(params0, sp, bank, grid, T, lr, h_all=h_all)
+    assert rep.meta["k_mode"] == "auto"
+    assert rep.meta["dispatches"] == 3          # one bucket per distinct K
+    assert rep.meta["executables_built"] == 3
+    assert [b["k_pad"] for b in rep.meta["plan"]] == [2, 3, 4]
+    # grid-interleaved K: buckets are non-contiguous lane sets
+    assert rep.meta["plan"][0]["lanes"] == [0, 2]
+    # the grouped execution of the SAME grid is bitwise identical in
+    # every output (the buckets ARE the per-K groups here)
+    grouped = Arena(eng, k_mode="group")
+    rep_g = grouped.run(params0, sp, bank, grid, T, lr, h_all=h_all)
+    for a, b in zip(jax.tree_util.tree_leaves(rep.params),
+                    jax.tree_util.tree_leaves(rep_g.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for name in rep.metrics:
+        np.testing.assert_array_equal(rep.metrics[name],
+                                      rep_g.metrics[name])
+    np.testing.assert_array_equal(rep.queues, rep_g.queues)
+    # ...and the padded execution matches on the model trajectory
+    pad = Arena(eng)
+    rep_p = pad.run(params0, sp, bank, grid, T, lr, h_all=h_all)
+    for a, b in zip(jax.tree_util.tree_leaves(rep.params),
+                    jax.tree_util.tree_leaves(rep_p.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for name in BITWISE_METRICS:
+        np.testing.assert_array_equal(rep.metrics[name],
+                                      rep_p.metrics[name])
+    # ...and the individual fixed-policy run_scan replays, lane by lane
+    for s in range(len(grid)):
+        _assert_lane_matches(rep, eng, bank, sp, params0, grid, h_all, lr,
+                             s)
+
+
+def test_auto_cold_run_collapses_to_the_padded_plan():
+    """With real compile prices and nothing cached, a one-shot auto run
+    plans exactly the padded single bucket — the cold-workflow
+    degenerate case, same executable cache key as k_mode='pad'."""
+    task, eng, bank, sp, params0 = _setup()
+    grid = _mixed_k_grid()
+    T = 3
+    lr = np.full(T, 0.1, np.float32)
+    auto = Arena(eng, k_mode="auto")          # tracked cost calibration
+    h_all = auto.sample_channels(grid, T, N)
+    rep = auto.run(params0, sp, bank, grid, T, lr, h_all=h_all)
+    assert rep.meta["dispatches"] == 1
+    assert rep.meta["executables_built"] == 1
+    assert rep.meta["plan"][0]["k_pad"] == 4
+    pad = Arena(eng)
+    rep_p = pad.run(params0, sp, bank, grid, T, lr, h_all=h_all)
+    assert set(auto._fns) == set(pad._fns)    # the SAME executable key
+    for name in rep.metrics:
+        np.testing.assert_array_equal(rep.metrics[name],
+                                      rep_p.metrics[name])
+
+
+def test_auto_max_executables_one_is_the_pad_degenerate_case():
+    """A forced max_executables=1 plan is the padded plan whatever the
+    prices say — results and executable cache key identical to
+    k_mode='pad'."""
+    task, eng, bank, sp, params0 = _setup()
+    grid = _mixed_k_grid()
+    T = 3
+    lr = np.full(T, 0.1, np.float32)
+    auto = Arena(eng, k_mode="auto", cost_model=_SPLIT_CM,
+                 max_executables=1)
+    h_all = auto.sample_channels(grid, T, N)
+    rep = auto.run(params0, sp, bank, grid, T, lr, h_all=h_all)
+    assert rep.meta["dispatches"] == 1
+    assert len(auto._fns) == 1
+    pad = Arena(eng)
+    rep_p = pad.run(params0, sp, bank, grid, T, lr, h_all=h_all)
+    assert set(auto._fns) == set(pad._fns)
+    for a, b in zip(jax.tree_util.tree_leaves(rep.params),
+                    jax.tree_util.tree_leaves(rep_p.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for name in rep.metrics:
+        np.testing.assert_array_equal(rep.metrics[name],
+                                      rep_p.metrics[name])
+    with pytest.raises(ValueError, match="max_executables"):
+        Arena(eng, k_mode="auto", max_executables=0)
+
+
+def test_auto_lane_permutation_round_trip_with_eval_columns():
+    """Eval rides the buckets: in-scan test_* columns and the final
+    batched evaluation re-stitch to grid order through the lane
+    permutation — accuracy_curve() and the report reducers read exactly
+    like the padded run's."""
+    task, eng, bank, sp, params0 = _setup()
+    xte, yte = _test_set()
+    eb = EvalBank(task, xte, yte)
+    grid = _mixed_k_grid()
+    T = 4
+    lr = np.full(T, 0.1, np.float32)
+    auto = Arena(eng, k_mode="auto", cost_model=_SPLIT_CM)
+    h_all = auto.sample_channels(grid, T, N)
+    rep = auto.run(params0, sp, bank, grid, T, lr, h_all=h_all,
+                   eval_bank=eb, eval_every=2)
+    assert rep.meta["dispatches"] == 3
+    pad = Arena(eng)
+    rep_p = pad.run(params0, sp, bank, grid, T, lr, h_all=h_all,
+                    eval_bank=eb, eval_every=2)
+    # grid order round-trips: the model-trajectory columns are bitwise,
+    # the eval columns (different vmap widths) f32-tight
+    for name in BITWISE_METRICS:
+        np.testing.assert_array_equal(rep.metrics[name],
+                                      rep_p.metrics[name])
+    np.testing.assert_allclose(rep.accuracy_curve(),
+                               rep_p.accuracy_curve(), **TOL)
+    np.testing.assert_allclose(rep.final_accuracy(),
+                               rep_p.final_accuracy(), **TOL)
+    # reducers see grid coordinates in grid order
+    rows = rep.summary()
+    assert [r["sample_count"] for r in rows] == \
+        grid.sample_count.tolist()
+    assert [r["controller"] for r in rows] == grid.controller_names()
+
+
+def test_auto_tiered_bank_static_tier_subsets_match_pad_lanes():
+    """Multi-tier bank + K-skewed grid: the control-plane probe's
+    footprints bound each bucket to the tiers its lanes actually draw,
+    at least one bucket compiles a REDUCED ladder (the recovered
+    scan-skip), and every lane still matches the padded full-ladder
+    execution and its run_scan replay to f32 resolution."""
+    sizes = [64, 10, 33, 64, 100, 17]
+    task, eng, bank, sp, params0 = _setup(sizes, bank_mode="tiered")
+    assert bank.num_tiers > 1
+    grid = ScenarioGrid.create(
+        controllers=["lroa", "uni_d", "uni_s", "lroa", "uni_d", "lroa"],
+        seeds=[3, 4, 5, 6, 7, 8], V=200.0, lam=1.0,
+        sample_count=[2, 4, 2, 4, 3, 3])
+    T = 3
+    lr = np.full(T, 0.1, np.float32)
+    auto = Arena(eng, k_mode="auto", cost_model=_SPLIT_CM,
+                 max_executables=6)
+    h_all = auto.sample_channels(grid, T, len(sizes))
+    rep = auto.run(params0, sp, bank, grid, T, lr, h_all=h_all)
+    assert rep.meta["dispatches"] > 1
+    # every bucket's static tier subset covers exactly the union of its
+    # lanes' REALIZED tier draws (probe == execution selections)
+    tier_of = np.asarray(bank.tier_of)
+    for b in rep.meta["plan"]:
+        realized = set()
+        for s in b["lanes"]:
+            sel = rep.metrics["selected"][s]
+            realized |= set(tier_of[sel[sel >= 0]].tolist())
+        assert sorted(realized) == b["tiers"]
+    # the scan-skip is actually exercised: some bucket dropped a tier
+    assert any(len(b["tiers"]) < bank.num_tiers
+               for b in rep.meta["plan"])
+    # lanes match the padded full-ladder run (dropped tiers contribute
+    # exact zeros) and the individual tiered run_scan replays
+    pad = Arena(eng)
+    rep_p = pad.run(params0, sp, bank, grid, T, lr, h_all=h_all)
+    np.testing.assert_array_equal(rep.metrics["selected"],
+                                  rep_p.metrics["selected"])
+    for a, b in zip(jax.tree_util.tree_leaves(rep.params),
+                    jax.tree_util.tree_leaves(rep_p.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5)
+    for s in range(len(grid)):
+        _assert_lane_matches(rep, eng, bank, sp, params0, grid, h_all, lr,
+                             s, model_bitwise=False)
+
+
+def test_auto_warmup_warms_every_steady_bucket():
+    """Arena.warmup under 'auto' plans at the steady-state horizon,
+    warms EVERY bucket of that plan (AOT-lowered where supported, one
+    discarded execution otherwise), and subsequent runs re-pick the
+    cached buckets through the cache-aware cost model: zero new
+    compiles, zero new traces."""
+    task, eng, bank, sp, params0 = _setup()
+    grid = _mixed_k_grid()
+    T = 3
+    lr = np.full(T, 0.1, np.float32)
+    auto = Arena(eng, k_mode="auto")
+    h_all = auto.sample_channels(grid, T, N)
+    stats = auto.warmup(params0, sp, bank, grid, T, h_all=h_all)
+    assert stats["aot"] == aot_cache_warmup_supported()
+    assert len(stats["plan"]) == 3        # steady split, not the cold pad
+    assert stats["executables_built"] == 3
+    assert len(auto._fns) == 3
+    traces0 = auto.traces
+    rep = auto.run(params0, sp, bank, grid, T, lr, h_all=h_all)
+    assert rep.meta["dispatches"] == 3    # snapped to the warmed buckets
+    assert rep.meta["executables_built"] == 0
+    assert auto.traces == traces0         # zero new traces after warmup
+    acc = rep.dispatch_accounting()
+    assert acc["dispatches"] == 3
+    assert acc["lanes_covered"] == len(grid)
+    # the executed fallback warms the same set
+    auto2 = Arena(eng, k_mode="auto")
+    stats2 = auto2.warmup(params0, sp, bank, grid, T, h_all=h_all,
+                          aot=False)
+    assert stats2["aot"] is False
+    assert stats2["executables_built"] == 3
+    rep2 = auto2.run(params0, sp, bank, grid, T, lr, h_all=h_all)
+    assert rep2.meta["executables_built"] == 0
+    for name in rep.metrics:
+        np.testing.assert_array_equal(rep.metrics[name],
+                                      rep2.metrics[name])
+
+
+def test_meta_bucket_accounting_is_additive_in_every_k_mode():
+    """Satellite contract: meta['buckets'] counters are per-executable
+    and additive — their sums reproduce meta['dispatches'] /
+    meta['executables_built'] exactly in pad, group, and auto modes
+    (dispatch_accounting raises otherwise)."""
+    task, eng, bank, sp, params0 = _setup()
+    grid = _mixed_k_grid()
+    T = 3
+    lr = np.full(T, 0.1, np.float32)
+    expected = {"pad": 1, "group": 3, "auto": 3}
+    for mode, want in expected.items():
+        arena = Arena(eng, k_mode=mode, cost_model=_SPLIT_CM)
+        h_all = arena.sample_channels(grid, T, N)
+        rep = arena.run(params0, sp, bank, grid, T, lr, h_all=h_all)
+        acc = rep.dispatch_accounting()
+        assert acc["dispatches"] == rep.meta["dispatches"] == want
+        assert acc["executables_built"] == rep.meta["executables_built"]
+        assert acc["lanes_covered"] == len(grid)
+        assert sum(b["dispatches"] for b in rep.meta["buckets"]) == \
+            rep.meta["dispatches"]
 
 
 # -- K validation -----------------------------------------------------------

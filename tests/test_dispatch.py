@@ -1,0 +1,252 @@
+"""Dispatch planner unit surface: the cost-model lane bucketing behind
+``Arena(k_mode='auto')`` — degenerate pad/group plans, deterministic
+signature bucketing, the cold-vs-steady horizon split, cache-aware
+replanning, footprint handling, and the CostModel calibrations.  Pure
+host-side tests (no rollouts); the arena-level bitwise equivalence of
+executed plans lives in ``test_arena.py``."""
+
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.sim import CostModel, DispatchBucket, DispatchPlan
+from repro.sim import lane_footprints, plan_dispatch
+
+# one bank tier, 128 bucket rows per slot per round — the scale the
+# arena's _tier_work feeds for a 64-example bs-16 2-epoch bank
+WORK = {0: 128.0}
+
+
+def _skewed_ks():
+    # ten tiny-K lanes + two huge-K lanes: the padding-waste poster child
+    return np.array([2] * 10 + [16, 16])
+
+
+# -- plan containers ---------------------------------------------------------
+
+
+def test_padded_and_grouped_degenerate_plans():
+    ks = np.array([2, 4, 2, 4, 3, 3])
+    pad = DispatchPlan.padded(ks)
+    assert pad.num_buckets == 1
+    assert pad.buckets[0] == DispatchBucket(lanes=tuple(range(6)), k_pad=4)
+    grp = DispatchPlan.grouped(ks)
+    assert [b.k_pad for b in grp.buckets] == [2, 3, 4]
+    assert grp.buckets[0].lanes == (0, 2)
+    assert grp.buckets[1].lanes == (4, 5)
+    assert grp.buckets[2].lanes == (1, 3)
+    assert grp.k_max == 4
+
+
+def test_permutation_round_trip_interleaved():
+    """inverse_permutation restores grid order for any stitched array —
+    the exact index algebra Arena._run_plan uses."""
+    ks = np.array([4, 2, 4, 2, 8, 2])
+    plan = DispatchPlan.grouped(ks)
+    perm = plan.permutation()
+    inv = plan.inverse_permutation()
+    lane_values = np.arange(len(ks)) * 10
+    stitched = lane_values[perm]          # device order (bucket concat)
+    np.testing.assert_array_equal(stitched[inv], lane_values)
+    np.testing.assert_array_equal(perm[inv[np.arange(len(ks))]],
+                                  np.arange(len(ks)))
+    bucket_of = plan.bucket_of()
+    for j, b in enumerate(plan.buckets):
+        assert all(bucket_of[i] == j for i in b.lanes)
+
+
+def test_plan_validates_partition_and_bucket_shapes():
+    with pytest.raises(ValueError, match="partition"):
+        DispatchPlan(buckets=(DispatchBucket(lanes=(0, 1), k_pad=2),),
+                     num_lanes=3)
+    with pytest.raises(ValueError, match="partition"):
+        DispatchPlan(buckets=(DispatchBucket(lanes=(0, 0), k_pad=2),),
+                     num_lanes=2)
+    with pytest.raises(ValueError, match="at least one lane"):
+        DispatchBucket(lanes=(), k_pad=2)
+    with pytest.raises(ValueError, match="k_pad"):
+        DispatchBucket(lanes=(0,), k_pad=0)
+    with pytest.raises(ValueError, match="tier subset"):
+        DispatchBucket(lanes=(0,), k_pad=1, tiers=())
+
+
+# -- the planner -------------------------------------------------------------
+
+
+def test_uniform_grid_plans_exactly_one_bucket():
+    """No spurious splits: a uniform-K single-footprint grid is one
+    signature, hence one bucket at EVERY horizon — the CI guard's
+    no-regression half."""
+    for runs in (1.0, 10.0, math.inf):
+        plan = plan_dispatch(np.array([8] * 12), rounds=5, tier_work=WORK,
+                             runs=runs)
+        assert plan.num_buckets == 1
+        assert plan.buckets[0].k_pad == 8
+
+
+def test_skewed_grid_splits_at_steady_state_merges_cold():
+    """The horizon split that reconciles the bench's two wins: at
+    runs=inf the padded-slot waste of dragging ten K=2 lanes to K=16
+    dwarfs a dispatch, so the planner splits; at runs=1 a fresh compile
+    dwarfs everything, so it collapses to the single padded executable
+    (== the pad degenerate plan, the cold-workflow win)."""
+    steady = plan_dispatch(_skewed_ks(), rounds=5, tier_work=WORK,
+                           runs=math.inf)
+    assert steady.num_buckets > 1
+    assert [b.k_pad for b in steady.buckets] == [2, 16]
+    assert steady.buckets[0].lanes == tuple(range(10))
+    cold = plan_dispatch(_skewed_ks(), rounds=5, tier_work=WORK, runs=1.0)
+    assert cold.num_buckets == 1
+    assert cold.describe() == DispatchPlan.padded(
+        _skewed_ks(), tiers=(0,)).describe()
+
+
+def test_max_executables_one_is_always_the_padded_plan():
+    for runs in (1.0, math.inf):
+        plan = plan_dispatch(_skewed_ks(), rounds=5, tier_work=WORK,
+                             max_executables=1, runs=runs)
+        assert plan.num_buckets == 1
+        assert plan.buckets[0].k_pad == 16
+        assert plan.buckets[0].lanes == tuple(range(12))
+
+
+def test_max_executables_caps_signature_count():
+    ks = np.array([2, 4, 8, 16] * 3)
+    full = plan_dispatch(ks, rounds=5, tier_work=WORK, runs=math.inf,
+                         max_executables=8)
+    assert full.num_buckets == 4          # one per distinct K
+    capped = plan_dispatch(ks, rounds=5, tier_work=WORK, runs=math.inf,
+                           max_executables=2)
+    assert capped.num_buckets == 2
+    # merges only ever RAISE k_pad: every lane still fits its bucket
+    for b in capped.buckets:
+        assert all(ks[i] <= b.k_pad for i in b.lanes)
+
+
+def test_cached_buckets_steer_the_cold_replan():
+    """Post-warmup behaviour: with the steady plan's executables marked
+    cached, a one-run-horizon replan must snap to them instead of
+    collapsing to an (uncompiled) padded merge — the is_cached hook is
+    how a warmed arena keeps its steady split."""
+    ks = _skewed_ks()
+    steady = plan_dispatch(ks, rounds=5, tier_work=WORK, runs=math.inf)
+    assert steady.num_buckets == 2
+    warmed = {(b.k_pad, b.tiers) for b in steady.buckets}
+    replan = plan_dispatch(
+        ks, rounds=5, tier_work=WORK, runs=1.0,
+        is_cached=lambda b: (b.k_pad, b.tiers) in warmed)
+    assert {(b.k_pad, b.tiers) for b in replan.buckets} == warmed
+    # and with NOTHING cached the same horizon still collapses
+    cold = plan_dispatch(ks, rounds=5, tier_work=WORK, runs=1.0,
+                         is_cached=lambda b: False)
+    assert cold.num_buckets == 1
+
+
+def test_footprints_bucket_tier_subsets_and_merge_unions():
+    """Same-K lanes with different tier footprints are different
+    signatures (each bucket compiles only the tiers its lanes can hit);
+    under an executable cap the merge takes the footprint UNION and the
+    larger K — the bitwise-safe widening direction."""
+    ks = np.array([4, 4, 4, 4, 8, 8])
+    fps = [(0,), (0,), (0, 2), (0, 2), (1,), (1,)]
+    work = {0: 32.0, 1: 64.0, 2: 1024.0}
+    plan = plan_dispatch(ks, rounds=5, tier_work=work, footprints=fps,
+                         runs=math.inf, max_executables=8)
+    assert {(b.k_pad, b.tiers) for b in plan.buckets} == {
+        (4, (0,)), (4, (0, 2)), (8, (1,))}
+    capped = plan_dispatch(ks, rounds=5, tier_work=work, footprints=fps,
+                           runs=math.inf, max_executables=2)
+    assert capped.num_buckets == 2
+    for b in capped.buckets:
+        for i in b.lanes:
+            assert ks[i] <= b.k_pad
+            assert set(fps[i]) <= set(b.tiers)
+    # the expensive tier-2 body should not be merged onto the K=8 lanes
+    # that never touch it while a cheaper merge exists
+    heavy = next(b for b in capped.buckets if 2 in b.tiers)
+    assert all(i in (0, 1, 2, 3) for i in heavy.lanes)
+
+
+def test_planner_is_deterministic():
+    ks = np.array([3, 7, 3, 7, 5, 5, 9])
+    fps = None
+    a = plan_dispatch(ks, rounds=4, tier_work=WORK, footprints=fps,
+                      runs=math.inf)
+    b = plan_dispatch(ks, rounds=4, tier_work=WORK, footprints=fps,
+                      runs=math.inf)
+    assert a.describe() == b.describe()
+
+
+def test_planner_input_validation():
+    with pytest.raises(ValueError, match="non-empty"):
+        plan_dispatch(np.array([]), rounds=3)
+    with pytest.raises(ValueError, match="max_executables"):
+        plan_dispatch(np.array([2, 4]), rounds=3, max_executables=0)
+    with pytest.raises(ValueError, match="footprints"):
+        plan_dispatch(np.array([2, 4]), rounds=3, tier_work=WORK,
+                      footprints=[(0,)])
+    with pytest.raises(ValueError, match="unknown tiers"):
+        plan_dispatch(np.array([2, 4]), rounds=3, tier_work=WORK,
+                      footprints=[(0,), (0, 7)])
+    with pytest.raises(ValueError, match="empty"):
+        plan_dispatch(np.array([2, 4]), rounds=3, tier_work=WORK,
+                      footprints=[(0,), ()])
+
+
+# -- footprint replay --------------------------------------------------------
+
+
+def test_lane_footprints_ignore_padding_and_sort_tiers():
+    tier_of = np.array([0, 0, 1, 1, 2, 2])
+    selected = np.array([
+        [[5, 0, -1], [4, 1, -1]],        # lane 0: tiers {0, 2}
+        [[2, 2, 3], [3, 2, 2]],          # lane 1: tier {1} only
+    ])
+    assert lane_footprints(selected, tier_of) == [(0, 2), (1,)]
+
+
+# -- cost model --------------------------------------------------------------
+
+
+def test_cost_model_prices_and_validation():
+    cm = CostModel(unit_cost=1e-5, compile_cost=2.0, dispatch_cost=1e-3)
+    lane = cm.lane_seconds(rounds=10, k_pad=4, tier_work=100.0)
+    assert lane == pytest.approx(1e-5 * 10 * 4 * 100.0)
+    # amortisation: infinite horizon drops compile entirely; cached
+    # buckets never pay it
+    cold = cm.bucket_seconds(3, 10, 4, 100.0, cached=False, runs=1.0)
+    steady = cm.bucket_seconds(3, 10, 4, 100.0, cached=False,
+                               runs=math.inf)
+    cached = cm.bucket_seconds(3, 10, 4, 100.0, cached=True, runs=1.0)
+    assert cold == pytest.approx(2.0 + 1e-3 + 3 * lane)
+    assert steady == pytest.approx(1e-3 + 3 * lane)
+    assert cached == pytest.approx(steady)
+    with pytest.raises(ValueError, match="unit_cost"):
+        CostModel(unit_cost=-1.0)
+
+
+def test_cost_model_from_bench_json(tmp_path):
+    rec = {
+        "config": {"examples_per_client": 64},
+        "arena": {"mixed_k": {
+            "S": 12, "rounds": 5, "K_values": [4, 8, 16],
+            "grouped_rounds_per_sec": 200.0,
+            "grouped_cold_seconds": 15.3,
+            "grouped_executables": 3,
+        }},
+    }
+    path = tmp_path / "bench.json"
+    path.write_text(json.dumps(rec))
+    cm = CostModel.from_bench_json(str(path))
+    steady_s = 12 * 5 / 200.0
+    row_units = 5 * 64 * 4 * (4 + 8 + 16)
+    assert cm.unit_cost == pytest.approx(steady_s / row_units)
+    assert cm.compile_cost == pytest.approx((15.3 - steady_s) / 3)
+    # missing / malformed records fall back to the defaults
+    assert CostModel.from_bench_json(
+        str(tmp_path / "nope.json")) == CostModel()
+    (tmp_path / "bad.json").write_text("{}")
+    assert CostModel.from_bench_json(str(tmp_path / "bad.json")) == \
+        CostModel()

@@ -434,3 +434,13 @@ def test_bench_smoke(tmp_path, monkeypatch, capsys):
         if key.startswith("S"):
             assert section["batched_rounds_per_sec"] > 0
             assert section["host_looped_rounds_per_sec"] > 0
+    # shape-adaptive dispatch: the auto rows, the tiered skewed-arena
+    # row, and the planner's split/no-split guard all ran
+    assert "arena_sweep/mixed_k_auto" in out
+    assert "arena_sweep/skewed_auto" in out
+    assert "arena_sweep/planner_guard" in out
+    mk = arena["mixed_k"]
+    assert mk["auto_cold_dispatches"] == 1        # cold collapse to pad
+    assert mk["auto_rounds_per_sec"] > 0
+    assert len(mk["auto_steady_plan"]) == mk["auto_steady_dispatches"]
+    assert arena["skewed"]["auto_rounds_per_sec"] > 0

@@ -282,6 +282,21 @@ def _skewed_bank_section(cfg: EngineBenchConfig, alpha: float = 0.5):
     return rows, stats
 
 
+def preserve_foreign_sections(result: dict, prev: dict) -> dict:
+    """Carry every top-level section of a previous record that this
+    bench does not itself produce into the fresh ``result`` — the
+    shared-record contract: ``BENCH_round_engine.json`` is co-owned by
+    several benches (``bench_sweeps`` writes ``arena`` and
+    ``arena.streaming``-style sections), and a re-record of THIS bench
+    must never silently drop a sibling's data.  Keys present in
+    ``result`` are this bench's own and always win."""
+    out = dict(result)
+    for key, value in prev.items():
+        if key not in out:
+            out[key] = value
+    return out
+
+
 def run(cfg: Optional[EngineBenchConfig] = None, smoke: bool = False,
         json_path: Optional[str] = None) -> List[str]:
     if cfg is None:
@@ -309,13 +324,13 @@ def run(cfg: Optional[EngineBenchConfig] = None, smoke: bool = False,
         "speedup_scan_vs_seq": scan / seq,
         "skewed": skew_stats,
     }
-    # bench_sweeps.arena_sweep merges its ScenarioArena section into the
-    # same tracked file — keep it when this bench rewrites the record
+    # other benches (bench_sweeps' "arena" section, future sections such
+    # as "arena.streaming" siblings) merge into the same tracked file —
+    # keep every section this bench does not own when it rewrites
     try:
         with open(json_path) as f:
             prev = json.load(f)
-        if "arena" in prev:
-            result["arena"] = prev["arena"]
+        result = preserve_foreign_sections(result, prev)
     except (OSError, ValueError):
         pass
     with open(json_path, "w") as f:

@@ -18,7 +18,12 @@ sweep-engine section.
   shows the auto planner's static per-bucket tier subsets recovering
   the tiered bank's scan-skip under vmap batching, and
   ``planner_guard`` asserts the planner's split/no-split contract in
-  the parent process (CI's smoke guard).
+  the parent process (CI's smoke guard).  The ``arena.streaming``
+  sub-section measures the streaming chunked pipeline: chunked
+  ``Arena.run`` vs the monolithic one-shot scan (bitwise guard on the
+  model trajectory + overhead at chunk in {1, T/4, T}) and the
+  ``SweepService``'s sustained scenarios/sec over repeated warmed
+  submissions vs the one-shot batched floor.
 """
 
 from __future__ import annotations
@@ -235,7 +240,120 @@ def _arena_measure(s_values, rounds: int, smoke: bool) -> dict:
         }
     stats["mixed_k"] = _mixed_k_measure(trainer, rounds, smoke)
     stats["skewed"] = _skewed_arena_measure(trainer, rounds, smoke)
+    stats["streaming"] = _streaming_measure(trainer, smoke)
     return stats
+
+
+def _streaming_measure(trainer, smoke: bool) -> dict:
+    """Streaming chunked pipeline vs the one-shot batched scan (runs
+    INSIDE the arena subprocess), at the round-engine operating point
+    (S=16, K=8, N=120 full scale).  Three measurements:
+
+    * the one-shot floor — warmed monolithic ``Arena.run`` best-of-3
+      scenarios/sec, params blocked per run (the pre-streaming
+      workflow);
+    * chunked-vs-monolithic overhead — steady chunked throughput at
+      chunk in {1, ceil(T/4), T} as a ratio of the one-shot time, with
+      the model trajectory (params + loss/selected/wall_time) asserted
+      BITWISE equal to the monolithic run at every chunking first (an
+      assertion failure fails the bench — and CI's smoke guard);
+    * sustained service throughput — a warmed ``SweepService`` fed
+      repeated same-shape submissions, drained in one
+      ``run_pending`` (per-batch host reduction overlaps the next
+      batch's device chunks; only the LAST batch's params block), at the
+      half-rollout and whole-rollout chunkings; the headline
+      ``streamed_scenarios_per_sec`` is the better of the two and must
+      not fall below the one-shot floor."""
+    import jax
+    from benchmarks.bench_round_engine import EngineBenchConfig
+    from repro.core.policy import POLICIES
+    from repro.sim import Arena, ScenarioGrid, SweepService
+
+    ecfg = EngineBenchConfig.smoke() if smoke else EngineBenchConfig()
+    eng, bank, sp = trainer.engine, trainer.bank, trainer.params
+    hp = trainer.controller.hp
+    params0 = trainer.task.init(jax.random.PRNGKey(0))
+    s_count = 4 if smoke else 16
+    rounds = 4 if smoke else 8
+    n = ecfg.num_devices
+    lr_seq = np.full(rounds, ecfg.lr, np.float32)
+    grid = ScenarioGrid.create(
+        controllers=[POLICIES[i % len(POLICIES)] for i in range(s_count)],
+        seeds=np.arange(s_count), V=hp.V, lam=hp.lam,
+        sample_count=ecfg.sample_count)
+    st = {"S": s_count, "K": ecfg.sample_count, "N": n, "rounds": rounds}
+    arena = Arena(eng)
+    # prime the channel cache so every run (mono, chunked, service) reads
+    # the identical [S, T, N] device tensor and transfers nothing
+    jax.block_until_ready(arena.sample_channels(grid, rounds, n))
+
+    def mono_run(**kw):
+        rep = arena.run(params0, sp, bank, grid, rounds, lr_seq, **kw)
+        jax.block_until_ready(jax.tree_util.tree_leaves(rep.params))
+        return rep
+
+    def best_seconds(fn, reps=3):
+        fn()                                   # compile / warm
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    mono_s = best_seconds(mono_run)
+    st["oneshot_scenarios_per_sec"] = s_count / mono_s
+
+    rep_mono = mono_run()
+    chunks = sorted({1, max(1, -(-rounds // 4)), rounds})
+    st["chunk_overhead_vs_oneshot"] = {}
+    for chunk in chunks:
+        rep_c = mono_run(chunk_size=chunk)     # compile + bitwise guard
+        # Segments of length >= 2 keep the scan's fused While body and are
+        # bitwise-identical to the one-shot program; a length-1 segment
+        # (chunk_size=1, or a trailing remainder of 1) gets its
+        # trip-count-1 loop unrolled by XLA, which may re-fuse large-shape
+        # reductions — hold those chunkings to f32 resolution instead.
+        unrolled = chunk == 1 or rounds % chunk == 1
+        def _guard(a, b):
+            a, b = np.asarray(a), np.asarray(b)
+            if unrolled:
+                np.testing.assert_allclose(a, b, rtol=1e-6, atol=0)
+            else:
+                np.testing.assert_array_equal(a, b)
+        for name in ("loss", "selected", "wall_time"):
+            _guard(rep_mono.metrics[name], rep_c.metrics[name])
+        for a, b in zip(jax.tree_util.tree_leaves(rep_mono.params),
+                        jax.tree_util.tree_leaves(rep_c.params)):
+            _guard(a, b)
+        sec = best_seconds(lambda: mono_run(chunk_size=chunk))
+        st["chunk_overhead_vs_oneshot"][str(chunk)] = sec / mono_s
+    st["chunked_bitwise_equal"] = True
+
+    submissions = 4 if smoke else 8
+    st["submissions_per_drain"] = submissions
+    st["streamed_by_chunk"] = {}
+    for chunk in sorted({max(1, -(-rounds // 2)), rounds}):
+        svc = SweepService(arena, params0, sp, bank, chunk_size=chunk,
+                           max_lanes=s_count)
+        svc.warmup(grid, rounds, lr_seq)
+
+        def stream():
+            tickets = [svc.submit(grid, rounds, lr_seq)
+                       for _ in range(submissions)]
+            svc.run_pending()
+            for t in tickets:
+                svc.result(t)
+        sec = best_seconds(stream)
+        st["streamed_by_chunk"][str(chunk)] = (
+            submissions * s_count / sec)
+    stream_chunk, stream_rps = max(st["streamed_by_chunk"].items(),
+                                   key=lambda kv: kv[1])
+    st["stream_chunk"] = int(stream_chunk)
+    st["streamed_scenarios_per_sec"] = stream_rps
+    st["speedup_streamed_vs_oneshot"] = (
+        stream_rps / st["oneshot_scenarios_per_sec"])
+    return st
 
 
 def _mixed_k_measure(trainer, rounds: int, smoke: bool) -> dict:
@@ -502,7 +620,11 @@ def arena_sweep(cfg: BenchConfig, s_values=(4, 16), rounds: int = 5,
     executable/dispatch counts — plus the S-lane evaluation as a host
     loop vs the EvalBank's batched on-device pass; ``arena.skewed``
     (``_skewed_arena_measure``) adds the tiered-bank row where auto's
-    per-bucket tier subsets recover the scan-skip under batching.
+    per-bucket tier subsets recover the scan-skip under batching;
+    ``arena.streaming`` (``_streaming_measure``) adds the streaming
+    chunked pipeline — chunked-vs-monolithic bitwise guard + overhead,
+    and the ``SweepService``'s sustained scenarios/sec against the
+    one-shot batched floor.
     Measurement runs in a subprocess because the forced host-device
     count must be set before jax initialises; :func:`planner_guard`
     asserts the planner's split/no-split contract host-side.
@@ -625,6 +747,26 @@ def arena_sweep(cfg: BenchConfig, s_values=(4, 16), rounds: int = 5,
                 + "+".join(str(t) for t in sk["tiers_per_bucket"]) + ";"
                 f"speedup_vs_padded="
                 f"{sk['speedup_auto_vs_padded_steady']:.2f}"),
+    ]
+    sr = stats["streaming"]
+    ttag = f"S{sr['S']}K{sr['K']}N{sr['N']}T{sr['rounds']}"
+    rows += [
+        csv_row(f"arena_sweep/streaming_oneshot/{ttag}",
+                1e6 / sr["oneshot_scenarios_per_sec"],
+                f"scenarios_per_sec="
+                f"{sr['oneshot_scenarios_per_sec']:.2f}"),
+        csv_row(f"arena_sweep/streaming_sustained/{ttag}",
+                1e6 / sr["streamed_scenarios_per_sec"],
+                f"scenarios_per_sec="
+                f"{sr['streamed_scenarios_per_sec']:.2f};"
+                f"chunk={sr['stream_chunk']};"
+                f"speedup_vs_oneshot="
+                f"{sr['speedup_streamed_vs_oneshot']:.2f};"
+                f"bitwise_guard={sr['chunked_bitwise_equal']}"),
+        csv_row(f"arena_sweep/streaming_chunk_overhead/{ttag}", 0.0,
+                "chunked_over_oneshot=" + "+".join(
+                    f"{c}:{v:.2f}" for c, v in
+                    sr["chunk_overhead_vs_oneshot"].items())),
     ]
     rows += planner_guard()
     try:

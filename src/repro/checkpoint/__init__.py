@@ -1,4 +1,5 @@
 """repro.checkpoint — npz pytree checkpointing."""
 
 from repro.checkpoint.checkpoint import (save_checkpoint, restore_checkpoint,
-                                         latest_step)
+                                         restore_arrays, checkpoint_exists,
+                                         delete_checkpoint, latest_step)

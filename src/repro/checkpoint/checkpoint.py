@@ -94,6 +94,39 @@ def restore_checkpoint(directory: str, name: str, like: PyTree
     return tree, metadata
 
 
+def restore_arrays(directory: str, name: str
+                   ) -> Tuple[Dict[str, np.ndarray], Dict]:
+    """Flat ``{key: array}`` view of a checkpoint plus its metadata —
+    for consumers whose tree IS a flat dict (e.g. per-round metric
+    columns) or who rebuild structure themselves, so no ``like`` tree is
+    needed.  Keys are the ``_flatten`` path strings; a flat dict saved
+    by :func:`save_checkpoint` round-trips exactly."""
+    path = os.path.join(directory, f"{name}.npz")
+    with np.load(path) as data:
+        arrays = {k: data[k] for k in data.files}
+    metadata = {}
+    mpath = os.path.join(directory, f"{name}.json")
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            metadata = json.load(f).get("metadata", {})
+    return arrays, metadata
+
+
+def checkpoint_exists(directory: str, name: str) -> bool:
+    """Whether a complete ``save_checkpoint(directory, name, ...)`` pair
+    (npz + manifest) is present."""
+    return (os.path.exists(os.path.join(directory, f"{name}.npz")) and
+            os.path.exists(os.path.join(directory, f"{name}.json")))
+
+
+def delete_checkpoint(directory: str, name: str) -> None:
+    """Remove a checkpoint's npz + manifest if present (idempotent)."""
+    for suffix in (".npz", ".json"):
+        path = os.path.join(directory, f"{name}{suffix}")
+        if os.path.exists(path):
+            os.unlink(path)
+
+
 def latest_step(directory: str, prefix: str = "step_") -> Optional[int]:
     if not os.path.isdir(directory):
         return None

@@ -565,9 +565,24 @@ class RoundEngine:
         evaluation.  Round 0's carry is an evaluation of the initial
         params.  Evaluation only reads ``params``; the model trajectory
         is unchanged.
+
+        Chunked-rollout contract (the arena's streaming path): ``t0`` is
+        the TRACED global index of this segment's first round — the scan
+        runs rounds ``t0 .. t0 + len(h_seq)`` of the logical rollout, so
+        the ``eval_every`` predicate keeps firing on global round
+        boundaries across segments — and ``last_ev`` optionally seeds the
+        eval carry from a previous segment (``None`` evaluates the
+        incoming params, the monolithic behaviour).  The returned
+        ``extras`` tuple is the remaining scan carry — ``(rng,)`` or
+        ``(rng, last_ev)`` — exactly what the next segment must receive
+        for the chunked trajectory to be bitwise-identical to the
+        one-shot scan: the per-round ``jax.random.split`` chain continues
+        from the carried key, and every other carry leaf is threaded
+        unchanged.  Because ``t0`` is traced, equal-length segments share
+        one executable.
         """
         def scan_fn(params, queues, sp, eb, data, h_seq, lr_seq, rng, V,
-                    lam, cid, kvec, k_act, eval_data):
+                    lam, cid, kvec, k_act, eval_data, t0, last_ev):
             sp_run = dataclasses.replace(sp, energy_budget=eb)
             n = sp_run.num_devices
             w = sp_run.data_weights
@@ -632,14 +647,15 @@ class RoundEngine:
                 return (params, queues, rng), out
 
             num_rounds = h_seq.shape[0]
-            xs = (jnp.arange(num_rounds), h_seq, lr_seq)
+            xs = (t0 + jnp.arange(num_rounds), h_seq, lr_seq)
             if eval_fn is not None:
-                carry0 = (params, queues, rng, eval_fn(params, eval_data))
+                last_ev0 = (eval_fn(params, eval_data) if last_ev is None
+                            else last_ev)
+                carry0 = (params, queues, rng, last_ev0)
             else:
                 carry0 = (params, queues, rng)
             carry, outs = jax.lax.scan(body, carry0, xs)
-            params, queues = carry[0], carry[1]
-            return params, queues, outs
+            return carry[0], carry[1], tuple(carry[2:]), outs
 
         return scan_fn
 
@@ -701,7 +717,7 @@ class RoundEngine:
         # materialized [N] vector the decide rules consume (kvec) and the
         # scalar active-slot count (k_act) — so this trace is the exact
         # graph a padded-K arena lane computes (bitwise contract).
-        params, queues, outs = fn(
+        params, queues, _, outs = fn(
             global_params, queues, sp,
             jnp.asarray(sp.energy_budget, jnp.float32), data,
             jnp.asarray(h_seq, jnp.float32),
@@ -710,6 +726,6 @@ class RoundEngine:
                                                      jnp.float32),
             jnp.int32(pol.POLICY_IDS[policy]),
             jnp.full((n,), sp.sample_count, jnp.float32),
-            jnp.int32(sp.sample_count), None)
+            jnp.int32(sp.sample_count), None, jnp.int32(0), None)
         metrics = {name: np.asarray(v) for name, v in outs.items()}
         return params, queues, metrics

@@ -3,8 +3,12 @@ grids (controller-as-data via traced ``lax.switch`` ids), whole evaluation
 grids vmapped over the fused rollout scan in one jitted program (optionally
 scenario-sharded over a mesh ``data`` axis), shape-adaptive dispatch
 planning (cost-model lane bucketing over the ``(K, tier-footprint)``
-signatures — ``k_mode='auto'``), and structured RolloutReports with the
-paper's Sec. VII trade-off reducers."""
+signatures — ``k_mode='auto'``), streaming chunked execution
+(``Arena.run(chunk_size=...)`` — carry-donated scan segments, host
+reduction overlapped with device dispatch) behind a long-lived
+``SweepService`` (queued/coalesced submissions, crash-safe chunk
+checkpoints), and structured RolloutReports with the paper's Sec. VII
+trade-off reducers."""
 
 from repro.sim.arena import (Arena, ScenarioGrid, aot_cache_warmup_supported,
                              derive_hyperparams, scenario_keys)
@@ -12,4 +16,5 @@ from repro.sim.cost_model import CostModel
 from repro.sim.dispatch import (DispatchBucket, DispatchPlan,
                                 lane_footprints, plan_dispatch)
 from repro.sim.eval import EvalBank
-from repro.sim.report import RolloutReport
+from repro.sim.report import RolloutReport, concat_chunk_metrics
+from repro.sim.service import NpzChunkStore, SweepService

@@ -59,6 +59,19 @@ the read-only (never-donated) ClientBank across all lanes:
   them eagerly so same-shape ``run`` calls (the iterate-on-V workflow)
   never retrace — ``Arena.traces`` counts scan-body traces for
   asserting exactly that.
+* **Streaming chunked pipeline.**  ``chunk_size=T_c`` splits a T-round
+  rollout into ``ceil(T / T_c)`` scan segments over the SAME body:
+  chunk 0 runs the monolithic start executable at segment length, later
+  chunks a resume executable whose (params, queues, rng, last-eval)
+  carry arrives per-lane and is donated between segments.  Host
+  reduction of chunk c's metric columns overlaps chunk c+1's device
+  execution (async dispatch with a bounded in-flight window — no
+  ``block_until_ready`` between chunks), and the chunked trajectory is
+  bitwise-identical to the one-shot scan.  A ``chunk_store`` persists
+  the carry at chunk boundaries (atomic npz via ``repro.checkpoint``)
+  so interrupted runs resume bit-identically —
+  ``repro.sim.service.SweepService`` builds the continuous warmed
+  sweep-service loop on top.
 
 Outputs land in a :class:`repro.sim.report.RolloutReport` (``[S, T]``
 metric arrays + stacked final params/queues + ``meta`` execution-shape
@@ -87,7 +100,7 @@ from repro.fl.environment import sample_gains
 from repro.fl.round_engine import bank_layout_key
 from repro.sim.cost_model import CostModel
 from repro.sim.dispatch import DispatchPlan, lane_footprints, plan_dispatch
-from repro.sim.report import RolloutReport
+from repro.sim.report import RolloutReport, concat_chunk_metrics
 
 PyTree = Any
 
@@ -276,6 +289,19 @@ class ScenarioGrid:
         return ScenarioGrid(**{f.name: getattr(self, f.name)[idx]
                                for f in dataclasses.fields(self)})
 
+    @classmethod
+    def concat(cls, grids: "List[ScenarioGrid]") -> "ScenarioGrid":
+        """Stack several grids into one (lane order = submission order)
+        — the sweep service's coalescing primitive: compatible pending
+        submissions concatenate into a single batched grid, execute as
+        one arena program, and split back per submission with
+        ``RolloutReport.take``."""
+        if not grids:
+            raise ValueError("no grids to concatenate")
+        return cls(**{f.name: np.concatenate(
+            [getattr(g, f.name) for g in grids])
+            for f in dataclasses.fields(grids[0])})
+
     def controller_names(self) -> list:
         return [pol.POLICIES[c] for c in self.controller]
 
@@ -425,7 +451,8 @@ class Arena:
                  mesh_axis: str = "data", batch: str = "vmap",
                  k_mode: str = "pad",
                  cost_model: Optional[CostModel] = None,
-                 max_executables: int = 4):
+                 max_executables: int = 4,
+                 chunk_size: Optional[int] = None):
         if engine.mesh is not None:
             raise ValueError(
                 "ScenarioArena shards the scenario axis; build the "
@@ -451,6 +478,17 @@ class Arena:
                            else CostModel())
         #: hard cap on buckets an ``'auto'`` plan may emit
         self.max_executables = max_executables
+        #: default rollout chunk length for the streaming path: ``None``
+        #: runs the classic monolithic scan; an int T_c splits every
+        #: rollout into ``ceil(T / T_c)`` pipelined scan segments whose
+        #: carry is donated between chunks (``run``'s ``chunk_size=``
+        #: overrides per call)
+        self.chunk_size = chunk_size
+        #: dispatched-but-unreduced chunk window of the streaming path —
+        #: chunk c+1 is dispatched while chunk c's columns convert to
+        #: host arrays, and the pipeline never runs more than this many
+        #: chunks ahead of the reduction
+        self.in_flight = 2
         self._fns: Dict[tuple, Any] = {}
         # control-plane probe executables / replayed footprints, kept
         # OUT of self._fns so executables_cached keeps counting rollout
@@ -461,24 +499,106 @@ class Arena:
         #: executable runs the counted wrapper once, so a warmed arena
         #: must keep this constant across same-shape ``run`` calls
         self.traces = 0
+        # device-input caches (bounded, insertion-order eviction): lane
+        # constants keyed by grid content, lr sequences by value, channel
+        # tensors by (grid, T, N) — steady-state service submissions of a
+        # known grid re-use the device arrays and transfer nothing
+        self._input_cache_cap = 16
+        self._lane_cache: Dict[bytes, dict] = {}
+        self._lr_cache: Dict[bytes, jax.Array] = {}
+        self._chan_cache: Dict[bytes, jax.Array] = {}
+        #: device-input cache counters (lane constants + lr + channels)
+        self.input_cache_hits = 0
+        self.input_cache_misses = 0
 
     def _shards(self) -> int:
         if self.mesh is None:
             return 1
         return int(self.mesh.shape[self.mesh_axis])
 
-    # -- channel pregeneration ----------------------------------------------
+    # -- channel pregeneration / device-input caches -------------------------
+
+    @staticmethod
+    def _grid_digest(grid: ScenarioGrid, extra: tuple = ()) -> bytes:
+        """Content hash of every grid column (+ ``extra`` context) — the
+        key of the device-input caches and the chunk-checkpoint tag, so
+        it must be a pure function of values, never of Python object
+        identity (checkpoint tags survive process restarts)."""
+        hasher = hashlib.sha1()
+        for f in dataclasses.fields(grid):
+            hasher.update(np.ascontiguousarray(
+                getattr(grid, f.name)).tobytes())
+        hasher.update(repr(extra).encode())
+        return hasher.digest()
+
+    def _cache_put(self, cache: dict, key, value):
+        if len(cache) >= self._input_cache_cap:
+            cache.pop(next(iter(cache)))
+        cache[key] = value
+        return value
 
     def sample_channels(self, grid: ScenarioGrid, num_rounds: int,
                         num_devices: int) -> jax.Array:
         """Every scenario's channel sequence, ``[S, T, N]``, drawn on
         device in one jit from the per-scenario (seed, mean, clip)
-        columns (vmapped ``environment.sample_gains``)."""
+        columns (vmapped ``environment.sample_gains``).  Cached by
+        (grid content, T, N): the draw is a pure function of those, so
+        repeated sweeps of a known grid (the service steady state) reuse
+        the device tensor instead of re-sampling it."""
+        key = self._grid_digest(grid, ("chan", num_rounds, num_devices))
+        hit = self._chan_cache.get(key)
+        if hit is not None:
+            self.input_cache_hits += 1
+            return hit
+        self.input_cache_misses += 1
         chan_keys, _ = scenario_keys(grid)
-        return _sample_channels(chan_keys, num_rounds, num_devices,
-                                jnp.asarray(grid.mean_gain),
-                                jnp.asarray(grid.min_gain),
-                                jnp.asarray(grid.max_gain))
+        h_all = _sample_channels(chan_keys, num_rounds, num_devices,
+                                 jnp.asarray(grid.mean_gain),
+                                 jnp.asarray(grid.min_gain),
+                                 jnp.asarray(grid.max_gain))
+        return self._cache_put(self._chan_cache, key, h_all)
+
+    def _lane_inputs(self, grid: ScenarioGrid, sp: sm.SystemParams) -> dict:
+        """The per-lane device constants a group executable consumes —
+        energy budgets, V/lam/kvec materialized ``[S, N]``, controller
+        ids, active-slot counts, rollout keys — cached by grid content
+        so steady-state re-runs upload nothing.  Entries are read-only:
+        none of these ever flow into a donated argnum (queues and the
+        chunk carry are allocated or produced per run)."""
+        key = self._grid_digest(
+            grid, ("lane", sp.num_devices,
+                   np.asarray(sp.energy_budget, np.float32).tobytes()))
+        hit = self._lane_cache.get(key)
+        if hit is not None:
+            self.input_cache_hits += 1
+            return hit
+        self.input_cache_misses += 1
+        s, n = len(grid), sp.num_devices
+        _, roll_keys = scenario_keys(grid)
+        eb = (np.asarray(sp.energy_budget, np.float32)[None, :] *
+              grid.energy_scale[:, None])
+        vals = dict(
+            eb=jnp.asarray(eb),
+            V=jnp.asarray(np.broadcast_to(grid.V[:, None], (s, n))),
+            lam=jnp.asarray(np.broadcast_to(grid.lam[:, None], (s, n))),
+            cid=jnp.asarray(grid.controller),
+            kvec=jnp.asarray(np.broadcast_to(
+                grid.sample_count[:, None].astype(np.float32), (s, n))),
+            k_act=jnp.asarray(grid.sample_count, jnp.int32),
+            roll_keys=roll_keys)
+        return self._cache_put(self._lane_cache, key, vals)
+
+    def _lr_device(self, lr_seq) -> jax.Array:
+        """Device copy of the ``[T]`` learning-rate sequence, cached by
+        value — one upload per distinct schedule."""
+        lr_np = np.asarray(lr_seq, np.float32)
+        key = lr_np.tobytes()
+        hit = self._lr_cache.get(key)
+        if hit is not None:
+            self.input_cache_hits += 1
+            return hit
+        self.input_cache_misses += 1
+        return self._cache_put(self._lr_cache, key, jnp.asarray(lr_np))
 
     # -- the batched rollout ------------------------------------------------
 
@@ -488,7 +608,7 @@ class Arena:
         return (id(eval_bank.task), int(eval_every))
 
     def _build_group_fn(self, key: tuple, k: int, round_fn, eval_bank,
-                        eval_every):
+                        eval_every, resume: bool = False):
         """jit( [shard_map(] vmap(scan body) [)] ) for one K group,
         stored in ``self._fns`` under the caller's ``key`` — (bank
         layout, K_max, shard count, eval config), built ONCE in
@@ -497,7 +617,21 @@ class Arena:
         bank-layout key component (the device buffers arrive via the
         ``data`` argument) and the eval data arrives traced too, so the
         cache key is sound — same contract as the engine's
-        ``_scan_fns``."""
+        ``_scan_fns``.
+
+        ``resume=False`` builds the rollout-START executable: params
+        broadcast across lanes (``in_axes=None``), rng/last-eval derived
+        inside (last-eval ``None`` — the initial evaluation runs
+        UNBATCHED under vmap, exactly the monolithic program, which is
+        why chunk 0 of a chunked rollout reuses this very executable).
+        ``resume=True`` builds the chunk-CONTINUATION executable: the
+        (params, queues, rng, last-eval) carry arrives per-lane
+        (``in_axes=0``) and every carry leaf is donated — chunk c's
+        output buffers become chunk c+1's carry in place.  Because
+        rounds >= 1 of the monolithic vmapped scan already compute on a
+        batched params carry, continuing with batched params is the
+        identical per-round graph — the chunked == monolithic bitwise
+        contract."""
         def decide(sp, h, queues, V, lam, cid, kvec):
             return pol.decide_by_id(cid, sp, h, queues, V, lam, k=kvec)
 
@@ -518,53 +652,131 @@ class Arena:
             self.traces += 1
             return inner(*args)
 
+        # the carry trio (params, rng-continuation via the rng argument,
+        # last-eval) is per-lane on the resume executable, broadcast /
+        # absent on the start executable; t0 (the global round offset) is
+        # always a shared traced scalar so equal-length chunks share one
+        # executable
+        p_ax = 0 if resume else None
+        ev_ax = 0 if resume else None
         if self.batch == "vmap":
             batched = jax.vmap(scan_fn,
-                               in_axes=(None, 0, None, 0, None, 0, None,
-                                        0, 0, 0, 0, 0, 0, None))
+                               in_axes=(p_ax, 0, None, 0, None, 0, None,
+                                        0, 0, 0, 0, 0, 0, None, None,
+                                        ev_ax))
         else:
             def batched(params, queues, sp, eb, data, h_seq, lr_seq, rng,
-                        V, lam, cid, kvec, k_act, eval_data):
+                        V, lam, cid, kvec, k_act, eval_data, t0, last_ev):
+                if resume:
+                    def one(lane):
+                        (p_s, q0, eb_s, h_s, rng_s, V_s, lam_s, cid_s,
+                         kv_s, ka_s, ev_s) = lane
+                        return scan_fn(p_s, q0, sp, eb_s, data, h_s,
+                                       lr_seq, rng_s, V_s, lam_s, cid_s,
+                                       kv_s, ka_s, eval_data, t0, ev_s)
+                    return jax.lax.map(one, (params, queues, eb, h_seq,
+                                             rng, V, lam, cid, kvec,
+                                             k_act, last_ev))
+
                 def one(lane):
                     (q0, eb_s, h_s, rng_s, V_s, lam_s, cid_s, kv_s,
                      ka_s) = lane
                     return scan_fn(params, q0, sp, eb_s, data, h_s,
                                    lr_seq, rng_s, V_s, lam_s, cid_s,
-                                   kv_s, ka_s, eval_data)
+                                   kv_s, ka_s, eval_data, t0, last_ev)
                 return jax.lax.map(one, (queues, eb, h_seq, rng, V, lam,
                                          cid, kvec, k_act))
         if self.mesh is not None:
             ax = self.mesh_axis
+            p_spec = P(ax) if resume else P()
             batched = shard_map(
                 batched, mesh=self.mesh,
-                in_specs=(P(), P(ax), P(), P(ax), P(), P(ax), P(), P(ax),
-                          P(ax), P(ax), P(ax), P(ax), P(ax), P()),
-                out_specs=(P(ax), P(ax), P(ax)), check_rep=False)
+                in_specs=(p_spec, P(ax), P(), P(ax), P(), P(ax), P(),
+                          P(ax), P(ax), P(ax), P(ax), P(ax), P(ax), P(),
+                          P(), p_spec),
+                out_specs=P(ax), check_rep=False)
         # the queue carry (argnum 1) is donated off-CPU: the arena
         # allocates it per run, so the padded program reuses that buffer
         # for the [S, N] carry instead of holding both — part of the
         # padded-vs-grouped peak-memory parity audit (class docstring).
-        # params (argnum 0) are shared across lanes and never donated.
-        donate = (1,) if self.engine.donate else ()
+        # On the start executable params (argnum 0) are shared across
+        # lanes and never donated; the resume executable's whole carry —
+        # params (0), queues (1), rng (7), last-eval (15) — is arena-
+        # owned chunk output and donates between segments.
+        if resume:
+            donate = (0, 1, 7, 15) if self.engine.donate else ()
+        else:
+            donate = (1,) if self.engine.donate else ()
         fn = jax.jit(batched, donate_argnums=donate)
         self._fns[key] = fn
         return fn
+
+    @staticmethod
+    def _carry_tree(carry: tuple) -> dict:
+        """(params, queues, extras) chunk carry as a named flat-ish dict
+        — the checkpoint wire format (stable names, so a restored file's
+        structure is reconstructable from the service's own config)."""
+        params, queues, extras = carry
+        tree = {"params": params, "queues": queues, "rng": extras[0]}
+        if len(extras) > 1:
+            tree["last_ev"] = extras[1]
+        return tree
+
+    @staticmethod
+    def _carry_from_tree(tree: dict) -> tuple:
+        extras = ((tree["rng"], tree["last_ev"]) if "last_ev" in tree
+                  else (tree["rng"],))
+        return tree["params"], tree["queues"], extras
+
+    def _chunk_tag(self, grid: ScenarioGrid, sp, k_max, tier_subset,
+                   eval_every, num_rounds, chunk, h_digest) -> str:
+        """Filename-safe content tag of one group's chunked execution —
+        a pure function of everything that shapes the trajectory, so a
+        restarted process resuming the same submission recomputes the
+        same tag (and a different grid/chunking can never collide)."""
+        hasher = hashlib.sha1()
+        hasher.update(self._grid_digest(grid, (
+            "chunk", k_max, tier_subset, int(eval_every or 0),
+            num_rounds, chunk, self.batch, self._shards(),
+            np.asarray(sp.energy_budget, np.float32).tobytes(),
+            h_digest)))
+        return "chunk_" + hasher.hexdigest()[:20]
 
     def _run_group(self, global_params: PyTree, sp: sm.SystemParams,
                    bank, grid: ScenarioGrid, h_all, lr_seq,
                    k_max: Optional[int] = None, eval_bank=None,
                    eval_every=None, tier_subset=None,
-                   warm_aot: bool = False):
+                   warm_aot: bool = False,
+                   chunk_size: Optional[int] = None, chunk_store=None,
+                   h_digest=None):
         """One K group (uniform K, or a padded mixed-K grid when
-        ``k_max`` is given) as one jitted program; returns stacked lane
-        results in the group's grid order plus per-call stats.
-        ``tier_subset`` builds (and caches) the executable against a
-        static subset of a tiered bank's ladder — the dispatch planner's
-        scan-skip lever; the caller guarantees the group's lanes never
-        select outside it.  ``warm_aot=True`` AOT-lowers and compiles
-        the executable instead of running it (results come back None) —
-        only useful where :func:`aot_cache_warmup_supported` says the
-        jit call cache is populated by it."""
+        ``k_max`` is given) as one jitted program — or, with
+        ``chunk_size``, as a pipeline of carry-donated scan segments.
+        Returns ``(params, queues, metrics, executables_built,
+        dispatches)`` with metrics as HOST arrays in the group's grid
+        order.  ``tier_subset`` builds (and caches) the executable
+        against a static subset of a tiered bank's ladder — the dispatch
+        planner's scan-skip lever; the caller guarantees the group's
+        lanes never select outside it.  ``warm_aot=True`` AOT-lowers and
+        compiles the executable(s) instead of running (results come back
+        None) — only useful where :func:`aot_cache_warmup_supported`
+        says the jit call cache is populated by it.
+
+        The chunked pipeline: chunk 0 runs the START executable (the
+        monolithic program at segment length — the initial in-scan eval
+        stays unbatched, see ``_build_group_fn``), later chunks run the
+        RESUME executable with the previous segment's (params, queues,
+        rng, last-eval) carry donated in and the global round offset
+        ``t0`` traced.  Host reduction of chunk c's metric columns
+        overlaps chunk c+1's device execution: jax dispatch is async, so
+        the only blocking point is the ``np.asarray`` on a chunk that
+        has had a full segment of device time to finish — bounded by the
+        ``self.in_flight`` dispatched-but-unreduced window, never a
+        ``block_until_ready`` between chunks.  ``chunk_store`` (the
+        sweep service's checkpoint protocol: ``.load(tag)``,
+        ``.save(tag, t_next, carry, metrics)``, ``.finish(tag)``,
+        ``.every``) persists the carry + reduced columns at chunk
+        boundaries and resumes a half-finished group bit-identically."""
         if k_max is None:
             k_max = int(grid.sample_count[0])
         sp_k = dataclasses.replace(sp, sample_count=k_max)
@@ -572,44 +784,157 @@ class Arena:
                                                           tier_subset)
         ek = self._eval_key(eval_bank, eval_every)
         key = (bank_key, k_max, self._shards(), ek)
+        built = 0
         fn = self._fns.get(key)
-        compiled_new = fn is None
-        if compiled_new:
+        if fn is None:
             fn = self._build_group_fn(key, k_max, round_fn,
                                       eval_bank, eval_every)
+            built += 1
         s = len(grid)
         if s % self._shards():
             raise ValueError(
                 f"scenario count {s} not divisible by mesh axis "
                 f"{self.mesh_axis!r} size {self._shards()} (per-K group "
                 f"sizes must split evenly across shards)")
-        _, roll_keys = scenario_keys(grid)
+        lane = self._lane_inputs(grid, sp)
         n = sp.num_devices
-        eb = (np.asarray(sp.energy_budget, np.float32)[None, :] *
-              grid.energy_scale[:, None])
-        # allocated HERE unconditionally: the queue carry is donated into
-        # the executable (argnum 1), so no caller-owned buffer may ever
-        # flow in — Q^0 = 0 is the paper's init in any case
-        queues0 = jnp.zeros((s, n), jnp.float32)
         eval_data = None if ek is None else eval_bank.device_args()
-        # V/lam — and each lane's true K — materialized [S, N]: each lane
-        # receives the [N] vector form _build_scan's bitwise contract
-        # requires; k_act is the per-lane active-slot count
-        call_args = (
-            global_params, queues0, sp_k, jnp.asarray(eb), data,
-            jnp.asarray(h_all, jnp.float32),
-            jnp.asarray(lr_seq, jnp.float32), roll_keys,
-            jnp.asarray(np.broadcast_to(grid.V[:, None], (s, n))),
-            jnp.asarray(np.broadcast_to(grid.lam[:, None], (s, n))),
-            jnp.asarray(grid.controller),
-            jnp.asarray(np.broadcast_to(
-                grid.sample_count[:, None].astype(np.float32), (s, n))),
-            jnp.asarray(grid.sample_count, jnp.int32), eval_data)
+        h_all = jnp.asarray(h_all, jnp.float32)
+        lr_dev = self._lr_device(lr_seq)
+        num_rounds = int(h_all.shape[1])
+
+        def start_args(h_seg, lr_seg, q0):
+            # V/lam — and each lane's true K — are the materialized
+            # [S, N] cached device constants (_build_scan's bitwise
+            # contract); the queue carry is donated, so it is allocated
+            # per run and no cached buffer ever flows into argnum 1
+            return (global_params, q0, sp_k, lane["eb"], data, h_seg,
+                    lr_seg, lane["roll_keys"], lane["V"], lane["lam"],
+                    lane["cid"], lane["kvec"], lane["k_act"], eval_data,
+                    jnp.int32(0), None)
+
+        if chunk_size is None and chunk_store is None:
+            # classic monolithic scan: one executable, one dispatch
+            args = start_args(h_all, lr_dev,
+                              jnp.zeros((s, n), jnp.float32))
+            if warm_aot:
+                fn.lower(*args).compile()
+                return None, None, None, built, 0
+            params, queues, _, outs = fn(*args)
+            metrics = {name: np.asarray(v) for name, v in outs.items()}
+            return params, queues, metrics, built, 1
+
+        chunk = (num_rounds if chunk_size is None
+                 else max(1, int(chunk_size)))
+        resume_key = key + ("resume",)
+        tag, t_start, carry, reduced = None, 0, None, []
+        if chunk_store is not None:
+            tag = self._chunk_tag(grid, sp, k_max, tier_subset,
+                                  eval_every, num_rounds, chunk,
+                                  h_digest)
+            hit = chunk_store.load(tag)
+            if hit is not None:
+                t_start, carry_np, prefix = hit
+                carry = self._carry_from_tree(jax.tree_util.tree_map(
+                    jnp.asarray, carry_np))
+                reduced.append(dict(prefix))
+        segments = [(t0, min(chunk, num_rounds - t0))
+                    for t0 in range(t_start, num_rounds, chunk)]
+        rfn = self._fns.get(resume_key)
+        need_resume = len(segments) > (1 if carry is None else 0)
+        if need_resume and rfn is None:
+            rfn = self._build_group_fn(resume_key, k_max, round_fn,
+                                       eval_bank, eval_every,
+                                       resume=True)
+            built += 1
+
+        def resume_args(c, h_seg, lr_seg, t0):
+            c_params, c_queues, c_extras = c
+            c_ev = c_extras[1] if len(c_extras) > 1 else None
+            return (c_params, c_queues, sp_k, lane["eb"], data, h_seg,
+                    lr_seg, c_extras[0], lane["V"], lane["lam"],
+                    lane["cid"], lane["kvec"], lane["k_act"], eval_data,
+                    jnp.int32(t0), c_ev)
+
         if warm_aot:
-            fn.lower(*call_args).compile()
-            return None, None, None, compiled_new
-        params, queues, outs = fn(*call_args)
-        return params, queues, outs, compiled_new
+            # compile every segment shape the chunked run will hit: the
+            # start executable at the first segment length, the resume
+            # executable at each distinct later length (the ragged tail
+            # is a second shape) — carry shapes come from structs, no
+            # execution
+            seen = set()
+            p_struct = jax.tree_util.tree_map(
+                lambda a: jax.ShapeDtypeStruct(
+                    (s,) + tuple(np.shape(a)), np.asarray(a).dtype
+                    if not hasattr(a, "dtype") else a.dtype),
+                global_params)
+            q_struct = jax.ShapeDtypeStruct((s, n), jnp.float32)
+            rng_struct = jax.ShapeDtypeStruct((s, 2), jnp.uint32)
+            extras_struct = ((rng_struct,) if ek is None else
+                             (rng_struct, eval_bank.carry_struct(
+                                 global_params, s)))
+            for i, (t0, ln) in enumerate(segments):
+                h_seg, lr_seg = h_all[:, t0:t0 + ln], lr_dev[t0:t0 + ln]
+                first = i == 0 and carry is None and t_start == 0
+                which = ("start" if first else "resume", ln)
+                if which in seen:
+                    continue
+                seen.add(which)
+                if first:
+                    fn.lower(*start_args(
+                        h_seg, lr_seg, q_struct)).compile()
+                else:
+                    rfn.lower(*resume_args(
+                        (p_struct, q_struct, extras_struct), h_seg,
+                        lr_seg, t0)).compile()
+            return None, None, None, built, 0
+
+        # -- the pipeline: dispatch ahead, reduce behind -------------------
+        pending: List[Tuple[Any, int]] = []    # (device outs, length)
+
+        def reduce_oldest():
+            outs_d, _ = pending.pop(0)
+            # np.asarray blocks only on THIS chunk's output buffers —
+            # later chunks keep executing asynchronously
+            reduced.append({name: np.asarray(v)
+                            for name, v in outs_d.items()})
+
+        dispatches = 0
+        for i, (t0, ln) in enumerate(segments):
+            while len(pending) >= self.in_flight:
+                reduce_oldest()
+            h_seg, lr_seg = h_all[:, t0:t0 + ln], lr_dev[t0:t0 + ln]
+            if carry is None and i == 0 and t_start == 0:
+                q0 = jnp.zeros((s, n), jnp.float32)
+                params, queues, extras, outs = fn(
+                    *start_args(h_seg, lr_seg, q0))
+            else:
+                params, queues, extras, outs = rfn(
+                    *resume_args(carry, h_seg, lr_seg, t0))
+            dispatches += 1
+            carry = (params, queues, extras)
+            pending.append((outs, ln))
+            last = i == len(segments) - 1
+            if (chunk_store is not None and not last and
+                    (i + 1) % max(1, getattr(chunk_store, "every", 1))
+                    == 0):
+                # checkpoint: drain the pipeline (metrics must cover
+                # exactly [0, t0+ln)), snapshot the carry to host, and
+                # hand both to the store BEFORE the next dispatch can
+                # donate the carry buffers away
+                while pending:
+                    reduce_oldest()
+                carry_np = jax.tree_util.tree_map(np.asarray, carry)
+                chunk_store.save(
+                    tag, t0 + ln, self._carry_tree(carry_np),
+                    concat_chunk_metrics(reduced))
+        while pending:
+            reduce_oldest()
+        metrics = concat_chunk_metrics(reduced)
+        if chunk_store is not None:
+            chunk_store.finish(tag)
+        params, queues, _ = carry
+        return params, queues, metrics, built, dispatches
 
     # -- shape-adaptive dispatch planning -----------------------------------
 
@@ -664,24 +989,25 @@ class Arena:
                 batched = jax.vmap(inner,
                                    in_axes=(None, 0, None, 0, None, 0,
                                             None, 0, 0, 0, 0, 0, 0,
-                                            None))
+                                            None, None, None))
             else:
                 def batched(params, queues, sp_run, eb, data, h_seq,
                             lr_seq, rng, V, lam, cid, kvec, k_act,
-                            eval_data):
+                            eval_data, t0, last_ev):
                     def one(lane):
                         (q0, eb_s, h_s, rng_s, V_s, lam_s, cid_s, kv_s,
                          ka_s) = lane
                         return inner(params, q0, sp_run, eb_s, data,
                                      h_s, lr_seq, rng_s, V_s, lam_s,
-                                     cid_s, kv_s, ka_s, eval_data)
+                                     cid_s, kv_s, ka_s, eval_data, t0,
+                                     last_ev)
                     return jax.lax.map(one, (queues, eb, h_seq, rng, V,
                                              lam, cid, kvec, k_act))
             fn = self._probe_fns[pk] = jax.jit(batched)
         _, roll_keys = scenario_keys(grid)
         eb = eb_base[None, :] * grid.energy_scale[:, None]
         sp_k = dataclasses.replace(sp, sample_count=k_max)
-        _, _, outs = fn(
+        _, _, _, outs = fn(
             jnp.zeros((1,)), jnp.zeros((s, n), jnp.float32), sp_k,
             jnp.asarray(eb), None, jnp.asarray(h_np),
             jnp.zeros((num_rounds,), jnp.float32), roll_keys,
@@ -690,7 +1016,8 @@ class Arena:
             jnp.asarray(grid.controller),
             jnp.asarray(np.broadcast_to(
                 grid.sample_count[:, None].astype(np.float32), (s, n))),
-            jnp.asarray(grid.sample_count, jnp.int32), None)
+            jnp.asarray(grid.sample_count, jnp.int32), None,
+            jnp.int32(0), None)
         fps = lane_footprints(np.asarray(outs["selected"]),
                               np.asarray(bank.tier_of))
         self._footprint_cache[cache_key] = fps
@@ -723,31 +1050,38 @@ class Arena:
     def _run_plan(self, global_params: PyTree, sp, bank,
                   grid: ScenarioGrid, h_all, lr_seq,
                   plan: DispatchPlan, eval_bank=None, eval_every=None,
-                  warm_aot: bool = False):
+                  warm_aot: bool = False,
+                  chunk_size: Optional[int] = None, chunk_store=None,
+                  h_digest=None):
         """Execute (or, with ``warm_aot``, AOT-compile) every bucket of
         ``plan`` and stitch the lanes back to grid order.  Params are
         stitched on DEVICE — one ``concatenate`` + one ``take`` per
         leaf — instead of the legacy grouped path's per-lane slice/
         re-stack (O(S x leaves) dispatches); metrics/queues are host
-        arrays and concatenate there.  Returns ``(params, queues,
-        metrics, built_total, bucket_meta)`` with everything but
-        ``bucket_meta`` None under ``warm_aot``."""
+        arrays and concatenate there.  ``chunk_size``/``chunk_store``
+        run each bucket through the chunked pipeline (each bucket
+        checkpoints under its own content tag, so multi-bucket plans
+        resume per bucket).  Returns ``(params, queues, metrics,
+        built_total, bucket_meta)`` with everything but ``bucket_meta``
+        None under ``warm_aot``."""
         k_max = int(grid.sample_count.max())
         chunks = []
         built_total = 0
         bucket_meta = []
         for b in plan.buckets:
             idx = np.asarray(b.lanes, np.int64)
-            params_g, queues_g, outs_g, built = self._run_group(
+            params_g, queues_g, outs_g, built, nd = self._run_group(
                 global_params, sp, bank, grid.take(idx),
                 h_all[jnp.asarray(idx)], lr_seq, k_max=b.k_pad,
                 eval_bank=eval_bank, eval_every=eval_every,
-                tier_subset=b.tiers, warm_aot=warm_aot)
+                tier_subset=b.tiers, warm_aot=warm_aot,
+                chunk_size=chunk_size, chunk_store=chunk_store,
+                h_digest=h_digest)
             built_total += int(built)
             bucket_meta.append(dict(
                 lanes=[int(i) for i in b.lanes], k_pad=int(b.k_pad),
                 tiers=None if b.tiers is None else list(b.tiers),
-                dispatches=0 if warm_aot else 1,
+                dispatches=int(nd),
                 executables_built=int(built)))
             chunks.append((params_g, queues_g, outs_g))
         if warm_aot:
@@ -756,8 +1090,7 @@ class Arena:
             # single bucket = the padded fast path: lanes already in
             # grid order, no permutation or concatenation needed
             params_g, queues_g, outs_g = chunks[0]
-            metrics = {name: np.asarray(v) for name, v in outs_g.items()}
-            return (params_g, np.asarray(queues_g), metrics,
+            return (params_g, np.asarray(queues_g), dict(outs_g),
                     built_total, bucket_meta)
         inv = plan.inverse_permutation()
         inv_dev = jnp.asarray(inv)
@@ -782,7 +1115,9 @@ class Arena:
     def run(self, global_params: PyTree, sp: sm.SystemParams, bank,
             grid: ScenarioGrid, num_rounds: int, lr_seq,
             *, h_all: Optional[jax.Array] = None, eval_bank=None,
-            eval_every: Optional[int] = None) -> RolloutReport:
+            eval_every: Optional[int] = None,
+            chunk_size: Optional[int] = None,
+            chunk_store=None) -> RolloutReport:
         """Execute every scenario of ``grid`` for ``num_rounds`` rounds.
 
         ``global_params``: the shared initial model (broadcast to every
@@ -802,6 +1137,22 @@ class Arena:
         executable every that many rounds (``test_*`` per-round columns
         in ``metrics`` — a step curve holding the latest evaluation; the
         model trajectory is unchanged).
+
+        ``chunk_size`` (defaulting to the arena's ``chunk_size``)
+        switches every group onto the streaming pipeline: the T-round
+        scan becomes ``ceil(T / chunk_size)`` segments whose (params,
+        queues, rng, last-eval) carry is donated between chunks, with
+        host reduction of each chunk's metric columns overlapped with
+        the next chunk's device execution (a bounded ``in_flight``
+        dispatch-ahead window — never a ``block_until_ready`` between
+        chunks).  The chunked trajectory is bitwise-identical to the
+        monolithic scan in every ``k_mode`` (the carry — including the
+        per-round PRNG split chain and the EvalBank last-eval — threads
+        across boundaries unchanged, and the traced global round offset
+        keeps ``eval_every`` firing on the same rounds).  ``chunk_store``
+        (see ``repro.sim.service``) additionally persists the carry +
+        reduced columns at chunk boundaries so an interrupted run
+        resumes bit-identically.
 
         A mixed-K grid runs as ONE padded-``K_max`` executable by
         default (``k_mode='pad'``; ``'group'`` restores one program per
@@ -831,18 +1182,34 @@ class Arena:
         if lr_seq.shape != (num_rounds,):
             raise ValueError(f"lr_seq must have shape ({num_rounds},), "
                              f"got {lr_seq.shape}")
-        if h_all is None:
+        h_derived = h_all is None
+        if h_derived:
             h_all = self.sample_channels(grid, num_rounds, sp.num_devices)
         h_all = jnp.asarray(h_all)
         if h_all.shape != (s, num_rounds, sp.num_devices):
             raise ValueError(
                 f"h_all must have shape {(s, num_rounds, sp.num_devices)},"
                 f" got {h_all.shape}")
+        if chunk_size is None:
+            chunk_size = self.chunk_size
+        h_digest = None
+        if chunk_store is not None:
+            # checkpoint tags must identify the trajectory across
+            # processes: an arena-derived channel tensor is a pure
+            # function of (grid, T, N) already in the tag; a caller-
+            # provided one is hashed by content (one host transfer, paid
+            # only when checkpointing)
+            h_digest = ("auto" if h_derived else hashlib.sha1(
+                np.ascontiguousarray(np.asarray(h_all, np.float32))
+                .tobytes()).hexdigest())
 
         ks = np.unique(grid.sample_count)
         k_max = int(ks.max())
         meta = dict(k_mode=self.k_mode, k_groups=[int(k) for k in ks],
-                    k_max=k_max, batch=self.batch, shards=self._shards())
+                    k_max=k_max, batch=self.batch, shards=self._shards(),
+                    chunk_size=(None if chunk_size is None
+                                else int(chunk_size)),
+                    in_flight=self.in_flight)
         if self.k_mode == "auto":
             # shape-adaptive dispatch: plan at the ONE-run horizon — a
             # cold arena collapses toward the padded single bucket, a
@@ -853,8 +1220,11 @@ class Arena:
                                                       eval_every))
             params, queues, metrics, built, bucket_meta = self._run_plan(
                 global_params, sp, bank, grid, h_all, lr_seq, plan,
-                eval_bank=eval_bank, eval_every=eval_every)
-            meta.update(dispatches=plan.num_buckets,
+                eval_bank=eval_bank, eval_every=eval_every,
+                chunk_size=chunk_size, chunk_store=chunk_store,
+                h_digest=h_digest)
+            meta.update(dispatches=sum(b["dispatches"]
+                                       for b in bucket_meta),
                         executables_built=built,
                         executables_cached=len(self._fns),
                         plan=plan.describe(), buckets=bucket_meta)
@@ -864,18 +1234,19 @@ class Arena:
                 final_metrics=self._final_eval(eval_bank, params))
         if self.k_mode == "pad" or ks.size == 1:
             # padded-K fusion: the whole grid — mixed K included — is ONE
-            # executable and ONE dispatch (K_max slots per lane, each
-            # lane's true K traced as data)
-            params, queues, outs, built = self._run_group(
+            # executable (K_max slots per lane, each lane's true K traced
+            # as data) and one dispatch per rollout chunk
+            params, queues, metrics, built, nd = self._run_group(
                 global_params, sp, bank, grid, h_all, lr_seq,
-                k_max=k_max, eval_bank=eval_bank, eval_every=eval_every)
-            metrics = {name: np.asarray(v) for name, v in outs.items()}
+                k_max=k_max, eval_bank=eval_bank, eval_every=eval_every,
+                chunk_size=chunk_size, chunk_store=chunk_store,
+                h_digest=h_digest)
             plan = DispatchPlan.padded(grid.sample_count)
-            meta.update(dispatches=1, executables_built=int(built),
+            meta.update(dispatches=int(nd), executables_built=int(built),
                         executables_cached=len(self._fns),
                         plan=plan.describe(),
                         buckets=[dict(lanes=list(range(s)), k_pad=k_max,
-                                      tiers=None, dispatches=1,
+                                      tiers=None, dispatches=int(nd),
                                       executables_built=int(built))])
             return RolloutReport(
                 grid=grid, num_rounds=num_rounds, params=params,
@@ -888,17 +1259,21 @@ class Arena:
         queues_all = np.zeros((s, sp.num_devices), np.float32)
         metrics: Dict[str, np.ndarray] = {}
         built_total = 0
+        nd_total = 0
         bucket_meta = []
         for k in ks:
             idx = np.flatnonzero(grid.sample_count == k)
             sub = grid.take(idx)
-            params_g, queues_g, outs_g, built = self._run_group(
+            params_g, queues_g, outs_g, built, nd = self._run_group(
                 global_params, sp, bank, sub, h_all[jnp.asarray(idx)],
-                lr_seq, eval_bank=eval_bank, eval_every=eval_every)
+                lr_seq, eval_bank=eval_bank, eval_every=eval_every,
+                chunk_size=chunk_size, chunk_store=chunk_store,
+                h_digest=h_digest)
             built_total += int(built)
+            nd_total += int(nd)
             bucket_meta.append(dict(
                 lanes=[int(i) for i in idx], k_pad=int(k), tiers=None,
-                dispatches=1, executables_built=int(built)))
+                dispatches=int(nd), executables_built=int(built)))
             queues_all[idx] = np.asarray(queues_g)
             for j, lane in enumerate(idx):
                 lane_params[lane] = jax.tree_util.tree_map(
@@ -914,7 +1289,7 @@ class Arena:
                 metrics[name][idx] = v
         params = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls),
                                         *lane_params)
-        meta.update(dispatches=int(ks.size),
+        meta.update(dispatches=nd_total,
                     executables_built=built_total,
                     executables_cached=len(self._fns),
                     plan=DispatchPlan.grouped(grid.sample_count
@@ -939,7 +1314,8 @@ class Arena:
                grid: ScenarioGrid, num_rounds: int,
                lr_seq=None, *, h_all: Optional[jax.Array] = None,
                eval_bank=None, eval_every: Optional[int] = None,
-               aot: Optional[bool] = None) -> dict:
+               aot: Optional[bool] = None,
+               chunk_size: Optional[int] = None) -> dict:
         """Compile EVERY executable a same-shape :meth:`run` will hit,
         so iterating on grid VALUES (the V/lam/seed/channel sweep
         workflow — shapes fixed, data varying) never traces or compiles
@@ -962,6 +1338,12 @@ class Arena:
         ``{'executables_built', 'executables_cached', 'traces', 'aot',
         'plan'}`` for the zero-retrace assertion; subsequent same-shape
         runs keep ``self.traces`` constant.
+
+        ``chunk_size`` (defaulting to the arena's) additionally warms
+        the streaming pipeline's executables: the start program at the
+        first segment length plus the resume program at every distinct
+        later segment length (a ragged tail is a second shape) — so a
+        warmed chunked ``run`` keeps ``self.traces`` constant too.
         """
         before = self.traces
         if lr_seq is None:
@@ -970,6 +1352,8 @@ class Arena:
             h_all = self.sample_channels(grid, num_rounds,
                                          sp.num_devices)
         h_all = jnp.asarray(h_all)
+        if chunk_size is None:
+            chunk_size = self.chunk_size
         ek = self._eval_key(eval_bank, eval_every)
         if self.k_mode == "auto":
             plan = self._plan(sp, bank, grid, num_rounds, h_all,
@@ -983,7 +1367,7 @@ class Arena:
         params, _, _, built, _ = self._run_plan(
             global_params, sp, bank, grid, h_all, lr_seq, plan,
             eval_bank=eval_bank, eval_every=eval_every,
-            warm_aot=use_aot)
+            warm_aot=use_aot, chunk_size=chunk_size)
         if use_aot:
             if eval_bank is not None:
                 eval_bank.aot_warm(len(grid), global_params)

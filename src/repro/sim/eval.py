@@ -83,6 +83,20 @@ class EvalBank:
         out = self.eval_fn(params, (self.x, self.y))
         return {name: float(v) for name, v in out.items()}
 
+    def carry_struct(self, params_example: PyTree, s: int
+                     ) -> Dict[str, jax.ShapeDtypeStruct]:
+        """Shape/dtype structs of the in-scan last-eval carry for an
+        ``[s, ...]`` lane stack — ``{metric: ShapeDtypeStruct([s])}``,
+        derived from the real evaluation trace via ``jax.eval_shape`` so
+        it cannot drift from what ``_build_scan`` actually carries.  The
+        streaming arena uses this to AOT-lower chunk-resume executables
+        and the sweep service to rebuild a checkpointed carry's ``like``
+        tree without executing an evaluation."""
+        out = jax.eval_shape(self.eval_fn, params_example,
+                             (self.x, self.y))
+        return {name: jax.ShapeDtypeStruct((s,) + tuple(v.shape), v.dtype)
+                for name, v in out.items()}
+
     def aot_warm(self, s: int, params_example: PyTree) -> bool:
         """AOT-compile the stacked evaluator for an ``[s, ...]`` params
         stack from shape structs alone (no execution) — the EvalBank

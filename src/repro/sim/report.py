@@ -36,6 +36,31 @@ import numpy as np
 PyTree = Any
 
 
+def concat_chunk_metrics(chunks: List[Dict[str, np.ndarray]]
+                         ) -> Dict[str, np.ndarray]:
+    """Assemble per-chunk metric columns into full rollout columns.
+
+    The streaming arena reduces each scan segment's outputs to host
+    arrays as the next segment executes on device; every chunk
+    contributes ``[S, t_c, ...]`` slices of the same metric set, and the
+    full ``[S, T, ...]`` report columns are their concatenation along
+    the round axis — the incremental counterpart of the monolithic
+    ``np.asarray(outs)`` conversion, byte-for-byte identical because
+    concatenation only places the already-exact per-chunk values."""
+    if not chunks:
+        raise ValueError("no metric chunks to assemble")
+    if len(chunks) == 1:
+        return dict(chunks[0])
+    names = set(chunks[0])
+    for c in chunks[1:]:
+        if set(c) != names:
+            raise ValueError(
+                f"metric chunks disagree on columns: {sorted(names)} vs "
+                f"{sorted(c)}")
+    return {name: np.concatenate([c[name] for c in chunks], axis=1)
+            for name in chunks[0]}
+
+
 @dataclasses.dataclass
 class RolloutReport:
     """Stacked results of ``Arena.run`` over an S-scenario grid."""
@@ -56,6 +81,28 @@ class RolloutReport:
     def scenario_params(self, s: int) -> PyTree:
         """Scenario ``s``'s final model (one lane of the stacked pytree)."""
         return jax.tree_util.tree_map(lambda a: a[s], self.params)
+
+    def take(self, idx) -> "RolloutReport":
+        """Sub-report of the given scenario indices (order kept) — the
+        sweep service uses this to hand each coalesced submission its
+        own lanes back.  Params slice on device (one gather per leaf);
+        metrics/queues/final_metrics slice on host.  ``meta`` is shared
+        by reference plus a ``split_from`` marker (the per-bucket
+        dispatch counters describe the coalesced execution, not the
+        slice, so :meth:`dispatch_accounting` is not meaningful on a
+        split report)."""
+        idx = np.asarray(idx, np.int64)
+        idx_dev = jax.numpy.asarray(idx)
+        return RolloutReport(
+            grid=self.grid.take(idx), num_rounds=self.num_rounds,
+            params=jax.tree_util.tree_map(
+                lambda a: jax.numpy.take(a, idx_dev, axis=0), self.params),
+            queues=np.asarray(self.queues)[idx],
+            metrics={k: v[idx] for k, v in self.metrics.items()},
+            meta={**self.meta, "split_from": self.num_scenarios,
+                  "buckets": []},
+            final_metrics={k: np.asarray(v)[idx]
+                           for k, v in self.final_metrics.items()})
 
     # -- per-scenario curves ([S, T]) ---------------------------------------
 

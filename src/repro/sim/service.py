@@ -1,0 +1,286 @@
+"""SweepService — a continuous warmed sweep loop over the ScenarioArena.
+
+The paper's controller runs ONLINE: decisions arrive round by round,
+forever, not as one offline batch.  The arena gives the evaluation side
+the same shape — PRs 5-6 made one warmed executable serve any same-shape
+grid, and the streaming chunked pipeline (``Arena.run(chunk_size=...)``)
+overlaps host reduction with device execution.  The service turns those
+into a long-lived loop:
+
+* **Submission queue.**  ``submit(grid, num_rounds, lr_seq)`` enqueues a
+  :class:`repro.sim.ScenarioGrid` and returns a ticket; nothing executes
+  until :meth:`process_once` / :meth:`run_pending` drains the queue.
+* **Coalescing.**  Compatible pending submissions — same round count and
+  learning-rate schedule (channels, seeds, V/lam/K are per-lane data
+  anyway) — concatenate into ONE batched grid
+  (:meth:`ScenarioGrid.concat`) up to ``max_lanes`` lanes, execute as a
+  single arena program under the PR-6 dispatch planner, and split back
+  per submission with :meth:`RolloutReport.take`.
+* **Steady-state zero-upload.**  The arena's device-input caches hold
+  each known grid's lane constants / channel tensor / lr schedule, so a
+  repeated submission transfers nothing but the rollout carry the
+  executable allocates itself.
+* **Crash-safe checkpointing.**  With ``checkpoint_dir``, every chunk
+  boundary (at ``checkpoint_every`` cadence) persists the (params,
+  queues, rng, last-eval) carry and the reduced metric columns through
+  ``repro.checkpoint`` (atomic npz + manifest, tmp + rename).  A killed
+  service that resubmits the same grid resumes mid-rollout and finishes
+  BIT-IDENTICALLY to an uninterrupted run: the checkpoint tag is a pure
+  content hash of the trajectory-shaping inputs, the carry round-trips
+  exact (f32/int/uint dtypes preserved), and the chunked scan is
+  bitwise-stable across the save/restore boundary.
+
+The service owns no training state of its own — params0/bank are shared
+read-only — so one service instance can serve any number of grids.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import (checkpoint_exists, delete_checkpoint,
+                              restore_arrays, restore_checkpoint,
+                              save_checkpoint)
+from repro.sim.arena import ScenarioGrid
+from repro.sim.report import RolloutReport
+
+PyTree = Any
+
+
+class NpzChunkStore:
+    """The arena's chunk-checkpoint protocol over ``repro.checkpoint``.
+
+    One checkpoint pair per in-flight group tag: ``<tag>_metrics`` (the
+    reduced ``[S, t, ...]`` columns so far — a flat dict, restored
+    structure-free via ``restore_arrays``) and ``<tag>_carry`` (the
+    chunk carry as the arena's named tree, restored through a ``like``
+    tree the ``carry_like`` callback rebuilds from service config).
+    Metrics save FIRST, carry second: the carry manifest's ``t`` is the
+    commit point, and a crash between the two leaves a carry at an older
+    ``t`` whose metrics prefix is simply trimmed — never a torn resume.
+    ``every`` is the arena-side cadence: persist at every ``every``-th
+    chunk boundary (1 = each boundary)."""
+
+    def __init__(self, directory: str, carry_like, every: int = 1):
+        self.directory = directory
+        self.carry_like = carry_like
+        self.every = max(1, int(every))
+        #: save/load/finish counters (observability + tests)
+        self.saves = 0
+        self.loads = 0
+
+    def load(self, tag: str):
+        if not checkpoint_exists(self.directory, f"{tag}_carry"):
+            return None
+        _, md = restore_arrays(self.directory, f"{tag}_carry")
+        carry, meta = restore_checkpoint(
+            self.directory, f"{tag}_carry",
+            like=self.carry_like(int(md["s"])))
+        t = int(meta["t"])
+        metrics, _ = restore_arrays(self.directory, f"{tag}_metrics")
+        # a crash after the metrics save but before the carry save
+        # leaves metrics AHEAD of the committed t — trim to the carry's
+        # horizon (axis 1 is the round axis on every column)
+        metrics = {k: v[:, :t] for k, v in metrics.items()}
+        self.loads += 1
+        return t, carry, metrics
+
+    def save(self, tag: str, t_next: int, carry: dict,
+             metrics: Dict[str, np.ndarray]) -> None:
+        s = int(carry["queues"].shape[0])
+        md = {"t": int(t_next), "s": s}
+        save_checkpoint(self.directory, f"{tag}_metrics", dict(metrics),
+                        metadata=md)
+        save_checkpoint(self.directory, f"{tag}_carry", carry,
+                        metadata=md)
+        self.saves += 1
+
+    def finish(self, tag: str) -> None:
+        delete_checkpoint(self.directory, f"{tag}_carry")
+        delete_checkpoint(self.directory, f"{tag}_metrics")
+
+
+@dataclasses.dataclass
+class _Submission:
+    ticket: int
+    grid: ScenarioGrid
+    num_rounds: int
+    lr_seq: np.ndarray
+
+
+class SweepService:
+    """A long-lived sweep loop owning a warmed :class:`repro.sim.Arena`.
+
+    ``arena``/``params0``/``sp``/``bank`` are the shared execution
+    substrate every submission runs on (``eval_bank``/``eval_every``
+    optionally add the on-device evaluation plane).  ``chunk_size``
+    selects the streaming pipeline for every execution (None = the
+    arena's default); ``max_lanes`` caps how many lanes one coalesced
+    batch may hold; ``checkpoint_dir`` + ``checkpoint_every`` enable the
+    crash-safe chunk store (exposed as ``self.store`` — tests wrap its
+    ``save`` to simulate kills).
+
+    ``stats`` accumulates the throughput counters the streaming bench
+    records: completed scenarios, batches, coalesced lane counts, and
+    busy seconds (submit-to-drain wall time of :meth:`run_pending`).
+    """
+
+    def __init__(self, arena, params0: PyTree, sp, bank, *,
+                 eval_bank=None, eval_every: Optional[int] = None,
+                 chunk_size: Optional[int] = None, max_lanes: int = 16,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 1):
+        if eval_every is not None and eval_bank is None:
+            raise ValueError("eval_every requires an eval_bank")
+        self.arena = arena
+        self.params0 = params0
+        self.sp = sp
+        self.bank = bank
+        self.eval_bank = eval_bank
+        self.eval_every = eval_every
+        self.chunk_size = (chunk_size if chunk_size is not None
+                           else arena.chunk_size)
+        self.max_lanes = int(max_lanes)
+        self.store = None
+        if checkpoint_dir is not None:
+            self.store = NpzChunkStore(checkpoint_dir, self._carry_like,
+                                       every=checkpoint_every)
+        self._queue: List[_Submission] = []
+        self._results: Dict[int, RolloutReport] = {}
+        self._tickets = itertools.count()
+        self.stats = dict(batches=0, scenarios=0, coalesced_lanes=[],
+                          seconds=0.0)
+
+    # -- checkpoint structure -----------------------------------------------
+
+    def _carry_like(self, s: int) -> dict:
+        """The ``like`` tree a checkpointed chunk carry restores into —
+        rebuilt from service config alone (params0 shapes, N, and the
+        EvalBank's carry struct), so a FRESH process can restore a file
+        it never wrote."""
+        like = {
+            "params": jax.tree_util.tree_map(
+                lambda a: np.zeros((s,) + tuple(np.shape(a)),
+                                   np.asarray(a).dtype), self.params0),
+            "queues": np.zeros((s, self.sp.num_devices), np.float32),
+            "rng": np.zeros((s, 2), np.uint32),
+        }
+        if self.eval_bank is not None and self.eval_every:
+            like["last_ev"] = {
+                name: np.zeros(st.shape, st.dtype)
+                for name, st in self.eval_bank.carry_struct(
+                    self.params0, s).items()}
+        return like
+
+    # -- the queue ----------------------------------------------------------
+
+    def submit(self, grid: ScenarioGrid, num_rounds: int,
+               lr_seq=None) -> int:
+        """Enqueue a grid; returns a ticket for :meth:`result`."""
+        ScenarioGrid._check_sample_counts(grid.sample_count,
+                                          self.sp.num_devices)
+        if lr_seq is None:
+            lr_seq = np.zeros(num_rounds, np.float32)
+        lr_seq = np.asarray(lr_seq, np.float32)
+        if lr_seq.shape != (num_rounds,):
+            raise ValueError(f"lr_seq must have shape ({num_rounds},), "
+                             f"got {lr_seq.shape}")
+        if len(grid) > self.max_lanes:
+            raise ValueError(f"submission of {len(grid)} lanes exceeds "
+                             f"max_lanes={self.max_lanes}")
+        ticket = next(self._tickets)
+        self._queue.append(_Submission(ticket, grid, num_rounds, lr_seq))
+        return ticket
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def _coalesce(self) -> List[_Submission]:
+        """Pop the queue head plus every later submission compatible
+        with it (same T and lr schedule) that still fits ``max_lanes``
+        — FIFO order kept, incompatible submissions left queued."""
+        head = self._queue.pop(0)
+        batch = [head]
+        lanes = len(head.grid)
+        rest: List[_Submission] = []
+        for sub in self._queue:
+            if (sub.num_rounds == head.num_rounds and
+                    np.array_equal(sub.lr_seq, head.lr_seq) and
+                    lanes + len(sub.grid) <= self.max_lanes):
+                batch.append(sub)
+                lanes += len(sub.grid)
+            else:
+                rest.append(sub)
+        self._queue = rest
+        return batch
+
+    # -- execution ----------------------------------------------------------
+
+    def warmup(self, grid: ScenarioGrid, num_rounds: int,
+               lr_seq=None) -> dict:
+        """Warm the arena for this submission shape (chunked segment
+        shapes included) — steady-state submissions then never trace."""
+        return self.arena.warmup(self.params0, self.sp, self.bank, grid,
+                                 num_rounds, lr_seq,
+                                 eval_bank=self.eval_bank,
+                                 eval_every=self.eval_every,
+                                 chunk_size=self.chunk_size)
+
+    def process_once(self) -> List[int]:
+        """Execute ONE coalesced batch through the chunked pipeline;
+        returns the completed tickets (empty when the queue is idle).
+        Does not block on the batch's device work beyond what the
+        pipeline's own reduction needs — the next batch's chunks can
+        dispatch behind the previous batch's in-flight params."""
+        if not self._queue:
+            return []
+        batch = self._coalesce()
+        grid = (batch[0].grid if len(batch) == 1
+                else ScenarioGrid.concat([b.grid for b in batch]))
+        t_start = time.perf_counter()
+        rep = self.arena.run(
+            self.params0, self.sp, self.bank, grid,
+            batch[0].num_rounds, batch[0].lr_seq,
+            eval_bank=self.eval_bank, eval_every=self.eval_every,
+            chunk_size=self.chunk_size, chunk_store=self.store)
+        offset = 0
+        for sub in batch:
+            n = len(sub.grid)
+            self._results[sub.ticket] = (
+                rep if len(batch) == 1
+                else rep.take(np.arange(offset, offset + n)))
+            offset += n
+        self.stats["batches"] += 1
+        self.stats["scenarios"] += len(grid)
+        self.stats["coalesced_lanes"].append(len(grid))
+        self.stats["seconds"] += time.perf_counter() - t_start
+        return [b.ticket for b in batch]
+
+    def run_pending(self) -> List[int]:
+        """Drain the whole queue; returns every completed ticket.  The
+        final block waits for the last batch's params so the service's
+        throughput stats measure finished work, not queued dispatches."""
+        done: List[int] = []
+        while self._queue:
+            done.extend(self.process_once())
+        if done:
+            t_block = time.perf_counter()
+            last = self._results[done[-1]]
+            jax.block_until_ready(
+                jax.tree_util.tree_leaves(last.params))
+            self.stats["seconds"] += time.perf_counter() - t_block
+        return done
+
+    def result(self, ticket: int) -> RolloutReport:
+        """The completed report for ``ticket`` (popped — each result is
+        handed out once)."""
+        if ticket not in self._results:
+            raise KeyError(f"ticket {ticket} has no completed result "
+                           f"(pending submissions: {self.pending()})")
+        return self._results.pop(ticket)

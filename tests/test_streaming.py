@@ -1,0 +1,376 @@
+"""Streaming arena + sweep service: the chunked pipelined ``Arena.run``
+must reproduce the one-shot monolithic scan bitwise on the model
+trajectory at every chunking (mixed-K, tiered banks, every k_mode, eval
+curves crossing chunk boundaries), a mid-rollout checkpoint must
+kill/resume bit-identically into a FRESH arena/service, repeated warmed
+submissions must trace nothing and upload nothing, and the shared bench
+record must survive a ``bench_round_engine`` re-record with foreign
+sections intact."""
+
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from test_arena import (BITWISE_METRICS, N, TOL, _client_data, _mixed_grid,
+                        _mixed_k_grid, _setup, _test_set)
+
+from repro.sim import (Arena, EvalBank, NpzChunkStore, RolloutReport,
+                       ScenarioGrid, SweepService, concat_chunk_metrics)
+
+
+def _assert_model_bitwise(rep_a, rep_b):
+    """Model trajectory (params + loss/selected/wall_time) bitwise; the
+    control-plane diagnostics to f32 resolution (same contract as the
+    arena-vs-run_scan lane tests — XLA fuses the Algorithm-2 elementwise
+    chains shape-dependently)."""
+    for a, b in zip(jax.tree_util.tree_leaves(rep_a.params),
+                    jax.tree_util.tree_leaves(rep_b.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for name in rep_a.metrics:
+        if name in BITWISE_METRICS or name.startswith("test_"):
+            np.testing.assert_array_equal(rep_a.metrics[name],
+                                          rep_b.metrics[name], err_msg=name)
+        else:
+            np.testing.assert_allclose(rep_a.metrics[name],
+                                       rep_b.metrics[name], err_msg=name,
+                                       **TOL)
+    np.testing.assert_allclose(rep_a.queues, rep_b.queues, **TOL)
+
+
+# -- tentpole: chunked pipeline == one-shot scan ---------------------------
+
+
+def test_chunked_matches_monolithic_every_chunking():
+    """chunk in {1, 3, T-1, T}: same executable family, ceil(T/chunk)
+    dispatches, model trajectory bitwise — including the ragged tail.
+
+    Bitwise equality for length-1 segments (chunk=1, chunk=T-1's tail)
+    holds at these test shapes but is only guaranteed for segments of
+    length >= 2: XLA unrolls a trip-count-1 scan and may re-fuse the
+    unrolled body's large-shape reductions (1 ulp at paper scale — see
+    the streaming section of docs/architecture.md)."""
+    task, eng, bank, sp, params0 = _setup()
+    grid = _mixed_grid(s=4)
+    T = 6
+    lr = np.linspace(0.1, 0.05, T).astype(np.float32)
+    arena = Arena(eng)
+    h_all = arena.sample_channels(grid, T, N)
+    rep_mono = arena.run(params0, sp, bank, grid, T, lr, h_all=h_all)
+    assert rep_mono.meta["dispatches"] == 1
+    for chunk in (1, 3, 5, 6):
+        rep = arena.run(params0, sp, bank, grid, T, lr, h_all=h_all,
+                        chunk_size=chunk)
+        assert rep.meta["dispatches"] == -(-T // chunk), chunk
+        assert rep.meta["chunk_size"] == chunk
+        _assert_model_bitwise(rep_mono, rep)
+    # the whole chunked family shares ONE extra executable (the resume
+    # program) on top of the monolithic one
+    assert len(arena._fns) == 2
+
+
+def test_chunked_eval_every_crossing_chunk_boundaries():
+    """eval_every=3 with chunk=4 over T=8: in-scan evals fire at rounds
+    0/3/6 — round 3 and 6 land inside resume segments and round 4's
+    step-curve value was carried ACROSS the boundary from round 3's eval
+    — the chunked test_* columns must still equal the monolithic curves
+    bitwise, as must the batched final evaluation."""
+    task, eng, bank, sp, params0 = _setup()
+    eb = EvalBank(task, *_test_set())
+    grid = _mixed_grid(s=4)
+    T, chunk = 8, 4
+    lr = np.full(T, 0.1, np.float32)
+    arena = Arena(eng)
+    h_all = arena.sample_channels(grid, T, N)
+    rep_mono = arena.run(params0, sp, bank, grid, T, lr, h_all=h_all,
+                         eval_bank=eb, eval_every=3)
+    rep = arena.run(params0, sp, bank, grid, T, lr, h_all=h_all,
+                    eval_bank=eb, eval_every=3, chunk_size=chunk)
+    assert rep.metrics["test_accuracy"].shape == (4, T)
+    _assert_model_bitwise(rep_mono, rep)
+    for name in rep_mono.final_metrics:
+        np.testing.assert_array_equal(rep_mono.final_metrics[name],
+                                      rep.final_metrics[name])
+
+
+@pytest.mark.parametrize("k_mode", ["pad", "group", "auto"])
+def test_chunked_mixed_k_every_mode(k_mode):
+    """A mixed-K grid chunked under each dispatch mode reproduces that
+    mode's monolithic run bitwise; per-bucket dispatch counters stay
+    additive (bucket dispatches now count chunks)."""
+    task, eng, bank, sp, params0 = _setup()
+    grid = _mixed_k_grid()
+    T = 4
+    lr = np.full(T, 0.1, np.float32)
+    arena = Arena(eng, k_mode=k_mode)
+    h_all = arena.sample_channels(grid, T, N)
+    rep_mono = arena.run(params0, sp, bank, grid, T, lr, h_all=h_all)
+    rep = arena.run(params0, sp, bank, grid, T, lr, h_all=h_all,
+                    chunk_size=3)
+    _assert_model_bitwise(rep_mono, rep)
+    acc = rep.dispatch_accounting()
+    assert acc["dispatches"] == rep.meta["dispatches"]
+    if k_mode != "auto":        # auto replans between runs
+        assert rep.meta["dispatches"] == 2 * rep_mono.meta["dispatches"]
+
+
+def test_chunked_tiered_bank_matches_monolithic():
+    """Tiered-ladder scan bodies (selection-conditioned lax.cond ->
+    select under vmap) chunk cleanly: both sides run the same batched
+    per-round graph, so even the tiered trajectory stays bitwise."""
+    task, eng, bank, sp, params0 = _setup(
+        sizes=[32, 32, 64, 64, 128, 128], bank_mode="tiered")
+    grid = _mixed_grid(s=4)
+    T = 5
+    lr = np.full(T, 0.1, np.float32)
+    arena = Arena(eng)
+    h_all = arena.sample_channels(grid, T, N)
+    rep_mono = arena.run(params0, sp, bank, grid, T, lr, h_all=h_all)
+    rep = arena.run(params0, sp, bank, grid, T, lr, h_all=h_all,
+                    chunk_size=2)
+    _assert_model_bitwise(rep_mono, rep)
+
+
+def test_chunked_warmup_zero_retrace_and_cached_inputs():
+    """A fresh arena warmed at a chunking (start + resume shapes, AOT
+    where supported) runs that chunking with ZERO new traces, and
+    steady-state repeats re-upload nothing (lane/channel/lr caches)."""
+    task, eng, bank, sp, params0 = _setup()
+    grid = _mixed_grid(s=4)
+    T = 6
+    lr = np.full(T, 0.1, np.float32)
+    arena = Arena(eng, chunk_size=4)
+    stats = arena.warmup(params0, sp, bank, grid, T, lr)
+    assert stats["executables_built"] == 2      # start + resume
+    traces0 = arena.traces
+    misses0 = arena.input_cache_misses
+    for _ in range(2):
+        rep = arena.run(params0, sp, bank, grid, T, lr)
+        assert rep.meta["dispatches"] == 2
+    assert arena.traces == traces0
+    assert arena.input_cache_misses == misses0
+    assert arena.input_cache_hits > 0
+
+
+# -- the sweep service ------------------------------------------------------
+
+
+def test_service_coalesces_compatible_submissions_and_splits_back():
+    """Two 2-lane submissions with the same (T, lr) coalesce into ONE
+    4-lane batched execution whose split-back reports reproduce the
+    direct 4-lane run lane for lane; an incompatible submission (other
+    T) stays queued for its own batch."""
+    task, eng, bank, sp, params0 = _setup()
+    g4 = _mixed_grid(s=4)
+    T = 4
+    lr = np.full(T, 0.1, np.float32)
+    arena_ref = Arena(eng)
+    h4 = arena_ref.sample_channels(g4, T, N)
+    rep_ref = arena_ref.run(params0, sp, bank, g4, T, lr)
+
+    svc = SweepService(Arena(eng, chunk_size=2), params0, sp, bank,
+                       max_lanes=8)
+    ta = svc.submit(g4.take(np.array([0, 1])), T, lr)
+    tb = svc.submit(g4.take(np.array([2, 3])), T, lr)
+    tc = svc.submit(g4.take(np.array([0, 1])), T + 1,
+                    np.full(T + 1, 0.1, np.float32))
+    done = svc.process_once()
+    assert sorted(done) == [ta, tb]
+    assert svc.pending() == 1               # the T+1 submission waits
+    assert svc.stats["coalesced_lanes"] == [4]
+    for ticket, idx in ((ta, [0, 1]), (tb, [2, 3])):
+        rep = svc.result(ticket)
+        assert rep.meta["split_from"] == 4
+        assert len(rep.grid) == 2
+        for i, s in enumerate(idx):
+            for a, b in zip(
+                    jax.tree_util.tree_leaves(rep_ref.scenario_params(s)),
+                    jax.tree_util.tree_leaves(rep.scenario_params(i))):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            for name in BITWISE_METRICS:
+                np.testing.assert_array_equal(rep_ref.metrics[name][s],
+                                              rep.metrics[name][i])
+    assert svc.run_pending() == [tc]
+    assert svc.result(tc).num_scenarios == 2
+
+
+def test_service_steady_state_zero_retrace():
+    """After one warmup, repeated same-shape submissions through the
+    service trace nothing and miss no input cache."""
+    task, eng, bank, sp, params0 = _setup()
+    grid = _mixed_grid(s=4)
+    T = 4
+    lr = np.full(T, 0.1, np.float32)
+    svc = SweepService(Arena(eng, chunk_size=2), params0, sp, bank,
+                       max_lanes=4)
+    svc.warmup(grid, T, lr)
+    tr0 = svc.arena.traces
+    miss0 = svc.arena.input_cache_misses
+    for _ in range(2):
+        t = svc.submit(grid, T, lr)
+        svc.run_pending()
+        svc.result(t)
+    assert svc.arena.traces == tr0
+    assert svc.arena.input_cache_misses == miss0
+
+
+# -- satellite: checkpoint kill/resume bitwise ------------------------------
+
+
+class _Kill(Exception):
+    pass
+
+
+def _killing_store(store, after: int):
+    """Wrap a store's ``save`` to raise after the ``after``-th save —
+    the mid-rollout process-death simulation."""
+    orig, calls = store.save, {"n": 0}
+
+    def save(tag, t_next, carry, metrics):
+        orig(tag, t_next, carry, metrics)
+        calls["n"] += 1
+        if calls["n"] >= after:
+            raise _Kill()
+    store.save = save
+
+
+def _kill_and_resume(eng, bank, sp, params0, grid, T, lr, tmp_path,
+                     eval_bank=None, eval_every=None):
+    """Run through a service that dies at the first chunk checkpoint,
+    then resume in a FRESH arena + service over the same directory;
+    returns the resumed report plus the resuming service."""
+    ckdir = str(tmp_path)
+    svc = SweepService(Arena(eng, chunk_size=2), params0, sp, bank,
+                       eval_bank=eval_bank, eval_every=eval_every,
+                       checkpoint_dir=ckdir, max_lanes=len(grid))
+    _killing_store(svc.store, after=1)
+    svc.submit(grid, T, lr)
+    with pytest.raises(_Kill):
+        svc.run_pending()
+    assert any(f.endswith(".npz") for f in os.listdir(ckdir))
+    svc2 = SweepService(Arena(eng, chunk_size=2), params0, sp, bank,
+                        eval_bank=eval_bank, eval_every=eval_every,
+                        checkpoint_dir=ckdir, max_lanes=len(grid))
+    ticket = svc2.submit(grid, T, lr)
+    svc2.run_pending()
+    rep = svc2.result(ticket)
+    assert svc2.store.loads == 1
+    assert os.listdir(ckdir) == []          # finish() removed the pair
+    # the resume covered only the remaining segments
+    assert rep.meta["dispatches"] < -(-T // 2)
+    return rep, svc2
+
+
+def test_checkpoint_kill_resume_bitwise_mixed_k(tmp_path):
+    """A service killed at the first chunk boundary of a padded mixed-K
+    grid (with in-scan eval) resumes in a fresh process and finishes
+    bit-identically to the uninterrupted run."""
+    task, eng, bank, sp, params0 = _setup()
+    eb = EvalBank(task, *_test_set())
+    grid = _mixed_k_grid()
+    T = 6
+    lr = np.full(T, 0.1, np.float32)
+    rep_ref = Arena(eng).run(params0, sp, bank, grid, T, lr,
+                             eval_bank=eb, eval_every=2)
+    rep, _ = _kill_and_resume(eng, bank, sp, params0, grid, T, lr,
+                              tmp_path, eval_bank=eb, eval_every=2)
+    _assert_model_bitwise(rep_ref, rep)
+    for name in rep_ref.final_metrics:
+        np.testing.assert_array_equal(rep_ref.final_metrics[name],
+                                      rep.final_metrics[name])
+
+
+def test_checkpoint_kill_resume_bitwise_tiered_bank(tmp_path):
+    """Same kill/resume contract on a tiered-ladder bank."""
+    task, eng, bank, sp, params0 = _setup(
+        sizes=[32, 32, 64, 64, 128, 128], bank_mode="tiered")
+    grid = _mixed_grid(s=4)
+    T = 6
+    lr = np.full(T, 0.1, np.float32)
+    rep_ref = Arena(eng).run(params0, sp, bank, grid, T, lr)
+    rep, _ = _kill_and_resume(eng, bank, sp, params0, grid, T, lr,
+                              tmp_path)
+    _assert_model_bitwise(rep_ref, rep)
+
+
+def test_chunk_store_trims_metrics_ahead_of_carry(tmp_path):
+    """A crash BETWEEN the metrics save and the carry save leaves
+    metrics one checkpoint ahead — load must trim the prefix back to the
+    carry's committed round horizon."""
+    like = lambda s: {"params": {"w": np.zeros((s, 3), np.float32)},
+                      "queues": np.zeros((s, N), np.float32),
+                      "rng": np.zeros((s, 2), np.uint32)}
+    store = NpzChunkStore(str(tmp_path), like)
+    carry = {"params": {"w": np.arange(6, dtype=np.float32).reshape(2, 3)},
+             "queues": np.ones((2, N), np.float32),
+             "rng": np.arange(4, dtype=np.uint32).reshape(2, 2)}
+    m4 = {"loss": np.arange(8, dtype=np.float32).reshape(2, 4)}
+    store.save("chunk_x", 4, carry, m4)
+    # simulate the torn pair: newer metrics (t=6) land, carry save dies
+    from repro.checkpoint import save_checkpoint
+    save_checkpoint(str(tmp_path), "chunk_x_metrics",
+                    {"loss": np.zeros((2, 6), np.float32)},
+                    metadata={"t": 6, "s": 2})
+    t, got_carry, metrics = store.load("chunk_x")
+    assert t == 4
+    assert metrics["loss"].shape == (2, 4)
+    np.testing.assert_array_equal(got_carry["rng"], carry["rng"])
+    np.testing.assert_array_equal(got_carry["params"]["w"],
+                                  carry["params"]["w"])
+    store.finish("chunk_x")
+    assert store.load("chunk_x") is None
+
+
+# -- satellite: report plumbing --------------------------------------------
+
+
+def test_concat_chunk_metrics_and_report_take():
+    chunks = [{"loss": np.ones((2, 3)), "sel": np.zeros((2, 3, 4))},
+              {"loss": 2 * np.ones((2, 2)), "sel": np.ones((2, 2, 4))}]
+    out = concat_chunk_metrics(chunks)
+    assert out["loss"].shape == (2, 5)
+    assert out["sel"].shape == (2, 5, 4)
+    np.testing.assert_array_equal(out["loss"][:, :3], 1.0)
+    np.testing.assert_array_equal(out["loss"][:, 3:], 2.0)
+    one = concat_chunk_metrics(chunks[:1])
+    np.testing.assert_array_equal(one["loss"], chunks[0]["loss"])
+    with pytest.raises(ValueError):
+        concat_chunk_metrics([])
+    with pytest.raises(ValueError):
+        concat_chunk_metrics([{"a": np.ones((1, 1))},
+                              {"b": np.ones((1, 1))}])
+
+    grid = _mixed_grid(s=4)
+    rep = RolloutReport(
+        grid=grid, num_rounds=3,
+        params={"w": np.arange(8.0).reshape(4, 2)},
+        queues=np.arange(4 * N, dtype=np.float32).reshape(4, N),
+        metrics={"loss": np.arange(12.0).reshape(4, 3)},
+        meta={"k_mode": "pad", "buckets": [1]},
+        final_metrics={"test_accuracy": np.arange(4.0)})
+    sub = rep.take(np.array([2, 0]))
+    assert len(sub.grid) == 2
+    np.testing.assert_array_equal(np.asarray(sub.params["w"]),
+                                  rep.params["w"][[2, 0]])
+    np.testing.assert_array_equal(sub.metrics["loss"],
+                                  rep.metrics["loss"][[2, 0]])
+    np.testing.assert_array_equal(sub.final_metrics["test_accuracy"],
+                                  [2.0, 0.0])
+    assert sub.meta["split_from"] == 4 and sub.meta["buckets"] == []
+    assert int(sub.grid.seed[0]) == int(grid.seed[2])
+
+
+# -- satellite: shared bench record preservation ----------------------------
+
+
+def test_bench_record_preserves_foreign_sections():
+    from benchmarks.bench_round_engine import preserve_foreign_sections
+    prev = {"arena": {"S4": 1}, "future_section": {"x": 2},
+            "scan_rounds_per_sec": 99.0}
+    result = {"scan_rounds_per_sec": 123.0, "skewed": {}}
+    out = preserve_foreign_sections(result, prev)
+    assert out["arena"] == {"S4": 1}              # known foreign section
+    assert out["future_section"] == {"x": 2}      # UNKNOWN foreign section
+    assert out["scan_rounds_per_sec"] == 123.0    # own keys win
+    assert out["skewed"] == {}

@@ -5,6 +5,9 @@ sweep-engine section.
 * V sweep (Fig. 4): time-averaged energy (constraint satisfaction) and
   time-averaged objective vs nu — the Theorem-4 O(C/V) trade-off.
 * K sweep (Figs. 5/6): LROA vs Uni-D across sampling counts.
+* zoo sweep (Sec. VII trade-off table): every registered controller x
+  {stationary, Markov} channel modes as ONE batched ``Arena.run``,
+  seed-aggregated trade-off points + single-planned-dispatch guard.
 * arena (Sec. VII grid execution): S-batched ``Arena.run`` vs S
   host-looped ``run_scan`` calls on a mixed-controller grid at the
   round-engine operating point (K=8, N=120), recorded in the ``arena``
@@ -148,6 +151,61 @@ def heterogeneity_sweep(cfg: BenchConfig, spreads=(1.0, 2.0, 4.0),
             f"heterogeneity_sweep/spread={spread}", 0.0,
             f"lroa_s={totals['lroa']:.0f};uni_s_s={totals['uni_s']:.0f};"
             f"latency_saving_pct={save:.1f}"))
+    return rows
+
+
+def zoo_sweep(cfg: BenchConfig, rounds: int = 20, seeds: int = 2
+              ) -> List[str]:
+    """Sec.-VII-style trade-off table: the FULL controller zoo (all
+    registered decide rules, in-trace DivFL included) crossed with
+    {stationary, Markov/Gilbert-Elliott} channel modes, executed as ONE
+    batched ``Arena.run`` under ``k_mode='auto'`` — the headline grid of
+    the controller-zoo milestone.  Emits one row per
+    (controller, channel-mode) trade-off point (seed-aggregated latency /
+    loss / energy) plus a dispatch row asserting the whole mixed grid ran
+    as a single planned bucket."""
+    import jax
+
+    from benchmarks.common import build_testbed
+    from repro.core import POLICIES, estimate_hyperparams
+    from repro.fl import ClientConfig, RoundEngine
+    from repro.optim import paper_step_decay
+    from repro.sim import Arena, ScenarioGrid
+
+    params, task, client_data, _ = build_testbed(cfg)
+    hp = estimate_hyperparams(params, 0.1, loss_scale=1.5, mu=cfg.mu,
+                              nu=cfg.nu)
+    engine = RoundEngine(task, ClientConfig(local_epochs=cfg.local_epochs,
+                                            batch_size=cfg.batch_size))
+    bank = engine.make_bank(client_data)
+    grid = ScenarioGrid.product(
+        controllers=tuple(POLICIES), seeds=tuple(range(seeds)),
+        V=(hp.V,), lam=(hp.lam,), sample_count=(cfg.sample_count,),
+        chan_mode=("iid", "markov"), p_gb=(0.15,), p_bg=(0.4,),
+        num_devices=cfg.num_devices)
+    arena = Arena(engine, k_mode="auto")
+    sched = paper_step_decay(cfg.lr, cfg.rounds)
+    lr_seq = np.asarray([float(sched(t)) for t in range(rounds)],
+                        np.float32)
+    t0 = time.perf_counter()
+    report = arena.run(task.init(jax.random.PRNGKey(cfg.seed + 1)),
+                       params, bank, grid, rounds, lr_seq)
+    wall = time.perf_counter() - t0
+    rows = []
+    for pt in report.tradeoff_table():
+        rows.append(csv_row(
+            f"zoo_sweep/{pt['controller']}/{pt['chan_mode']}", 0.0,
+            f"total_time_s={pt['total_latency']:.0f};"
+            f"final_loss={pt['final_loss']:.3f};"
+            f"mean_energy_J={pt['mean_energy']:.2f};"
+            f"seeds={pt['num_seeds']}"))
+    acct = report.dispatch_accounting()
+    lanes = len(grid)
+    rows.append(csv_row(
+        f"zoo_sweep/dispatch/S{lanes}", 1e6 * wall / max(lanes, 1),
+        f"buckets={acct['buckets']};dispatches={acct['dispatches']};"
+        f"executables_built={acct['executables_built']};"
+        f"controllers={len(POLICIES)}"))
     return rows
 
 
@@ -792,5 +850,6 @@ if __name__ == "__main__":
         sys.exit(0)
     cfg = BenchConfig()
     for row in (lambda_sweep(cfg) + v_sweep(cfg) + k_sweep(cfg)
-                + heterogeneity_sweep(cfg) + arena_sweep(cfg)):
+                + heterogeneity_sweep(cfg) + zoo_sweep(cfg)
+                + arena_sweep(cfg)):
         print(row)

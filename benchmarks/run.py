@@ -75,6 +75,7 @@ def main(argv=None) -> None:
             (bench_sweeps.k_sweep, dict(ks=(2,))),
             (bench_sweeps.heterogeneity_sweep,
              dict(spreads=(2.0,), rounds=10)),
+            (bench_sweeps.zoo_sweep, dict(rounds=3, seeds=1)),
             (bench_sweeps.arena_sweep,
              dict(s_values=(2, 4), rounds=3, smoke=True)),
         ]

@@ -3,12 +3,12 @@ with LROA and the baselines over a non-IID synthetic image dataset (offline
 stand-in for CIFAR-10/FEMNIST — same Dirichlet(0.5) partition, same system
 model), then print the accuracy/latency comparison.
 
-The controller comparison grid (LROA vs Uni-D vs Uni-S, any number of
-seeds) runs through the ScenarioArena: ONE jitted, scenario-batched
-program executes every rollout over the shared ClientBank instead of a
-Python loop of trainers.  DivFL cannot be expressed as a pure per-round
-rule (stateful submodular selection), so requesting it falls back to the
-sequential trainer loop for that controller only.
+The controller comparison grid (the full zoo — LROA, Uni-D, Uni-S,
+channel-aware, cost-effective, round-robin, DivFL — any number of seeds)
+runs through the ScenarioArena: ONE jitted, scenario-batched program
+executes every rollout over the shared ClientBank instead of a Python
+loop of trainers.  DivFL's facility-location greedy runs in-trace, so it
+is an ordinary arena lane like everything else.
 
     PYTHONPATH=src python examples/fl_simulation.py [--rounds 60] \
         [--devices 30] [--controllers lroa,uni_d,uni_s,divfl] [--seeds 3]
@@ -19,7 +19,7 @@ import argparse
 import jax
 import numpy as np
 
-from benchmarks.common import BenchConfig, build_testbed, run_controller
+from benchmarks.common import BenchConfig, build_testbed
 from repro.core import estimate_hyperparams
 from repro.fl import ClientConfig, RoundEngine
 from repro.optim import paper_step_decay
@@ -80,18 +80,10 @@ def main():
     cfg = BenchConfig(num_devices=args.devices, rounds=args.rounds,
                       use_cnn=args.cnn)
     names = args.controllers.split(",")
-    arena_names = [n for n in names if n != "divfl"]
-    results = {}
-    if arena_names:
-        s = len(arena_names) * args.seeds
-        print(f"=== arena: {','.join(arena_names)} x {args.seeds} "
-              f"seed(s) = {s} rollouts in one batched program ===")
-        results.update(run_arena_grid(arena_names, cfg, args.seeds))
-    if "divfl" in names:
-        # DivFL's stateful selection needs the sequential trainer path
-        print("=== divfl (sequential trainer fallback) ===")
-        res = run_controller("divfl", cfg, verbose=True)
-        results["divfl"] = (res.accuracy_curve()[-1][2], res.total_time)
+    s = len(names) * args.seeds
+    print(f"=== arena: {','.join(names)} x {args.seeds} "
+          f"seed(s) = {s} rollouts in one batched program ===")
+    results = run_arena_grid(names, cfg, args.seeds)
 
     print(f"\n{'controller':10s} {'final acc':>10s} {'total time':>12s}")
     for name, (acc, total) in results.items():

@@ -15,9 +15,14 @@ reporting, even though the baselines ignore them when deciding).  The
 Uni-D / Uni-S decision *rules* are the pure functions in
 ``repro.core.policy`` (this module's classes are thin stateful wrappers),
 so ``run_scan`` and the ScenarioArena dispatch the identical math as
-traced controller ids; DivFL is the one controller that cannot be a pure
-per-round rule (stateful submodular selection over observed updates) and
-stays host-side.
+traced controller ids.  DivFL runs in-trace too: its facility-location
+greedy over the shared ``(data_weight, gain)`` feature similarity is the
+``K``-step ``lax.fori_loop`` in
+``repro.core.policy.facility_location_select``, and this module's
+:func:`facility_location_greedy` is the bitwise host mirror of that
+loop.  The host :class:`DivFLController` additionally accepts observed
+local-update sketches (``observe_updates``) — the sequential reference
+path — which take precedence over the channel features when present.
 """
 
 from __future__ import annotations
@@ -90,10 +95,13 @@ def facility_location_greedy(similarity: np.ndarray, k: int) -> np.ndarray:
 
     This is DivFL's diverse-subset selection [42]; O(N^2 k), exact 1-1/e
     approximation guarantee by submodularity of the facility-location set
-    function.
+    function.  Gains accumulate in the similarity's own dtype (not
+    promoted to float64) so exact ties resolve identically to the traced
+    ``repro.core.policy.facility_location_select`` — argmax breaks ties
+    low-index in both.
     """
     n = similarity.shape[0]
-    best = np.full((n,), -np.inf)
+    best = np.full((n,), -np.inf, similarity.dtype)
     chosen: list[int] = []
     for _ in range(k):
         # marginal gain of adding j: sum_i max(best_i, sim[i, j]) - sum_i best_i
@@ -109,9 +117,13 @@ class DivFLController:
     """DivFL [42]: submodular diverse selection + Uni-S resource policy.
 
     Client similarity is measured on the latest available local update
-    vectors (gradient proxies); until updates exist, similarity is uniform
-    so the first round degenerates to an arbitrary (deterministic) subset,
-    as in the reference implementation.
+    vectors (gradient proxies) when the sequential path has recorded any
+    via :meth:`observe_updates`; otherwise selection runs on the same
+    ``(data_weight, channel_gain)`` feature similarity as the in-trace
+    rule (``repro.core.policy.divfl_features`` /
+    ``divfl_similarity``), so the host controller and the arena's
+    ``lax.fori_loop`` greedy pick identical subsets on shared channel
+    draws.
     """
 
     name = "divfl"
@@ -131,15 +143,22 @@ class DivFLController:
                 (self.params.num_devices, flat_updates.shape[-1]), np.float32)
         self._update_bank[np.asarray(client_ids)] = flat_updates
 
-    def select(self) -> np.ndarray:
+    def select(self, h: Optional[Array] = None) -> np.ndarray:
         k = self.params.sample_count
         n = self.params.num_devices
-        if self._update_bank is None or not np.any(self._update_bank):
+        if self._update_bank is not None and np.any(self._update_bank):
+            g = self._update_bank
+            norms = np.linalg.norm(g, axis=1, keepdims=True)
+            gn = g / np.maximum(norms, 1e-12)
+            similarity = gn @ gn.T
+        elif h is not None:
+            # channel-feature similarity: the SAME gram the in-trace rule
+            # builds (computed by the shared jax helper so the two paths
+            # agree bitwise), reduced by the host greedy mirror
+            similarity = np.asarray(pol.divfl_similarity(
+                pol.divfl_features(self.params, jnp.asarray(h))))
+        else:
             return np.arange(k) % n
-        g = self._update_bank
-        norms = np.linalg.norm(g, axis=1, keepdims=True)
-        gn = g / np.maximum(norms, 1e-12)
-        similarity = gn @ gn.T
         return facility_location_greedy(similarity, k)
 
     def decide(self, h: Array) -> slv.ControlDecision:

@@ -1,16 +1,27 @@
 """Controllers as data: pure per-round decision functions + traced dispatch.
 
 The stateful controller classes (``LROAController``, ``UniformDynamic...``,
-``UniformStatic...``) exist for the host-driven Algorithm-1 loop, but the
-fused rollout paths — ``RoundEngine.run_scan`` and the ScenarioArena's
-scenario-batched sweeps (``repro.sim``) — need the *decision rule itself*
-to be a pure, jit/vmap-composable function of ``(params, h, queues, V,
-lam)``.  This module is the single home of those rules:
+``UniformStatic...``, ``DivFLController``) exist for the host-driven
+Algorithm-1 loop, but the fused rollout paths — ``RoundEngine.run_scan``
+and the ScenarioArena's scenario-batched sweeps (``repro.sim``) — need the
+*decision rule itself* to be a pure, jit/vmap-composable function of
+``(params, h, queues, V, lam)``.  This module is the single home of those
+rules — the controller zoo:
 
-* :func:`decide_lroa`  — Algorithm 2 (``solver.solve_p2``);
-* :func:`decide_uni_d` — uniform q, LROA's dynamic (f, p) closed forms;
-* :func:`decide_uni_s` — uniform q, mid-range p, f from the Uni-S
-  energy-balance equation (:func:`static_frequency`).
+* :func:`decide_lroa`          — Algorithm 2 (``solver.solve_p2``);
+* :func:`decide_uni_d`         — uniform q, LROA's dynamic (f, p) forms;
+* :func:`decide_uni_s`         — uniform q, mid-range p, f from the Uni-S
+  energy-balance equation (:func:`static_frequency`);
+* :func:`decide_channel_aware` — Shi-style best-channel scheduling
+  (arXiv:1911.00856): all selection mass on the K strongest channels,
+  dynamic (f, p) under that q;
+* :func:`decide_cost_effective`— Luo-style adaptive sampling
+  (arXiv:2109.05411): q proportional to data weight per unit round cost,
+  static resources;
+* :func:`decide_round_robin`   — uniform resources, deterministic cyclic
+  selection (the selection layer below);
+* :func:`decide_divfl`         — DivFL's resource plan (uniform q, static
+  resources); its *selection* is the in-trace facility-location greedy.
 
 ``POLICIES`` fixes the id order and :func:`decide_by_id` dispatches on a
 *traced* integer via ``lax.switch`` — the controller becomes per-scenario
@@ -20,10 +31,32 @@ the full batch and the select keeps each lane bit-identical to the pure
 branch).  The stateful classes are thin wrappers over these functions, so
 the host loop and the fused paths cannot diverge.
 
-DivFL is deliberately absent: its selection is a stateful submodular
-maximisation over observed client updates (host-side, data-dependent
-control flow) and cannot be expressed as a pure per-round decision — it
-stays on the sequential trainer path.
+Selection layer
+---------------
+A decision rule emits the *distribution* (f, p, q); HOW the K client
+slots are filled from it is a second, per-controller axis.  Three modes,
+registered per policy in :data:`SELECTION_MODES` and dispatched on the
+traced id by :func:`select_by_id`:
+
+* ``sampled`` (:func:`sampled_selection`) — the paper's i.i.d.
+  with-replacement draw: slot ``i`` samples from ``q`` under
+  ``fold_in(round_key, i)`` (prefix-stable in the slot index, the
+  padded-K invariant);
+* ``round_robin`` (:func:`round_robin_selection`) — deterministic cyclic
+  schedule ``(t * K + slot) mod N``; every client is visited equally
+  often regardless of channel state;
+* ``greedy`` (:func:`divfl_selection`) — DivFL as a K-step
+  ``lax.fori_loop`` of masked facility-location argmax over the
+  normalized client-feature gram matrix (:func:`divfl_similarity`).  The
+  loop is prefix-stable: step ``i`` depends only on steps ``< i``, so a
+  padded rollout picks the identical first ``k_act`` clients, and the
+  host ``core.baselines.facility_location_greedy`` run on the same
+  similarity reproduces the trace's picks exactly (the equivalence
+  pinned by ``tests/test_divfl_trace.py``).
+
+Deterministic modes ignore the slot PRNG keys; the sampled mode ignores
+the round index — the shared signature is what lets ``lax.switch`` mix
+them in one executable.
 """
 
 from __future__ import annotations
@@ -41,13 +74,19 @@ Array = jax.Array
 #: Scan-traceable policies, in controller-id order (the ``lax.switch``
 #: branch index).  The names are the public contract — ``run_scan``'s
 #: ``policy=`` strings and the ScenarioArena's grid both resolve through
-#: ``POLICY_IDS``.
-POLICIES = ("lroa", "uni_d", "uni_s")
+#: ``POLICY_IDS``.  Ids 0-2 predate the zoo and are frozen.
+POLICIES = ("lroa", "uni_d", "uni_s", "channel_aware", "cost_effective",
+            "round_robin", "divfl")
 POLICY_IDS = {name: i for i, name in enumerate(POLICIES)}
 
 
 def _uniform_q(n: int) -> Array:
     return jnp.full((n,), 1.0 / n, jnp.float32)
+
+
+def _mid_power(params: sm.SystemParams) -> Array:
+    return jnp.broadcast_to(0.5 * (params.p_min + params.p_max),
+                            (params.num_devices,))
 
 
 def decide_lroa(params: sm.SystemParams, h: Array, queues: Array,
@@ -105,15 +144,99 @@ def decide_uni_s(params: sm.SystemParams, h: Array, queues: Array,
     dispatch and for the scenario grid to carry (V, lam) uniformly.
     """
     q = _uniform_q(params.num_devices)
-    p = jnp.broadcast_to(0.5 * (params.p_min + params.p_max),
-                         (params.num_devices,))
+    p = _mid_power(params)
+    f = static_frequency(params, h, p, k=k)
+    return slv.ControlDecision(f=f, p=p, q=q)
+
+
+def decide_channel_aware(params: sm.SystemParams, h: Array, queues: Array,
+                         V: Array, lam: Array,
+                         cfg: slv.SolverConfig = slv.SolverConfig(),
+                         k: Array = None) -> slv.ControlDecision:
+    """Best-channel scheduling (Shi et al., arXiv:1911.00856).
+
+    All selection mass goes — uniformly — to the K devices with the
+    strongest current channel gains (``rank(h) < K``), the fast-convergence
+    scheduling rule; (f, p) then follow LROA's Theorem-2/3 closed forms
+    under that q (zero-q devices fall into the closed forms' no-pressure
+    branch and clip to the box, but carry no selection mass).  Myopic in
+    the channel: it never looks at queues, which is exactly the contrast
+    the Sec.-VII comparison is after.
+    """
+    k_eff = sm.effective_k(params, k)
+    # rank 0 = strongest channel; double-argsort is the jit-stable rank
+    ranks = jnp.argsort(jnp.argsort(-h))
+    mask = (ranks < k_eff).astype(jnp.float32)
+    q = mask / jnp.sum(mask)
+    f = slv.solve_f(params, q, queues, V, k=k)
+    p = slv.solve_p(params, q, queues, h, V, cfg.bisect_iters, k=k)
+    return slv.ControlDecision(f=f, p=p, q=q)
+
+
+def decide_cost_effective(params: sm.SystemParams, h: Array, queues: Array,
+                          V: Array, lam: Array,
+                          cfg: slv.SolverConfig = slv.SolverConfig(),
+                          k: Array = None) -> slv.ControlDecision:
+    """Adaptive cost-effective sampling (Luo et al., arXiv:2109.05411).
+
+    Samples clients with probability proportional to statistical utility
+    per sqrt round cost: ``q_n ∝ w_n / sqrt(T_n)`` with ``T_n`` the
+    client's full round time under static resources — the "more data,
+    cheaper round" trade Luo's adaptive sampling optimises.  A
+    ``cfg.q_floor`` floor keeps every q strictly positive (the unbiased
+    eq.-(4) aggregation divides by q of the picked client).
+    """
+    p = _mid_power(params)
+    f = static_frequency(params, h, p, k=k)
+    cost = sm.round_time(params, h, p, f, k=k)
+    score = params.data_weights / jnp.sqrt(jnp.maximum(cost, 1e-12))
+    q = score / jnp.sum(score)
+    q = jnp.maximum(q, cfg.q_floor)
+    q = q / jnp.sum(q)
+    return slv.ControlDecision(f=f, p=p, q=q)
+
+
+def decide_round_robin(params: sm.SystemParams, h: Array, queues: Array,
+                       V: Array, lam: Array,
+                       cfg: slv.SolverConfig = slv.SolverConfig(),
+                       k: Array = None) -> slv.ControlDecision:
+    """Round-robin: uniform q with a deterministic cyclic *selection*.
+
+    The reported q is the long-run visit frequency 1/N (what the unbiased
+    eq.-(4) coefficients and the expected-energy queue drift consume);
+    the actual slot fill is the cyclic schedule in
+    :func:`round_robin_selection`.  Resources follow Uni-D's dynamic
+    closed forms so the contrast with ``uni_d`` isolates the selection
+    discipline.
+    """
+    q = _uniform_q(params.num_devices)
+    f = slv.solve_f(params, q, queues, V, k=k)
+    p = slv.solve_p(params, q, queues, h, V, cfg.bisect_iters, k=k)
+    return slv.ControlDecision(f=f, p=p, q=q)
+
+
+def decide_divfl(params: sm.SystemParams, h: Array, queues: Array,
+                 V: Array, lam: Array,
+                 cfg: slv.SolverConfig = slv.SolverConfig(),
+                 k: Array = None) -> slv.ControlDecision:
+    """DivFL resource plan: uniform q, mid-range p, energy-balance f.
+
+    Mirrors ``core.baselines.DivFLController.decide`` — DivFL prescribes
+    no resource allocation, so it reuses Uni-S's static plan; what makes
+    it DivFL is the greedy facility-location *selection*
+    (:func:`divfl_selection`), dispatched by :data:`SELECTION_MODES`.
+    """
+    q = _uniform_q(params.num_devices)
+    p = _mid_power(params)
     f = static_frequency(params, h, p, k=k)
     return slv.ControlDecision(f=f, p=p, q=q)
 
 
 #: Branches in POLICY id order — ``DECIDE_FNS[POLICY_IDS[name]]`` is the
 #: pure rule behind controller ``name``.
-DECIDE_FNS = (decide_lroa, decide_uni_d, decide_uni_s)
+DECIDE_FNS = (decide_lroa, decide_uni_d, decide_uni_s,
+              decide_channel_aware, decide_cost_effective,
+              decide_round_robin, decide_divfl)
 
 
 def decide_by_id(controller_id: Array, params: sm.SystemParams, h: Array,
@@ -140,3 +263,136 @@ def decide_by_id(controller_id: Array, params: sm.SystemParams, h: Array,
         for fn in DECIDE_FNS]
     return jax.lax.switch(controller_id, branches, params, h, queues, V,
                           lam, k)
+
+
+# --------------------------------------------------------------------------
+# Selection layer — how the K slots are filled from a ControlDecision
+# --------------------------------------------------------------------------
+
+#: Selection-mode indices (the ``lax.switch`` branch order of
+#: :data:`SELECT_FNS`).
+SELECT_SAMPLED, SELECT_ROUND_ROBIN, SELECT_GREEDY = 0, 1, 2
+
+#: Per-policy selection mode, aligned with :data:`POLICIES`.
+SELECTION_MODES = {
+    "lroa": SELECT_SAMPLED,
+    "uni_d": SELECT_SAMPLED,
+    "uni_s": SELECT_SAMPLED,
+    "channel_aware": SELECT_SAMPLED,
+    "cost_effective": SELECT_SAMPLED,
+    "round_robin": SELECT_ROUND_ROBIN,
+    "divfl": SELECT_GREEDY,
+}
+_MODE_TABLE = tuple(SELECTION_MODES[name] for name in POLICIES)
+
+
+def sampled_selection(params: sm.SystemParams, t: Array, h: Array,
+                      queues: Array, q: Array, key: Array, slots: Array,
+                      kvec: Array) -> Array:
+    """The paper's i.i.d. with-replacement draw from q, one key per slot.
+
+    Prefix-stable: slot ``i`` draws from ``fold_in(key, i)`` only — never
+    from ``K_max`` — the padded-K invariant ``_build_scan`` documents.
+    This is byte-for-byte the selection the pre-zoo scan body inlined.
+    """
+    n = params.num_devices
+    sel_keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(slots)
+    return jax.vmap(
+        lambda sk: jax.random.choice(sk, n, (), replace=True,
+                                     p=q))(sel_keys)
+
+
+def round_robin_selection(params: sm.SystemParams, t: Array, h: Array,
+                          queues: Array, q: Array, key: Array,
+                          slots: Array, kvec: Array) -> Array:
+    """Deterministic cyclic schedule: round t fills slot i with client
+    ``(t * K + i) mod N``.
+
+    Consecutive rounds continue the cycle (K distinct clients per round
+    whenever K <= N), every client is visited once per ceil(N/K) rounds,
+    and the schedule is prefix-stable in the slot index (slot i never
+    reads K_max), so padded lanes truncate to the same prefix.
+    """
+    n = params.num_devices
+    k_i = jnp.reshape(kvec, (-1,))[0].astype(slots.dtype)
+    return (t.astype(slots.dtype) * k_i + slots) % n
+
+
+def divfl_features(params: sm.SystemParams, h: Array) -> Array:
+    """Per-client control-plane feature sketch ``[N, 2]`` for DivFL.
+
+    DivFL proper builds its similarity from observed gradient sketches;
+    inside the fused scan the control plane must stay a pure function of
+    the round inputs (selections feed the dispatch-footprint probe and
+    the host replay, both of which run WITHOUT training), so the sketch
+    is the per-client ``(data weight, channel gain)`` pair — the same
+    observable state every other rule conditions on.  The greedy itself
+    (:func:`facility_location_select`) is sketch-agnostic; tests feed it
+    real gradient-sketch grams.
+    """
+    return jnp.stack([params.data_weights, h], axis=1)
+
+
+def divfl_similarity(feats: Array) -> Array:
+    """Row-normalized gram matrix ``[N, N]`` of a ``[N, D]`` sketch."""
+    norms = jnp.linalg.norm(feats, axis=1, keepdims=True)
+    unit = feats / jnp.maximum(norms, 1e-12)
+    return unit @ unit.T
+
+
+def facility_location_select(similarity: Array, k: int) -> Array:
+    """K-step greedy facility-location maximisation, in-trace.
+
+    Step ``i`` scores every client by the coverage gain
+    ``sum_n max(best_n, sim[n, j])`` with already-chosen clients masked
+    to -inf, takes the argmax, and folds its column into ``best`` — the
+    exact loop ``core.baselines.facility_location_greedy`` runs on the
+    host (argmax ties break low-index in both).  ``k`` is the STATIC
+    slot count; the loop is prefix-stable (step i reads only steps < i),
+    so a padded rollout's first ``k_act`` picks equal the unpadded run's.
+    """
+    n = similarity.shape[0]
+
+    def step(i, carry):
+        best, chosen, out = carry
+        gains = jnp.sum(jnp.maximum(best[:, None], similarity), axis=0)
+        gains = jnp.where(chosen, -jnp.inf, gains)
+        j = jnp.argmax(gains).astype(out.dtype)
+        best = jnp.maximum(best, similarity[:, j])
+        chosen = chosen.at[j].set(True)
+        out = out.at[i].set(j)
+        return best, chosen, out
+
+    best0 = jnp.full((n,), -jnp.inf, similarity.dtype)
+    chosen0 = jnp.zeros((n,), bool)
+    out0 = jnp.zeros((k,), jnp.int32)
+    _, _, out = jax.lax.fori_loop(0, k, step, (best0, chosen0, out0))
+    return out
+
+
+def divfl_selection(params: sm.SystemParams, t: Array, h: Array,
+                    queues: Array, q: Array, key: Array, slots: Array,
+                    kvec: Array) -> Array:
+    """DivFL: greedy facility-location picks over the feature gram."""
+    sim = divfl_similarity(divfl_features(params, h))
+    return facility_location_select(sim, slots.shape[0])
+
+
+#: Branches in SELECT_* mode order.
+SELECT_FNS = (sampled_selection, round_robin_selection, divfl_selection)
+
+
+def select_by_id(controller_id: Array, params: sm.SystemParams, t: Array,
+                 h: Array, queues: Array, q: Array, key: Array,
+                 slots: Array, kvec: Array) -> Array:
+    """Traced selection dispatch: controller id -> selection mode.
+
+    The static :data:`_MODE_TABLE` maps policy ids to the three selection
+    modes; ``lax.switch`` then runs the mode branches.  Same vmap
+    semantics as :func:`decide_by_id`: all three modes execute per lane
+    and the select keeps each lane bitwise-equal to its pure branch —
+    sampled lanes keep the exact pre-zoo draws.
+    """
+    mode = jnp.take(jnp.asarray(_MODE_TABLE, jnp.int32), controller_id)
+    return jax.lax.switch(mode, list(SELECT_FNS), params, t, h, queues,
+                          q, key, slots, kvec)

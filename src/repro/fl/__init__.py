@@ -12,7 +12,11 @@ from repro.fl.server import (sample_clients, aggregation_weights, aggregate,
                              aggregate_stacked, aggregate_fused,
                              aggregate_fused_psum, stack_deltas,
                              ParamRavel, fedavg_reference)
-from repro.fl.environment import (ChannelConfig, ChannelProcess,
-                                  HeterogeneityConfig, heterogeneous_params)
+from repro.fl.environment import (CHANNEL_MODES, ChannelConfig,
+                                  ChannelProcess, HeterogeneityConfig,
+                                  heterogeneous_params, markov_stationary,
+                                  sample_channel_sequence,
+                                  sample_dropout_mask, sample_gains,
+                                  sample_gains_markov, sample_markov_states)
 from repro.fl.round_engine import RoundEngine
 from repro.fl.trainer import FederatedTrainer, FLRunResult, RoundRecord

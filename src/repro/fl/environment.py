@@ -1,9 +1,30 @@
-"""FL edge environment: stochastic channel process + device heterogeneity.
+"""FL edge environment: stochastic channel processes + device heterogeneity.
 
 The paper (Sec. VII-A) draws channel gains i.i.d. from an exponential
 distribution with mean 0.1, clipped to [0.01, 0.5], with a fixed seed across
-runs. Device heterogeneity (CPU speed, data sizes, budgets) is configured
-here so every experiment is reproducible from a seed.
+runs.  On top of that stationary mode this module adds the non-stationary
+environments the "no knowledge of future dynamics" claim is stressed
+against:
+
+* ``mode='markov'`` — a per-client two-state Gilbert-Elliott chain
+  (good/bad) with transition probabilities ``p_gb`` (good->bad) and
+  ``p_bg`` (bad->good); each round's gain is a truncated exponential whose
+  mean is the current state's (``mean_gain`` good, ``bad_gain`` bad).  The
+  chain starts from its stationary distribution, so every round's marginal
+  occupancy is the stationary ``pi``.
+* per-client dropout/straggler tails — a Bernoulli ``[T, N]`` alive mask
+  (:func:`sample_dropout_mask`); dropped clients reuse the inert-slot
+  masking in ``_build_scan``.
+
+Stream separation contract: the STATIONARY gains consume the raw rollout
+key exactly as before the non-stationary modes existed; the Markov chain
+draws from ``fold_in(key, 1)`` and the dropout mask from
+``fold_in(key, 2)``.  Adding either axis therefore leaves existing
+stationary-lane trajectories bitwise unchanged (regression-tested in
+``tests/test_environment_stats.py``).
+
+Device heterogeneity (CPU speed, data sizes, budgets) is configured here so
+every experiment is reproducible from a seed.
 """
 
 from __future__ import annotations
@@ -22,6 +43,17 @@ from repro.core import system_model as sm
 # is negligible (~1e-64); the final clip only ever touches that case.
 _REDRAWS = 64
 
+#: Channel-mode names in id order — the ScenarioGrid's ``chan_mode``
+#: column stores the index.
+CHANNEL_MODES = ("iid", "markov")
+CHANNEL_MODE_IDS = {name: i for i, name in enumerate(CHANNEL_MODES)}
+
+# Distinct fold_in streams per random axis.  Stationary gains use the
+# RAW key (the pre-existing contract — never renumber); everything added
+# later folds a fresh constant so new axes cannot perturb old streams.
+_MARKOV_FOLD = 1
+_DROPOUT_FOLD = 2
+
 
 @dataclasses.dataclass(frozen=True)
 class ChannelConfig:
@@ -29,6 +61,25 @@ class ChannelConfig:
     min_gain: float = 0.01
     max_gain: float = 0.5
     seed: int = 0
+    #: 'iid' (the paper's stationary draw) or 'markov' (Gilbert-Elliott).
+    mode: str = "iid"
+    #: Bad-state mean gain (markov mode only).
+    bad_gain: float = 0.02
+    #: P(good -> bad) per round.
+    p_gb: float = 0.0
+    #: P(bad -> good) per round.
+    p_bg: float = 0.0
+    #: Per-client per-round dropout probability.
+    dropout: float = 0.0
+
+    def __post_init__(self):
+        if self.mode not in CHANNEL_MODE_IDS:
+            raise ValueError(f"unknown channel mode {self.mode!r} "
+                             f"(known: {CHANNEL_MODES})")
+        if not (0.0 <= self.p_gb <= 1.0 and 0.0 <= self.p_bg <= 1.0):
+            raise ValueError("transition probabilities must lie in [0, 1]")
+        if not 0.0 <= self.dropout < 1.0:
+            raise ValueError("dropout rate must lie in [0, 1)")
 
 
 def sample_gains(key: jax.Array, num_rounds: int, num_devices: int,
@@ -52,24 +103,120 @@ def sample_gains(key: jax.Array, num_rounds: int, num_devices: int,
     return jnp.clip(h, min_gain, max_gain).astype(jnp.float32)
 
 
-class ChannelProcess:
-    """IID exponential channel gains, clipped to a reasonable range.
+def markov_stationary(p_gb, p_bg):
+    """Stationary bad-state probability of the two-state chain.
 
-    The paper filters outliers outside [0.01, 0.5]; we redraw instead of
+    ``pi_bad = p_gb / (p_gb + p_bg)``; a degenerate chain (both
+    probabilities zero) never leaves its initial state, and we define its
+    stationary distribution as all-good.
+    """
+    denom = jnp.asarray(p_gb, jnp.float32) + jnp.asarray(p_bg, jnp.float32)
+    return jnp.where(denom > 0.0,
+                     p_gb / jnp.maximum(denom, 1e-12), 0.0)
+
+
+def sample_markov_states(key: jax.Array, num_rounds: int, num_devices: int,
+                         p_gb, p_bg) -> jax.Array:
+    """Per-client Gilbert-Elliott state sequence ``[T, N]`` int32 (0 good,
+    1 bad), initial state drawn from the stationary distribution."""
+    k_init, k_steps = jax.random.split(key)
+    pi_bad = markov_stationary(p_gb, p_bg)
+    s0 = (jax.random.uniform(k_init, (num_devices,)) < pi_bad
+          ).astype(jnp.int32)
+    u = jax.random.uniform(k_steps, (num_rounds, num_devices))
+
+    def step(s, u_t):
+        nxt = jnp.where(s == 0, (u_t < p_gb).astype(jnp.int32),
+                        1 - (u_t < p_bg).astype(jnp.int32))
+        return nxt, s
+
+    _, states = jax.lax.scan(step, s0, u)
+    return states
+
+
+def sample_gains_markov(key: jax.Array, num_rounds: int, num_devices: int,
+                        mean_gain, bad_gain, min_gain, max_gain,
+                        p_gb, p_bg) -> jax.Array:
+    """Gilbert-Elliott gains ``[T, N]``: a state chain modulates the mean
+    of the same truncated-exponential redraw scheme as the i.i.d. mode.
+
+    Consumes ``fold_in(key, 1)`` (see the module docstring's stream
+    separation contract), so it shares a rollout key with
+    :func:`sample_gains` without perturbing the stationary stream.
+    """
+    k_states, k_draws = jax.random.split(
+        jax.random.fold_in(key, _MARKOV_FOLD))
+    states = sample_markov_states(k_states, num_rounds, num_devices,
+                                  p_gb, p_bg)
+    mean = jnp.where(states == 1, jnp.asarray(bad_gain, jnp.float32),
+                     jnp.asarray(mean_gain, jnp.float32))
+    draws = jax.random.exponential(
+        k_draws, (_REDRAWS, num_rounds, num_devices)) * mean
+    ok = (draws >= min_gain) & (draws <= max_gain)
+    first = jnp.argmax(ok, axis=0)
+    h = jnp.take_along_axis(draws, first[None], axis=0)[0]
+    return jnp.clip(h, min_gain, max_gain).astype(jnp.float32)
+
+
+def sample_channel_sequence(key: jax.Array, num_rounds: int,
+                            num_devices: int, mode, mean_gain, bad_gain,
+                            min_gain, max_gain, p_gb, p_bg) -> jax.Array:
+    """Mode-dispatched gains ``[T, N]`` with a TRACED mode id.
+
+    Both modes are computed and a ``where`` selects — pregeneration-time
+    cost only, and the select is exact, so an ``'iid'`` lane's output is
+    bitwise the plain :func:`sample_gains` stream (the stationary
+    regression contract) while the arena vmaps ONE function over
+    mixed-mode scenario columns.
+    """
+    stat = sample_gains(key, num_rounds, num_devices, mean_gain,
+                        min_gain, max_gain)
+    mark = sample_gains_markov(key, num_rounds, num_devices, mean_gain,
+                               bad_gain, min_gain, max_gain, p_gb, p_bg)
+    mode_i = jnp.asarray(mode, jnp.int32)
+    return jnp.where(mode_i == CHANNEL_MODE_IDS["markov"], mark, stat)
+
+
+def sample_dropout_mask(key: jax.Array, num_rounds: int, num_devices: int,
+                        rate) -> jax.Array:
+    """Per-client alive mask ``[T, N]`` float32 (1.0 = alive).
+
+    Bernoulli(1 - rate) per (round, client), drawn from the dedicated
+    ``fold_in(key, 2)`` stream so a zero-rate lane still consumes NO
+    randomness shared with the gains (adding the axis cannot move any
+    existing trajectory).
+    """
+    u = jax.random.uniform(jax.random.fold_in(key, _DROPOUT_FOLD),
+                           (num_rounds, num_devices))
+    return (u >= jnp.asarray(rate, jnp.float32)).astype(jnp.float32)
+
+
+class ChannelProcess:
+    """Channel gains from a seeded host process (numpy) or device draws.
+
+    ``mode='iid'``: exponential gains clipped to a reasonable range.  The
+    paper filters outliers outside [0.01, 0.5]; we redraw instead of
     clipping so the stationary distribution is a *truncated* exponential
     (clipping would put atoms at the boundaries and bias the mean).
+
+    ``mode='markov'``: the Gilbert-Elliott chain of
+    :func:`sample_gains_markov` — per-client good/bad states modulate the
+    truncated-exponential mean; the host mirror keeps a persistent state
+    vector across :meth:`sample` calls.
 
     Redraws are vectorised: a ``[64, ...]`` block of candidates is drawn
     at once and each device takes its first in-range value — no
     data-dependent host loop, so whole ``[T, N]`` channel sequences
     (:meth:`sample_sequence`, or :meth:`sample_jax` for device arrays)
-    are one vectorised draw.
+    are one vectorised draw (markov mode loops over rounds for the chain,
+    but stays vectorised over devices and candidates).
     """
 
     def __init__(self, num_devices: int, cfg: ChannelConfig = ChannelConfig()):
         self.num_devices = num_devices
         self.cfg = cfg
         self._rng = np.random.default_rng(cfg.seed)
+        self._state: Optional[np.ndarray] = None  # markov host state [N]
 
     def _first_in_range(self, draws, xp=np):
         """[R, ...] candidate block -> first in-range value along axis 0."""
@@ -81,7 +228,35 @@ class ChannelProcess:
         # the clip puts only those (measure ~exp(-64)) on the boundary
         return xp.clip(h, cfg.min_gain, cfg.max_gain).astype(xp.float32)
 
+    # -- markov host mirror ------------------------------------------------
+
+    def _init_state(self) -> np.ndarray:
+        pi_bad = float(markov_stationary(self.cfg.p_gb, self.cfg.p_bg))
+        return (self._rng.uniform(size=self.num_devices) < pi_bad
+                ).astype(np.int32)
+
+    def _advance_state(self, s: np.ndarray) -> np.ndarray:
+        u = self._rng.uniform(size=self.num_devices)
+        return np.where(s == 0, (u < self.cfg.p_gb).astype(np.int32),
+                        1 - (u < self.cfg.p_bg).astype(np.int32))
+
+    def markov_state_sequence(self, num_rounds: int) -> np.ndarray:
+        """[T, N] int32 host state sequence, advancing the persistent
+        chain (statistical mirror of :func:`sample_markov_states`; the
+        numpy and jax streams are independent)."""
+        if self._state is None:
+            self._state = self._init_state()
+        states = np.empty((num_rounds, self.num_devices), np.int32)
+        for t in range(num_rounds):
+            states[t] = self._state
+            self._state = self._advance_state(self._state)
+        return states
+
+    # -- sampling ----------------------------------------------------------
+
     def sample(self) -> np.ndarray:
+        if self.cfg.mode == "markov":
+            return self.sample_sequence(1)[0]
         return self._first_in_range(self._rng.exponential(
             self.cfg.mean_gain, (_REDRAWS, self.num_devices)))
 
@@ -89,12 +264,21 @@ class ChannelProcess:
                         ) -> np.ndarray:
         """[T, N] gains for a whole rollout — vectorised, no host loop
         over rounds (chunked at ``max_block`` rounds to bound the [64, T,
-        N] candidate block's memory)."""
+        N] candidate block's memory).  Markov mode draws the state chain
+        first, then one mean-modulated candidate block per chunk."""
         out = []
         for t0 in range(0, num_rounds, max_block):
             t = min(max_block, num_rounds - t0)
-            out.append(self._first_in_range(self._rng.exponential(
-                self.cfg.mean_gain, (_REDRAWS, t, self.num_devices))))
+            if self.cfg.mode == "markov":
+                states = self.markov_state_sequence(t)
+                mean = np.where(states == 1, self.cfg.bad_gain,
+                                self.cfg.mean_gain).astype(np.float32)
+                draws = self._rng.exponential(
+                    1.0, (_REDRAWS, t, self.num_devices)) * mean
+            else:
+                draws = self._rng.exponential(
+                    self.cfg.mean_gain, (_REDRAWS, t, self.num_devices))
+            out.append(self._first_in_range(draws))
         return np.concatenate(out) if out else np.zeros(
             (0, self.num_devices), np.float32)
 
@@ -104,12 +288,32 @@ class ChannelProcess:
         None) drawn entirely on device, so ``run_scan``'s precomputed
         channel sequences never touch the host.  Keyed by ``key``, not
         the process seed (jax and numpy streams are independent).
-        Delegates to the pure :func:`sample_gains` (the form the
-        ScenarioArena vmaps over per-scenario channel statistics)."""
+        Delegates to the pure samplers (the forms the ScenarioArena vmaps
+        over per-scenario channel statistics) — stationary mode consumes
+        the raw key, markov mode the ``fold_in(key, 1)`` stream, exactly
+        as the arena's pregenerated-gains path does."""
         t = 1 if num_rounds is None else num_rounds
-        h = sample_gains(key, t, self.num_devices, self.cfg.mean_gain,
-                         self.cfg.min_gain, self.cfg.max_gain)
+        cfg = self.cfg
+        if cfg.mode == "markov":
+            h = sample_gains_markov(key, t, self.num_devices,
+                                    cfg.mean_gain, cfg.bad_gain,
+                                    cfg.min_gain, cfg.max_gain,
+                                    cfg.p_gb, cfg.p_bg)
+        else:
+            h = sample_gains(key, t, self.num_devices, cfg.mean_gain,
+                             cfg.min_gain, cfg.max_gain)
         return h[0] if num_rounds is None else h
+
+    def dropout_jax(self, key: jax.Array, num_rounds: int) -> jax.Array:
+        """[T, N] alive mask from the dedicated dropout stream of the
+        SAME rollout key the gains consume (see module docstring)."""
+        return sample_dropout_mask(key, num_rounds, self.num_devices,
+                                   self.cfg.dropout)
+
+    def dropout_sequence(self, num_rounds: int) -> np.ndarray:
+        """[T, N] host alive mask (numpy stream; statistical mirror)."""
+        u = self._rng.uniform(size=(num_rounds, self.num_devices))
+        return (u >= self.cfg.dropout).astype(np.float32)
 
     def stream(self) -> Iterator[np.ndarray]:
         while True:

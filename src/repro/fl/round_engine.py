@@ -126,6 +126,12 @@ def _default_donate() -> bool:
     return jax.default_backend() != "cpu"
 
 
+def _default_select(sp, t, h, queues, q, key, slots, kvec, cid):
+    """The historical slot fill — the paper's i.i.d. draw; ``cid`` is
+    ignored (selection mode baked into the executable)."""
+    return pol.sampled_selection(sp, t, h, queues, q, key, slots, kvec)
+
+
 class RoundEngine:
     """Executes FL rounds as fused, device-resident computations.
 
@@ -515,8 +521,9 @@ class RoundEngine:
         return round_fn, (all_x, all_y, all_steps, all_sizes), (steps,
                                                                 masked)
 
-    def _build_scan(self, k: int, decide_fn, round_fn, eval_fn=None,
-                    eval_every: int = 0):
+    def _build_scan(self, k: int, decide_fn, round_fn, select_fn=None,
+                    eval_fn=None, eval_every: int = 0,
+                    use_dropout: bool = False):
         """Full-rollout scan body; UN-jitted (``run_scan`` jits it, the
         ScenarioArena vmaps it over a scenario axis first).
 
@@ -527,6 +534,29 @@ class RoundEngine:
         :meth:`_scan_plan`.  ``eb`` is the rollout's energy budget
         ``[N]`` as a traced input (the scenario axis sweeps it), applied
         over ``sp`` before anything reads it.
+
+        ``select_fn(sp, t, h, queues, q, key, slots, kvec, cid) ->
+        drawn [K_max] int32`` fills the client slots from the decision —
+        ``None`` uses the paper's i.i.d. draw
+        (``policy.sampled_selection``, byte-identical to the historical
+        inline code), a fixed rule comes from
+        :meth:`_fixed_policy_select`, and the arena passes the traced
+        ``policy.select_by_id`` dispatch so deterministic controllers
+        (round-robin's cyclic schedule, DivFL's facility-location greedy)
+        ride the same scan.  Every mode must be prefix-stable in the slot
+        index (the padded-K invariant below).
+
+        ``use_dropout`` (STATIC) threads a per-round alive mask
+        ``drop_seq`` ([T, N] float, 1.0 = alive) through the scan:
+        dropped clients reuse the inert-slot masking — their eq.-(4)
+        coefficient, loss contribution, and wall-time/energy terms are
+        zeroed, exactly like padded slots — but they stay in the
+        ``selected`` output (the dispatch footprint is selection-, not
+        survival-, dependent) and the expected-energy queue drift is
+        untouched (the controller plans on expectations; realized
+        dropouts are a data-plane event).  ``False`` builds the exact
+        historical trace — the dropout axis cannot perturb existing
+        rollouts (``drop_seq`` is passed as ``None`` and never read).
 
         Padded-K contract: ``k`` is the STATIC slot count ``K_max`` and
         the traced ``k_act`` (scalar int) / ``kvec`` (``[N]`` float, the
@@ -581,8 +611,11 @@ class RoundEngine:
         unchanged.  Because ``t0`` is traced, equal-length segments share
         one executable.
         """
-        def scan_fn(params, queues, sp, eb, data, h_seq, lr_seq, rng, V,
-                    lam, cid, kvec, k_act, eval_data, t0, last_ev):
+        if select_fn is None:
+            select_fn = _default_select
+
+        def scan_fn(params, queues, sp, eb, data, h_seq, drop_seq, lr_seq,
+                    rng, V, lam, cid, kvec, k_act, eval_data, t0, last_ev):
             sp_run = dataclasses.replace(sp, energy_budget=eb)
             n = sp_run.num_devices
             w = sp_run.data_weights
@@ -596,23 +629,30 @@ class RoundEngine:
                     params, queues, rng, last_ev = carry
                 else:
                     params, queues, rng = carry
-                t_idx, h, lr = inp
+                if use_dropout:
+                    t_idx, h, alive, lr = inp
+                else:
+                    t_idx, h, lr = inp
                 dec = decide_fn(sp_run, h, queues, V, lam, cid, kvec)
                 rng, k_sel, k_cli = jax.random.split(rng, 3)
-                # prefix-stable draws: slot i's selection / client key
-                # depend only on (round key, i), never on K_max — the
-                # padded-K invariant above
-                sel_keys = jax.vmap(
-                    lambda i: jax.random.fold_in(k_sel, i))(slots)
-                drawn = jax.vmap(
-                    lambda sk: jax.random.choice(sk, n, (), replace=True,
-                                                 p=dec.q))(sel_keys)
+                # slot fill from the decision — every mode's slot i
+                # depends only on (round inputs, i), never on K_max:
+                # the padded-K invariant above
+                drawn = select_fn(sp_run, t_idx, h, queues, dec.q, k_sel,
+                                  slots, kvec, cid)
                 selected = jnp.where(active, drawn, 0)
                 rngs = jax.vmap(
                     lambda i: jax.random.fold_in(k_cli, i))(slots)
+                if use_dropout:
+                    # realized dropouts zero the slot exactly like a
+                    # padded slot; `act` replaces `af` everywhere a
+                    # surviving upload is what counts
+                    act = af * jnp.take(alive, selected)
+                else:
+                    act = af
                 coeffs = (jnp.take(w, selected) /
                           (jnp.take(kvec, selected) *
-                           jnp.take(dec.q, selected)) * af)
+                           jnp.take(dec.q, selected)) * act)
                 params, losses = round_fn(params, data, selected, coeffs,
                                           lr, rngs)
                 queues = vq.update_queues(
@@ -621,13 +661,24 @@ class RoundEngine:
                                         k=kvec))
                 t = sm.round_time(sp_run, h, dec.p, dec.f, k=kvec)
                 e = sm.round_energy(sp_run, h, dec.p, dec.f, k=kvec)
+                if use_dropout:
+                    loss = (jnp.sum(losses * act) /
+                            jnp.maximum(jnp.sum(act), 1.0))
+                    live = active & (act > 0.0)
+                    # all slots dropped: no upload finished this round
+                    wall = jnp.maximum(jnp.max(jnp.where(
+                        live, jnp.take(t, selected), -jnp.inf)), 0.0)
+                else:
+                    loss = jnp.sum(losses * af) / k_f
+                    live = active
+                    wall = jnp.max(jnp.where(
+                        live, jnp.take(t, selected), -jnp.inf))
                 # inactive slots scatter to the dropped out-of-range row n
                 mask = jnp.zeros((n,), jnp.float32).at[
-                    jnp.where(active, selected, n)].set(1.0, mode="drop")
+                    jnp.where(live, selected, n)].set(1.0, mode="drop")
                 out = dict(
-                    loss=jnp.sum(losses * af) / k_f,
-                    wall_time=jnp.max(jnp.where(
-                        active, jnp.take(t, selected), -jnp.inf)),
+                    loss=loss,
+                    wall_time=wall,
                     energy_mean=(jnp.sum(e * mask) /
                                  jnp.maximum(jnp.sum(mask), 1.0)),
                     queue_mean=jnp.mean(queues),
@@ -647,7 +698,11 @@ class RoundEngine:
                 return (params, queues, rng), out
 
             num_rounds = h_seq.shape[0]
-            xs = (t0 + jnp.arange(num_rounds), h_seq, lr_seq)
+            if use_dropout:
+                xs = (t0 + jnp.arange(num_rounds), h_seq, drop_seq,
+                      lr_seq)
+            else:
+                xs = (t0 + jnp.arange(num_rounds), h_seq, lr_seq)
             if eval_fn is not None:
                 last_ev0 = (eval_fn(params, eval_data) if last_ev is None
                             else last_ev)
@@ -671,10 +726,24 @@ class RoundEngine:
 
         return decide
 
+    @staticmethod
+    def _fixed_policy_select(policy: str):
+        """A ``select_fn`` for :meth:`_build_scan` that always runs one
+        named policy's selection mode (no switch — and for sampled-mode
+        policies the trace is byte-identical to the historical inline
+        draw, the bitwise anchor the arena lanes replay against)."""
+        fn = pol.SELECT_FNS[pol.SELECTION_MODES[policy]]
+
+        def select(sp, t, h, queues, q, key, slots, kvec, cid):
+            return fn(sp, t, h, queues, q, key, slots, kvec)
+
+        return select
+
     def run_scan(self, global_params: PyTree, sp: sm.SystemParams,
                  bank: AnyBank, h_seq: np.ndarray, lr_seq: np.ndarray,
                  rng: jax.Array, *, queues: Optional[jax.Array] = None,
-                 policy: str = "lroa", V: float = 0.0, lam: float = 0.0
+                 policy: str = "lroa", V: float = 0.0, lam: float = 0.0,
+                 drop_seq: Optional[np.ndarray] = None
                  ) -> Tuple[PyTree, jax.Array, Dict[str, np.ndarray]]:
         """Run ``h_seq.shape[0]`` full Algorithm-1 rounds in one jitted scan.
 
@@ -689,24 +758,32 @@ class RoundEngine:
         the single-bucket scan unchanged.  ``h_seq``: [T, N] channel gains
         (``ChannelProcess.sample_sequence`` or ``sample_jax`` precompute
         them without host loops); ``lr_seq``: [T] learning rates.
-        ``policy`` is any scan-traceable rule in ``repro.core.policy.
-        POLICIES`` — 'lroa' (Algorithm 2 decisions from V/lam), 'uni_d'
-        (uniform q, dynamic f/p), or 'uni_s' (uniform q, static
-        resources).  Returns (final params, final queues, per-round
-        metric arrays).  Both the params pytree and the ``queues`` array
-        are donated off-CPU — callers must use the returned values, not
-        the arguments.  Bank buffers are never donated.
+        ``policy`` is any rule in the ``repro.core.policy.POLICIES``
+        controller zoo — every registered controller (including DivFL's
+        in-trace facility-location greedy and the deterministic
+        round-robin schedule) runs fused; the policy's decide rule AND
+        its selection mode are both baked into the executable.
+        ``drop_seq`` ([T, N] float, 1.0 = alive, optional) threads a
+        per-round realized-dropout mask through the scan; ``None`` (the
+        default) builds the exact historical no-dropout trace.  Returns
+        (final params, final queues, per-round metric arrays).  Both the
+        params pytree and the ``queues`` array are donated off-CPU —
+        callers must use the returned values, not the arguments.  Bank
+        buffers are never donated.
         """
         if policy not in pol.POLICY_IDS:
             raise ValueError(f"unknown policy {policy!r} (scan-traceable: "
-                             f"{pol.POLICIES}; DivFL is host-only)")
+                             f"{pol.POLICIES})")
+        use_dropout = drop_seq is not None
         round_fn, data, bank_key = self._scan_plan(bank)
-        key = (bank_key, sp.sample_count, policy)
+        key = (bank_key, sp.sample_count, policy, use_dropout)
         fn = self._scan_fns.get(key)
         if fn is None:
             scan_fn = self._build_scan(sp.sample_count,
                                        self._fixed_policy_decide(policy),
-                                       round_fn)
+                                       round_fn,
+                                       self._fixed_policy_select(policy),
+                                       use_dropout=use_dropout)
             donate = (0, 1) if self.donate else ()
             fn = self._scan_fns[key] = jax.jit(scan_fn,
                                                donate_argnums=donate)
@@ -721,6 +798,7 @@ class RoundEngine:
             global_params, queues, sp,
             jnp.asarray(sp.energy_budget, jnp.float32), data,
             jnp.asarray(h_seq, jnp.float32),
+            (jnp.asarray(drop_seq, jnp.float32) if use_dropout else None),
             jnp.asarray(lr_seq, jnp.float32), rng,
             jnp.full((n,), V, jnp.float32), jnp.full((n,), lam,
                                                      jnp.float32),

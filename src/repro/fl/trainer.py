@@ -13,7 +13,8 @@ non-iid splits would otherwise inflate the single global bucket to
   1. observe channel gains h^t (ChannelProcess)                      [host]
   2. controller decides (f^t, p^t, q^t) — Algorithm 2 for LROA       [jit]
   3. sample K^t draws with replacement by q^t (DivFL selects
-     deterministically)                                              [host]
+     deterministically via facility-location greedy on the shared
+     channel-feature similarity)                                     [host]
   4. + 5. the fused fast path (``RoundEngine.round_step``): the K
      selected clients are gathered from the bank *inside* a SINGLE
      jitted computation (``jnp.take`` over the ``[N, B, ...]`` stacks)
@@ -28,12 +29,15 @@ non-iid splits would otherwise inflate the single global bucket to
   6. queues update; latency += max_{n in K^t} T_n^t (eq. 10), energy
      accrues                                                         [host]
 
-DivFL keeps the sequential slow path (one ``local_update`` per client):
-its controller must observe each client's update vector between
-trainings.  It reads each client's true examples as a bank slice
-(``ClientBank.client_view``), so the bank is the single source of client
-data either way.  ``use_engine=False`` forces the slow path everywhere —
-the equivalence tests pin the two paths against each other.
+Every controller — DivFL included — rides the fused fast path: DivFL's
+selection is a pure function of the round's channel gains (the same
+facility-location greedy the arena traces), so no per-client host
+round-trip is needed.  ``use_engine=False`` forces the sequential slow
+path (one ``local_update`` per client, reading each client's true
+examples as a bank slice via ``ClientBank.client_view``) — there DivFL
+additionally observes each update vector between trainings, which
+enriches its similarity metric from round 1 on (the reference
+semantics).  The equivalence tests pin the two paths against each other.
 """
 
 from __future__ import annotations
@@ -129,9 +133,11 @@ class FederatedTrainer:
     @property
     def _fused(self) -> bool:
         """True when rounds run on the fused engine fast path (the single
-        eligibility rule shared by run_round, warmup, and run)."""
-        return self.use_engine and not isinstance(self.controller,
-                                                  DivFLController)
+        eligibility rule shared by run_round, warmup, and run).  Every
+        controller is eligible — DivFL's selection is a pure function of
+        the round's channel gains, so nothing needs the per-client
+        host loop any more."""
+        return self.use_engine
 
     # -- warmup -----------------------------------------------------------
 
@@ -259,7 +265,7 @@ class FederatedTrainer:
         q = np.asarray(decision.q)
 
         if isinstance(self.controller, DivFLController):
-            selected = self.controller.select()
+            selected = self.controller.select(h)
         else:
             selected = fl_server.sample_clients(self._np_rng, q,
                                                 self.params.sample_count)

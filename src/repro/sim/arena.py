@@ -96,7 +96,9 @@ from jax.sharding import PartitionSpec as P
 from repro.core import policy as pol
 from repro.core import system_model as sm
 from repro.core.controller import estimate_hyperparams_arrays
-from repro.fl.environment import sample_gains
+from repro.fl.environment import (CHANNEL_MODE_IDS, CHANNEL_MODES,
+                                  sample_channel_sequence,
+                                  sample_dropout_mask)
 from repro.fl.round_engine import bank_layout_key
 from repro.sim.cost_model import CostModel
 from repro.sim.dispatch import DispatchPlan, lane_footprints, plan_dispatch
@@ -133,14 +135,6 @@ def aot_cache_warmup_supported() -> bool:
             _AOT_WARMUP_SUPPORTED = False
     return _AOT_WARMUP_SUPPORTED
 
-_DIVFL_ERROR = (
-    "DivFL is not scan-traceable: its selection is a stateful submodular "
-    "maximisation over observed client updates, so it cannot run in the "
-    "ScenarioArena.  Run it on the sequential trainer path instead "
-    "(FederatedTrainer with a DivFLController) and compare reports "
-    "host-side.")
-
-
 def _as_f32(value, s: int) -> np.ndarray:
     return np.broadcast_to(np.asarray(value, np.float32), (s,)).copy()
 
@@ -153,8 +147,14 @@ class ScenarioGrid:
     ``energy_scale`` multiplies the base ``SystemParams.energy_budget``;
     (``mean_gain``, ``min_gain``, ``max_gain``) are the per-scenario
     truncated-exponential channel statistics; ``sample_count`` is K.
-    Build with :meth:`create` (broadcasting scalars) or :meth:`product`
-    (cartesian sweep axes).
+    ``chan_mode`` selects the channel process per lane
+    (``repro.fl.environment.CHANNEL_MODE_IDS`` — 'iid' or 'markov'),
+    with (``bad_gain``, ``p_gb``, ``p_bg``) the Gilbert-Elliott
+    bad-state mean and transition probabilities (ignored by 'iid'
+    lanes); ``dropout`` is the per-client per-round dropout probability
+    (0.0 = the historical always-alive trace).  Build with
+    :meth:`create` (broadcasting scalars) or :meth:`product` (cartesian
+    sweep axes).
     """
 
     controller: np.ndarray
@@ -166,12 +166,27 @@ class ScenarioGrid:
     min_gain: np.ndarray
     max_gain: np.ndarray
     sample_count: np.ndarray
+    # non-stationary axes; None defaults keep pre-zoo constructions
+    # (and their digests' field iteration order) valid
+    chan_mode: Optional[np.ndarray] = None
+    bad_gain: Optional[np.ndarray] = None
+    p_gb: Optional[np.ndarray] = None
+    p_bg: Optional[np.ndarray] = None
+    dropout: Optional[np.ndarray] = None
 
     def __len__(self) -> int:
         return int(self.controller.shape[0])
 
     def __post_init__(self):
         s = len(self)
+        defaults = dict(chan_mode=np.zeros((s,), np.int32),
+                        bad_gain=np.full((s,), 0.02, np.float32),
+                        p_gb=np.zeros((s,), np.float32),
+                        p_bg=np.zeros((s,), np.float32),
+                        dropout=np.zeros((s,), np.float32))
+        for name, default in defaults.items():
+            if getattr(self, name) is None:
+                object.__setattr__(self, name, default)
         for f in dataclasses.fields(self):
             arr = getattr(self, f.name)
             if arr.shape != (s,):
@@ -179,6 +194,15 @@ class ScenarioGrid:
                                  f"({s},), got {arr.shape}")
         if s == 0:
             raise ValueError("empty ScenarioGrid")
+        if np.any((self.chan_mode < 0) |
+                  (self.chan_mode >= len(CHANNEL_MODES))):
+            raise ValueError(f"chan_mode ids must index {CHANNEL_MODES}")
+        for name in ("p_gb", "p_bg"):
+            vals = getattr(self, name)
+            if np.any((vals < 0.0) | (vals > 1.0)):
+                raise ValueError(f"ScenarioGrid.{name} must lie in [0, 1]")
+        if np.any((self.dropout < 0.0) | (self.dropout >= 1.0)):
+            raise ValueError("ScenarioGrid.dropout must lie in [0, 1)")
         # jax.random.PRNGKey truncates seeds to 32 bits under the default
         # x64-disabled runtime, so seeds differing only above bit 31 would
         # silently run IDENTICAL lanes — reject them instead
@@ -216,8 +240,6 @@ class ScenarioGrid:
                                      f"for {pol.POLICIES}")
             else:
                 name = str(c)
-                if name == "divfl":
-                    raise ValueError(_DIVFL_ERROR)
                 if name not in pol.POLICY_IDS:
                     raise ValueError(f"unknown controller {name!r} "
                                      f"(scan-traceable: {pol.POLICIES})")
@@ -225,20 +247,43 @@ class ScenarioGrid:
             ids.append(cid)
         return np.asarray(ids, np.int32)
 
+    @staticmethod
+    def _channel_mode_ids(modes) -> np.ndarray:
+        ids = []
+        for m in np.atleast_1d(np.asarray(modes, object)):
+            if isinstance(m, (int, np.integer)):
+                mid = int(m)
+                if not 0 <= mid < len(CHANNEL_MODES):
+                    raise ValueError(f"channel mode id {mid} out of range "
+                                     f"for {CHANNEL_MODES}")
+            else:
+                name = str(m)
+                if name not in CHANNEL_MODE_IDS:
+                    raise ValueError(f"unknown channel mode {name!r} "
+                                     f"(known: {CHANNEL_MODES})")
+                mid = CHANNEL_MODE_IDS[name]
+            ids.append(mid)
+        return np.asarray(ids, np.int32)
+
     @classmethod
     def create(cls, controllers, seeds, V, lam, *, energy_scale=1.0,
                mean_gain=0.1, min_gain=0.01, max_gain=0.5,
-               sample_count=2, num_devices=None) -> "ScenarioGrid":
+               sample_count=2, chan_mode="iid", bad_gain=0.02, p_gb=0.0,
+               p_bg=0.0, dropout=0.0,
+               num_devices=None) -> "ScenarioGrid":
         """Element-wise grid: every argument broadcasts to the common
-        scenario count S (controllers by name or id).  ``num_devices``
-        (optional) validates every K against N up front."""
+        scenario count S (controllers by name or id, channel modes by
+        name or id).  ``num_devices`` (optional) validates every K
+        against N up front."""
         cls._check_sample_counts(sample_count, num_devices)
         ids = cls._controller_ids(controllers)
+        modes = cls._channel_mode_ids(chan_mode)
         seeds = np.atleast_1d(np.asarray(seeds, np.int64))
-        s = max(ids.shape[0], seeds.shape[0],
+        s = max(ids.shape[0], seeds.shape[0], modes.shape[0],
                 *(np.atleast_1d(np.asarray(v)).shape[0]
                   for v in (V, lam, energy_scale, mean_gain, min_gain,
-                            max_gain, sample_count)))
+                            max_gain, sample_count, bad_gain, p_gb, p_bg,
+                            dropout)))
         return cls(
             controller=np.broadcast_to(ids, (s,)).copy(),
             seed=np.broadcast_to(seeds, (s,)).copy(),
@@ -249,27 +294,42 @@ class ScenarioGrid:
             max_gain=_as_f32(max_gain, s),
             sample_count=np.broadcast_to(
                 np.asarray(sample_count, np.int32), (s,)).copy(),
+            chan_mode=np.broadcast_to(modes, (s,)).copy(),
+            bad_gain=_as_f32(bad_gain, s),
+            p_gb=_as_f32(p_gb, s), p_bg=_as_f32(p_bg, s),
+            dropout=_as_f32(dropout, s),
         )
 
     @classmethod
     def product(cls, controllers, seeds, V, lam, *, energy_scale=(1.0,),
                 mean_gain=(0.1,), min_gain=(0.01,), max_gain=(0.5,),
-                sample_count=(2,), num_devices=None) -> "ScenarioGrid":
+                sample_count=(2,), chan_mode=("iid",), bad_gain=(0.02,),
+                p_gb=(0.0,), p_bg=(0.0,), dropout=(0.0,),
+                num_devices=None) -> "ScenarioGrid":
         """Cartesian sweep: one scenario per element of the cross product
         of the given axes (the Sec. VII comparison grid: controllers x
-        seeds x hyper-parameters x budgets x channels x K).
-        ``num_devices`` (optional) validates every K against N up front —
-        a clear construction-time error instead of a failure inside the
-        rollout trace."""
+        seeds x hyper-parameters x budgets x channels x K x channel
+        modes x dropout).  The Gilbert-Elliott shape axes (``bad_gain``,
+        ``p_gb``, ``p_bg``) cross like any other axis — sweep them only
+        with a markov ``chan_mode`` in play, or they multiply lanes that
+        ignore them.  ``num_devices`` (optional) validates every K
+        against N up front — a clear construction-time error instead of
+        a failure inside the rollout trace."""
         cls._check_sample_counts(sample_count, num_devices)
         ids = cls._controller_ids(controllers)
+        modes = cls._channel_mode_ids(chan_mode)
         axes = [ids.tolist(), np.atleast_1d(seeds).tolist(),
                 np.atleast_1d(V).tolist(), np.atleast_1d(lam).tolist(),
                 np.atleast_1d(energy_scale).tolist(),
                 np.atleast_1d(mean_gain).tolist(),
                 np.atleast_1d(min_gain).tolist(),
                 np.atleast_1d(max_gain).tolist(),
-                np.atleast_1d(sample_count).tolist()]
+                np.atleast_1d(sample_count).tolist(),
+                modes.tolist(),
+                np.atleast_1d(bad_gain).tolist(),
+                np.atleast_1d(p_gb).tolist(),
+                np.atleast_1d(p_bg).tolist(),
+                np.atleast_1d(dropout).tolist()]
         rows = list(itertools.product(*axes))
         cols = list(zip(*rows))
         return cls(
@@ -282,6 +342,11 @@ class ScenarioGrid:
             min_gain=np.asarray(cols[6], np.float32),
             max_gain=np.asarray(cols[7], np.float32),
             sample_count=np.asarray(cols[8], np.int32),
+            chan_mode=np.asarray(cols[9], np.int32),
+            bad_gain=np.asarray(cols[10], np.float32),
+            p_gb=np.asarray(cols[11], np.float32),
+            p_bg=np.asarray(cols[12], np.float32),
+            dropout=np.asarray(cols[13], np.float32),
         )
 
     def take(self, idx: np.ndarray) -> "ScenarioGrid":
@@ -305,6 +370,24 @@ class ScenarioGrid:
     def controller_names(self) -> list:
         return [pol.POLICIES[c] for c in self.controller]
 
+    def channel_mode_names(self) -> list:
+        return [CHANNEL_MODES[m] for m in self.chan_mode]
+
+    def channel_config(self, s: int):
+        """Scenario ``s``'s channel statistics as a ``ChannelConfig`` —
+        the exact process an individual host replay of lane ``s`` must
+        sample from."""
+        from repro.fl.environment import ChannelConfig
+        return ChannelConfig(
+            mean_gain=float(self.mean_gain[s]),
+            min_gain=float(self.min_gain[s]),
+            max_gain=float(self.max_gain[s]),
+            seed=int(self.seed[s]),
+            mode=CHANNEL_MODES[int(self.chan_mode[s])],
+            bad_gain=float(self.bad_gain[s]),
+            p_gb=float(self.p_gb[s]), p_bg=float(self.p_bg[s]),
+            dropout=float(self.dropout[s]))
+
     def scenario_system_params(self, sp: sm.SystemParams, s: int
                                ) -> sm.SystemParams:
         """Scenario ``s``'s SystemParams — the exact parameters an
@@ -317,7 +400,12 @@ class ScenarioGrid:
 # module-level jits: a jit wrapper built inside a method would retrace
 # and recompile on every call (jax caches on callable identity)
 _sample_channels = jax.jit(
-    jax.vmap(sample_gains, in_axes=(0, None, None, 0, 0, 0)),
+    jax.vmap(sample_channel_sequence,
+             in_axes=(0, None, None, 0, 0, 0, 0, 0, 0, 0)),
+    static_argnums=(1, 2))
+
+_sample_dropout = jax.jit(
+    jax.vmap(sample_dropout_mask, in_axes=(0, None, None, 0)),
     static_argnums=(1, 2))
 
 
@@ -540,11 +628,14 @@ class Arena:
     def sample_channels(self, grid: ScenarioGrid, num_rounds: int,
                         num_devices: int) -> jax.Array:
         """Every scenario's channel sequence, ``[S, T, N]``, drawn on
-        device in one jit from the per-scenario (seed, mean, clip)
-        columns (vmapped ``environment.sample_gains``).  Cached by
-        (grid content, T, N): the draw is a pure function of those, so
-        repeated sweeps of a known grid (the service steady state) reuse
-        the device tensor instead of re-sampling it."""
+        device in one jit from the per-scenario (seed, mode, mean, clip,
+        chain) columns (vmapped ``environment.sample_channel_sequence``
+        — stationary lanes consume the raw channel key exactly as the
+        pre-zoo ``sample_gains`` did, markov lanes the ``fold_in(key,
+        1)`` stream).  Cached by (grid content, T, N): the draw is a
+        pure function of those, so repeated sweeps of a known grid (the
+        service steady state) reuse the device tensor instead of
+        re-sampling it."""
         key = self._grid_digest(grid, ("chan", num_rounds, num_devices))
         hit = self._chan_cache.get(key)
         if hit is not None:
@@ -553,10 +644,32 @@ class Arena:
         self.input_cache_misses += 1
         chan_keys, _ = scenario_keys(grid)
         h_all = _sample_channels(chan_keys, num_rounds, num_devices,
+                                 jnp.asarray(grid.chan_mode),
                                  jnp.asarray(grid.mean_gain),
+                                 jnp.asarray(grid.bad_gain),
                                  jnp.asarray(grid.min_gain),
-                                 jnp.asarray(grid.max_gain))
+                                 jnp.asarray(grid.max_gain),
+                                 jnp.asarray(grid.p_gb),
+                                 jnp.asarray(grid.p_bg))
         return self._cache_put(self._chan_cache, key, h_all)
+
+    def sample_dropout(self, grid: ScenarioGrid, num_rounds: int,
+                       num_devices: int) -> jax.Array:
+        """Every scenario's alive mask, ``[S, T, N]`` float32 (1.0 =
+        alive), from the DEDICATED ``fold_in(chan_key, 2)`` stream of
+        the same per-scenario channel keys — so enabling the axis never
+        perturbs the gains (the stream-separation regression contract).
+        Cached like :meth:`sample_channels`."""
+        key = self._grid_digest(grid, ("drop", num_rounds, num_devices))
+        hit = self._chan_cache.get(key)
+        if hit is not None:
+            self.input_cache_hits += 1
+            return hit
+        self.input_cache_misses += 1
+        chan_keys, _ = scenario_keys(grid)
+        drop_all = _sample_dropout(chan_keys, num_rounds, num_devices,
+                                   jnp.asarray(grid.dropout))
+        return self._cache_put(self._chan_cache, key, drop_all)
 
     def _lane_inputs(self, grid: ScenarioGrid, sp: sm.SystemParams) -> dict:
         """The per-lane device constants a group executable consumes —
@@ -608,7 +721,8 @@ class Arena:
         return (id(eval_bank.task), int(eval_every))
 
     def _build_group_fn(self, key: tuple, k: int, round_fn, eval_bank,
-                        eval_every, resume: bool = False):
+                        eval_every, resume: bool = False,
+                        use_dropout: bool = False):
         """jit( [shard_map(] vmap(scan body) [)] ) for one K group,
         stored in ``self._fns`` under the caller's ``key`` — (bank
         layout, K_max, shard count, eval config), built ONCE in
@@ -635,6 +749,10 @@ class Arena:
         def decide(sp, h, queues, V, lam, cid, kvec):
             return pol.decide_by_id(cid, sp, h, queues, V, lam, k=kvec)
 
+        def select(sp, t, h, queues, q, skey, slots, kvec, cid):
+            return pol.select_by_id(cid, sp, t, h, queues, q, skey,
+                                    slots, kvec)
+
         ek = self._eval_key(eval_bank, eval_every)
         # make_eval_fn closes over the TASK, not the bank: the cached
         # executable lives for the arena's lifetime, and capturing a
@@ -643,8 +761,10 @@ class Arena:
         eval_fn = (None if ek is None
                    else eval_bank.make_eval_fn(eval_bank.task))
         inner = self.engine._build_scan(k, decide, round_fn,
+                                        select_fn=select,
                                         eval_fn=eval_fn,
-                                        eval_every=eval_every or 0)
+                                        eval_every=eval_every or 0,
+                                        use_dropout=use_dropout)
 
         def scan_fn(*args):
             # runs at TRACE time only (the executable replays without
@@ -659,41 +779,45 @@ class Arena:
         # executable
         p_ax = 0 if resume else None
         ev_ax = 0 if resume else None
+        d_ax = 0 if use_dropout else None
         if self.batch == "vmap":
             batched = jax.vmap(scan_fn,
-                               in_axes=(p_ax, 0, None, 0, None, 0, None,
-                                        0, 0, 0, 0, 0, 0, None, None,
-                                        ev_ax))
+                               in_axes=(p_ax, 0, None, 0, None, 0, d_ax,
+                                        None, 0, 0, 0, 0, 0, 0, None,
+                                        None, ev_ax))
         else:
-            def batched(params, queues, sp, eb, data, h_seq, lr_seq, rng,
-                        V, lam, cid, kvec, k_act, eval_data, t0, last_ev):
+            def batched(params, queues, sp, eb, data, h_seq, drop_seq,
+                        lr_seq, rng, V, lam, cid, kvec, k_act, eval_data,
+                        t0, last_ev):
                 if resume:
                     def one(lane):
-                        (p_s, q0, eb_s, h_s, rng_s, V_s, lam_s, cid_s,
-                         kv_s, ka_s, ev_s) = lane
+                        (p_s, q0, eb_s, h_s, d_s, rng_s, V_s, lam_s,
+                         cid_s, kv_s, ka_s, ev_s) = lane
                         return scan_fn(p_s, q0, sp, eb_s, data, h_s,
-                                       lr_seq, rng_s, V_s, lam_s, cid_s,
-                                       kv_s, ka_s, eval_data, t0, ev_s)
+                                       d_s, lr_seq, rng_s, V_s, lam_s,
+                                       cid_s, kv_s, ka_s, eval_data, t0,
+                                       ev_s)
                     return jax.lax.map(one, (params, queues, eb, h_seq,
-                                             rng, V, lam, cid, kvec,
-                                             k_act, last_ev))
+                                             drop_seq, rng, V, lam, cid,
+                                             kvec, k_act, last_ev))
 
                 def one(lane):
-                    (q0, eb_s, h_s, rng_s, V_s, lam_s, cid_s, kv_s,
+                    (q0, eb_s, h_s, d_s, rng_s, V_s, lam_s, cid_s, kv_s,
                      ka_s) = lane
-                    return scan_fn(params, q0, sp, eb_s, data, h_s,
+                    return scan_fn(params, q0, sp, eb_s, data, h_s, d_s,
                                    lr_seq, rng_s, V_s, lam_s, cid_s,
                                    kv_s, ka_s, eval_data, t0, last_ev)
-                return jax.lax.map(one, (queues, eb, h_seq, rng, V, lam,
-                                         cid, kvec, k_act))
+                return jax.lax.map(one, (queues, eb, h_seq, drop_seq,
+                                         rng, V, lam, cid, kvec, k_act))
         if self.mesh is not None:
             ax = self.mesh_axis
             p_spec = P(ax) if resume else P()
+            d_spec = P(ax) if use_dropout else P()
             batched = shard_map(
                 batched, mesh=self.mesh,
-                in_specs=(p_spec, P(ax), P(), P(ax), P(), P(ax), P(),
-                          P(ax), P(ax), P(ax), P(ax), P(ax), P(ax), P(),
-                          P(), p_spec),
+                in_specs=(p_spec, P(ax), P(), P(ax), P(), P(ax), d_spec,
+                          P(), P(ax), P(ax), P(ax), P(ax), P(ax), P(ax),
+                          P(), P(), p_spec),
                 out_specs=P(ax), check_rep=False)
         # the queue carry (argnum 1) is donated off-CPU: the arena
         # allocates it per run, so the padded program reuses that buffer
@@ -701,10 +825,10 @@ class Arena:
         # padded-vs-grouped peak-memory parity audit (class docstring).
         # On the start executable params (argnum 0) are shared across
         # lanes and never donated; the resume executable's whole carry —
-        # params (0), queues (1), rng (7), last-eval (15) — is arena-
+        # params (0), queues (1), rng (8), last-eval (16) — is arena-
         # owned chunk output and donates between segments.
         if resume:
-            donate = (0, 1, 7, 15) if self.engine.donate else ()
+            donate = (0, 1, 8, 16) if self.engine.donate else ()
         else:
             donate = (1,) if self.engine.donate else ()
         fn = jax.jit(batched, donate_argnums=donate)
@@ -748,7 +872,7 @@ class Arena:
                    eval_every=None, tier_subset=None,
                    warm_aot: bool = False,
                    chunk_size: Optional[int] = None, chunk_store=None,
-                   h_digest=None):
+                   h_digest=None, drop_all=None):
         """One K group (uniform K, or a padded mixed-K grid when
         ``k_max`` is given) as one jitted program — or, with
         ``chunk_size``, as a pipeline of carry-donated scan segments.
@@ -780,15 +904,19 @@ class Arena:
         if k_max is None:
             k_max = int(grid.sample_count[0])
         sp_k = dataclasses.replace(sp, sample_count=k_max)
+        use_dropout = drop_all is not None
+        if use_dropout:
+            drop_all = jnp.asarray(drop_all, jnp.float32)
         round_fn, data, bank_key = self.engine._scan_plan(bank,
                                                           tier_subset)
         ek = self._eval_key(eval_bank, eval_every)
-        key = (bank_key, k_max, self._shards(), ek)
+        key = (bank_key, k_max, self._shards(), ek, use_dropout)
         built = 0
         fn = self._fns.get(key)
         if fn is None:
             fn = self._build_group_fn(key, k_max, round_fn,
-                                      eval_bank, eval_every)
+                                      eval_bank, eval_every,
+                                      use_dropout=use_dropout)
             built += 1
         s = len(grid)
         if s % self._shards():
@@ -803,19 +931,19 @@ class Arena:
         lr_dev = self._lr_device(lr_seq)
         num_rounds = int(h_all.shape[1])
 
-        def start_args(h_seg, lr_seg, q0):
+        def start_args(h_seg, d_seg, lr_seg, q0):
             # V/lam — and each lane's true K — are the materialized
             # [S, N] cached device constants (_build_scan's bitwise
             # contract); the queue carry is donated, so it is allocated
             # per run and no cached buffer ever flows into argnum 1
             return (global_params, q0, sp_k, lane["eb"], data, h_seg,
-                    lr_seg, lane["roll_keys"], lane["V"], lane["lam"],
-                    lane["cid"], lane["kvec"], lane["k_act"], eval_data,
-                    jnp.int32(0), None)
+                    d_seg, lr_seg, lane["roll_keys"], lane["V"],
+                    lane["lam"], lane["cid"], lane["kvec"],
+                    lane["k_act"], eval_data, jnp.int32(0), None)
 
         if chunk_size is None and chunk_store is None:
             # classic monolithic scan: one executable, one dispatch
-            args = start_args(h_all, lr_dev,
+            args = start_args(h_all, drop_all, lr_dev,
                               jnp.zeros((s, n), jnp.float32))
             if warm_aot:
                 fn.lower(*args).compile()
@@ -845,14 +973,19 @@ class Arena:
         if need_resume and rfn is None:
             rfn = self._build_group_fn(resume_key, k_max, round_fn,
                                        eval_bank, eval_every,
-                                       resume=True)
+                                       resume=True,
+                                       use_dropout=use_dropout)
             built += 1
 
-        def resume_args(c, h_seg, lr_seg, t0):
+        def drop_seg(t0, ln):
+            return (None if drop_all is None
+                    else drop_all[:, t0:t0 + ln])
+
+        def resume_args(c, h_seg, d_seg, lr_seg, t0):
             c_params, c_queues, c_extras = c
             c_ev = c_extras[1] if len(c_extras) > 1 else None
             return (c_params, c_queues, sp_k, lane["eb"], data, h_seg,
-                    lr_seg, c_extras[0], lane["V"], lane["lam"],
+                    d_seg, lr_seg, c_extras[0], lane["V"], lane["lam"],
                     lane["cid"], lane["kvec"], lane["k_act"], eval_data,
                     jnp.int32(t0), c_ev)
 
@@ -882,11 +1015,12 @@ class Arena:
                 seen.add(which)
                 if first:
                     fn.lower(*start_args(
-                        h_seg, lr_seg, q_struct)).compile()
+                        h_seg, drop_seg(t0, ln), lr_seg,
+                        q_struct)).compile()
                 else:
                     rfn.lower(*resume_args(
                         (p_struct, q_struct, extras_struct), h_seg,
-                        lr_seg, t0)).compile()
+                        drop_seg(t0, ln), lr_seg, t0)).compile()
             return None, None, None, built, 0
 
         # -- the pipeline: dispatch ahead, reduce behind -------------------
@@ -907,10 +1041,11 @@ class Arena:
             if carry is None and i == 0 and t_start == 0:
                 q0 = jnp.zeros((s, n), jnp.float32)
                 params, queues, extras, outs = fn(
-                    *start_args(h_seg, lr_seg, q0))
+                    *start_args(h_seg, drop_seg(t0, ln), lr_seg, q0))
             else:
                 params, queues, extras, outs = rfn(
-                    *resume_args(carry, h_seg, lr_seg, t0))
+                    *resume_args(carry, h_seg, drop_seg(t0, ln), lr_seg,
+                                 t0))
             dispatches += 1
             carry = (params, queues, extras)
             pending.append((outs, ln))
@@ -981,26 +1116,31 @@ class Arena:
                 return pol.decide_by_id(cid, sp_run, h, queues, V, lam,
                                         k=kvec)
 
+            def select(sp_run, t, h, queues, q, skey, slots, kvec, cid):
+                return pol.select_by_id(cid, sp_run, t, h, queues, q,
+                                        skey, slots, kvec)
+
             def noop_round(params, data, selected, coeffs, lr, rngs):
                 return params, jnp.zeros(selected.shape, jnp.float32)
 
-            inner = self.engine._build_scan(k_max, decide, noop_round)
+            inner = self.engine._build_scan(k_max, decide, noop_round,
+                                            select_fn=select)
             if self.batch == "vmap":
                 batched = jax.vmap(inner,
                                    in_axes=(None, 0, None, 0, None, 0,
-                                            None, 0, 0, 0, 0, 0, 0,
-                                            None, None, None))
+                                            None, None, 0, 0, 0, 0, 0,
+                                            0, None, None, None))
             else:
                 def batched(params, queues, sp_run, eb, data, h_seq,
-                            lr_seq, rng, V, lam, cid, kvec, k_act,
-                            eval_data, t0, last_ev):
+                            drop_seq, lr_seq, rng, V, lam, cid, kvec,
+                            k_act, eval_data, t0, last_ev):
                     def one(lane):
                         (q0, eb_s, h_s, rng_s, V_s, lam_s, cid_s, kv_s,
                          ka_s) = lane
                         return inner(params, q0, sp_run, eb_s, data,
-                                     h_s, lr_seq, rng_s, V_s, lam_s,
-                                     cid_s, kv_s, ka_s, eval_data, t0,
-                                     last_ev)
+                                     h_s, drop_seq, lr_seq, rng_s, V_s,
+                                     lam_s, cid_s, kv_s, ka_s,
+                                     eval_data, t0, last_ev)
                     return jax.lax.map(one, (queues, eb, h_seq, rng, V,
                                              lam, cid, kvec, k_act))
             fn = self._probe_fns[pk] = jax.jit(batched)
@@ -1009,7 +1149,7 @@ class Arena:
         sp_k = dataclasses.replace(sp, sample_count=k_max)
         _, _, _, outs = fn(
             jnp.zeros((1,)), jnp.zeros((s, n), jnp.float32), sp_k,
-            jnp.asarray(eb), None, jnp.asarray(h_np),
+            jnp.asarray(eb), None, jnp.asarray(h_np), None,
             jnp.zeros((num_rounds,), jnp.float32), roll_keys,
             jnp.asarray(np.broadcast_to(grid.V[:, None], (s, n))),
             jnp.asarray(np.broadcast_to(grid.lam[:, None], (s, n))),
@@ -1024,7 +1164,8 @@ class Arena:
         return fps
 
     def _plan(self, sp, bank, grid: ScenarioGrid, num_rounds: int,
-              h_all, *, runs: float, eval_key) -> DispatchPlan:
+              h_all, *, runs: float, eval_key,
+              use_dropout: bool = False) -> DispatchPlan:
         """The ``k_mode='auto'`` plan for this grid at the given reuse
         horizon (``runs=1`` for a cold :meth:`run`, ``math.inf`` for
         :meth:`warmup`'s steady state).  The cost model sees the arena's
@@ -1038,7 +1179,7 @@ class Arena:
         def is_cached(bucket) -> bool:
             bk = bank_layout_key(bank, bucket.tiers)
             return (bk, bucket.k_pad, self._shards(),
-                    eval_key) in self._fns
+                    eval_key, use_dropout) in self._fns
 
         return plan_dispatch(
             grid.sample_count, rounds=num_rounds,
@@ -1052,7 +1193,7 @@ class Arena:
                   plan: DispatchPlan, eval_bank=None, eval_every=None,
                   warm_aot: bool = False,
                   chunk_size: Optional[int] = None, chunk_store=None,
-                  h_digest=None):
+                  h_digest=None, drop_all=None):
         """Execute (or, with ``warm_aot``, AOT-compile) every bucket of
         ``plan`` and stitch the lanes back to grid order.  Params are
         stitched on DEVICE — one ``concatenate`` + one ``take`` per
@@ -1076,7 +1217,9 @@ class Arena:
                 eval_bank=eval_bank, eval_every=eval_every,
                 tier_subset=b.tiers, warm_aot=warm_aot,
                 chunk_size=chunk_size, chunk_store=chunk_store,
-                h_digest=h_digest)
+                h_digest=h_digest,
+                drop_all=(None if drop_all is None
+                          else drop_all[jnp.asarray(idx)]))
             built_total += int(built)
             bucket_meta.append(dict(
                 lanes=[int(i) for i in b.lanes], k_pad=int(b.k_pad),
@@ -1114,7 +1257,8 @@ class Arena:
 
     def run(self, global_params: PyTree, sp: sm.SystemParams, bank,
             grid: ScenarioGrid, num_rounds: int, lr_seq,
-            *, h_all: Optional[jax.Array] = None, eval_bank=None,
+            *, h_all: Optional[jax.Array] = None,
+            drop_all: Optional[jax.Array] = None, eval_bank=None,
             eval_every: Optional[int] = None,
             chunk_size: Optional[int] = None,
             chunk_store=None) -> RolloutReport:
@@ -1127,7 +1271,11 @@ class Arena:
         tiered).  ``lr_seq``: ``[T]`` learning rates shared across
         scenarios.  ``h_all``: optional precomputed ``[S, T, N]`` channel
         tensor (defaults to :meth:`sample_channels` from the grid's
-        seeds/statistics).
+        seeds/statistics — stationary or Gilbert-Elliott per the grid's
+        ``chan_mode`` column).  ``drop_all``: optional precomputed
+        ``[S, T, N]`` alive mask (defaults to :meth:`sample_dropout`
+        when any lane has ``dropout > 0``; an all-zero dropout column
+        builds the exact historical no-dropout executable).
 
         ``eval_bank``: optional :class:`repro.sim.eval.EvalBank` — the
         final ``[S, ...]`` params are evaluated in ONE vmapped dispatch
@@ -1169,7 +1317,8 @@ class Arena:
                             grid.scenario_system_params(sp, s), bank,
                             h_all[s], lr_seq, rng=scenario_keys(grid)[1][s],
                             policy=grid.controller_names()[s],
-                            V=grid.V[s], lam=grid.lam[s])
+                            V=grid.V[s], lam=grid.lam[s],
+                            drop_seq=drop_all[s])  # when dropout is on
         """
         s = len(grid)
         # same invariant (and message) as construction-time validation —
@@ -1203,6 +1352,17 @@ class Arena:
                 np.ascontiguousarray(np.asarray(h_all, np.float32))
                 .tobytes()).hexdigest())
 
+        if drop_all is None and np.any(np.asarray(grid.dropout) > 0.0):
+            drop_all = self.sample_dropout(grid, num_rounds,
+                                           sp.num_devices)
+        if drop_all is not None:
+            drop_all = jnp.asarray(drop_all, jnp.float32)
+            if drop_all.shape != (s, num_rounds, sp.num_devices):
+                raise ValueError(
+                    "drop_all must have shape "
+                    f"{(s, num_rounds, sp.num_devices)}, "
+                    f"got {drop_all.shape}")
+
         ks = np.unique(grid.sample_count)
         k_max = int(ks.max())
         meta = dict(k_mode=self.k_mode, k_groups=[int(k) for k in ks],
@@ -1217,12 +1377,13 @@ class Arena:
             plan = self._plan(sp, bank, grid, num_rounds, h_all,
                               runs=1.0,
                               eval_key=self._eval_key(eval_bank,
-                                                      eval_every))
+                                                      eval_every),
+                              use_dropout=drop_all is not None)
             params, queues, metrics, built, bucket_meta = self._run_plan(
                 global_params, sp, bank, grid, h_all, lr_seq, plan,
                 eval_bank=eval_bank, eval_every=eval_every,
                 chunk_size=chunk_size, chunk_store=chunk_store,
-                h_digest=h_digest)
+                h_digest=h_digest, drop_all=drop_all)
             meta.update(dispatches=sum(b["dispatches"]
                                        for b in bucket_meta),
                         executables_built=built,
@@ -1240,7 +1401,7 @@ class Arena:
                 global_params, sp, bank, grid, h_all, lr_seq,
                 k_max=k_max, eval_bank=eval_bank, eval_every=eval_every,
                 chunk_size=chunk_size, chunk_store=chunk_store,
-                h_digest=h_digest)
+                h_digest=h_digest, drop_all=drop_all)
             plan = DispatchPlan.padded(grid.sample_count)
             meta.update(dispatches=int(nd), executables_built=int(built),
                         executables_cached=len(self._fns),
@@ -1268,7 +1429,9 @@ class Arena:
                 global_params, sp, bank, sub, h_all[jnp.asarray(idx)],
                 lr_seq, eval_bank=eval_bank, eval_every=eval_every,
                 chunk_size=chunk_size, chunk_store=chunk_store,
-                h_digest=h_digest)
+                h_digest=h_digest,
+                drop_all=(None if drop_all is None
+                          else drop_all[jnp.asarray(idx)]))
             built_total += int(built)
             nd_total += int(nd)
             bucket_meta.append(dict(
@@ -1352,12 +1515,17 @@ class Arena:
             h_all = self.sample_channels(grid, num_rounds,
                                          sp.num_devices)
         h_all = jnp.asarray(h_all)
+        drop_all = None
+        if np.any(np.asarray(grid.dropout) > 0.0):
+            drop_all = self.sample_dropout(grid, num_rounds,
+                                           sp.num_devices)
         if chunk_size is None:
             chunk_size = self.chunk_size
         ek = self._eval_key(eval_bank, eval_every)
         if self.k_mode == "auto":
             plan = self._plan(sp, bank, grid, num_rounds, h_all,
-                              runs=math.inf, eval_key=ek)
+                              runs=math.inf, eval_key=ek,
+                              use_dropout=drop_all is not None)
         elif self.k_mode == "group":
             plan = DispatchPlan.grouped(grid.sample_count)
         else:
@@ -1367,7 +1535,7 @@ class Arena:
         params, _, _, built, _ = self._run_plan(
             global_params, sp, bank, grid, h_all, lr_seq, plan,
             eval_bank=eval_bank, eval_every=eval_every,
-            warm_aot=use_aot, chunk_size=chunk_size)
+            warm_aot=use_aot, chunk_size=chunk_size, drop_all=drop_all)
         if use_aot:
             if eval_bank is not None:
                 eval_bank.aot_warm(len(grid), global_params)

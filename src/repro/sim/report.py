@@ -33,6 +33,8 @@ from typing import Any, Dict, List
 import jax
 import numpy as np
 
+from repro.fl.environment import CHANNEL_MODES
+
 PyTree = Any
 
 
@@ -209,6 +211,8 @@ class RolloutReport:
                      energy_scale=float(g.energy_scale[s]),
                      mean_gain=float(g.mean_gain[s]),
                      sample_count=int(g.sample_count[s]),
+                     chan_mode=CHANNEL_MODES[int(g.chan_mode[s])],
+                     dropout=float(g.dropout[s]),
                      total_latency=float(tot[s]),
                      final_loss=float(loss[s]),
                      mean_energy=float(energy[s]),
@@ -221,7 +225,8 @@ class RolloutReport:
 
     def tradeoff_table(self) -> List[dict]:
         """Seed-aggregated trade-off points, one per distinct
-        (controller, V, lam, energy_scale, mean_gain, K) configuration —
+        (controller, V, lam, energy_scale, mean_gain, K, channel mode,
+        dropout) configuration —
         mean/std of total latency, final loss, and time-averaged energy
         across that configuration's seeds.  Sorted by (controller, V), so
         a V (resp. lambda / budget) sweep reads off as the paper's
@@ -231,16 +236,18 @@ class RolloutReport:
         groups: Dict[tuple, List[dict]] = {}
         for r in rows:
             key = (r["controller"], r["V"], r["lam"], r["energy_scale"],
-                   r["mean_gain"], r["sample_count"])
+                   r["mean_gain"], r["sample_count"], r["chan_mode"],
+                   r["dropout"])
             groups.setdefault(key, []).append(r)
         fields = ["total_latency", "final_loss", "mean_energy",
                   "final_queue_norm"] + sorted(self.final_metrics)
         table = []
         for key in sorted(groups):
             rs = groups[key]
-            ctrl, v, lam, escale, gain, k = key
+            ctrl, v, lam, escale, gain, k, mode, drop = key
             agg = dict(controller=ctrl, V=v, lam=lam, energy_scale=escale,
-                       mean_gain=gain, sample_count=k, num_seeds=len(rs))
+                       mean_gain=gain, sample_count=k, chan_mode=mode,
+                       dropout=drop, num_seeds=len(rs))
             for field in fields:
                 vals = np.asarray([r[field] for r in rs])
                 agg[field] = float(vals.mean())

@@ -69,7 +69,7 @@ def _mixed_grid(s=8, k=4):
 
 
 def _assert_lane_matches(rep, eng, bank, sp, params0, grid, h_all, lr, s,
-                         model_bitwise=True):
+                         model_bitwise=True, drop_all=None):
     """Arena lane ``s`` == the individual run_scan reproduction of it.
 
     ``model_bitwise=False`` relaxes the model trajectory to tight
@@ -81,7 +81,9 @@ def _assert_lane_matches(rep, eng, bank, sp, params0, grid, h_all, lr, s,
     sp_s = grid.scenario_system_params(sp, s)
     p, q, m = eng.run_scan(params0, sp_s, bank, np.asarray(h_all[s]), lr,
                            roll_keys[s], policy=grid.controller_names()[s],
-                           V=float(grid.V[s]), lam=float(grid.lam[s]))
+                           V=float(grid.V[s]), lam=float(grid.lam[s]),
+                           drop_seq=(None if drop_all is None
+                                     else np.asarray(drop_all[s])))
     for a, b in zip(jax.tree_util.tree_leaves(p),
                     jax.tree_util.tree_leaves(rep.scenario_params(s))):
         if model_bitwise:
@@ -295,6 +297,97 @@ def test_padded_mixed_k_tiered_bank_lanes():
                              s, model_bitwise=False)
 
 
+# -- tentpole: controller zoo x non-stationary channels --------------------
+
+
+def test_zoo_grid_stationary_and_markov_single_run_lane_replay():
+    """The headline grid: ALL registered controllers (in-trace DivFL and
+    round-robin included) x {stationary, Gilbert-Elliott} channel modes
+    runs as ONE ``Arena.run``, every lane bitwise-reproducing its
+    fixed-policy ``run_scan`` reference, and the report reduces to the
+    Sec.-VII-style trade-off table with one point per
+    (controller, channel-mode) configuration."""
+    task, eng, bank, sp, params0 = _setup()
+    grid = ScenarioGrid.product(
+        controllers=tuple(POLICIES), seeds=(0,), V=(100.0,), lam=(0.5,),
+        sample_count=(4,), chan_mode=("iid", "markov"), p_gb=(0.2,),
+        p_bg=(0.5,), num_devices=N)
+    s_total = 2 * len(POLICIES)
+    assert len(grid) == s_total and len(POLICIES) >= 6
+    arena = Arena(eng)
+    T = 3
+    lr = np.full(T, 0.1, np.float32)
+    h_all = arena.sample_channels(grid, T, N)
+    rep = arena.run(params0, sp, bank, grid, T, lr, h_all=h_all)
+    assert len(arena._fns) == 1          # one executable, whole zoo
+    for s in range(s_total):
+        _assert_lane_matches(rep, eng, bank, sp, params0, grid, h_all,
+                             lr, s)
+    table = rep.tradeoff_table()
+    assert len(table) == s_total
+    assert ({(r["controller"], r["chan_mode"]) for r in table}
+            == {(c, m) for c in POLICIES for m in ("iid", "markov")})
+
+
+def test_zoo_grid_auto_mode_plans_single_dispatch():
+    """Satellite guard: the mixed 6+-controller grid under
+    ``k_mode='auto'`` executes as ONE planned dispatch bucket."""
+    task, eng, bank, sp, params0 = _setup()
+    grid = ScenarioGrid.product(
+        controllers=tuple(POLICIES), seeds=(0,), V=(100.0,), lam=(0.5,),
+        sample_count=(4,), chan_mode=("iid", "markov"), p_gb=(0.2,),
+        p_bg=(0.5,), num_devices=N)
+    arena = Arena(eng, k_mode="auto")
+    T = 3
+    rep = arena.run(params0, sp, bank, grid, T,
+                    np.full(T, 0.1, np.float32))
+    acct = rep.dispatch_accounting()
+    assert acct["buckets"] == 1
+    assert acct["dispatches"] == 1
+    assert acct["lanes_covered"] == len(grid)
+
+
+def test_dropout_lanes_match_run_scan_and_leave_clean_lanes_bitwise():
+    """Per-client dropout lanes replay bitwise against ``run_scan`` with
+    the same ``drop_seq``; a zero-dropout lane in the SAME grid stays
+    bitwise equal to the historical no-dropout executable's trajectory
+    (satellite: adding the dropout axis must not move clean lanes)."""
+    task, eng, bank, sp, params0 = _setup()
+    T = 4
+    lr = np.full(T, 0.1, np.float32)
+    grid = ScenarioGrid.create(
+        controllers=["lroa", "uni_d", "channel_aware", "divfl"],
+        seeds=[0, 1, 2, 3], V=100.0, lam=0.5, sample_count=4,
+        dropout=[0.0, 0.4, 0.4, 0.4])
+    arena = Arena(eng)
+    h_all = arena.sample_channels(grid, T, N)
+    drop_all = arena.sample_dropout(grid, T, N)
+    # lane 0 has dropout 0.0: its mask column is all-ones
+    assert np.all(np.asarray(drop_all[0]) == 1.0)
+    assert np.any(np.asarray(drop_all[1:]) == 0.0)
+    rep = arena.run(params0, sp, bank, grid, T, lr, h_all=h_all)
+    for s in range(len(grid)):
+        _assert_lane_matches(rep, eng, bank, sp, params0, grid, h_all,
+                             lr, s, drop_all=drop_all)
+    # the clean lane vs the historical no-dropout executable (a grid
+    # whose dropout column is all zero skips the mask entirely): model
+    # trajectory and selections stay bitwise; the loss column crosses
+    # two executables whose reduce XLA fuses differently, so it agrees
+    # to f32 resolution instead
+    clean = grid.take(np.asarray([0]))
+    rep0 = Arena(eng).run(params0, sp, bank, clean, T, lr,
+                          h_all=h_all[:1])
+    for a, b in zip(jax.tree_util.tree_leaves(rep.scenario_params(0)),
+                    jax.tree_util.tree_leaves(rep0.scenario_params(0))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(rep.metrics["selected"][0],
+                                  rep0.metrics["selected"][0])
+    np.testing.assert_array_equal(rep.metrics["wall_time"][0],
+                                  rep0.metrics["wall_time"][0])
+    np.testing.assert_allclose(rep.metrics["loss"][0],
+                               rep0.metrics["loss"][0], rtol=1e-6)
+
+
 # -- controller-as-data dispatch -------------------------------------------
 
 
@@ -308,11 +401,18 @@ def test_decide_by_id_matches_named_policies():
     v = jnp.full((N,), 50.0, jnp.float32)
     lam = jnp.full((N,), 0.7, jnp.float32)
     for name, fn in zip(POLICIES, pol.DECIDE_FNS):
-        direct = fn(sp, h, queues, v, lam)
+        # jit the direct rule too: the switch is bitwise-faithful to the
+        # COMPILED branch (what every arena/run_scan trace executes);
+        # eager mode dispatches op-by-op and XLA's fused division chains
+        # (cost_effective's q normalisation) drift 1 ulp from that
+        direct = jax.jit(fn)(sp, h, queues, v, lam)
         switched = jax.jit(decide_by_id)(jnp.int32(POLICY_IDS[name]), sp,
                                          h, queues, v, lam)
         for a, b in zip(direct, switched):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(fn(sp, h, queues, v, lam), switched):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6)
 
 
 def test_controllers_are_thin_wrappers_over_policy_fns():
@@ -351,9 +451,27 @@ def test_run_scan_uni_s_policy():
                                      policy="uni_s")
     assert np.all(np.isfinite(m["loss"]))
     np.testing.assert_allclose(m["q_min"], 1.0 / N, rtol=1e-6)
-    with pytest.raises(ValueError, match="host-only"):
+    with pytest.raises(ValueError, match="scan-traceable"):
         eng.run_scan(params0, sp, bank, h, np.full(T, 0.1, np.float32),
-                     jax.random.PRNGKey(1), policy="divfl")
+                     jax.random.PRNGKey(1), policy="bogus")
+
+
+def test_run_scan_accepts_every_registered_policy():
+    """Every controller in the zoo — in-trace DivFL and round-robin
+    included — is a fixed-policy run_scan citizen."""
+    task, eng, bank, sp, params0 = _setup()
+    T = 3
+    h = np.random.default_rng(5).uniform(0.05, 0.4, (T, N)).astype(
+        np.float32)
+    lr = np.full(T, 0.1, np.float32)
+    for policy in POLICIES:
+        params, queues, m = eng.run_scan(params0, sp, bank, h, lr,
+                                         jax.random.PRNGKey(2),
+                                         policy=policy, V=50.0, lam=0.5)
+        assert np.all(np.isfinite(m["loss"])), policy
+        sel = np.asarray(m["selected"])
+        assert sel.shape == (T, sp.sample_count)
+        assert np.all((sel >= 0) & (sel < N)), policy
 
 
 # -- grid construction ------------------------------------------------------
@@ -367,9 +485,10 @@ def test_grid_product_and_validation():
     assert set(grid.controller_names()) == {"lroa", "uni_d"}
     sub = grid.take(np.asarray([0, 5]))
     assert len(sub) == 2
-    with pytest.raises(ValueError, match="DivFL"):
-        ScenarioGrid.create(controllers=["divfl"], seeds=[0], V=1.0,
-                            lam=1.0)
+    # DivFL is a first-class lane now (in-trace facility-location greedy)
+    gd = ScenarioGrid.create(controllers=["divfl"], seeds=[0], V=1.0,
+                             lam=1.0)
+    assert gd.controller_names() == ["divfl"]
     with pytest.raises(ValueError, match="unknown controller"):
         ScenarioGrid.create(controllers=["bogus"], seeds=[0], V=1.0,
                             lam=1.0)

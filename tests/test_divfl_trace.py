@@ -1,0 +1,161 @@
+"""In-trace DivFL: the K-step ``lax.fori_loop`` facility-location greedy
+(``repro.core.policy.facility_location_select``) is the bitwise twin of
+the host greedy (``repro.core.baselines.facility_location_greedy``) — on
+gradient-sketch similarities and on the shared channel-feature gram —
+and the host ``DivFLController`` picks the exact subsets the arena's
+traced selection emits on shared channel draws."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import paper_default_params
+from repro.core import policy as pol
+from repro.core.baselines import DivFLController, facility_location_greedy
+
+N = 10
+
+
+def _params(n=N, k=4, seed=0):
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(40, 200, n).astype(np.float32)
+    return paper_default_params(num_devices=n, sample_count=k,
+                                data_sizes=sizes)
+
+
+def _gradient_sketch_similarity(n, dim, seed):
+    """Row-normalised gram of random gradient sketches — the similarity
+    DivFL's reference implementation greedily reduces."""
+    g = np.random.default_rng(seed).normal(size=(n, dim)).astype(np.float32)
+    gn = g / np.maximum(np.linalg.norm(g, axis=1, keepdims=True), 1e-12)
+    return (gn @ gn.T).astype(np.float32)
+
+
+def _greedy_min_margin(sim, k):
+    """Smallest argmax winner-vs-runner-up gap along the host greedy's
+    chain.  The host sums with numpy (pairwise) and the traced loop with
+    XLA's reduce — different f32 association orders — so the bitwise
+    selection contract is only meaningful when every step's margin
+    clears that reduce-order noise (a few ulps); steps inside the noise
+    band are genuine ties that the two summation orders may break
+    differently."""
+    n = sim.shape[0]
+    best = np.full((n,), -np.inf, sim.dtype)
+    chosen: list = []
+    margin = np.inf
+    for _ in range(k):
+        gains = np.maximum(best[:, None], sim).sum(axis=0)
+        gains[chosen] = -np.inf
+        order = np.argsort(gains)[::-1]
+        if len(order) > 1 and np.isfinite(gains[order[1]]):
+            margin = min(margin, float(gains[order[0]] - gains[order[1]]))
+        j = int(order[0])
+        chosen.append(j)
+        best = np.maximum(best, sim[:, j])
+    return margin
+
+
+def test_fori_loop_greedy_bitwise_matches_host_greedy_on_sketches():
+    """The traced greedy and the host greedy walk the SAME argmax chain
+    on shared gradient-sketch similarity matrices — selections identical
+    element for element, every prefix length, on every instance whose
+    margins exceed reduce-order noise."""
+    checked = 0
+    for seed in range(10):
+        sim = _gradient_sketch_similarity(N, 16, seed)
+        for k in (1, 3, 4, N):
+            if _greedy_min_margin(sim, k) < 1e-5:
+                continue
+            host = facility_location_greedy(sim, k)
+            traced = jax.jit(pol.facility_location_select,
+                             static_argnums=1)(jnp.asarray(sim), k)
+            np.testing.assert_array_equal(np.asarray(traced),
+                                          np.asarray(host))
+            checked += 1
+    assert checked >= 12        # the filter must not hollow the test out
+
+
+def test_fori_loop_greedy_matches_host_on_channel_feature_gram():
+    """Same bitwise contract on the (data_weight, gain) feature gram the
+    arena actually traces."""
+    params = _params()
+    checked = 0
+    for seed in range(8):
+        h = np.random.default_rng(100 + seed).uniform(
+            0.02, 0.4, N).astype(np.float32)
+        sim = np.asarray(pol.divfl_similarity(
+            pol.divfl_features(params, jnp.asarray(h))))
+        if _greedy_min_margin(sim, params.sample_count) < 1e-5:
+            continue
+        host = facility_location_greedy(sim, params.sample_count)
+        traced = jax.jit(pol.facility_location_select, static_argnums=1)(
+            jnp.asarray(sim), params.sample_count)
+        np.testing.assert_array_equal(np.asarray(traced),
+                                      np.asarray(host))
+        checked += 1
+    assert checked >= 4
+
+
+def test_greedy_prefix_stability_under_padded_k():
+    """Padded-K contract: the first k entries of a K_max-slot greedy are
+    exactly the k-slot greedy (step i reads only steps < i), so a padded
+    lane's active prefix is the true-K selection."""
+    sim = _gradient_sketch_similarity(N, 8, 42)
+    full = np.asarray(pol.facility_location_select(jnp.asarray(sim), N))
+    for k in range(1, N):
+        np.testing.assert_array_equal(
+            np.asarray(pol.facility_location_select(jnp.asarray(sim), k)),
+            full[:k])
+
+
+def test_greedy_selects_distinct_clients():
+    for seed in range(4):
+        sim = _gradient_sketch_similarity(N, 4, seed)
+        sel = np.asarray(pol.facility_location_select(jnp.asarray(sim), N))
+        assert sorted(sel.tolist()) == list(range(N))
+
+
+def test_host_controller_channel_path_matches_traced_selection():
+    """``DivFLController.select(h)`` (no observed updates yet) and the
+    traced ``divfl_selection`` pick the identical subset on shared
+    channel draws — the contract that keeps host replays of arena DivFL
+    lanes valid."""
+    params = _params()
+    ctrl = DivFLController(params)
+    slots = jnp.arange(params.sample_count)
+    kvec = jnp.full((N,), float(params.sample_count), jnp.float32)
+    checked = 0
+    for seed in range(8):
+        h = jnp.asarray(np.random.default_rng(200 + seed).uniform(
+            0.02, 0.4, N).astype(np.float32))
+        sim = np.asarray(pol.divfl_similarity(
+            pol.divfl_features(params, h)))
+        if _greedy_min_margin(sim, params.sample_count) < 1e-5:
+            continue
+        host = ctrl.select(h)
+        traced = pol.divfl_selection(
+            params, jnp.int32(0), h, jnp.zeros((N,), jnp.float32),
+            jnp.full((N,), 1.0 / N, jnp.float32), jax.random.PRNGKey(0),
+            slots, kvec)
+        np.testing.assert_array_equal(np.asarray(traced),
+                                      np.asarray(host))
+        checked += 1
+    assert checked >= 4
+
+
+def test_host_controller_observed_updates_take_precedence():
+    """Once the sequential path records local-update sketches, the host
+    controller reduces THEIR similarity (the reference semantics), not
+    the channel features."""
+    params = _params()
+    ctrl = DivFLController(params)
+    g = np.random.default_rng(7).normal(size=(N, 12)).astype(np.float32)
+    ctrl.observe_updates(np.arange(N), g)
+    h = jnp.asarray(np.full(N, 0.1, np.float32))
+    got = ctrl.select(h)
+    gn = g / np.maximum(np.linalg.norm(g, axis=1, keepdims=True), 1e-12)
+    want = facility_location_greedy(gn @ gn.T, params.sample_count)
+    np.testing.assert_array_equal(got, want)
+    # and with neither updates nor gains: the deterministic fallback
+    assert np.array_equal(DivFLController(params).select(),
+                          np.arange(params.sample_count) % N)

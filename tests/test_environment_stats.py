@@ -1,0 +1,238 @@
+"""Statistical pins on the channel environment: Gilbert-Elliott occupancy
+vs the stationary distribution, per-state truncated-exponential gain
+means, dropout mask frequency, host-vs-jax markov agreement — plus the
+stream-separation regression: adding the markov/dropout axes leaves the
+stationary gains stream bitwise untouched."""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fl.environment import (ChannelConfig, ChannelProcess,
+                                  markov_stationary, sample_channel_sequence,
+                                  sample_dropout_mask, sample_gains,
+                                  sample_gains_markov, sample_markov_states)
+
+P_GB, P_BG = 0.2, 0.5
+
+
+def test_channel_config_validation():
+    with pytest.raises(ValueError, match="unknown channel mode"):
+        ChannelConfig(mode="rayleigh")
+    with pytest.raises(ValueError, match="transition probabilities"):
+        ChannelConfig(mode="markov", p_gb=1.5, p_bg=0.5)
+    with pytest.raises(ValueError, match="dropout rate"):
+        ChannelConfig(dropout=1.0)
+
+
+def _truncated_exp_mean(m, lo, hi):
+    """E[X | lo <= X <= hi] for X ~ Exp(mean m) — the closed form the
+    redraw scheme's stationary distribution must match."""
+    a, b = np.exp(-lo / m), np.exp(-hi / m)
+    return m + (lo * a - hi * b) / (a - b)
+
+
+def test_markov_occupancy_matches_stationary_distribution():
+    """Time-average bad-state occupancy of the sampled chain converges
+    to pi_bad = p_gb / (p_gb + p_bg)."""
+    T, N = 4000, 24
+    states = np.asarray(sample_markov_states(jax.random.PRNGKey(0), T, N,
+                                             P_GB, P_BG))
+    assert states.shape == (T, N)
+    assert set(np.unique(states)) <= {0, 1}
+    pi_bad = float(markov_stationary(P_GB, P_BG))
+    assert abs(pi_bad - P_GB / (P_GB + P_BG)) < 1e-7
+    # chain autocorrelation (1 - p_gb - p_bg = 0.3) leaves ~T*N/2
+    # effective samples; 3-sigma is well under 0.01
+    assert abs(states.mean() - pi_bad) < 0.01
+    # the degenerate chain never leaves all-good
+    degen = np.asarray(sample_markov_states(jax.random.PRNGKey(1), 100, 8,
+                                            0.0, 0.0))
+    assert np.all(degen == 0)
+
+
+def test_markov_initial_state_draws_from_stationary():
+    """The chain starts in steady state: round-0 occupancy across many
+    clients already matches pi_bad (no burn-in transient)."""
+    states = np.asarray(sample_markov_states(jax.random.PRNGKey(2), 1,
+                                             20000, P_GB, P_BG))
+    pi_bad = float(markov_stationary(P_GB, P_BG))
+    assert abs(states[0].mean() - pi_bad) < 0.01
+
+
+def test_markov_gains_per_state_means_and_clip():
+    """Partitioning the Gilbert-Elliott gains by the (reconstructed)
+    state chain, each state's empirical mean matches the truncated-
+    exponential closed form for its own mean parameter, and every draw
+    respects the clip range."""
+    key = jax.random.PRNGKey(3)
+    T, N = 2000, 24
+    cfg = dict(mean_gain=0.1, bad_gain=0.02, min_gain=0.01, max_gain=0.5)
+    h = np.asarray(sample_gains_markov(key, T, N, cfg["mean_gain"],
+                                       cfg["bad_gain"], cfg["min_gain"],
+                                       cfg["max_gain"], P_GB, P_BG))
+    assert np.all((h >= cfg["min_gain"]) & (h <= cfg["max_gain"]))
+    # the same stream split sample_gains_markov consumes internally
+    k_states, _ = jax.random.split(jax.random.fold_in(key, 1))
+    states = np.asarray(sample_markov_states(k_states, T, N, P_GB, P_BG))
+    good, bad = h[states == 0], h[states == 1]
+    assert good.size > 10000 and bad.size > 5000
+    want_good = _truncated_exp_mean(cfg["mean_gain"], cfg["min_gain"],
+                                    cfg["max_gain"])
+    want_bad = _truncated_exp_mean(cfg["bad_gain"], cfg["min_gain"],
+                                   cfg["max_gain"])
+    np.testing.assert_allclose(good.mean(), want_good, rtol=0.03)
+    np.testing.assert_allclose(bad.mean(), want_bad, rtol=0.03)
+    # the two regimes are actually distinct
+    assert good.mean() > 2.0 * bad.mean()
+
+
+def test_iid_gains_match_truncated_exponential_mean():
+    h = np.asarray(sample_gains(jax.random.PRNGKey(4), 2000, 24,
+                                0.1, 0.01, 0.5))
+    np.testing.assert_allclose(h.mean(),
+                               _truncated_exp_mean(0.1, 0.01, 0.5),
+                               rtol=0.02)
+    assert np.all((h >= 0.01) & (h <= 0.5))
+
+
+def test_dropout_mask_frequency_matches_rate():
+    for rate in (0.0, 0.1, 0.45):
+        mask = np.asarray(sample_dropout_mask(jax.random.PRNGKey(5),
+                                              2000, 24, rate))
+        assert set(np.unique(mask)) <= {0.0, 1.0}
+        assert abs((1.0 - mask.mean()) - rate) < 0.01, rate
+    assert np.all(np.asarray(sample_dropout_mask(
+        jax.random.PRNGKey(6), 50, 8, 0.0)) == 1.0)
+
+
+def test_host_markov_mirror_agrees_statistically_with_jax():
+    """The numpy ChannelProcess markov mirror and the jax sampler are
+    independent streams of the SAME process: occupancy, mean, and spread
+    agree within sampling tolerance."""
+    T, N = 2000, 24
+    cfg = ChannelConfig(mode="markov", p_gb=P_GB, p_bg=P_BG,
+                        mean_gain=0.1, bad_gain=0.02, seed=11)
+    proc = ChannelProcess(N, cfg)
+    host_states = proc.markov_state_sequence(T)
+    pi_bad = float(markov_stationary(P_GB, P_BG))
+    assert abs(host_states.mean() - pi_bad) < 0.015
+    host = ChannelProcess(N, cfg).sample_sequence(T)
+    dev = np.asarray(ChannelProcess(N, cfg).sample_jax(
+        jax.random.PRNGKey(7), T))
+    assert host.shape == dev.shape == (T, N)
+    np.testing.assert_allclose(host.mean(), dev.mean(), rtol=0.03)
+    np.testing.assert_allclose(host.std(), dev.std(), rtol=0.05)
+    # single-round host sample advances the same persistent chain
+    one = ChannelProcess(N, cfg)
+    seq = np.stack([one.sample() for _ in range(50)])
+    assert seq.shape == (50, N)
+    assert np.all((seq >= cfg.min_gain) & (seq <= cfg.max_gain))
+
+
+def test_iid_process_paths_agree_with_pure_samplers():
+    """On an iid config the host mirror is statistically the truncated
+    exponential and ``sample_jax`` dispatches bitwise to the plain
+    ``sample_gains`` stream; ``stream()`` yields the persistent chain."""
+    cfg = ChannelConfig(mean_gain=0.1, seed=17)
+    proc = ChannelProcess(16, cfg)
+    host = proc.sample_sequence(2000)
+    np.testing.assert_allclose(host.mean(),
+                               _truncated_exp_mean(0.1, cfg.min_gain,
+                                                   cfg.max_gain),
+                               rtol=0.02)
+    key = jax.random.PRNGKey(12)
+    np.testing.assert_array_equal(
+        np.asarray(proc.sample_jax(key, 7)),
+        np.asarray(sample_gains(key, 7, 16, cfg.mean_gain, cfg.min_gain,
+                                cfg.max_gain)))
+    got = np.stack(list(itertools.islice(ChannelProcess(16, cfg).stream(),
+                                         3)))
+    fresh = ChannelProcess(16, cfg)
+    want = np.stack([fresh.sample() for _ in range(3)])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_host_dropout_mirror_matches_rate():
+    cfg = ChannelConfig(dropout=0.3, seed=13)
+    proc = ChannelProcess(16, cfg)
+    mask = proc.dropout_sequence(2000)
+    assert abs((1.0 - mask.mean()) - 0.3) < 0.015
+    dev = np.asarray(proc.dropout_jax(jax.random.PRNGKey(8), 2000))
+    assert abs(dev.mean() - mask.mean()) < 0.02
+
+
+# -- stream separation: the satellite regression ---------------------------
+
+
+def test_iid_lane_of_mode_dispatch_is_bitwise_raw_sample_gains():
+    """``sample_channel_sequence`` with mode='iid' is bitwise the plain
+    ``sample_gains`` stream — the markov branch computes on fold_in
+    streams and the final ``where`` select is exact, so adding the
+    non-stationary machinery cannot move any stationary trajectory."""
+    key = jax.random.PRNGKey(9)
+    T, N = 64, 12
+    raw = np.asarray(sample_gains(key, T, N, 0.1, 0.01, 0.5))
+    via = np.asarray(sample_channel_sequence(key, T, N, 0, 0.1, 0.02,
+                                             0.01, 0.5, P_GB, P_BG))
+    np.testing.assert_array_equal(via, raw)
+    # the Gilbert-Elliott shape parameters are inert on an iid lane
+    via2 = np.asarray(sample_channel_sequence(key, T, N, 0, 0.1, 0.004,
+                                              0.01, 0.5, 0.9, 0.05))
+    np.testing.assert_array_equal(via2, raw)
+    # while a markov lane with the same key actually moves
+    mk = np.asarray(sample_channel_sequence(key, T, N, 1, 0.1, 0.02,
+                                            0.01, 0.5, P_GB, P_BG))
+    assert not np.array_equal(mk, raw)
+
+
+def test_gains_and_dropout_consume_disjoint_streams():
+    """Gains read the RAW rollout key; markov reads fold_in(key, 1);
+    dropout reads fold_in(key, 2).  Distinct fold_in streams mean the
+    dropout axis cannot perturb gains (and vice versa) — checked by
+    direct stream identity, not just statistics."""
+    key = jax.random.PRNGKey(10)
+    T, N = 32, 8
+    raw = np.asarray(sample_gains(key, T, N, 0.1, 0.01, 0.5))
+    mask = np.asarray(sample_dropout_mask(key, T, N, 0.25))
+    # dropout's uniform block comes from fold_in(key, 2), nothing else
+    u = np.asarray(jax.random.uniform(jax.random.fold_in(key, 2), (T, N)))
+    np.testing.assert_array_equal(mask, (u >= 0.25).astype(np.float32))
+    # markov's chain comes from fold_in(key, 1) — so neither stream
+    # overlaps the raw-key exponential block the gains consume
+    raw_again = np.asarray(sample_gains(key, T, N, 0.1, 0.01, 0.5))
+    np.testing.assert_array_equal(raw, raw_again)
+
+
+def test_arena_channel_tensor_default_grid_is_raw_sample_gains():
+    """Arena.sample_channels on a default (stationary, no-dropout) grid
+    is bitwise the vmapped raw ``sample_gains`` over the scenario chan
+    keys — the grid-level form of the stream-separation regression."""
+    from repro.sim import Arena, ScenarioGrid, scenario_keys
+    from repro.fl import ClientConfig, RoundEngine
+    from repro.models import MLPTask
+
+    eng = RoundEngine(MLPTask(input_dim=8, num_classes=2, hidden=4),
+                      ClientConfig(local_epochs=1, batch_size=4))
+    arena = Arena(eng)
+    grid = ScenarioGrid.create(controllers=["lroa", "uni_d", "divfl"],
+                               seeds=[0, 1, 2], V=10.0, lam=0.5,
+                               sample_count=2)
+    T, N = 6, 5
+    h_all = np.asarray(arena.sample_channels(grid, T, N))
+    chan_keys, _ = scenario_keys(grid)
+    for s in range(len(grid)):
+        want = np.asarray(sample_gains(chan_keys[s], T, N,
+                                       float(grid.mean_gain[s]),
+                                       float(grid.min_gain[s]),
+                                       float(grid.max_gain[s])))
+        np.testing.assert_array_equal(h_all[s], want)
+    # adding a dropout column leaves the channel tensor untouched
+    gd = ScenarioGrid.create(controllers=["lroa", "uni_d", "divfl"],
+                             seeds=[0, 1, 2], V=10.0, lam=0.5,
+                             sample_count=2, dropout=0.35)
+    h_drop = np.asarray(Arena(eng).sample_channels(gd, T, N))
+    np.testing.assert_array_equal(h_drop, h_all)

@@ -34,6 +34,8 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
+import tempfile
 import time
 from typing import List, Optional
 
@@ -282,6 +284,39 @@ def _skewed_bank_section(cfg: EngineBenchConfig, alpha: float = 0.5):
     return rows, stats
 
 
+def _obs_overhead_section(cfg: EngineBenchConfig) -> dict:
+    """The flight recorder's cost at the acceptance operating point:
+    the SAME instrumented trainer loop timed with no sink installed
+    (the ``repro.obs`` zero-overhead contract — spans collapse to a
+    shared no-op singleton) and with a live ``JsonlSink`` recording
+    every span.  ``sink_off`` is the production configuration; its
+    rounds/sec must sit within noise of the historical ``engine``
+    row."""
+    from repro.obs import trace as obs_trace
+
+    off_a = _rounds_per_sec(_build_trainer(cfg, use_engine=True), cfg)
+    fd, log = tempfile.mkstemp(suffix=".jsonl")
+    os.close(fd)
+    try:
+        os.remove(log)               # JsonlSink appends; start clean
+        with obs_trace.installed(obs_trace.JsonlSink(log)):
+            on = _rounds_per_sec(_build_trainer(cfg, use_engine=True),
+                                 cfg)
+        spans = len(obs_trace.load_jsonl(log))
+    finally:
+        if os.path.exists(log):
+            os.remove(log)
+    # second no-sink pass AFTER the sink-on pass: process-level warmup
+    # (allocator, BLAS threads) lands on whichever pass runs first, so
+    # an off/on/off sandwich with best-of-off is order-robust
+    off_b = _rounds_per_sec(_build_trainer(cfg, use_engine=True), cfg)
+    off = max(off_a, off_b)
+    return {"sink_off_rounds_per_sec": off,
+            "sink_on_rounds_per_sec": on,
+            "sink_on_slowdown": off / on,
+            "spans_recorded": spans}
+
+
 def preserve_foreign_sections(result: dict, prev: dict) -> dict:
     """Carry every top-level section of a previous record that this
     bench does not itself produce into the fresh ``result`` — the
@@ -311,6 +346,7 @@ def run(cfg: Optional[EngineBenchConfig] = None, smoke: bool = False,
     bank = _data_plane_rounds_per_sec(cfg, bank_resident=True)
     scan = _scan_rounds_per_sec(cfg)
     skew_rows, skew_stats = _skewed_bank_section(cfg)
+    obs_stats = _obs_overhead_section(cfg)
     result = {
         "config": dataclasses.asdict(cfg),
         "backend": jax.default_backend(),
@@ -323,6 +359,7 @@ def run(cfg: Optional[EngineBenchConfig] = None, smoke: bool = False,
         "speedup_bank_vs_host_restacked": bank / host,
         "speedup_scan_vs_seq": scan / seq,
         "skewed": skew_stats,
+        "obs_overhead": obs_stats,
     }
     # other benches (bench_sweeps' "arena" section, future sections such
     # as "arena.streaming" siblings) merge into the same tracked file —
@@ -348,6 +385,15 @@ def run(cfg: Optional[EngineBenchConfig] = None, smoke: bool = False,
                 f"speedup_vs_host_restacked={bank / host:.2f}"),
         csv_row(f"round_engine/scan/{tag}", 1e6 / scan,
                 f"rounds_per_sec={scan:.2f};speedup_vs_seq={scan / seq:.2f}"),
+        csv_row(f"round_engine/obs_overhead/{tag}",
+                1e6 / obs_stats["sink_off_rounds_per_sec"],
+                f"sink_off_rounds_per_sec="
+                f"{obs_stats['sink_off_rounds_per_sec']:.2f};"
+                f"sink_on_rounds_per_sec="
+                f"{obs_stats['sink_on_rounds_per_sec']:.2f};"
+                f"sink_on_slowdown="
+                f"{obs_stats['sink_on_slowdown']:.3f};"
+                f"spans={obs_stats['spans_recorded']}"),
     ] + skew_rows
 
 

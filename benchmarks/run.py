@@ -39,6 +39,12 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--skip", default="",
                     help="comma list: convergence,sweeps,kernels,"
                          "round_engine,roofline")
+    ap.add_argument("--obs", metavar="LOG", nargs="?",
+                    const="runlogs/bench.jsonl", default=None,
+                    help="record a flight-recorder span log (JSONL) for "
+                         "the whole bench run; optional path, default "
+                         "runlogs/bench.jsonl — render it with "
+                         "tools/obs_report.py")
     return ap
 
 
@@ -53,6 +59,12 @@ def main(argv=None) -> None:
         cfg = BenchConfig.paper_scale()
     else:
         cfg = BenchConfig()
+
+    sink = None
+    if args.obs:
+        from repro.obs import trace as obs_trace
+        sink = obs_trace.install_sink(obs_trace.JsonlSink(args.obs))
+        print(f"# obs: recording spans to {args.obs}", file=sys.stderr)
 
     print("name,us_per_call,derived")
     if "kernels" not in skip:
@@ -86,6 +98,12 @@ def main(argv=None) -> None:
         from benchmarks import bench_roofline
         for row in bench_roofline.run():
             print(row, flush=True)
+
+    if sink is not None:
+        from repro.obs import trace as obs_trace
+        obs_trace.remove_sink(sink)
+        sink.close()
+        print(f"# obs: span log written to {sink.path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

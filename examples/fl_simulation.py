@@ -75,7 +75,16 @@ def main():
                          "controllers x seeds)")
     ap.add_argument("--cnn", action="store_true",
                     help="use the CNN task (slower, closer to the paper)")
+    ap.add_argument("--obs", metavar="LOG", nargs="?",
+                    const="runlogs/fl_simulation.jsonl", default=None,
+                    help="record a flight-recorder span log (JSONL); "
+                         "render with tools/obs_report.py")
     args = ap.parse_args()
+
+    sink = None
+    if args.obs:
+        from repro.obs import trace as obs_trace
+        sink = obs_trace.install_sink(obs_trace.JsonlSink(args.obs))
 
     cfg = BenchConfig(num_devices=args.devices, rounds=args.rounds,
                       use_cnn=args.cnn)
@@ -94,6 +103,13 @@ def main():
                 continue
             save = 100 * (1 - results["lroa"][1] / total)
             print(f"LROA saves {save:.1f}% total latency vs {base}")
+
+    if sink is not None:
+        from repro.obs import trace as obs_trace
+        obs_trace.remove_sink(sink)
+        sink.close()
+        print(f"\nobs: span log written to {sink.path} — render with "
+              f"'python tools/obs_report.py {sink.path}'")
 
 
 if __name__ == "__main__":

@@ -82,6 +82,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import policy as pol
 from repro.core import queues as vq
+from repro.obs import trace as obs_trace
 from repro.core import system_model as sm
 from repro.fl import client as fl_client
 from repro.fl import server as fl_server
@@ -351,12 +352,15 @@ class RoundEngine:
         all_x, all_y, all_steps, all_sizes = bank.device_args()
         key = (steps, all_steps is not None)
         fn = self._step_fns.get(key)
-        if fn is None:
+        cold = fn is None
+        if cold:
             fn = self._step_fns[key] = self._build_step(steps)
-        return fn(global_params, all_x, all_y, all_steps, all_sizes,
-                  jnp.asarray(selected, jnp.int32),
-                  jnp.asarray(coeffs, jnp.float32),
-                  jnp.asarray(lr, jnp.float32), rngs)
+        with obs_trace.span("engine.round", k=int(selected.size),
+                            cold=cold):
+            return fn(global_params, all_x, all_y, all_steps, all_sizes,
+                      jnp.asarray(selected, jnp.int32),
+                      jnp.asarray(coeffs, jnp.float32),
+                      jnp.asarray(lr, jnp.float32), rngs)
 
     # -- tiered rounds -----------------------------------------------------
 
@@ -779,14 +783,18 @@ class RoundEngine:
         key = (bank_key, sp.sample_count, policy, use_dropout)
         fn = self._scan_fns.get(key)
         if fn is None:
-            scan_fn = self._build_scan(sp.sample_count,
-                                       self._fixed_policy_decide(policy),
-                                       round_fn,
-                                       self._fixed_policy_select(policy),
-                                       use_dropout=use_dropout)
-            donate = (0, 1) if self.donate else ()
-            fn = self._scan_fns[key] = jax.jit(scan_fn,
-                                               donate_argnums=donate)
+            with obs_trace.span("arena.compile", stage="build",
+                                layer="engine", policy=policy,
+                                k=int(sp.sample_count)):
+                scan_fn = self._build_scan(
+                    sp.sample_count,
+                    self._fixed_policy_decide(policy),
+                    round_fn,
+                    self._fixed_policy_select(policy),
+                    use_dropout=use_dropout)
+                donate = (0, 1) if self.donate else ()
+                fn = self._scan_fns[key] = jax.jit(scan_fn,
+                                                   donate_argnums=donate)
         if queues is None:
             queues = vq.init_queues(sp.num_devices)
         n = sp.num_devices
@@ -794,16 +802,20 @@ class RoundEngine:
         # materialized [N] vector the decide rules consume (kvec) and the
         # scalar active-slot count (k_act) — so this trace is the exact
         # graph a padded-K arena lane computes (bitwise contract).
-        params, queues, _, outs = fn(
-            global_params, queues, sp,
-            jnp.asarray(sp.energy_budget, jnp.float32), data,
-            jnp.asarray(h_seq, jnp.float32),
-            (jnp.asarray(drop_seq, jnp.float32) if use_dropout else None),
-            jnp.asarray(lr_seq, jnp.float32), rng,
-            jnp.full((n,), V, jnp.float32), jnp.full((n,), lam,
-                                                     jnp.float32),
-            jnp.int32(pol.POLICY_IDS[policy]),
-            jnp.full((n,), sp.sample_count, jnp.float32),
-            jnp.int32(sp.sample_count), None, jnp.int32(0), None)
-        metrics = {name: np.asarray(v) for name, v in outs.items()}
+        with obs_trace.span("engine.round", what="run_scan",
+                            policy=policy, rounds=int(h_seq.shape[0]),
+                            k=int(sp.sample_count)):
+            params, queues, _, outs = fn(
+                global_params, queues, sp,
+                jnp.asarray(sp.energy_budget, jnp.float32), data,
+                jnp.asarray(h_seq, jnp.float32),
+                (jnp.asarray(drop_seq, jnp.float32) if use_dropout
+                 else None),
+                jnp.asarray(lr_seq, jnp.float32), rng,
+                jnp.full((n,), V, jnp.float32), jnp.full((n,), lam,
+                                                         jnp.float32),
+                jnp.int32(pol.POLICY_IDS[policy]),
+                jnp.full((n,), sp.sample_count, jnp.float32),
+                jnp.int32(sp.sample_count), None, jnp.int32(0), None)
+            metrics = {name: np.asarray(v) for name, v in outs.items()}
         return params, queues, metrics

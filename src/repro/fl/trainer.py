@@ -57,6 +57,7 @@ from repro.fl import server as fl_server
 from repro.fl.client_bank import ClientBank, TieredClientBank
 from repro.fl.environment import ChannelProcess
 from repro.fl.round_engine import RoundEngine
+from repro.obs import trace as obs_trace
 
 PyTree = Any
 
@@ -260,6 +261,10 @@ class FederatedTrainer:
         return losses
 
     def run_round(self, t: int) -> RoundRecord:
+        with obs_trace.span("trainer.round", t=int(t)):
+            return self._run_round_impl(t)
+
+    def _run_round_impl(self, t: int) -> RoundRecord:
         h = jnp.asarray(self.channel.sample())
         decision = self.controller.decide(h)
         q = np.asarray(decision.q)

@@ -1,0 +1,37 @@
+"""repro.obs — the flight recorder: dependency-free observability for
+the engine/arena/service stack.
+
+Three instruments, one contract (no-ops unless enabled, never inside a
+jit):
+
+* :mod:`repro.obs.trace` — nestable host-side spans (``arena.plan`` /
+  ``arena.compile`` / ``arena.dispatch`` / ``arena.reduce`` /
+  ``service.*`` / ``store.*``) with pluggable sinks: an in-memory ring,
+  an append-only JSONL flight-recorder file, and a Chrome-trace
+  (Perfetto) exporter, plus an optional ``jax.profiler`` annotation
+  bridge.
+* :mod:`repro.obs.metrics` — one named counter/gauge/histogram registry
+  per arena absorbing the formerly scattered tallies (``Arena.traces``,
+  cache hit/miss counters, ``SweepService.stats``, chunk-store
+  save/load counts), all of which remain as views over it.
+* :mod:`repro.obs.watchdog` — the retrace/compile sentinel: armed by
+  ``Arena.warmup``, it turns any post-warmup scan-body retrace or cold
+  compile into a structured event (or a raise, in strict mode) with the
+  offending executable-cache-key diff, and reduces the streaming path's
+  per-chunk dispatch/reduce latencies to stall percentiles.
+
+``tools/obs_report.py`` renders a JSONL flight-recorder file into the
+per-phase time breakdown and health summary.
+"""
+
+from repro.obs import trace
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.trace import (JsonlSink, MemorySink, export_chrome_trace,
+                             install_sink, installed, load_jsonl,
+                             remove_sink, span, to_chrome_trace)
+from repro.obs.watchdog import RetraceError, Watchdog
+
+__all__ = ["trace", "span", "MemorySink", "JsonlSink", "installed",
+           "install_sink", "remove_sink", "load_jsonl", "to_chrome_trace",
+           "export_chrome_trace", "Counter", "Gauge", "Histogram",
+           "MetricsRegistry", "RetraceError", "Watchdog"]

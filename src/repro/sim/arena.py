@@ -85,6 +85,7 @@ import dataclasses
 import hashlib
 import itertools
 import math
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -100,6 +101,8 @@ from repro.fl.environment import (CHANNEL_MODE_IDS, CHANNEL_MODES,
                                   sample_channel_sequence,
                                   sample_dropout_mask)
 from repro.fl.round_engine import bank_layout_key
+from repro.obs import trace as obs
+from repro.obs.metrics import MetricsRegistry
 from repro.sim.cost_model import CostModel
 from repro.sim.dispatch import DispatchPlan, lane_footprints, plan_dispatch
 from repro.sim.report import RolloutReport, concat_chunk_metrics
@@ -583,10 +586,15 @@ class Arena:
         # programs only
         self._probe_fns: Dict[tuple, Any] = {}
         self._footprint_cache: Dict[bytes, list] = {}
-        #: scan-body trace count — every jit (re)trace of a group
-        #: executable runs the counted wrapper once, so a warmed arena
-        #: must keep this constant across same-shape ``run`` calls
-        self.traces = 0
+        #: the flight recorder's metrics registry — ONE namespace for
+        #: every runtime tally of this arena and anything built on it
+        #: (the sweep service and chunk store share it).  The historical
+        #: counter attributes (``traces``, ``input_cache_hits`` /
+        #: ``_misses``) are read-only views over it.
+        self.metrics = MetricsRegistry()
+        #: optional :class:`repro.obs.watchdog.Watchdog` — armed by
+        #: :meth:`warmup`, notified after every :meth:`run`
+        self.watchdog = None
         # device-input caches (bounded, insertion-order eviction): lane
         # constants keyed by grid content, lr sequences by value, channel
         # tensors by (grid, T, N) — steady-state service submissions of a
@@ -595,9 +603,28 @@ class Arena:
         self._lane_cache: Dict[bytes, dict] = {}
         self._lr_cache: Dict[bytes, jax.Array] = {}
         self._chan_cache: Dict[bytes, jax.Array] = {}
-        #: device-input cache counters (lane constants + lr + channels)
-        self.input_cache_hits = 0
-        self.input_cache_misses = 0
+
+    # -- registry views (the pre-obs counter attributes) ---------------------
+
+    @property
+    def traces(self) -> int:
+        """Scan-body trace count — every jit (re)trace of a group
+        executable runs the counted wrapper once, so a warmed arena
+        must keep this constant across same-shape ``run`` calls.  A
+        view over ``metrics['arena.traces']``."""
+        return self.metrics.counter("arena.traces").value
+
+    @property
+    def input_cache_hits(self) -> int:
+        """Device-input cache hits (lane constants + lr + channels) — a
+        view over ``metrics['arena.input_cache.hits']``."""
+        return self.metrics.counter("arena.input_cache.hits").value
+
+    @property
+    def input_cache_misses(self) -> int:
+        """Device-input cache misses — a view over
+        ``metrics['arena.input_cache.misses']``."""
+        return self.metrics.counter("arena.input_cache.misses").value
 
     def _shards(self) -> int:
         if self.mesh is None:
@@ -639,18 +666,21 @@ class Arena:
         key = self._grid_digest(grid, ("chan", num_rounds, num_devices))
         hit = self._chan_cache.get(key)
         if hit is not None:
-            self.input_cache_hits += 1
+            self.metrics.counter("arena.input_cache.hits").inc()
             return hit
-        self.input_cache_misses += 1
-        chan_keys, _ = scenario_keys(grid)
-        h_all = _sample_channels(chan_keys, num_rounds, num_devices,
-                                 jnp.asarray(grid.chan_mode),
-                                 jnp.asarray(grid.mean_gain),
-                                 jnp.asarray(grid.bad_gain),
-                                 jnp.asarray(grid.min_gain),
-                                 jnp.asarray(grid.max_gain),
-                                 jnp.asarray(grid.p_gb),
-                                 jnp.asarray(grid.p_bg))
+        self.metrics.counter("arena.input_cache.misses").inc()
+        with obs.span("arena.upload", what="channels", lanes=len(grid),
+                      rounds=num_rounds):
+            chan_keys, _ = scenario_keys(grid)
+            h_all = _sample_channels(chan_keys, num_rounds,
+                                     num_devices,
+                                     jnp.asarray(grid.chan_mode),
+                                     jnp.asarray(grid.mean_gain),
+                                     jnp.asarray(grid.bad_gain),
+                                     jnp.asarray(grid.min_gain),
+                                     jnp.asarray(grid.max_gain),
+                                     jnp.asarray(grid.p_gb),
+                                     jnp.asarray(grid.p_bg))
         return self._cache_put(self._chan_cache, key, h_all)
 
     def sample_dropout(self, grid: ScenarioGrid, num_rounds: int,
@@ -663,12 +693,14 @@ class Arena:
         key = self._grid_digest(grid, ("drop", num_rounds, num_devices))
         hit = self._chan_cache.get(key)
         if hit is not None:
-            self.input_cache_hits += 1
+            self.metrics.counter("arena.input_cache.hits").inc()
             return hit
-        self.input_cache_misses += 1
-        chan_keys, _ = scenario_keys(grid)
-        drop_all = _sample_dropout(chan_keys, num_rounds, num_devices,
-                                   jnp.asarray(grid.dropout))
+        self.metrics.counter("arena.input_cache.misses").inc()
+        with obs.span("arena.upload", what="dropout", lanes=len(grid),
+                      rounds=num_rounds):
+            chan_keys, _ = scenario_keys(grid)
+            drop_all = _sample_dropout(chan_keys, num_rounds, num_devices,
+                                       jnp.asarray(grid.dropout))
         return self._cache_put(self._chan_cache, key, drop_all)
 
     def _lane_inputs(self, grid: ScenarioGrid, sp: sm.SystemParams) -> dict:
@@ -683,9 +715,12 @@ class Arena:
                    np.asarray(sp.energy_budget, np.float32).tobytes()))
         hit = self._lane_cache.get(key)
         if hit is not None:
-            self.input_cache_hits += 1
+            self.metrics.counter("arena.input_cache.hits").inc()
             return hit
-        self.input_cache_misses += 1
+        self.metrics.counter("arena.input_cache.misses").inc()
+        upload = obs.span("arena.upload", what="lane_constants",
+                          lanes=len(grid))
+        upload.__enter__()
         s, n = len(grid), sp.num_devices
         _, roll_keys = scenario_keys(grid)
         eb = (np.asarray(sp.energy_budget, np.float32)[None, :] *
@@ -699,6 +734,7 @@ class Arena:
                 grid.sample_count[:, None].astype(np.float32), (s, n))),
             k_act=jnp.asarray(grid.sample_count, jnp.int32),
             roll_keys=roll_keys)
+        upload.__exit__(None, None, None)
         return self._cache_put(self._lane_cache, key, vals)
 
     def _lr_device(self, lr_seq) -> jax.Array:
@@ -708,10 +744,12 @@ class Arena:
         key = lr_np.tobytes()
         hit = self._lr_cache.get(key)
         if hit is not None:
-            self.input_cache_hits += 1
+            self.metrics.counter("arena.input_cache.hits").inc()
             return hit
-        self.input_cache_misses += 1
-        return self._cache_put(self._lr_cache, key, jnp.asarray(lr_np))
+        self.metrics.counter("arena.input_cache.misses").inc()
+        with obs.span("arena.upload", what="lr", rounds=int(lr_np.shape[0])):
+            lr_dev = jnp.asarray(lr_np)
+        return self._cache_put(self._lr_cache, key, lr_dev)
 
     # -- the batched rollout ------------------------------------------------
 
@@ -769,7 +807,7 @@ class Arena:
         def scan_fn(*args):
             # runs at TRACE time only (the executable replays without
             # re-entering Python) — the zero-retrace warmup assertion
-            self.traces += 1
+            self.metrics.counter("arena.traces").inc()
             return inner(*args)
 
         # the carry trio (params, rng-continuation via the rng argument,
@@ -914,9 +952,11 @@ class Arena:
         built = 0
         fn = self._fns.get(key)
         if fn is None:
-            fn = self._build_group_fn(key, k_max, round_fn,
-                                      eval_bank, eval_every,
-                                      use_dropout=use_dropout)
+            with obs.span("arena.compile", stage="build", resume=False,
+                          k_max=int(k_max), key=repr(key)):
+                fn = self._build_group_fn(key, k_max, round_fn,
+                                          eval_bank, eval_every,
+                                          use_dropout=use_dropout)
             built += 1
         s = len(grid)
         if s % self._shards():
@@ -946,10 +986,18 @@ class Arena:
             args = start_args(h_all, drop_all, lr_dev,
                               jnp.zeros((s, n), jnp.float32))
             if warm_aot:
-                fn.lower(*args).compile()
+                with obs.span("arena.compile", stage="aot",
+                              k_max=int(k_max), lanes=s,
+                              rounds=num_rounds):
+                    fn.lower(*args).compile()
                 return None, None, None, built, 0
-            params, queues, _, outs = fn(*args)
-            metrics = {name: np.asarray(v) for name, v in outs.items()}
+            with obs.span("arena.dispatch", k_max=int(k_max), lanes=s,
+                          rounds=num_rounds, cold=bool(built)):
+                params, queues, _, outs = fn(*args)
+            with obs.span("arena.reduce", k_max=int(k_max), lanes=s,
+                          rounds=num_rounds):
+                metrics = {name: np.asarray(v)
+                           for name, v in outs.items()}
             return params, queues, metrics, built, 1
 
         chunk = (num_rounds if chunk_size is None
@@ -971,10 +1019,12 @@ class Arena:
         rfn = self._fns.get(resume_key)
         need_resume = len(segments) > (1 if carry is None else 0)
         if need_resume and rfn is None:
-            rfn = self._build_group_fn(resume_key, k_max, round_fn,
-                                       eval_bank, eval_every,
-                                       resume=True,
-                                       use_dropout=use_dropout)
+            with obs.span("arena.compile", stage="build", resume=True,
+                          k_max=int(k_max), key=repr(resume_key)):
+                rfn = self._build_group_fn(resume_key, k_max, round_fn,
+                                           eval_bank, eval_every,
+                                           resume=True,
+                                           use_dropout=use_dropout)
             built += 1
 
         def drop_seg(t0, ln):
@@ -1014,41 +1064,61 @@ class Arena:
                     continue
                 seen.add(which)
                 if first:
-                    fn.lower(*start_args(
-                        h_seg, drop_seg(t0, ln), lr_seg,
-                        q_struct)).compile()
+                    with obs.span("arena.compile", stage="aot",
+                                  which="start", k_max=int(k_max),
+                                  lanes=s, rounds=int(ln)):
+                        fn.lower(*start_args(
+                            h_seg, drop_seg(t0, ln), lr_seg,
+                            q_struct)).compile()
                 else:
-                    rfn.lower(*resume_args(
-                        (p_struct, q_struct, extras_struct), h_seg,
-                        drop_seg(t0, ln), lr_seg, t0)).compile()
+                    with obs.span("arena.compile", stage="aot",
+                                  which="resume", k_max=int(k_max),
+                                  lanes=s, rounds=int(ln)):
+                        rfn.lower(*resume_args(
+                            (p_struct, q_struct, extras_struct), h_seg,
+                            drop_seg(t0, ln), lr_seg, t0)).compile()
             return None, None, None, built, 0
 
         # -- the pipeline: dispatch ahead, reduce behind -------------------
-        pending: List[Tuple[Any, int]] = []    # (device outs, length)
+        # (device outs, segment length, chunk index)
+        pending: List[Tuple[Any, int, int]] = []
 
         def reduce_oldest():
-            outs_d, _ = pending.pop(0)
+            outs_d, ln_r, idx = pending.pop(0)
             # np.asarray blocks only on THIS chunk's output buffers —
-            # later chunks keep executing asynchronously
-            reduced.append({name: np.asarray(v)
-                            for name, v in outs_d.items()})
+            # later chunks keep executing asynchronously (the span /
+            # latency histogram therefore measure the honest stall: how
+            # long the host waited for device work to catch up)
+            t_red = time.perf_counter()
+            with obs.span("arena.reduce", chunk=idx, rounds=int(ln_r),
+                          k_max=int(k_max), lanes=s):
+                reduced.append({name: np.asarray(v)
+                                for name, v in outs_d.items()})
+            self.metrics.histogram("arena.chunk.reduce_s").observe(
+                time.perf_counter() - t_red)
 
         dispatches = 0
         for i, (t0, ln) in enumerate(segments):
             while len(pending) >= self.in_flight:
                 reduce_oldest()
             h_seg, lr_seg = h_all[:, t0:t0 + ln], lr_dev[t0:t0 + ln]
-            if carry is None and i == 0 and t_start == 0:
-                q0 = jnp.zeros((s, n), jnp.float32)
-                params, queues, extras, outs = fn(
-                    *start_args(h_seg, drop_seg(t0, ln), lr_seg, q0))
-            else:
-                params, queues, extras, outs = rfn(
-                    *resume_args(carry, h_seg, drop_seg(t0, ln), lr_seg,
-                                 t0))
+            t_disp = time.perf_counter()
+            with obs.span("arena.dispatch", chunk=i, t0=int(t0),
+                          rounds=int(ln), k_max=int(k_max), lanes=s):
+                if carry is None and i == 0 and t_start == 0:
+                    q0 = jnp.zeros((s, n), jnp.float32)
+                    params, queues, extras, outs = fn(
+                        *start_args(h_seg, drop_seg(t0, ln), lr_seg,
+                                    q0))
+                else:
+                    params, queues, extras, outs = rfn(
+                        *resume_args(carry, h_seg, drop_seg(t0, ln),
+                                     lr_seg, t0))
+            self.metrics.histogram("arena.chunk.dispatch_s").observe(
+                time.perf_counter() - t_disp)
             dispatches += 1
             carry = (params, queues, extras)
-            pending.append((outs, ln))
+            pending.append((outs, ln, i))
             last = i == len(segments) - 1
             if (chunk_store is not None and not last and
                     (i + 1) % max(1, getattr(chunk_store, "every", 1))
@@ -1147,6 +1217,9 @@ class Arena:
         _, roll_keys = scenario_keys(grid)
         eb = eb_base[None, :] * grid.energy_scale[:, None]
         sp_k = dataclasses.replace(sp, sample_count=k_max)
+        probe_span = obs.span("arena.probe", lanes=s, k_max=k_max,
+                              rounds=num_rounds)
+        probe_span.__enter__()
         _, _, _, outs = fn(
             jnp.zeros((1,)), jnp.zeros((s, n), jnp.float32), sp_k,
             jnp.asarray(eb), None, jnp.asarray(h_np), None,
@@ -1160,6 +1233,7 @@ class Arena:
             jnp.int32(0), None)
         fps = lane_footprints(np.asarray(outs["selected"]),
                               np.asarray(bank.tier_of))
+        probe_span.__exit__(None, None, None)
         self._footprint_cache[cache_key] = fps
         return fps
 
@@ -1262,7 +1336,50 @@ class Arena:
             eval_every: Optional[int] = None,
             chunk_size: Optional[int] = None,
             chunk_store=None) -> RolloutReport:
-        """Execute every scenario of ``grid`` for ``num_rounds`` rounds.
+        """Instrumented entry point — see :meth:`_run_impl` for the
+        full execution contract.  Opens the top-level ``arena.run``
+        span, folds the run's meta into the shared metrics registry
+        (``arena.runs`` / ``arena.dispatches`` /
+        ``arena.executables_built`` cumulative counters — the per-run
+        deltas stay in ``RolloutReport.meta``), and reports to the
+        attached :class:`~repro.obs.watchdog.Watchdog` (which, post-
+        warmup, turns any new trace or executable into a violation)."""
+        run_span = obs.span("arena.run", k_mode=self.k_mode,
+                            lanes=len(grid), rounds=int(num_rounds))
+        with run_span:
+            report = self._run_impl(
+                global_params, sp, bank, grid, num_rounds, lr_seq,
+                h_all=h_all, drop_all=drop_all, eval_bank=eval_bank,
+                eval_every=eval_every, chunk_size=chunk_size,
+                chunk_store=chunk_store)
+            run_span.set(
+                dispatches=int(report.meta.get("dispatches", 0)),
+                executables_built=int(
+                    report.meta.get("executables_built", 0)))
+        self._record_run_meta(report.meta)
+        if self.watchdog is not None:
+            self.watchdog.observe_run(self, report.meta)
+        return report
+
+    def _record_run_meta(self, meta: dict) -> None:
+        """Fold one run's meta deltas into the cumulative registry (the
+        additive per-bucket contract itself stays cross-checked by
+        ``RolloutReport.dispatch_accounting``)."""
+        m = self.metrics
+        m.counter("arena.runs").inc()
+        m.counter("arena.dispatches").inc(int(meta.get("dispatches", 0)))
+        m.counter("arena.executables_built").inc(
+            int(meta.get("executables_built", 0)))
+        m.gauge("arena.executables_cached").set(len(self._fns))
+
+    def _run_impl(self, global_params: PyTree, sp: sm.SystemParams, bank,
+            grid: ScenarioGrid, num_rounds: int, lr_seq,
+            *, h_all: Optional[jax.Array] = None,
+            drop_all: Optional[jax.Array] = None, eval_bank=None,
+            eval_every: Optional[int] = None,
+            chunk_size: Optional[int] = None,
+            chunk_store=None) -> RolloutReport:
+        """(The uninstrumented body of :meth:`run`.)  Execute every scenario of ``grid`` for ``num_rounds`` rounds.
 
         ``global_params``: the shared initial model (broadcast to every
         lane, never donated).  ``sp``: base SystemParams — each lane
@@ -1374,11 +1491,13 @@ class Arena:
             # shape-adaptive dispatch: plan at the ONE-run horizon — a
             # cold arena collapses toward the padded single bucket, a
             # warmed arena's cached steady buckets win through is_cached
-            plan = self._plan(sp, bank, grid, num_rounds, h_all,
-                              runs=1.0,
-                              eval_key=self._eval_key(eval_bank,
-                                                      eval_every),
-                              use_dropout=drop_all is not None)
+            with obs.span("arena.plan", k_mode="auto", lanes=s,
+                          k_max=k_max):
+                plan = self._plan(sp, bank, grid, num_rounds, h_all,
+                                  runs=1.0,
+                                  eval_key=self._eval_key(eval_bank,
+                                                          eval_every),
+                                  use_dropout=drop_all is not None)
             params, queues, metrics, built, bucket_meta = self._run_plan(
                 global_params, sp, bank, grid, h_all, lr_seq, plan,
                 eval_bank=eval_bank, eval_every=eval_every,
@@ -1397,12 +1516,14 @@ class Arena:
             # padded-K fusion: the whole grid — mixed K included — is ONE
             # executable (K_max slots per lane, each lane's true K traced
             # as data) and one dispatch per rollout chunk
+            with obs.span("arena.plan", k_mode="pad", lanes=s,
+                          k_max=k_max):
+                plan = DispatchPlan.padded(grid.sample_count)
             params, queues, metrics, built, nd = self._run_group(
                 global_params, sp, bank, grid, h_all, lr_seq,
                 k_max=k_max, eval_bank=eval_bank, eval_every=eval_every,
                 chunk_size=chunk_size, chunk_store=chunk_store,
                 h_digest=h_digest, drop_all=drop_all)
-            plan = DispatchPlan.padded(grid.sample_count)
             meta.update(dispatches=int(nd), executables_built=int(built),
                         executables_cached=len(self._fns),
                         plan=plan.describe(),
@@ -1416,6 +1537,9 @@ class Arena:
         # Legacy mixed-K grouping: K shapes the per-round selection, so
         # each distinct K runs as its own jitted group and the lanes are
         # scattered back into grid order ("selected" right-pads to max K).
+        with obs.span("arena.plan", k_mode="group", lanes=s,
+                      k_max=k_max):
+            plan = DispatchPlan.grouped(grid.sample_count)
         lane_params = [None] * s
         queues_all = np.zeros((s, sp.num_devices), np.float32)
         metrics: Dict[str, np.ndarray] = {}
@@ -1455,8 +1579,7 @@ class Arena:
         meta.update(dispatches=nd_total,
                     executables_built=built_total,
                     executables_cached=len(self._fns),
-                    plan=DispatchPlan.grouped(grid.sample_count
-                                              ).describe(),
+                    plan=plan.describe(),
                     buckets=bucket_meta)
         return RolloutReport(grid=grid, num_rounds=num_rounds,
                              params=params, queues=queues_all,
@@ -1470,8 +1593,9 @@ class Arena:
         per-lane evaluation loop."""
         if eval_bank is None:
             return {}
-        return {"test_" + name: v for name, v in
-                eval_bank.evaluate_stacked(params_stacked).items()}
+        with obs.span("arena.eval", what="final"):
+            return {"test_" + name: v for name, v in
+                    eval_bank.evaluate_stacked(params_stacked).items()}
 
     def warmup(self, global_params: PyTree, sp: sm.SystemParams, bank,
                grid: ScenarioGrid, num_rounds: int,
@@ -1507,7 +1631,15 @@ class Arena:
         first segment length plus the resume program at every distinct
         later segment length (a ragged tail is a second shape) — so a
         warmed chunked ``run`` keeps ``self.traces`` constant too.
+
+        Warmup is also the :class:`~repro.obs.watchdog.Watchdog` arming
+        point: an attached watchdog snapshots the trace counter and the
+        executable-cache keys when warmup finishes, and every later
+        :meth:`run` is checked against that baseline.
         """
+        warm_span = obs.span("arena.warmup", k_mode=self.k_mode,
+                             lanes=len(grid), rounds=int(num_rounds))
+        warm_span.__enter__()
         before = self.traces
         if lr_seq is None:
             lr_seq = np.zeros(num_rounds, np.float32)
@@ -1545,7 +1677,12 @@ class Arena:
             # stacked executable is warmed too
             jax.block_until_ready(jax.tree_util.tree_leaves(params))
             self._final_eval(eval_bank, params)
-        return {"executables_built": built,
-                "executables_cached": len(self._fns),
-                "traces": self.traces - before,
-                "aot": use_aot, "plan": plan.describe()}
+        result = {"executables_built": built,
+                  "executables_cached": len(self._fns),
+                  "traces": self.traces - before,
+                  "aot": use_aot, "plan": plan.describe()}
+        warm_span.set(executables_built=int(built), aot=bool(use_aot))
+        warm_span.__exit__(None, None, None)
+        if self.watchdog is not None:
+            self.watchdog.arm(self)
+        return result

@@ -42,6 +42,8 @@ from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import trace as obs
+
 from .cost_model import CostModel
 
 __all__ = ["DispatchBucket", "DispatchPlan", "plan_dispatch",
@@ -312,4 +314,12 @@ def plan_dispatch(sample_counts: Sequence[int], *, rounds: int,
                    if idx not in (i, j)] + [m]
 
     buckets.sort(key=lambda b: (b.k_pad, b.tiers or ()))
-    return DispatchPlan(buckets=tuple(buckets), num_lanes=int(ks.size))
+    plan = DispatchPlan(buckets=tuple(buckets), num_lanes=int(ks.size))
+    # flight-recorder breadcrumb: the planner's verdict with the inputs
+    # that shaped it (no-op without a sink) — regressions in bucketing
+    # show up in the span log next to the dispatches they caused
+    obs.event("plan.decision", lanes=int(ks.size), rounds=int(rounds),
+              runs=(-1.0 if math.isinf(runs) else float(runs)),
+              buckets=plan.num_buckets,
+              k_pads=[int(b.k_pad) for b in plan.buckets])
+    return plan

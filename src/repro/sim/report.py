@@ -27,6 +27,7 @@ exactly the comparison methodology of Figs. 1-6.
 
 from __future__ import annotations
 
+import copy
 import dataclasses
 from typing import Any, Dict, List
 
@@ -88,21 +89,27 @@ class RolloutReport:
         """Sub-report of the given scenario indices (order kept) — the
         sweep service uses this to hand each coalesced submission its
         own lanes back.  Params slice on device (one gather per leaf);
-        metrics/queues/final_metrics slice on host.  ``meta`` is shared
-        by reference plus a ``split_from`` marker (the per-bucket
-        dispatch counters describe the coalesced execution, not the
-        slice, so :meth:`dispatch_accounting` is not meaningful on a
-        split report)."""
+        metrics/queues/final_metrics slice on host.  ``meta`` is
+        DEEP-copied (the parent's nested plan / per-bucket counter
+        lists must stay immune to mutation through the child, and vice
+        versa) and marked with ``split_from``.  A take of ALL lanes in
+        grid order keeps the per-bucket counters — accounting still
+        describes the execution exactly; a true slice clears them (the
+        counters describe the coalesced execution, not the slice, so
+        :meth:`dispatch_accounting` is not meaningful there)."""
         idx = np.asarray(idx, np.int64)
         idx_dev = jax.numpy.asarray(idx)
+        meta = copy.deepcopy(self.meta)
+        meta["split_from"] = self.num_scenarios
+        if not np.array_equal(idx, np.arange(self.num_scenarios)):
+            meta["buckets"] = []
         return RolloutReport(
             grid=self.grid.take(idx), num_rounds=self.num_rounds,
             params=jax.tree_util.tree_map(
                 lambda a: jax.numpy.take(a, idx_dev, axis=0), self.params),
             queues=np.asarray(self.queues)[idx],
             metrics={k: v[idx] for k, v in self.metrics.items()},
-            meta={**self.meta, "split_from": self.num_scenarios,
-                  "buckets": []},
+            meta=meta,
             final_metrics={k: np.asarray(v)[idx]
                            for k, v in self.final_metrics.items()})
 

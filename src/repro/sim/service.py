@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import socket
 import time
 from typing import Any, Dict, List, Optional
 
@@ -47,10 +48,18 @@ import numpy as np
 from repro.checkpoint import (checkpoint_exists, delete_checkpoint,
                               restore_arrays, restore_checkpoint,
                               save_checkpoint)
+from repro.obs import trace as obs
+from repro.obs.metrics import MetricsRegistry
 from repro.sim.arena import ScenarioGrid
 from repro.sim.report import RolloutReport
 
 PyTree = Any
+
+#: carry-manifest wire-format version.  Bump when the chunk-carry tree
+#: structure, dtypes, or the metrics-first/carry-second commit protocol
+#: change incompatibly — a store then REFUSES to resume from the stale
+#: file instead of mis-restoring it.
+CHUNK_STORE_SCHEMA_VERSION = 1
 
 
 class NpzChunkStore:
@@ -67,39 +76,76 @@ class NpzChunkStore:
     ``every`` is the arena-side cadence: persist at every ``every``-th
     chunk boundary (1 = each boundary)."""
 
-    def __init__(self, directory: str, carry_like, every: int = 1):
+    def __init__(self, directory: str, carry_like, every: int = 1,
+                 metrics: Optional[MetricsRegistry] = None):
         self.directory = directory
         self.carry_like = carry_like
         self.every = max(1, int(every))
-        #: save/load/finish counters (observability + tests)
-        self.saves = 0
-        self.loads = 0
+        #: shared metrics registry (the owning service passes the
+        #: arena's, so ``store.saves``/``store.loads`` land in the same
+        #: namespace as everything else); standalone stores get their
+        #: own
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+
+    @property
+    def saves(self) -> int:
+        """Completed :meth:`save` calls (view over ``store.saves``)."""
+        return self.metrics.counter("store.saves").value
+
+    @property
+    def loads(self) -> int:
+        """Successful :meth:`load` hits (view over ``store.loads``)."""
+        return self.metrics.counter("store.loads").value
 
     def load(self, tag: str):
         if not checkpoint_exists(self.directory, f"{tag}_carry"):
             return None
-        _, md = restore_arrays(self.directory, f"{tag}_carry")
-        carry, meta = restore_checkpoint(
-            self.directory, f"{tag}_carry",
-            like=self.carry_like(int(md["s"])))
-        t = int(meta["t"])
-        metrics, _ = restore_arrays(self.directory, f"{tag}_metrics")
-        # a crash after the metrics save but before the carry save
-        # leaves metrics AHEAD of the committed t — trim to the carry's
-        # horizon (axis 1 is the round axis on every column)
-        metrics = {k: v[:, :t] for k, v in metrics.items()}
-        self.loads += 1
+        with obs.span("store.load", tag=tag):
+            _, md = restore_arrays(self.directory, f"{tag}_carry")
+            found = int(md.get("schema_version", 0))
+            if found != CHUNK_STORE_SCHEMA_VERSION:
+                raise ValueError(
+                    f"chunk checkpoint {tag!r} in {self.directory!r} "
+                    f"was written with carry schema_version {found} "
+                    f"(written by host {md.get('host', '?')!r}, jax "
+                    f"{md.get('jax_version', '?')} at "
+                    f"{md.get('saved_at', '?')}); this build expects "
+                    f"schema_version {CHUNK_STORE_SCHEMA_VERSION} and "
+                    f"refuses to resume from an incompatible carry — "
+                    f"delete the stale checkpoint (or finish it with a "
+                    f"matching build) and resubmit")
+            carry, meta = restore_checkpoint(
+                self.directory, f"{tag}_carry",
+                like=self.carry_like(int(md["s"])))
+            t = int(meta["t"])
+            metrics, _ = restore_arrays(self.directory, f"{tag}_metrics")
+            # a crash after the metrics save but before the carry save
+            # leaves metrics AHEAD of the committed t — trim to the
+            # carry's horizon (axis 1 is the round axis on every column)
+            metrics = {k: v[:, :t] for k, v in metrics.items()}
+        self.metrics.counter("store.loads").inc()
         return t, carry, metrics
 
     def save(self, tag: str, t_next: int, carry: dict,
              metrics: Dict[str, np.ndarray]) -> None:
         s = int(carry["queues"].shape[0])
-        md = {"t": int(t_next), "s": s}
-        save_checkpoint(self.directory, f"{tag}_metrics", dict(metrics),
-                        metadata=md)
-        save_checkpoint(self.directory, f"{tag}_carry", carry,
-                        metadata=md)
-        self.saves += 1
+        # the carry manifest doubles as provenance: which wire format,
+        # which host/jax wrote it, when, and which trajectory (the tag
+        # IS the content digest of everything that shapes it) — enough
+        # to explain a refused resume without opening the npz
+        md = {"t": int(t_next), "s": s,
+              "schema_version": CHUNK_STORE_SCHEMA_VERSION,
+              "host": socket.gethostname(),
+              "jax_version": jax.__version__,
+              "saved_at": time.strftime("%Y-%m-%dT%H:%M:%S",
+                                        time.gmtime()) + "Z",
+              "grid_digest": tag}
+        with obs.span("store.save", tag=tag, t=int(t_next), lanes=s):
+            save_checkpoint(self.directory, f"{tag}_metrics",
+                            dict(metrics), metadata=md)
+            save_checkpoint(self.directory, f"{tag}_carry", carry,
+                            metadata=md)
+        self.metrics.counter("store.saves").inc()
 
     def finish(self, tag: str) -> None:
         delete_checkpoint(self.directory, f"{tag}_carry")
@@ -147,15 +193,37 @@ class SweepService:
         self.chunk_size = (chunk_size if chunk_size is not None
                            else arena.chunk_size)
         self.max_lanes = int(max_lanes)
+        #: the arena's registry, shared — the service (and its chunk
+        #: store) write ``service.*`` / ``store.*`` metrics into the
+        #: same namespace as the arena's ``arena.*``, so ONE
+        #: ``metrics.snapshot()`` captures the whole stack
+        self.metrics = arena.metrics
         self.store = None
         if checkpoint_dir is not None:
             self.store = NpzChunkStore(checkpoint_dir, self._carry_like,
-                                       every=checkpoint_every)
+                                       every=checkpoint_every,
+                                       metrics=self.metrics)
         self._queue: List[_Submission] = []
         self._results: Dict[int, RolloutReport] = {}
         self._tickets = itertools.count()
-        self.stats = dict(batches=0, scenarios=0, coalesced_lanes=[],
-                          seconds=0.0)
+
+    @property
+    def stats(self) -> Dict[str, Any]:
+        """Throughput counters as a plain dict — now a VIEW over the
+        shared metrics registry (``service.*`` names), kept for the
+        streaming bench and tests: completed ``batches`` /
+        ``scenarios``, the per-batch ``coalesced_lanes`` list, and busy
+        ``seconds`` (submit-to-drain wall time of
+        :meth:`run_pending`)."""
+        m = self.metrics
+        return {
+            "batches": m.counter("service.batches").value,
+            "scenarios": m.counter("service.scenarios").value,
+            "coalesced_lanes": [
+                int(v) for v in
+                m.histogram("service.coalesced_lanes").values],
+            "seconds": m.gauge("service.seconds").value,
+        }
 
     # -- checkpoint structure -----------------------------------------------
 
@@ -196,6 +264,7 @@ class SweepService:
                              f"max_lanes={self.max_lanes}")
         ticket = next(self._tickets)
         self._queue.append(_Submission(ticket, grid, num_rounds, lr_seq))
+        self.metrics.gauge("service.queue_depth").set(len(self._queue))
         return ticket
 
     def pending(self) -> int:
@@ -243,23 +312,28 @@ class SweepService:
         batch = self._coalesce()
         grid = (batch[0].grid if len(batch) == 1
                 else ScenarioGrid.concat([b.grid for b in batch]))
+        self.metrics.gauge("service.queue_depth").set(len(self._queue))
         t_start = time.perf_counter()
-        rep = self.arena.run(
-            self.params0, self.sp, self.bank, grid,
-            batch[0].num_rounds, batch[0].lr_seq,
-            eval_bank=self.eval_bank, eval_every=self.eval_every,
-            chunk_size=self.chunk_size, chunk_store=self.store)
-        offset = 0
-        for sub in batch:
-            n = len(sub.grid)
-            self._results[sub.ticket] = (
-                rep if len(batch) == 1
-                else rep.take(np.arange(offset, offset + n)))
-            offset += n
-        self.stats["batches"] += 1
-        self.stats["scenarios"] += len(grid)
-        self.stats["coalesced_lanes"].append(len(grid))
-        self.stats["seconds"] += time.perf_counter() - t_start
+        with obs.span("service.batch", tickets=len(batch),
+                      lanes=len(grid), rounds=int(batch[0].num_rounds),
+                      queue_depth=len(self._queue)):
+            rep = self.arena.run(
+                self.params0, self.sp, self.bank, grid,
+                batch[0].num_rounds, batch[0].lr_seq,
+                eval_bank=self.eval_bank, eval_every=self.eval_every,
+                chunk_size=self.chunk_size, chunk_store=self.store)
+            offset = 0
+            for sub in batch:
+                n = len(sub.grid)
+                self._results[sub.ticket] = (
+                    rep if len(batch) == 1
+                    else rep.take(np.arange(offset, offset + n)))
+                offset += n
+        m = self.metrics
+        m.counter("service.batches").inc()
+        m.counter("service.scenarios").inc(len(grid))
+        m.histogram("service.coalesced_lanes").observe(len(grid))
+        m.gauge("service.seconds").add(time.perf_counter() - t_start)
         return [b.ticket for b in batch]
 
     def run_pending(self) -> List[int]:
@@ -271,10 +345,12 @@ class SweepService:
             done.extend(self.process_once())
         if done:
             t_block = time.perf_counter()
-            last = self._results[done[-1]]
-            jax.block_until_ready(
-                jax.tree_util.tree_leaves(last.params))
-            self.stats["seconds"] += time.perf_counter() - t_block
+            with obs.span("service.reduce", tickets=len(done)):
+                last = self._results[done[-1]]
+                jax.block_until_ready(
+                    jax.tree_util.tree_leaves(last.params))
+            self.metrics.gauge("service.seconds").add(
+                time.perf_counter() - t_block)
         return done
 
     def result(self, ticket: int) -> RolloutReport:

@@ -1,0 +1,157 @@
+#!/usr/bin/env python
+"""Render a flight-recorder JSONL span log into a per-phase breakdown.
+
+The observability layer (``repro.obs``) writes one JSON object per
+completed span to ``runlogs/<run>.jsonl`` (``trace.JsonlSink``).  This
+tool turns that log into the operator's view:
+
+* **Per-phase breakdown** — total / mean / p50 / p99 wall time and call
+  count per span name (``arena.plan`` / ``arena.compile`` /
+  ``arena.upload`` / ``arena.dispatch`` / ``arena.reduce`` / ...),
+  sorted by total time, plus each phase's share of the run's traced
+  wall clock.
+* **Health summary** — watchdog violations (``watchdog.retrace``
+  events) with their cache-key diffs, compile activity after the first
+  ``arena.run``, and the dispatch/reduce stall ratio (p99 / p50) of the
+  streaming path.
+* **Chrome-trace export** (``--chrome out.json``) — the same records as
+  a ``chrome://tracing`` / Perfetto-loadable ``traceEvents`` file.
+
+Usage::
+
+    python tools/obs_report.py runlogs/sweep.jsonl
+    python tools/obs_report.py runlogs/sweep.jsonl --chrome trace.json
+    python tools/obs_report.py runlogs/sweep.jsonl --json   # raw dict
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+from typing import Any, Dict, List
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs import trace  # noqa: E402
+
+
+def _percentile(vals: List[float], q: float) -> float:
+    """Nearest-rank percentile (matches ``repro.obs.metrics``)."""
+    if not vals:
+        return math.nan
+    vals = sorted(vals)
+    rank = max(0, min(len(vals) - 1,
+                      int(math.ceil(q / 100.0 * len(vals))) - 1))
+    return vals[rank]
+
+
+def phase_breakdown(records: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    """Aggregate span records into one row per span name."""
+    by_name: Dict[str, List[float]] = {}
+    for r in records:
+        if r.get("dur", 0.0) > 0.0:
+            by_name.setdefault(r["name"], []).append(float(r["dur"]))
+    total_all = sum(sum(v) for v in by_name.values()) or math.nan
+    rows = []
+    for name, durs in by_name.items():
+        total = sum(durs)
+        rows.append({
+            "phase": name, "count": len(durs), "total_s": total,
+            "share": total / total_all, "mean_s": total / len(durs),
+            "p50_s": _percentile(durs, 50.0),
+            "p99_s": _percentile(durs, 99.0),
+        })
+    rows.sort(key=lambda r: -r["total_s"])
+    return rows
+
+
+def health_summary(records: List[Dict[str, Any]]) -> Dict[str, Any]:
+    """The run's contract checks: retrace violations, post-first-run
+    compiles, and streaming stall ratios."""
+    violations = [r for r in records if r["name"] == "watchdog.retrace"]
+    runs = [r for r in records if r["name"] == "arena.run"]
+    # a compile is "late" only when it starts after the FIRST run has
+    # finished (ts is span start — compiles inside the cold first run
+    # are expected; steady state must be compile-free)
+    first_run_end = min((r["ts"] + r.get("dur", 0.0) for r in runs),
+                        default=None)
+    late_compiles = [
+        r for r in records
+        if r["name"] == "arena.compile" and first_run_end is not None
+        and r["ts"] > first_run_end]
+    out: Dict[str, Any] = {
+        "spans": len(records),
+        "runs": len(runs),
+        "watchdog_violations": [r.get("attrs", {}) for r in violations],
+        "compiles_after_first_run": len(late_compiles),
+    }
+    for phase in ("arena.dispatch", "arena.reduce"):
+        durs = [float(r["dur"]) for r in records
+                if r["name"] == phase and r.get("dur", 0.0) > 0.0]
+        if durs:
+            p50, p99 = _percentile(durs, 50.0), _percentile(durs, 99.0)
+            out[phase.split(".")[1] + "_stall_ratio"] = (
+                p99 / p50 if p50 > 0 else math.nan)
+    return out
+
+
+def render(records: List[Dict[str, Any]]) -> str:
+    rows = phase_breakdown(records)
+    health = health_summary(records)
+    lines = ["== per-phase breakdown ==",
+             f"{'phase':<18} {'count':>6} {'total_s':>9} {'share':>6} "
+             f"{'mean_s':>9} {'p50_s':>9} {'p99_s':>9}"]
+    for r in rows:
+        lines.append(
+            f"{r['phase']:<18} {r['count']:>6} {r['total_s']:>9.4f} "
+            f"{r['share']:>5.0%} {r['mean_s']:>9.5f} {r['p50_s']:>9.5f} "
+            f"{r['p99_s']:>9.5f}")
+    lines.append("")
+    lines.append("== health ==")
+    lines.append(f"spans recorded        : {health['spans']}")
+    lines.append(f"arena runs            : {health['runs']}")
+    lines.append(f"compiles after 1st run: "
+                 f"{health['compiles_after_first_run']}")
+    nviol = len(health["watchdog_violations"])
+    lines.append(f"watchdog violations   : {nviol}"
+                 + ("  OK" if nviol == 0 else "  <-- RETRACE"))
+    for v in health["watchdog_violations"]:
+        lines.append(f"  - retraces={v.get('retraces')} "
+                     f"new_executables={v.get('new_executables')}")
+    for key in ("dispatch_stall_ratio", "reduce_stall_ratio"):
+        if key in health:
+            lines.append(f"{key:<22}: {health[key]:.2f}  (p99/p50)")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("log", help="flight-recorder JSONL file (JsonlSink)")
+    ap.add_argument("--chrome", metavar="OUT",
+                    help="additionally export a Chrome-trace/Perfetto "
+                         "JSON file")
+    ap.add_argument("--json", action="store_true",
+                    help="print the breakdown + health as JSON instead "
+                         "of the table")
+    args = ap.parse_args(argv)
+    records = trace.load_jsonl(args.log)
+    if not records:
+        print(f"no span records in {args.log}", file=sys.stderr)
+        return 1
+    if args.json:
+        print(json.dumps({"phases": phase_breakdown(records),
+                          "health": health_summary(records)}, indent=2))
+    else:
+        print(render(records))
+    if args.chrome:
+        path = trace.export_chrome_trace(records, args.chrome)
+        print(f"\nchrome trace written to {path} "
+              f"(open in chrome://tracing or ui.perfetto.dev)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

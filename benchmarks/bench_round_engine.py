@@ -25,6 +25,12 @@ and compares the single-global-bucket bank against the bucket-ladder
 the memory win the ladder exists for) and rounds/sec under identical
 mixed-tier selections.
 
+A third section exercises the million-client data plane (PR 10): an int8
+slot-recycled ``BankPool`` at N_cap=10k (smoke: 24), flat vs hierarchical
+cluster aggregation rounds/sec, admit/evict churn under a strict
+``Watchdog`` (zero retraces), and the fp32-one-shot vs int8-pooled
+bytes-per-client accounting.
+
 Emits ``BENCH_round_engine.json`` with rounds/sec for the trajectory so the
 perf numbers are tracked across PRs.  The default shape is the acceptance
 operating point K=8, N=120.
@@ -284,6 +290,179 @@ def _skewed_bank_section(cfg: EngineBenchConfig, alpha: float = 0.5):
     return rows, stats
 
 
+def _scale_section(cfg: EngineBenchConfig, smoke: bool = False):
+    """Million-client data plane: the int8 slot-recycled ``BankPool`` at
+    an N the fp32 one-shot bank cannot reach.
+
+    Full scale is N_cap=10k, K=8: the pool is bulk-populated (one row
+    upload per admit through ONE scatter executable), timed on fused
+    rounds (flat and hierarchical cluster aggregation), then churned
+    under an armed STRICT watchdog — admits/evicts must hit zero arena
+    retraces and zero pool scatter retraces.  The fp32 one-shot
+    footprint at the same shape is recorded by pure accounting
+    (:func:`~repro.fl.client_bank.estimate_bank_nbytes`) — building it
+    is exactly the infeasibility the section documents.  An int8-vs-fp32
+    equivalence guard runs at small N on the same data distribution.
+    Returns (csv rows, json sub-dict); raises AssertionError if the
+    bytes-reduction, zero-retrace, or equivalence contracts fail.
+    """
+    from repro.fl.client_bank import BankPool, estimate_bank_nbytes
+    from repro.obs.watchdog import Watchdog
+    from repro.sim import Arena, ScenarioGrid
+
+    if smoke:
+        n_cap, k, m, clusters, churn, t_rounds = 24, 2, 32, 4, 6, 3
+        min_ratio = 2.5          # tiny smoke shape (4x4 images, int32
+        #                          labels) caps the ratio below full scale
+    else:
+        n_cap, k, m, clusters, churn, t_rounds = 10_000, 8, 64, 64, 64, 3
+        min_ratio = 3.5
+    bs, shape = cfg.batch_size, cfg.image_shape
+    feat = int(np.prod(shape))
+    client_cfg = ClientConfig(local_epochs=cfg.local_epochs, batch_size=bs)
+    task = MLPTask(input_dim=feat, num_classes=cfg.num_classes, hidden=32)
+    eng = RoundEngine(task, client_cfg)
+    # one bounded base set; clients slice it with wraparound, so N_cap
+    # scales free of host data volume
+    base_n = min(n_cap * m, 65_536)
+    bx, by = synthetic_image_classification(base_n, shape, cfg.num_classes,
+                                            noise=0.3, seed=cfg.seed)
+
+    def client(i):
+        idx = (i * m + np.arange(m)) % base_n
+        return bx[idx], by[idx]
+
+    stats = {"n_cap": n_cap, "k": k, "examples_per_client": m,
+             "storage": "int8", "num_clusters": clusters}
+
+    t0 = time.perf_counter()
+    pool = BankPool(client_cfg, capacity=n_cap, storage="int8",
+                    clusters=clusters,
+                    initial_clients={i: client(i) for i in range(n_cap)})
+    stats["populate_s"] = time.perf_counter() - t0
+    stats["populate_admits"] = pool.admits
+    stats["bucket_examples"] = pool.bucket_examples
+
+    # -- the memory claim, as tracked numbers -----------------------------
+    fp32_bytes = estimate_bank_nbytes([m] * n_cap, bs, shape,
+                                      label_shape=by.shape[1:],
+                                      feature_dtype=bx.dtype,
+                                      label_dtype=by.dtype)
+    stats["fp32_oneshot_nbytes"] = fp32_bytes
+    stats["int8_pool_nbytes"] = pool.nbytes
+    stats["bytes_per_client_fp32_oneshot"] = fp32_bytes / n_cap
+    stats["bytes_per_client_int8_pooled"] = pool.bytes_per_client
+    ratio = fp32_bytes / pool.nbytes
+    stats["bytes_reduction"] = ratio
+    assert ratio >= min_ratio, (
+        f"int8 pooled bank reduces bytes-per-client only {ratio:.2f}x "
+        f"(need >= {min_ratio}x)")
+
+    # -- int8-vs-fp32 equivalence guard at small N ------------------------
+    guard_n = min(n_cap, 12)
+    guard_cd = [client(i) for i in range(guard_n)]
+    bank_f = eng.make_bank(guard_cd, tiered="single")
+    bank_q = eng.make_bank(guard_cd, tiered="single", storage="int8")
+    params0 = task.init(jax.random.PRNGKey(cfg.seed))
+    sel = np.arange(min(k, guard_n))
+    coeffs = np.full(sel.size, 1.0 / sel.size, np.float32)
+    rngs = jax.random.split(jax.random.PRNGKey(cfg.seed), sel.size)
+    p_f, _ = eng.round_step(params0, bank_f, sel, coeffs, cfg.lr, rngs)
+    p_q, _ = eng.round_step(params0, bank_q, sel, coeffs, cfg.lr, rngs)
+    dev = max(float(np.abs(np.asarray(a) - np.asarray(b)).max())
+              for a, b in zip(jax.tree_util.tree_leaves(p_f),
+                              jax.tree_util.tree_leaves(p_q)))
+    stats["quant_guard_max_param_dev"] = dev
+    stats["quant_guard_tol"] = 0.02
+    assert dev <= 0.02, (
+        f"int8 round drifted {dev:.4f} from fp32 (tolerance contract "
+        f"0.02) — quantization plumbing is broken, not just lossy")
+
+    # -- pooled rounds/sec (flat + hierarchical eq.-(4)) ------------------
+    pool.warmup()
+    slot_rng = np.random.default_rng(cfg.seed + 2)
+    rngs_k = jax.random.split(jax.random.PRNGKey(cfg.seed), k)
+    coeffs_k = np.full(k, 1.0 / k, np.float32)
+    plane_rounds = cfg.rounds * (1 if smoke else 10)
+
+    def timed_rounds(hierarchical):
+        params = params0
+        for _ in range(cfg.warmup_rounds):        # compile + warm
+            slots = pool.sample_slots(slot_rng, k)
+            params, losses = eng.round_step(params, pool, slots, coeffs_k,
+                                            cfg.lr, rngs_k,
+                                            hierarchical=hierarchical)
+        jax.block_until_ready(losses)
+        t0 = time.perf_counter()
+        for _ in range(plane_rounds):
+            slots = pool.sample_slots(slot_rng, k)
+            params, losses = eng.round_step(params, pool, slots, coeffs_k,
+                                            cfg.lr, rngs_k,
+                                            hierarchical=hierarchical)
+            jax.block_until_ready(losses)
+        return plane_rounds / (time.perf_counter() - t0)
+
+    stats["pooled_rounds_per_sec"] = timed_rounds(False)
+    stats["hierarchical_rounds_per_sec"] = timed_rounds(True)
+
+    # -- churn under the strict watchdog ----------------------------------
+    arena = Arena(eng)
+    dog = Watchdog(strict=True).attach(arena)
+    sp = paper_default_params(
+        num_devices=n_cap, sample_count=k, local_epochs=cfg.local_epochs,
+        data_sizes=pool.sizes.astype(np.float32))
+    grid = ScenarioGrid.create(
+        controllers=["uni_d", "uni_d"], seeds=np.arange(2),
+        V=np.full(2, 100.0, np.float32), lam=np.full(2, 1.0, np.float32),
+        sample_count=k)
+    lr_seq = np.full(t_rounds, cfg.lr, np.float32)
+    arena.warmup(params0, sp, pool, grid, t_rounds)
+    h_all = arena.sample_channels(grid, t_rounds, n_cap)
+    arena.run(params0, sp, pool, grid, t_rounds, lr_seq, h_all=h_all)
+    traces_before = pool.traces
+    t0 = time.perf_counter()
+    next_id = n_cap
+    for i in range(churn):
+        pool.evict(i % n_cap if i % n_cap in pool.slot_of else next_id - 1)
+        pool.admit(next_id, *client(next_id))
+        next_id += 1
+    stats["churn_cycles"] = churn
+    stats["churn_admits_per_sec"] = churn / (time.perf_counter() - t0)
+    # the strict watchdog raises RetraceError here if churn invalidated
+    # any warmed executable — the run doubles as the assertion
+    arena.run(params0, sp, pool, grid, t_rounds, lr_seq, h_all=h_all)
+    stats["watchdog_retraces"] = len(dog.violations)
+    stats["pool_scatter_retraces"] = pool.traces - traces_before
+    assert stats["watchdog_retraces"] == 0
+    assert stats["pool_scatter_retraces"] == 0, (
+        f"pool churn retraced the scatter "
+        f"{stats['pool_scatter_retraces']} time(s)")
+    q_err = pool.registry.get("pool.quant.abs_err", default=None)
+    if q_err is not None and q_err.count:
+        stats["quant_abs_err_mean"] = q_err.mean
+        stats["quant_abs_err_p99"] = q_err.percentiles((99.0,))[99.0]
+
+    tag = f"K{k}N{n_cap}"
+    rows = [
+        csv_row(f"round_engine/scale_pooled_int8/{tag}",
+                1e6 / stats["pooled_rounds_per_sec"],
+                f"rounds_per_sec={stats['pooled_rounds_per_sec']:.2f};"
+                f"bytes_per_client={pool.bytes_per_client:.0f};"
+                f"fp32_oneshot_bytes_per_client={fp32_bytes / n_cap:.0f};"
+                f"bytes_reduction={ratio:.2f}"),
+        csv_row(f"round_engine/scale_hierarchical/{tag}",
+                1e6 / stats["hierarchical_rounds_per_sec"],
+                f"rounds_per_sec="
+                f"{stats['hierarchical_rounds_per_sec']:.2f};"
+                f"clusters={clusters}"),
+        csv_row(f"round_engine/scale_churn/{tag}",
+                1e6 / stats["churn_admits_per_sec"],
+                f"admits_per_sec={stats['churn_admits_per_sec']:.2f};"
+                f"watchdog_retraces=0;pool_scatter_retraces=0"),
+    ]
+    return rows, stats
+
+
 def _obs_overhead_section(cfg: EngineBenchConfig) -> dict:
     """The flight recorder's cost at the acceptance operating point:
     the SAME instrumented trainer loop timed with no sink installed
@@ -346,6 +525,7 @@ def run(cfg: Optional[EngineBenchConfig] = None, smoke: bool = False,
     bank = _data_plane_rounds_per_sec(cfg, bank_resident=True)
     scan = _scan_rounds_per_sec(cfg)
     skew_rows, skew_stats = _skewed_bank_section(cfg)
+    scale_rows, scale_stats = _scale_section(cfg, smoke=smoke)
     obs_stats = _obs_overhead_section(cfg)
     result = {
         "config": dataclasses.asdict(cfg),
@@ -359,6 +539,7 @@ def run(cfg: Optional[EngineBenchConfig] = None, smoke: bool = False,
         "speedup_bank_vs_host_restacked": bank / host,
         "speedup_scan_vs_seq": scan / seq,
         "skewed": skew_stats,
+        "scale": scale_stats,
         "obs_overhead": obs_stats,
     }
     # other benches (bench_sweeps' "arena" section, future sections such
@@ -394,7 +575,7 @@ def run(cfg: Optional[EngineBenchConfig] = None, smoke: bool = False,
                 f"sink_on_slowdown="
                 f"{obs_stats['sink_on_slowdown']:.3f};"
                 f"spans={obs_stats['spans_recorded']}"),
-    ] + skew_rows
+    ] + skew_rows + scale_rows
 
 
 if __name__ == "__main__":

@@ -7,10 +7,12 @@ in one jit, optionally shard_mapped over a mesh ``data`` axis)."""
 from repro.fl.client import (Task, ClientConfig, local_update,
                              batched_local_sgd, bucket_num_batches,
                              pad_client_data, flatten_update)
-from repro.fl.client_bank import ClientBank, TieredClientBank
+from repro.fl.client_bank import (BankPool, ClientBank, TieredClientBank,
+                                  estimate_bank_nbytes)
 from repro.fl.server import (sample_clients, aggregation_weights, aggregate,
                              aggregate_stacked, aggregate_fused,
-                             aggregate_fused_psum, stack_deltas,
+                             aggregate_fused_psum, aggregate_hierarchical,
+                             aggregate_hierarchical_psum, stack_deltas,
                              ParamRavel, fedavg_reference)
 from repro.fl.environment import (CHANNEL_MODES, ChannelConfig,
                                   ChannelProcess, HeterogeneityConfig,

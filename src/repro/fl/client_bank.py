@@ -61,18 +61,74 @@ equivalence, never-donated buffers, mesh N-axis sharding when divisible)
 are inherited unchanged from the per-tier :class:`ClientBank`, and a
 one-tier ladder is literally a single :class:`ClientBank` — the round
 engine's tiered path is bit-identical to the single-bucket path there.
+
+Scale plane (PR 10)
+-------------------
+Three N-axis multipliers live behind the same bank interface (see
+docs/architecture.md "Scale plane"): opt-in ``storage='int8'`` keeps the
+xs stacks int8 with per-client affine codes dequantized inside the fused
+gather (~4x clients-per-byte; fp32 path bitwise-untouched);
+:class:`BankPool` recycles slots of a fixed ``[N_cap, B, ...]`` shape so
+population churn costs one row upload and zero retraces; and per-client
+k-means cluster routing (``clusters=``) feeds
+``server.aggregate_hierarchical``'s cluster-then-global eq.-(4) reduce.
+``nbytes`` / ``bytes_per_client`` make the footprint a tracked number on
+every bank.
 """
 
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.data.pipeline import assign_tiers, stack_client_arrays
+from repro.data.pipeline import (assign_clusters, assign_tiers,
+                                 client_bucket_examples,
+                                 client_cluster_features, dequantize_stack,
+                                 kmeans_clusters, pad_client_data,
+                                 quantize_stack, stack_client_arrays,
+                                 validate_client_data)
 from repro.fl import client as fl_client
+
+_STORAGES = ("fp32", "int8")
+
+
+def _check_storage(storage: str) -> str:
+    if storage not in _STORAGES:
+        raise ValueError(f"storage must be one of {_STORAGES}, "
+                         f"got {storage!r}")
+    return storage
+
+
+def estimate_bank_nbytes(sizes: Sequence[int], batch_size: int,
+                         feature_shape: Tuple[int, ...],
+                         label_shape: Tuple[int, ...] = (),
+                         feature_dtype=np.float32,
+                         label_dtype=np.int32,
+                         storage: str = "fp32") -> int:
+    """Device bytes a single-bucket :class:`ClientBank` WOULD hold.
+
+    Pure accounting over the bucketing contract — no allocation — so the
+    scale bench can record the fp32 one-shot footprint at an N where
+    actually constructing it is exactly the infeasibility being claimed.
+    Mirrors :attr:`ClientBank.nbytes`: the ``[N, B, ...]`` xs/ys stacks,
+    the two ``[N]`` int32 masks, and (int8 mode) the ``[N]`` f32
+    scale/zero codes.
+    """
+    _check_storage(storage)
+    n = len(sizes)
+    b = max(client_bucket_examples(int(s), batch_size) for s in sizes)
+    feat = int(np.prod(feature_shape, dtype=np.int64)) if feature_shape else 1
+    lab = int(np.prod(label_shape, dtype=np.int64)) if label_shape else 1
+    x_item = 1 if storage == "int8" else np.dtype(feature_dtype).itemsize
+    total = n * b * feat * x_item
+    total += n * b * lab * np.dtype(label_dtype).itemsize
+    total += 2 * n * 4                       # num_steps / num_examples
+    if storage == "int8":
+        total += 2 * n * 4                   # x_scale / x_zero
+    return int(total)
 
 
 class ClientBank:
@@ -81,8 +137,11 @@ class ClientBank:
     def __init__(self, client_data: Sequence[tuple],
                  client_cfg: fl_client.ClientConfig,
                  mesh: Optional[jax.sharding.Mesh] = None,
-                 mesh_axis: str = "data"):
+                 mesh_axis: str = "data", storage: str = "fp32",
+                 clusters: Optional[int] = None):
         self.batch_size = client_cfg.batch_size
+        self.storage = _check_storage(storage)
+        validate_client_data(client_data)
         # Host retention is the TRUE data (sum_i n_i rows, private copies
         # decoupled from caller mutation), not the tiled [N, B, ...]
         # mirror: with skewed sizes the global bucket makes the tiled form
@@ -101,12 +160,35 @@ class ClientBank:
         # the engine may use the cheaper unmasked SGD trace.
         self.uniform = bool(np.all(num_examples == self.bucket_examples))
         self.mesh, self.mesh_axis = mesh, mesh_axis
-        self.xs = self._to_device(host_x)
+        if self.storage == "int8":
+            # Per-client affine codes; the fused gather dequantizes the K
+            # selected rows right after jnp.take, so the full stack lives
+            # int8 on device and fp32 rows never materialize at [N, ...].
+            q, scale, zero = quantize_stack(host_x)
+            self.xs = self._to_device(q)
+            self.x_scale = self._to_device(scale)
+            self.x_zero = self._to_device(zero)
+        else:
+            self.xs = self._to_device(host_x)
+            self.x_scale = self.x_zero = None
         self.ys = self._to_device(host_y)
         # the masks are also retained host-side (gather_host/sizes): upload
         # private copies so a zero-copy device_put can't alias them
         self.num_steps = self._to_device(num_steps.copy())
         self.num_examples = self._to_device(num_examples.copy())
+        # Cluster routing for hierarchical eq.-(4) aggregation: host-side
+        # k-means over per-client summary features, mirrored to device for
+        # the in-jit segment reduce.  Control-plane data, like tiers.
+        if clusters is not None:
+            feats = client_cluster_features(self._clients)
+            self.cluster_of, self.cluster_centroids = kmeans_clusters(
+                feats, clusters)
+            self.num_clusters = int(self.cluster_centroids.shape[0])
+            self.cluster_of_device = jnp.asarray(self.cluster_of, jnp.int32)
+        else:
+            self.cluster_of = self.cluster_centroids = None
+            self.num_clusters = 0
+            self.cluster_of_device = None
         # The ONE host->device upload happens here, not lazily: block so
         # the device copy can't race callers mutating their arrays after
         # construction (transfers are async).
@@ -151,6 +233,28 @@ class ClientBank:
         """``N * B`` — device rows actually held (incl. tiling padding)."""
         return self.num_clients * self.bucket_examples
 
+    @property
+    def nbytes(self) -> int:
+        """Device bytes held: xs/ys stacks, masks, and (int8) the
+        scale/zero codes — the tracked number behind the memory claim."""
+        arrs = [self.xs, self.ys, self.num_steps, self.num_examples]
+        if self.x_scale is not None:
+            arrs += [self.x_scale, self.x_zero]
+        return int(sum(a.size * a.dtype.itemsize for a in arrs))
+
+    @property
+    def bytes_per_client(self) -> float:
+        """:attr:`nbytes` amortized over N — the clients-per-byte axis the
+        int8 mode multiplies ~4x."""
+        return self.nbytes / self.num_clients
+
+    def quant_args(self) -> Tuple[Optional[jax.Array], Optional[jax.Array]]:
+        """Per-client affine codes ``(x_scale, x_zero)`` for the in-gather
+        dequantization, or ``(None, None)`` in fp32 mode (the engine keys
+        its executables on that, so the fp32 trace is literally the old
+        one)."""
+        return self.x_scale, self.x_zero
+
     def device_args(self) -> Tuple[jax.Array, jax.Array,
                                    Optional[jax.Array],
                                    Optional[jax.Array]]:
@@ -180,6 +284,10 @@ class ClientBank:
         ``num_examples`` are None when every selected client exactly
         fills the bucket (the PR-1 unmasked trace), else the selected
         ``[K]`` mask rows.
+
+        Always the UNQUANTIZED fp32 rows, even for an int8 bank — this is
+        the reference the quantization tolerance contract is stated
+        against (``|dequant(q) - x| <= 0.5 * scale_i``).
         """
         if self._tiled is None:
             self._tiled = stack_client_arrays(self._clients,
@@ -223,8 +331,11 @@ class TieredClientBank:
                  client_cfg: fl_client.ClientConfig,
                  mesh: Optional[jax.sharding.Mesh] = None,
                  mesh_axis: str = "data", max_tiers: int = 4,
-                 assignment: Optional[tuple] = None):
+                 assignment: Optional[tuple] = None,
+                 storage: str = "fp32"):
         self.batch_size = client_cfg.batch_size
+        self.storage = _check_storage(storage)
+        validate_client_data(client_data)
         sizes = [int(np.asarray(x).shape[0]) for x, _ in client_data]
         self.num_clients = len(sizes)
         # ``assignment``: a precomputed ``assign_tiers`` result, so a
@@ -243,7 +354,8 @@ class TieredClientBank:
             pos[members] = np.arange(members.size, dtype=np.int32)
         self.pos_in_tier = pos
         self.tiers = [ClientBank([client_data[i] for i in members],
-                                 client_cfg, mesh=mesh, mesh_axis=mesh_axis)
+                                 client_cfg, mesh=mesh, mesh_axis=mesh_axis,
+                                 storage=storage)
                       for members in self.tier_members]
         # device copies for the in-jit tier loop (scan samples clients on
         # device, so the tier routing must be traceable)
@@ -269,9 +381,337 @@ class TieredClientBank:
         """``sum_t N_t * B_t`` — device rows held across the ladder."""
         return sum(bank.padded_examples for bank in self.tiers)
 
+    @property
+    def nbytes(self) -> int:
+        """Device bytes held across the ladder (sum of per-tier banks)."""
+        return sum(bank.nbytes for bank in self.tiers)
+
+    @property
+    def bytes_per_client(self) -> float:
+        """:attr:`nbytes` amortized over the GLOBAL client count."""
+        return self.nbytes / self.num_clients
+
     def client_view(self, i: int) -> Tuple[np.ndarray, np.ndarray]:
         """Client ``i``'s true (x, y) via its tier's private host copy
         (the sequential / DivFL path, same contract as
         :meth:`ClientBank.client_view`)."""
         return self.tiers[self.tier_of[i]].client_view(
             int(self.pos_in_tier[i]))
+
+
+class BankPool:
+    """Slot-recycled streaming pool: a fixed-capacity device-resident
+    ``[N_cap, B, ...]`` bank whose population churns WITHOUT retracing.
+
+    The one-shot banks above freeze their population at construction —
+    admitting a new client means a new bank, a new layout key, and a new
+    executable.  The pool instead allocates the stacks ONCE at a static
+    ``(capacity, B)`` shape and turns client turnover into data motion
+    over that shape: admitting a client tiles its rows to ``B``,
+    optionally quantizes them, and writes them into a free slot with one
+    donating in-place ``.at[slot].set`` scatter (ONE row upload, slot id
+    read as data); evicting only returns the slot to the free list (zero
+    device work — the stale rows are unreachable behind the slot table).
+    Every executable the engine compiled against the pool keeps firing
+    across unlimited churn: the strict watchdog contract is ZERO retraces
+    after :meth:`warmup`.
+
+    Implements the bank interface (``device_args`` / ``quant_args`` /
+    sizes / accounting), so ``RoundEngine.round_step`` / ``run_scan`` and
+    the arena ride it unchanged.  Differences from :class:`ClientBank`:
+
+    * ``uniform`` is always False — the masked trace stays valid for any
+      resident mix, so churn can never flip the executable choice.
+    * Buffers ARE donated (to the pool's own scatter): callers must
+      re-read :meth:`device_args` after an admit rather than hold stale
+      references.
+    * Selection is over SLOTS: decide rules draw from
+      :meth:`sample_slots` / :meth:`slots_for`; empty slots hold inert
+      rows (``num_steps=1`` over zeros) but are the caller's job to avoid.
+
+    Tallies (admits/evicts/uploads/traces, quantization error) are views
+    over the shared obs :class:`~repro.obs.metrics.MetricsRegistry` under
+    the ``pool.*`` namespace (PR-9 contract).
+    """
+
+    def __init__(self, client_cfg: fl_client.ClientConfig, capacity: int,
+                 max_examples: Optional[int] = None,
+                 feature_shape: Optional[Tuple[int, ...]] = None,
+                 label_shape: Tuple[int, ...] = (),
+                 feature_dtype=np.float32, label_dtype=np.int32,
+                 storage: str = "fp32", clusters: Optional[int] = None,
+                 initial_clients: Optional[Dict[int, tuple]] = None,
+                 registry=None):
+        from repro.obs.metrics import MetricsRegistry
+        self.batch_size = client_cfg.batch_size
+        self.storage = _check_storage(storage)
+        self.registry = registry if registry is not None else MetricsRegistry()
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        init_items = list(initial_clients.items()) if initial_clients else []
+        if init_items:
+            validate_client_data([pair for _, pair in init_items])
+            if len(init_items) > self.capacity:
+                raise ValueError(f"{len(init_items)} initial clients exceed "
+                                 f"pool capacity {self.capacity}")
+            x0, y0 = init_items[0][1]
+            x0, y0 = np.asarray(x0), np.asarray(y0)
+            feature_shape = tuple(x0.shape[1:])
+            label_shape = tuple(y0.shape[1:])
+            feature_dtype, label_dtype = x0.dtype, y0.dtype
+            sizes = [np.asarray(x).shape[0] for _, (x, _) in init_items]
+            max_examples = max(int(max_examples or 0), max(sizes))
+        elif feature_shape is None or max_examples is None:
+            raise ValueError("an empty pool needs feature_shape and "
+                             "max_examples to fix its static [N_cap, B, "
+                             "...] shape up front")
+        self.feature_shape = tuple(feature_shape)
+        self.label_shape = tuple(label_shape)
+        self.feature_dtype = np.dtype(feature_dtype)
+        self.label_dtype = np.dtype(label_dtype)
+        if not np.issubdtype(self.feature_dtype, np.floating):
+            raise ValueError(f"feature_dtype {self.feature_dtype} is not a "
+                             f"float dtype")
+        self.bucket_examples = client_bucket_examples(int(max_examples),
+                                                      self.batch_size)
+        self.steps_per_epoch = self.bucket_examples // self.batch_size
+        self.num_clients = self.capacity          # bank-interface N
+        # Churn must never flip the executable: always take the masked
+        # trace, even if the residents happen to be uniform right now.
+        self.uniform = False
+        self.mesh, self.mesh_axis = None, "data"
+        b = self.bucket_examples
+        # Empty slots hold inert rows: one step over zeros, full-bucket
+        # num_examples, identity dequant codes.  Defined (non-NaN)
+        # behavior even if a decide rule mistakenly selects one.
+        self.xs = jnp.zeros((self.capacity, b) + self.feature_shape,
+                            jnp.int8 if self.storage == "int8"
+                            else self.feature_dtype)
+        self.ys = jnp.zeros((self.capacity, b) + self.label_shape,
+                            self.label_dtype)
+        self.num_steps = jnp.ones((self.capacity,), jnp.int32)
+        self.num_examples = jnp.full((self.capacity,), b, jnp.int32)
+        if self.storage == "int8":
+            self.x_scale = jnp.ones((self.capacity,), jnp.float32)
+            self.x_zero = jnp.zeros((self.capacity,), jnp.float32)
+        else:
+            self.x_scale = self.x_zero = None
+        # Cluster routing: centroids are fitted ONCE on the initial
+        # population and stay fixed, so an admitted client's cluster id
+        # never depends on admission order.
+        if clusters is not None:
+            if not init_items:
+                raise ValueError("clusters needs initial_clients to fit "
+                                 "centroids on")
+            feats = client_cluster_features([p for _, p in init_items])
+            _, self.cluster_centroids = kmeans_clusters(feats, clusters)
+            self.num_clusters = int(self.cluster_centroids.shape[0])
+            self.cluster_of = np.zeros(self.capacity, np.int32)
+            self.cluster_of_device = jnp.zeros((self.capacity,), jnp.int32)
+        else:
+            self.cluster_centroids = self.cluster_of = None
+            self.num_clusters = 0
+            self.cluster_of_device = None
+        self._buffer_names = ["xs", "ys", "num_steps", "num_examples"]
+        if self.storage == "int8":
+            self._buffer_names += ["x_scale", "x_zero"]
+        if self.cluster_of_device is not None:
+            self._buffer_names += ["cluster_of_device"]
+        # ONE donating scatter executable for the pool's lifetime: built
+        # here, traced on the first admit (or warmup), and counted so the
+        # zero-retrace contract is a tracked number, not a hope.
+        def _scatter(buffers, slot, rows):
+            self.registry.counter("pool.traces").inc()
+            return tuple(buf.at[slot].set(row)
+                         for buf, row in zip(buffers, rows))
+        # donation makes the scatter a true in-place row write; on CPU it
+        # is a no-op (warning), so gate it like the engine does
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+        self._scatter = jax.jit(_scatter, donate_argnums=donate)
+        # Host-side slot table + bounded true-data retention (private
+        # copies of RESIDENT clients only, dropped on evict).
+        self.slot_of: Dict[object, int] = {}
+        self._free: List[int] = list(range(self.capacity - 1, -1, -1))
+        self._host: Dict[object, tuple] = {}
+        self._sizes = np.zeros(self.capacity, np.int32)
+        jax.block_until_ready(tuple(getattr(self, n)
+                                    for n in self._buffer_names))
+        for cid, (x, y) in init_items:
+            self.admit(cid, x, y)
+
+    # -- churn --------------------------------------------------------------
+
+    def admit(self, client_id, x: np.ndarray, y: np.ndarray) -> int:
+        """Bring a client resident: tile → (quantize) → one in-place row
+        scatter into a free slot.  Returns the slot id."""
+        if client_id in self.slot_of:
+            raise ValueError(f"client {client_id!r} is already resident "
+                             f"(slot {self.slot_of[client_id]})")
+        if not self._free:
+            raise ValueError(f"pool is full ({self.capacity} slots) — "
+                             f"evict before admitting")
+        x, y = np.asarray(x), np.asarray(y)
+        validate_client_data([(x, y)])
+        if (x.dtype, x.shape[1:]) != (self.feature_dtype,
+                                      self.feature_shape) or \
+           (y.dtype, y.shape[1:]) != (self.label_dtype, self.label_shape):
+            raise ValueError(
+                f"client {client_id!r}: (x {x.dtype} {x.shape[1:]}, "
+                f"y {y.dtype} {y.shape[1:]}) does not match the pool's "
+                f"static spec (x {self.feature_dtype} {self.feature_shape},"
+                f" y {self.label_dtype} {self.label_shape})")
+        n = int(x.shape[0])
+        if n > self.bucket_examples:
+            raise ValueError(
+                f"client {client_id!r}: {n} examples exceed the pool "
+                f"bucket B={self.bucket_examples} — size the pool's "
+                f"max_examples for the largest admissible client")
+        px, py = pad_client_data(x, y, self.bucket_examples)
+        ns = np.int32(max(n // self.batch_size, 1))
+        ne = np.int32(n)
+        rows = {"ys": jnp.asarray(py), "num_steps": jnp.asarray(ns),
+                "num_examples": jnp.asarray(ne)}
+        if self.storage == "int8":
+            q, scale, zero = quantize_stack(px[None])
+            err = float(np.abs(dequantize_stack(q, scale, zero)
+                               - px[None].astype(np.float32)).max())
+            self.registry.histogram("pool.quant.abs_err").observe(err)
+            rows["xs"] = jnp.asarray(q[0])
+            rows["x_scale"] = jnp.asarray(scale[0])
+            rows["x_zero"] = jnp.asarray(zero[0])
+        else:
+            rows["xs"] = jnp.asarray(px)
+        slot = self._free.pop()
+        if self.cluster_of_device is not None:
+            feats = client_cluster_features([(x, y)])
+            cid = assign_clusters(feats, self.cluster_centroids)[0]
+            self.cluster_of[slot] = cid
+            rows["cluster_of_device"] = jnp.asarray(np.int32(cid))
+        buffers = tuple(getattr(self, name) for name in self._buffer_names)
+        row_vals = tuple(rows[name] for name in self._buffer_names)
+        new_buffers = self._scatter(buffers, jnp.int32(slot), row_vals)
+        for name, buf in zip(self._buffer_names, new_buffers):
+            setattr(self, name, buf)
+        self.slot_of[client_id] = slot
+        self._host[client_id] = (x.copy(), y.copy())
+        self._sizes[slot] = n
+        self.registry.counter("pool.admits").inc()
+        self.registry.counter("pool.uploads").inc()
+        self.registry.gauge("pool.resident").set(len(self.slot_of))
+        return slot
+
+    def evict(self, client_id) -> int:
+        """Return a client's slot to the free list.  Zero device work —
+        the rows stay in place but become unreachable behind the slot
+        table; a later admit overwrites them.  Returns the freed slot."""
+        if client_id not in self.slot_of:
+            raise ValueError(f"client {client_id!r} is not resident")
+        slot = self.slot_of.pop(client_id)
+        self._free.append(slot)
+        self._host.pop(client_id, None)
+        self._sizes[slot] = 0
+        self.registry.counter("pool.evicts").inc()
+        self.registry.gauge("pool.resident").set(len(self.slot_of))
+        return slot
+
+    def warmup(self) -> None:
+        """Trace the scatter once (admit+evict a throwaway client) so the
+        strict watchdog can arm over a pool whose churn path is already
+        compiled — every later admit is a cache hit.  A no-op when any
+        admit already ran (the executable exists; a full pool needs no
+        sentinel and has no slot for one)."""
+        if self.uploads:
+            jax.block_until_ready(self.xs)
+            return
+        sentinel = object()
+        x = np.zeros((1,) + self.feature_shape, self.feature_dtype)
+        y = np.zeros((1,) + self.label_shape, self.label_dtype)
+        self.admit(sentinel, x, y)
+        self.evict(sentinel)
+        jax.block_until_ready(self.xs)
+
+    # -- slot views ---------------------------------------------------------
+
+    def slots_for(self, client_ids: Sequence) -> np.ndarray:
+        """Resident clients' slots, in the given order ([K] int32)."""
+        return np.asarray([self.slot_of[c] for c in client_ids], np.int32)
+
+    def sample_slots(self, rng: np.random.Generator, k: int) -> np.ndarray:
+        """Draw ``k`` distinct OCCUPIED slots — the decide-rule feed over
+        a churning population (empty slots never selected)."""
+        occupied = np.asarray(sorted(self.slot_of.values()), np.int32)
+        if k > occupied.size:
+            raise ValueError(f"asked for {k} slots but only "
+                             f"{occupied.size} are occupied")
+        return np.asarray(rng.choice(occupied, size=k, replace=False),
+                          np.int32)
+
+    def client_view(self, client_id) -> Tuple[np.ndarray, np.ndarray]:
+        """A resident client's true (x, y) — the pool's private host
+        copy (dropped at evict; same contract as the banks')."""
+        return self._host[client_id]
+
+    # -- bank interface -----------------------------------------------------
+
+    def device_args(self) -> Tuple[jax.Array, jax.Array,
+                                   Optional[jax.Array],
+                                   Optional[jax.Array]]:
+        """(xs, ys, num_steps, num_examples) over the CURRENT buffers —
+        re-read after every admit (the scatter donates and replaces
+        them); masks are always present (see ``uniform``)."""
+        return self.xs, self.ys, self.num_steps, self.num_examples
+
+    def quant_args(self) -> Tuple[Optional[jax.Array], Optional[jax.Array]]:
+        """Per-slot affine codes, or ``(None, None)`` in fp32 mode."""
+        return self.x_scale, self.x_zero
+
+    @property
+    def sizes(self) -> np.ndarray:
+        """Per-SLOT true sizes ``n_i`` (0 for empty slots; host, [N_cap])."""
+        return self._sizes
+
+    @property
+    def true_examples(self) -> int:
+        return int(self._sizes.sum())
+
+    @property
+    def padded_examples(self) -> int:
+        return self.capacity * self.bucket_examples
+
+    @property
+    def nbytes(self) -> int:
+        """Device bytes held — FIXED at construction (the whole point:
+        churn moves rows, never memory)."""
+        arrs = [getattr(self, name) for name in self._buffer_names]
+        return int(sum(a.size * a.dtype.itemsize for a in arrs))
+
+    @property
+    def bytes_per_client(self) -> float:
+        """:attr:`nbytes` amortized over CAPACITY (the slots exist
+        whether or not they are occupied)."""
+        return self.nbytes / self.capacity
+
+    @property
+    def num_resident(self) -> int:
+        return len(self.slot_of)
+
+    # -- registry views (PR-9 contract) -------------------------------------
+
+    @property
+    def admits(self) -> int:
+        return int(self.registry.get("pool.admits"))
+
+    @property
+    def evicts(self) -> int:
+        return int(self.registry.get("pool.evicts"))
+
+    @property
+    def uploads(self) -> int:
+        return int(self.registry.get("pool.uploads"))
+
+    @property
+    def traces(self) -> int:
+        """Scatter (re)traces — stays at 1 after :meth:`warmup` for the
+        pool's whole life (the zero-retrace churn contract)."""
+        return int(self.registry.get("pool.traces"))

@@ -93,13 +93,26 @@ AnyBank = Any   # ClientBank | TieredClientBank
 
 
 def _tier_parts(parts_key: tuple, buffers: tuple) -> list:
-    """Zip the static per-tier key ``(tid, steps, masked)`` with the
-    matching device buffers ``(xs, ys, ns, ne)`` into the
-    ``(tid, xs, ys, ns, ne, steps)`` entries ``_tier_loop_round``
+    """Zip the static per-tier key ``(tid, steps, masked[, quant])`` with
+    the matching device buffers ``(xs, ys, ns, ne[, sc, zp])`` into the
+    ``(tid, xs, ys, ns, ne, sc, zp, steps)`` entries ``_tier_loop_round``
     consumes — the ONE place the parts layout is defined, shared by the
-    tiered step and the tiered scan."""
-    return [(tid, xs, ys, ns, ne, steps)
-            for (tid, steps, _), (xs, ys, ns, ne) in zip(parts_key, buffers)]
+    tiered step and the tiered scan.  Pre-quantization callers (3-tuple
+    keys, 4-tuple buffers) get ``sc = zp = None`` — the fp32 trace."""
+    out = []
+    for key, buf in zip(parts_key, buffers):
+        tid, steps = key[0], key[1]
+        xs, ys, ns, ne = buf[:4]
+        sc, zp = (buf[4], buf[5]) if len(buf) >= 6 else (None, None)
+        out.append((tid, xs, ys, ns, ne, sc, zp, steps))
+    return out
+
+
+def _bank_quant_args(bank) -> tuple:
+    """``bank.quant_args()`` with a fp32 default for banks predating the
+    quantized storage mode (duck-typed callers, test doubles)."""
+    fn = getattr(bank, "quant_args", None)
+    return fn() if fn is not None else (None, None)
 
 
 def bank_layout_key(bank: AnyBank, tier_subset=None) -> tuple:
@@ -110,15 +123,19 @@ def bank_layout_key(bank: AnyBank, tier_subset=None) -> tuple:
     compiled?" against the arena cache before paying for a plan — so the
     two layouts must stay in lockstep: ``masked`` here is
     ``not tier.uniform``, exactly when ``device_args`` returns non-None
-    step masks."""
+    step masks, and ``quant`` is the int8-storage flag, exactly when
+    ``quant_args`` returns non-None codes (the dequantizing gather is a
+    different trace)."""
     if isinstance(bank, TieredClientBank) and bank.num_tiers == 1:
         bank = bank.tiers[0]
     if isinstance(bank, TieredClientBank):
         tiers = (tuple(range(bank.num_tiers)) if tier_subset is None
                  else tuple(tier_subset))
         return tuple((t, bank.tiers[t].steps_per_epoch,
-                      not bank.tiers[t].uniform) for t in tiers)
-    return (bank.steps_per_epoch, not bank.uniform)
+                      not bank.tiers[t].uniform,
+                      bank.tiers[t].storage == "int8") for t in tiers)
+    return (bank.steps_per_epoch, not bank.uniform,
+            getattr(bank, "storage", "fp32") == "int8")
 
 
 def _default_donate() -> bool:
@@ -136,13 +153,13 @@ def _default_select(sp, t, h, queues, q, key, slots, kvec, cid):
 class RoundEngine:
     """Executes FL rounds as fused, device-resident computations.
 
-    Jitted executables are cached per (steps_per_epoch, masked) for single
-    rounds and (steps, K, policy, masked) for scans — with a single-bucket
-    bank that is one step executable per trainer; a tier ladder adds one
-    step executable per tier plus one tier-loop executable per distinct
-    hit-tier subset (keyed by the static (tier, steps, masked) tuple).
-    Bank buffers are never donated; only params (and the scan's queues)
-    are.
+    Jitted executables are cached per (steps_per_epoch, masked, quant,
+    clusters) for single rounds and (bank layout, K, policy, dropout) for
+    scans — with a single-bucket bank that is one step executable per
+    trainer; a tier ladder adds one step executable per tier plus one
+    tier-loop executable per distinct hit-tier subset (keyed by the
+    static (tier, steps, masked, quant) tuple).  Bank buffers are never
+    donated; only params (and the scan's queues) are.
     """
 
     def __init__(self, task: fl_client.Task, client_cfg: fl_client.ClientConfig,
@@ -161,7 +178,8 @@ class RoundEngine:
         self._tiered_fns: Dict[tuple, Any] = {}
 
     def make_bank(self, client_data, tiered: str = "auto",
-                  max_tiers: int = 4) -> AnyBank:
+                  max_tiers: int = 4, storage: str = "fp32",
+                  clusters: Optional[int] = None) -> AnyBank:
         """Build the device-resident bank this engine's rounds gather from
         (client axis co-sharded with the engine's mesh).
 
@@ -170,9 +188,17 @@ class RoundEngine:
         more than one size tier (a uniform ladder IS the single-bucket
         bank); 'single' forces the one-global-bucket :class:`ClientBank`;
         'tiered' forces the ladder even when it has one rung.
+
+        ``storage``: 'fp32' (default, the historical bitwise path) or
+        'int8' per-client-quantized rows dequantized inside the fused
+        gather.  ``clusters``: fit k-means cluster routing for
+        ``round_step(..., hierarchical=True)`` — single-bucket banks
+        only (the tier loop already reduces per tier).
         """
         if tiered not in ("auto", "single", "tiered"):
             raise ValueError(f"unknown bank mode {tiered!r}")
+        from repro.data.pipeline import validate_client_data
+        validate_client_data(client_data)
         assignment = None
         if tiered == "auto":
             from repro.data.pipeline import assign_tiers
@@ -183,10 +209,15 @@ class RoundEngine:
             tiered = "single" if len(assignment[1]) == 1 else "tiered"
         if tiered == "single":
             return ClientBank(client_data, self.cfg, mesh=self.mesh,
-                              mesh_axis=self.mesh_axis)
+                              mesh_axis=self.mesh_axis, storage=storage,
+                              clusters=clusters)
+        if clusters is not None:
+            raise ValueError("clusters= needs a single-bucket bank "
+                             "(tiered='single'), got a tier ladder")
         return TieredClientBank(client_data, self.cfg, mesh=self.mesh,
                                 mesh_axis=self.mesh_axis,
-                                max_tiers=max_tiers, assignment=assignment)
+                                max_tiers=max_tiers, assignment=assignment,
+                                storage=storage)
 
     # -- shared round core -------------------------------------------------
 
@@ -196,15 +227,26 @@ class RoundEngine:
         return int(self.mesh.shape[self.mesh_axis])
 
     def _round_core(self, params, xs, ys, coeffs, lr, rngs, num_steps,
-                    num_examples, steps: int):
+                    num_examples, steps: int, cluster_sel=None,
+                    num_clusters: int = 0):
         """Train the stacked clients + aggregate — optionally shard_mapped
-        over the client axis.  Pure trace shared by every entry point."""
+        over the client axis.  Pure trace shared by every entry point.
+
+        ``cluster_sel`` (``[K]`` traced cluster ids, optional) switches
+        the eq.-(4) reduce to the hierarchical cluster-then-global form
+        (``server.aggregate_hierarchical``; its psum twin under a mesh).
+        ``None`` keeps the flat reduce — the historical trace, untouched.
+        """
         loss_fn, cfg, impl = self.task.loss_fn, self.cfg, self.impl
         shards = self._shards()
         if shards <= 1:
             deltas, losses = fl_client.batched_local_sgd(
                 loss_fn, params, xs, ys, lr, rngs, cfg, steps,
                 num_steps=num_steps, num_examples=num_examples)
+            if cluster_sel is not None:
+                return fl_server.aggregate_hierarchical(
+                    params, deltas, coeffs, cluster_sel,
+                    num_clusters), losses
             return fl_server.aggregate_fused(params, deltas, coeffs,
                                              impl=impl), losses
         k = xs.shape[0]
@@ -213,6 +255,23 @@ class RoundEngine:
                 f"sample_count {k} not divisible by mesh axis "
                 f"{self.mesh_axis!r} size {shards}")
         axis = self.mesh_axis
+
+        if cluster_sel is not None:
+            def body_h(params, lr, xs, ys, coeffs, rngs, ns, ne, csel):
+                deltas, losses = fl_client.batched_local_sgd(
+                    loss_fn, params, xs, ys, lr, rngs, cfg, steps,
+                    num_steps=ns, num_examples=ne)
+                new_params = fl_server.aggregate_hierarchical_psum(
+                    params, deltas, coeffs, csel, num_clusters, axis)
+                return new_params, losses
+
+            sharded = shard_map(
+                body_h, mesh=self.mesh,
+                in_specs=(P(), P(), P(axis), P(axis), P(axis), P(axis),
+                          P(axis), P(axis), P(axis)),
+                out_specs=(P(), P(axis)), check_rep=False)
+            return sharded(params, lr, xs, ys, coeffs, rngs, num_steps,
+                           num_examples, cluster_sel)
 
         def body(params, lr, xs, ys, coeffs, rngs, ns, ne):
             deltas, losses = fl_client.batched_local_sgd(
@@ -233,17 +292,36 @@ class RoundEngine:
                        num_examples)
 
     def _gathered_round(self, params, all_x, all_y, all_steps, all_sizes,
-                        selected, coeffs, lr, rngs, steps: int):
+                        all_scale, all_zero, selected, coeffs, lr, rngs,
+                        steps: int, cluster_of=None, num_clusters: int = 0):
         """THE gather core: select K clients from ``[N, ...]`` bank stacks
         inside the trace (``jnp.take``) and run the round on them.  Both
         ``round_step`` and the scan body go through here, so the two data
-        planes share one implementation."""
+        planes share one implementation.
+
+        ``all_scale`` / ``all_zero`` (``[N]`` f32, or None) are an int8
+        bank's per-client affine codes: the K selected rows are
+        dequantized RIGHT HERE, after the take — fp32 rows only ever
+        materialize at ``[K, B, ...]``, never at bank scale.  With None
+        codes the trace below is character-for-character the historical
+        fp32 gather (the bitwise non-regression contract).  ``cluster_of``
+        (``[N]`` int32, optional) routes the round's aggregation through
+        the hierarchical reduce (see :meth:`_round_core`).
+        """
         xs = jnp.take(all_x, selected, axis=0)
+        if all_scale is not None:
+            shape = selected.shape + (1,) * (xs.ndim - 1)
+            xs = (xs.astype(jnp.float32)
+                  * jnp.take(all_scale, selected).reshape(shape)
+                  + jnp.take(all_zero, selected).reshape(shape))
         ys = jnp.take(all_y, selected, axis=0)
         ns = None if all_steps is None else jnp.take(all_steps, selected)
         ne = None if all_sizes is None else jnp.take(all_sizes, selected)
+        csel = (None if cluster_of is None
+                else jnp.take(cluster_of, selected))
         return self._round_core(params, xs, ys, coeffs, lr, rngs, ns, ne,
-                                steps)
+                                steps, cluster_sel=csel,
+                                num_clusters=num_clusters)
 
     def _tier_loop_round(self, params, parts, tier_sel, pos_sel, coeffs,
                          lr, rngs, cond_skip: bool = False):
@@ -279,15 +357,16 @@ class RoundEngine:
         both branches and selecting, which is still correct).
         """
         upd, losses = None, jnp.zeros(pos_sel.shape, jnp.float32)
-        for tid, xs, ys, ns, ne, steps in parts:
+        for tid, xs, ys, ns, ne, sc, zp, steps in parts:
             mask = tier_sel == tid
             pos = jnp.where(mask, pos_sel, 0)
             cf = coeffs * mask.astype(coeffs.dtype)
 
-            def run_tier(pos, cf, xs=xs, ys=ys, ns=ns, ne=ne, steps=steps,
-                         mask=mask):
+            def run_tier(pos, cf, xs=xs, ys=ys, ns=ns, ne=ne, sc=sc,
+                         zp=zp, steps=steps, mask=mask):
                 p_t, l_t = self._gathered_round(params, xs, ys, ns, ne,
-                                                pos, cf, lr, rngs, steps)
+                                                sc, zp, pos, cf, lr,
+                                                rngs, steps)
                 u_t = jax.tree_util.tree_map(lambda a, b: a - b, p_t,
                                              params)
                 return u_t, l_t.astype(jnp.float32) * mask
@@ -309,19 +388,22 @@ class RoundEngine:
 
     # -- single fused round ------------------------------------------------
 
-    def _build_step(self, steps: int):
-        def step(params, all_x, all_y, all_steps, all_sizes, selected,
-                 coeffs, lr, rngs):
+    def _build_step(self, steps: int, num_clusters: int = 0):
+        def step(params, all_x, all_y, all_steps, all_sizes, all_scale,
+                 all_zero, all_clusters, selected, coeffs, lr, rngs):
             return self._gathered_round(params, all_x, all_y, all_steps,
-                                        all_sizes, selected, coeffs, lr,
-                                        rngs, steps)
+                                        all_sizes, all_scale, all_zero,
+                                        selected, coeffs, lr, rngs,
+                                        steps, cluster_of=all_clusters,
+                                        num_clusters=num_clusters)
 
         donate = (0,) if self.donate else ()
         return jax.jit(step, donate_argnums=donate)
 
     def round_step(self, global_params: PyTree, bank: AnyBank,
                    selected: np.ndarray, coeffs: np.ndarray, lr: float,
-                   rngs: jax.Array) -> Tuple[PyTree, jax.Array]:
+                   rngs: jax.Array, hierarchical: bool = False
+                   ) -> Tuple[PyTree, jax.Array]:
         """One fused round gathered from the device-resident bank.
 
         ``selected``: [K] client indices (any integer array — the gather
@@ -330,6 +412,14 @@ class RoundEngine:
         per-client PRNG keys.  Returns (new global params, per-client
         losses [K]).  The params argument is donated off-CPU — callers
         must use the returned pytree.  Bank buffers are never donated.
+
+        An int8-storage bank rides the same call: its per-client affine
+        codes flow through ``quant_args()`` and the gather dequantizes
+        the K selected rows in-trace (a distinct cached executable — the
+        fp32 trace is untouched).  ``hierarchical=True`` runs eq. (4) as
+        the cluster-then-global reduce over the bank's k-means routing
+        (requires a bank built with ``clusters=``; single-bucket banks
+        and pools only).
 
         A :class:`TieredClientBank` routes through the tier loop: one
         fused gathered round per tier the selection actually hits, with a
@@ -346,18 +436,35 @@ class RoundEngine:
                 f"selected indices {selected} out of range for bank of "
                 f"{bank.num_clients} clients")
         if isinstance(bank, TieredClientBank):
+            if hierarchical:
+                raise ValueError(
+                    "hierarchical aggregation is single-bucket only — "
+                    "the tier loop already reduces per tier")
             return self._round_step_tiered(global_params, bank, selected,
                                            coeffs, lr, rngs)
         steps = bank.steps_per_epoch
         all_x, all_y, all_steps, all_sizes = bank.device_args()
-        key = (steps, all_steps is not None)
+        all_scale, all_zero = _bank_quant_args(bank)
+        if hierarchical:
+            all_clusters = getattr(bank, "cluster_of_device", None)
+            if all_clusters is None:
+                raise ValueError(
+                    "hierarchical=True needs a bank built with "
+                    "clusters=... (no cluster routing on this bank)")
+            num_clusters = int(bank.num_clusters)
+        else:
+            all_clusters, num_clusters = None, 0
+        key = (steps, all_steps is not None, all_scale is not None,
+               num_clusters)
         fn = self._step_fns.get(key)
         cold = fn is None
         if cold:
-            fn = self._step_fns[key] = self._build_step(steps)
+            fn = self._step_fns[key] = self._build_step(steps,
+                                                        num_clusters)
         with obs_trace.span("engine.round", k=int(selected.size),
                             cold=cold):
             return fn(global_params, all_x, all_y, all_steps, all_sizes,
+                      all_scale, all_zero, all_clusters,
                       jnp.asarray(selected, jnp.int32),
                       jnp.asarray(coeffs, jnp.float32),
                       jnp.asarray(lr, jnp.float32), rngs)
@@ -367,8 +474,9 @@ class RoundEngine:
     def _build_tiered_step(self, parts_key: tuple):
         """One jit per distinct hit-tier subset: the whole tier loop
         (every hit tier's gathered round + the cross-tier sum) fuses into
-        a single dispatch.  ``parts_key``: static ``(tid, steps, masked)``
-        per hit tier — buffer pytrees arrive as a matching tuple."""
+        a single dispatch.  ``parts_key``: static ``(tid, steps, masked,
+        quant)`` per hit tier — buffer pytrees arrive as a matching
+        tuple."""
         def step(params, buffers, tier_sel, pos_sel, coeffs, rngs, lr):
             return self._tier_loop_round(params,
                                          _tier_parts(parts_key, buffers),
@@ -400,9 +508,10 @@ class RoundEngine:
         for t in hit:
             tier = bank.tiers[int(t)]
             xs, ys, ns, ne = tier.device_args()
+            sc, zp = tier.quant_args()
             parts_key.append((int(t), tier.steps_per_epoch,
-                              ns is not None))
-            buffers.append((xs, ys, ns, ne))
+                              ns is not None, sc is not None))
+            buffers.append((xs, ys, ns, ne, sc, zp))
         parts_key = tuple(parts_key)
         fn = self._tiered_fns.get(parts_key)
         if fn is None:
@@ -501,8 +610,10 @@ class RoundEngine:
             for t in tier_subset:
                 tier = bank.tiers[t]
                 xs, ys, ns, ne = tier.device_args()
-                parts_key.append((t, tier.steps_per_epoch, ns is not None))
-                buffers.append((xs, ys, ns, ne))
+                sc, zp = tier.quant_args()
+                parts_key.append((t, tier.steps_per_epoch, ns is not None,
+                                  sc is not None))
+                buffers.append((xs, ys, ns, ne, sc, zp))
             parts_key = tuple(parts_key)
 
             def round_fn(params, data, selected, coeffs, lr, rngs):
@@ -516,14 +627,16 @@ class RoundEngine:
             data = (tuple(buffers), bank.tier_of_device, bank.pos_device)
             return round_fn, data, parts_key
         all_x, all_y, all_steps, all_sizes = bank.device_args()
+        all_scale, all_zero = _bank_quant_args(bank)
         steps, masked = bank.steps_per_epoch, all_steps is not None
 
         def round_fn(params, data, selected, coeffs, lr, rngs):
             return self._gathered_round(params, *data, selected, coeffs,
                                         lr, rngs, steps)
 
-        return round_fn, (all_x, all_y, all_steps, all_sizes), (steps,
-                                                                masked)
+        return (round_fn,
+                (all_x, all_y, all_steps, all_sizes, all_scale, all_zero),
+                (steps, masked, all_scale is not None))
 
     def _build_scan(self, k: int, decide_fn, round_fn, select_fn=None,
                     eval_fn=None, eval_every: int = 0,

@@ -192,6 +192,60 @@ def aggregate_fused_psum(global_params: PyTree, stacked_deltas: PyTree,
     return adapter.unravel(adapter.ravel(global_params) + upd)
 
 
+def aggregate_hierarchical(global_params: PyTree, stacked_deltas: PyTree,
+                           coeffs: jax.Array, cluster_sel: jax.Array,
+                           num_clusters: int) -> PyTree:
+    """eq. (4) as cluster-partial reduce then global reduce.
+
+    ``cluster_sel[k]`` names the cluster of the k-th SELECTED client (the
+    bank's k-means routing gathered by the round's selection); each
+    leaf's weighted deltas are first ``segment_sum``-reduced into
+    ``[num_clusters, ...]`` cluster partials and the partials then summed
+    once — the reduction tree the scale plane wants, where the global
+    stage costs ``O(num_clusters)`` rows regardless of how many clients
+    fan into each cluster.  Same math as :func:`aggregate_stacked` to f32
+    RESOLUTION: the two stages reassociate the f32 sum, so equivalence is
+    a tolerance contract (tests pin it), not bitwise.
+    """
+    coeffs = coeffs.astype(jnp.float32)
+    sel = cluster_sel.astype(jnp.int32)
+
+    def combine(p, d):
+        d = d.astype(jnp.float32)
+        c = coeffs.reshape(d.shape[:1] + (1,) * (d.ndim - 1))
+        partials = jax.ops.segment_sum(c * d, sel,
+                                       num_segments=num_clusters)
+        return (p.astype(jnp.float32)
+                + jnp.sum(partials, axis=0)).astype(p.dtype)
+
+    return jax.tree_util.tree_map(combine, global_params, stacked_deltas)
+
+
+def aggregate_hierarchical_psum(global_params: PyTree,
+                                stacked_deltas: PyTree, coeffs: jax.Array,
+                                cluster_sel: jax.Array, num_clusters: int,
+                                axis_name: str) -> PyTree:
+    """Mesh-sharded :func:`aggregate_hierarchical` (shard_map body form,
+    the PR-2 psum machinery): each shard segment-reduces its slice of the
+    client axis into ``[num_clusters, ...]`` partials, the partials are
+    ``psum``med over ``axis_name`` (the cross-shard traffic is cluster
+    rows, not client rows), and theta is added once on the replicated
+    cluster sum."""
+    coeffs = coeffs.astype(jnp.float32)
+    sel = cluster_sel.astype(jnp.int32)
+
+    def combine(p, d):
+        d = d.astype(jnp.float32)
+        c = coeffs.reshape(d.shape[:1] + (1,) * (d.ndim - 1))
+        partials = jax.ops.segment_sum(c * d, sel,
+                                       num_segments=num_clusters)
+        partials = jax.lax.psum(partials, axis_name)
+        return (p.astype(jnp.float32)
+                + jnp.sum(partials, axis=0)).astype(p.dtype)
+
+    return jax.tree_util.tree_map(combine, global_params, stacked_deltas)
+
+
 def fedavg_reference(global_params: PyTree, deltas: Sequence[PyTree],
                      w_sel: np.ndarray) -> PyTree:
     """Plain FedAvg (weights proportional to data sizes) for comparison."""

@@ -28,6 +28,12 @@ docs/architecture.md):
 * ``service.batches`` / ``service.scenarios`` / ``service.seconds`` /
   ``service.coalesced_lanes`` / ``service.queue_depth``
 * ``store.saves`` / ``store.loads``
+* ``pool.admits`` / ``pool.evicts`` / ``pool.uploads`` /
+  ``pool.traces`` / ``pool.resident`` / ``pool.quant.abs_err`` — the
+  streaming :class:`~repro.fl.client_bank.BankPool`'s churn tallies,
+  scatter (re)trace count (1 after warmup, forever — the zero-retrace
+  contract), resident-count gauge, and per-admit int8 quantization
+  error histogram; ``BankPool.admits`` etc. are views over these
 
 Counters are exact ints, gauges hold the last value, histograms keep a
 bounded reservoir (newest kept) plus exact running count/sum so

@@ -1482,11 +1482,20 @@ class Arena:
 
         ks = np.unique(grid.sample_count)
         k_max = int(ks.max())
+        bank_nbytes = getattr(bank, "nbytes", None)
         meta = dict(k_mode=self.k_mode, k_groups=[int(k) for k in ks],
                     k_max=k_max, batch=self.batch, shards=self._shards(),
                     chunk_size=(None if chunk_size is None
                                 else int(chunk_size)),
-                    in_flight=self.in_flight)
+                    in_flight=self.in_flight,
+                    # scale-plane accounting: the memory claim as a
+                    # tracked number on every report (None for duck-typed
+                    # banks predating it)
+                    bank_storage=getattr(bank, "storage", "fp32"),
+                    bank_nbytes=(None if bank_nbytes is None
+                                 else int(bank_nbytes)),
+                    bank_bytes_per_client=getattr(bank, "bytes_per_client",
+                                                  None))
         if self.k_mode == "auto":
             # shape-adaptive dispatch: plan at the ONE-run horizon — a
             # cold arena collapses toward the padded single bucket, a

@@ -444,3 +444,20 @@ def test_bench_smoke(tmp_path, monkeypatch, capsys):
     assert mk["auto_rounds_per_sec"] > 0
     assert len(mk["auto_steady_plan"]) == mk["auto_steady_dispatches"]
     assert arena["skewed"]["auto_rounds_per_sec"] > 0
+    # million-client data plane: the int8 pooled-bank scale section —
+    # churn under a STRICT watchdog (the section itself asserts zero
+    # retraces and the bytes-reduction floor; reaching the record at all
+    # means those contracts held)
+    assert "round_engine/scale_pooled_int8" in out
+    assert "round_engine/scale_hierarchical" in out
+    assert "round_engine/scale_churn" in out
+    scale = bench["scale"]
+    assert scale["storage"] == "int8"
+    assert scale["pooled_rounds_per_sec"] > 0
+    assert scale["hierarchical_rounds_per_sec"] > 0
+    assert scale["watchdog_retraces"] == 0
+    assert scale["pool_scatter_retraces"] == 0
+    assert (scale["bytes_per_client_int8_pooled"]
+            < scale["bytes_per_client_fp32_oneshot"])
+    assert scale["bytes_reduction"] >= 2.5
+    assert scale["quant_guard_max_param_dev"] <= scale["quant_guard_tol"]

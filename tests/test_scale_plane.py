@@ -1,0 +1,336 @@
+"""Million-client data plane (PR 10): int8 quantized bank storage, the
+slot-recycled streaming ``BankPool``, and hierarchical cluster
+aggregation.
+
+Contracts pinned here:
+
+* int8 storage is a TOLERANCE contract (per-element dequant error is
+  bounded by half a quantization step; a round's params stay close to
+  fp32) while fp32 storage stays BITWISE (storage='fp32' feeds the
+  engine the exact arrays the unquantized path always had);
+* the pool's admit/evict churn is zero-retrace after warmup — ONE
+  scatter executable forever — and an evict + re-admit round-trips the
+  device rows exactly;
+* hierarchical eq.-(4) (cluster partials, then global) matches the flat
+  reduce at f32 resolution with bitwise-equal losses;
+* ``validate_client_data`` names the offending client;
+* ``nbytes`` accounting matches ``estimate_bank_nbytes`` exactly and
+  int8 beats fp32 by ~4x on the feature plane.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data import synthetic_image_classification
+from repro.data.pipeline import (assign_clusters, client_cluster_features,
+                                 dequantize_stack, kmeans_clusters,
+                                 quantize_stack, validate_client_data)
+from repro.fl import (BankPool, ClientBank, ClientConfig, RoundEngine,
+                      aggregate_fused, aggregate_hierarchical,
+                      estimate_bank_nbytes)
+from repro.models import MLPTask
+
+N, M, BS, K = 10, 48, 8, 4
+SHAPE = (4, 4, 1)
+
+
+def _client_data(n=N, m=M, seed=0):
+    x, y = synthetic_image_classification(n * m, SHAPE, num_classes=2,
+                                          noise=0.3, seed=seed)
+    return [(x[i * m:(i + 1) * m], y[i * m:(i + 1) * m]) for i in range(n)]
+
+
+def _engine():
+    task = MLPTask(input_dim=int(np.prod(SHAPE)), num_classes=2, hidden=16)
+    return task, RoundEngine(task, ClientConfig(local_epochs=1,
+                                                batch_size=BS))
+
+
+def _one_round(eng, task, bank, hierarchical=False, k=K, seed=0):
+    params = task.init(jax.random.PRNGKey(seed))
+    sel = np.arange(k, dtype=np.int32)
+    coeffs = np.full(k, 1.0 / k, np.float32)
+    rngs = jax.random.split(jax.random.PRNGKey(seed), k)
+    return eng.round_step(params, bank, sel, coeffs, 0.1, rngs,
+                          hierarchical=hierarchical)
+
+
+def _max_leaf_dev(a, b):
+    return max(float(np.abs(np.asarray(p) - np.asarray(q)).max())
+               for p, q in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+# -- quantization -----------------------------------------------------------
+
+def test_quantize_dequantize_half_step_error_bound():
+    """Affine int8: per-element |x_hat - x| <= 0.5 * scale_i (half a
+    quantization step), the whole storage contract."""
+    rng = np.random.default_rng(0)
+    stack = rng.normal(size=(6, 16, 4)).astype(np.float32) * \
+        rng.uniform(0.1, 10.0, size=(6, 1, 1)).astype(np.float32)
+    q, scale, zero = quantize_stack(stack)
+    assert q.dtype == np.int8 and scale.shape == (6,) and zero.shape == (6,)
+    err = np.abs(dequantize_stack(q, scale, zero) - stack)
+    assert (err <= 0.5 * scale[:, None, None] + 1e-7).all()
+
+
+def test_quantize_constant_row_is_exact():
+    """A zero-range client (scale would be 0) must not divide by zero and
+    must reconstruct exactly."""
+    stack = np.full((2, 8, 3), 2.5, np.float32)
+    q, scale, zero = quantize_stack(stack)
+    np.testing.assert_array_equal(dequantize_stack(q, scale, zero), stack)
+
+
+def test_int8_round_matches_fp32_within_tolerance():
+    """One fused round over an int8 bank tracks the fp32 round closely —
+    the dequant lives inside the gather, so any plumbing error (wrong
+    scale row, transposed zero) blows far past this bound."""
+    cd = _client_data()
+    task, eng = _engine()
+    bank_f = eng.make_bank(cd, tiered="single")
+    bank_q = eng.make_bank(cd, tiered="single", storage="int8")
+    assert bank_q.storage == "int8" and bank_q.xs.dtype == np.int8
+    p_f, l_f = _one_round(eng, task, bank_f)
+    p_q, l_q = _one_round(eng, task, bank_q)
+    assert _max_leaf_dev(p_f, p_q) < 5e-3
+    np.testing.assert_allclose(np.asarray(l_f), np.asarray(l_q), atol=0.05)
+
+
+def test_fp32_path_bitwise_unaffected_by_int8_sibling():
+    """The quant flag is part of the executable cache key: compiling and
+    running the int8 variant must leave the fp32 round bitwise
+    identical."""
+    cd = _client_data()
+    task, eng = _engine()
+    bank_f = eng.make_bank(cd, tiered="single")
+    p_before, l_before = _one_round(eng, task, bank_f)
+    bank_q = eng.make_bank(cd, tiered="single", storage="int8")
+    _one_round(eng, task, bank_q)                  # compiles the quant step
+    p_after, l_after = _one_round(eng, task, bank_f)
+    assert len(eng._step_fns) == 2                 # distinct executables
+    for a, b in zip(jax.tree_util.tree_leaves(p_before),
+                    jax.tree_util.tree_leaves(p_after)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(l_before),
+                                  np.asarray(l_after))
+
+
+def test_gather_host_returns_unquantized_reference():
+    """``gather_host`` is the fp32 reference plane even on an int8 bank —
+    equivalence tests diff device rounds against TRUE data."""
+    cd = _client_data()
+    _, eng = _engine()
+    bank_q = eng.make_bank(cd, tiered="single", storage="int8")
+    xs, ys, ns, ne = bank_q.gather_host(np.array([0, 3]))
+    assert xs.dtype == np.float32
+    np.testing.assert_array_equal(
+        np.asarray(xs[0, :M]).reshape(M, *SHAPE), cd[0][0])
+
+
+# -- hierarchical aggregation ----------------------------------------------
+
+def test_aggregate_hierarchical_matches_flat():
+    """Cluster-partial-then-global is the same sum reassociated: equal to
+    the flat fused reduce at f32 resolution for any cluster routing."""
+    rng = np.random.default_rng(1)
+    gp = {"w": rng.normal(size=(6, 3)).astype(np.float32),
+          "b": rng.normal(size=(3,)).astype(np.float32)}
+    deltas = {k: rng.normal(size=(K,) + v.shape).astype(np.float32)
+              for k, v in gp.items()}
+    coeffs = rng.uniform(0.1, 1.0, K).astype(np.float32)
+    flat = aggregate_fused(gp, deltas, coeffs)
+    for csel in ([0, 0, 0, 0], [0, 1, 2, 3], [2, 0, 2, 1]):
+        hier = aggregate_hierarchical(gp, deltas, coeffs,
+                                      np.asarray(csel, np.int32), 4)
+        assert _max_leaf_dev(flat, hier) < 1e-5
+
+
+def test_hierarchical_round_matches_flat_round():
+    """``round_step(hierarchical=True)`` over a clustered bank: params at
+    f32 resolution of the flat round, losses bitwise equal (the local
+    training is identical; only the reduce is reassociated)."""
+    cd = _client_data()
+    task, eng = _engine()
+    bank = eng.make_bank(cd, tiered="single", clusters=3)
+    assert bank.num_clusters == 3
+    assert bank.cluster_of.shape == (N,)
+    p_flat, l_flat = _one_round(eng, task, bank, hierarchical=False)
+    p_hier, l_hier = _one_round(eng, task, bank, hierarchical=True)
+    np.testing.assert_array_equal(np.asarray(l_flat), np.asarray(l_hier))
+    assert _max_leaf_dev(p_flat, p_hier) < 1e-5
+
+
+def test_hierarchical_requires_clusters():
+    cd = _client_data()
+    task, eng = _engine()
+    bank = eng.make_bank(cd, tiered="single")
+    with pytest.raises(ValueError, match="cluster"):
+        _one_round(eng, task, bank, hierarchical=True)
+
+
+def test_make_bank_rejects_tiered_clusters():
+    sizes = [8, 8, 48, 48, 200, 200]
+    cd = [(x[:s], y[:s]) for s, (x, y) in
+          zip(sizes, [_client_data(1, 200, seed=i)[0] for i in range(6)])]
+    _, eng = _engine()
+    with pytest.raises(ValueError, match="single-bucket"):
+        eng.make_bank(cd, tiered="tiered", clusters=2)
+
+
+def test_kmeans_is_deterministic_and_total():
+    cd = _client_data()
+    feats = client_cluster_features(cd)
+    assert feats.shape[0] == N
+    la, ca = kmeans_clusters(feats, 3)
+    lb, cb = kmeans_clusters(feats, 3)
+    np.testing.assert_array_equal(la, lb)
+    np.testing.assert_array_equal(ca, cb)
+    assert set(np.unique(la)) <= set(range(3))
+    np.testing.assert_array_equal(assign_clusters(feats, ca), la)
+
+
+# -- validation -------------------------------------------------------------
+
+def test_validation_names_offending_client():
+    good = _client_data(3, 16)
+    bad_dtype = good[:2] + [(good[2][0].astype(np.int32), good[2][1])]
+    with pytest.raises(ValueError, match="client 2.*float"):
+        validate_client_data(bad_dtype)
+    bad_count = good[:1] + [(good[1][0], good[1][1][:-3])]
+    with pytest.raises(ValueError, match="client 1"):
+        validate_client_data(bad_count)
+    with pytest.raises(ValueError, match="client 1.*match"):
+        validate_client_data(
+            [good[0], (good[1][0].astype(np.float64), good[1][1])])
+    with pytest.raises(ValueError, match="empty"):
+        validate_client_data([])
+    _, eng = _engine()
+    with pytest.raises(ValueError, match="client 2"):
+        eng.make_bank(bad_dtype)
+
+
+def test_bank_rejects_bad_storage():
+    cd = _client_data(2, 16)
+    _, eng = _engine()
+    with pytest.raises(ValueError, match="storage"):
+        eng.make_bank(cd, tiered="single", storage="int4")
+
+
+# -- nbytes accounting ------------------------------------------------------
+
+def test_nbytes_matches_estimate_and_int8_shrinks():
+    cd = _client_data()
+    cfg = ClientConfig(local_epochs=1, batch_size=BS)
+    sizes = [M] * N
+    for storage in ("fp32", "int8"):
+        bank = ClientBank(cd, cfg, storage=storage)
+        est = estimate_bank_nbytes(sizes, BS, SHAPE, storage=storage)
+        assert bank.nbytes == est
+        assert bank.bytes_per_client == pytest.approx(est / N)
+    f32 = estimate_bank_nbytes(sizes, BS, SHAPE)
+    i8 = estimate_bank_nbytes(sizes, BS, SHAPE, storage="int8")
+    assert f32 / i8 > 3            # ~4x on features; labels/codes dilute
+
+
+# -- BankPool ---------------------------------------------------------------
+
+def _pool(capacity=6, storage="int8", clusters=None, n_init=4):
+    cd = _client_data(n_init + 4, M, seed=2)
+    cfg = ClientConfig(local_epochs=1, batch_size=BS)
+    init = {i: cd[i] for i in range(n_init)}
+    return BankPool(cfg, capacity=capacity, max_examples=M, storage=storage,
+                    clusters=clusters, initial_clients=init), cd
+
+
+def test_pool_admit_evict_roundtrip_exact():
+    """Evict + re-admit reproduces the exact device rows (int8 codes AND
+    scale/zero), through the one warmed scatter executable."""
+    pool, cd = _pool()
+    slot = pool.slot_of[1]
+    row = np.asarray(pool.xs[slot]).copy()
+    sc, zp = np.asarray(pool.x_scale[slot]), np.asarray(pool.x_zero[slot])
+    pool.evict(1)
+    assert 1 not in pool.slot_of
+    new_slot = pool.admit(1, *cd[1])
+    np.testing.assert_array_equal(np.asarray(pool.xs[new_slot]), row)
+    assert np.asarray(pool.x_scale[new_slot]) == sc
+    assert np.asarray(pool.x_zero[new_slot]) == zp
+    x, y = pool.client_view(1)
+    np.testing.assert_array_equal(x, cd[1][0])
+
+
+def test_pool_zero_retrace_churn():
+    """After warmup the scatter never retraces — admits across distinct
+    clients, evicts, and re-admits are all cache hits on ONE executable,
+    and the registry tallies stay views over the pool."""
+    pool, cd = _pool(capacity=5, n_init=3)
+    pool.warmup()
+    base = pool.traces
+    for i in range(3, 8):
+        if len(pool.slot_of) == pool.capacity:
+            pool.evict(min(pool.slot_of))
+        pool.admit(i, *cd[i % len(cd)])
+    assert pool.traces == base
+    assert pool.traces == 1
+    assert pool.admits == pool.registry.get("pool.admits")
+    assert pool.evicts == pool.registry.get("pool.evicts")
+    assert pool.uploads == pool.admits
+    assert pool.registry.get("pool.resident") == len(pool.slot_of)
+    err = pool.registry.get("pool.quant.abs_err")
+    assert err.count == pool.admits
+
+
+def test_pool_engine_round_and_full_capacity_errors():
+    pool, cd = _pool(capacity=4, n_init=4)
+    task, eng = _engine()
+    params, losses = _one_round(eng, task, pool, k=3)
+    assert np.isfinite(np.asarray(losses)).all()
+    with pytest.raises(ValueError, match="full"):
+        pool.admit(99, *cd[0])
+    with pytest.raises(ValueError, match="resident"):
+        pool.evict(99)
+    with pytest.raises(ValueError, match="already resident"):
+        pool.evict(0), pool.admit(1, *cd[1])
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError, match="occupied"):
+        pool.sample_slots(rng, pool.capacity + 1)
+
+
+def test_pool_clustered_assignment_is_admit_order_free():
+    """Centroids are fitted ONCE on the initial population; a churned-in
+    client lands in the same cluster regardless of admit order."""
+    pool, cd = _pool(capacity=8, clusters=2, n_init=6)
+    feats = client_cluster_features([cd[6]])
+    expect = int(assign_clusters(feats, pool.cluster_centroids)[0])
+    slot = pool.admit(6, *cd[6])
+    assert int(np.asarray(pool.cluster_of_device)[slot]) == expect
+
+
+def test_rollout_meta_surfaces_bank_accounting():
+    """The memory claim is a tracked number: every arena run's meta
+    carries the bank's storage mode and nbytes/bytes-per-client."""
+    from repro.core import paper_default_params
+    from repro.sim import Arena, ScenarioGrid
+
+    cd = _client_data()
+    task, eng = _engine()
+    bank = eng.make_bank(cd, tiered="single", storage="int8")
+    sp = paper_default_params(num_devices=N, sample_count=2,
+                              data_sizes=np.full(N, M, np.float32))
+    grid = ScenarioGrid.create(controllers=["uni_d"], seeds=[0], V=100.0,
+                               lam=0.5, sample_count=2, num_devices=N)
+    rep = Arena(eng).run(task.init(jax.random.PRNGKey(0)), sp, bank, grid,
+                         2, np.full(2, 0.1, np.float32))
+    assert rep.meta["bank_storage"] == "int8"
+    assert rep.meta["bank_nbytes"] == bank.nbytes
+    assert rep.meta["bank_bytes_per_client"] == bank.bytes_per_client
+
+
+def test_pool_nbytes_beats_fp32_oneshot():
+    pool, _ = _pool(capacity=8, n_init=4)
+    f32 = estimate_bank_nbytes([M] * 8, BS, SHAPE)
+    assert f32 / pool.nbytes > 3
+    assert pool.bytes_per_client == pytest.approx(pool.nbytes / 8)

@@ -239,7 +239,7 @@ def test_round_with_empty_tier_skips_it_and_matches_reference():
     assert len(hit) == 2 < bank.num_tiers
     p, l = eng.round_step(params, bank, sel, coeffs, .1, rngs)
     (key,) = eng._tiered_fns.keys()           # one executable, hit tiers only
-    assert tuple(t for t, _, _ in key) == hit
+    assert tuple(part[0] for part in key) == hit
     p_ref, l_ref = _compose_reference(eng, bank, params, sel, coeffs, .1,
                                       rngs)
     _assert_trees_close(p, p_ref)
